@@ -1,0 +1,50 @@
+//! Quickstart: train a micro AlexNet with A²DTWP for 60 batches and watch
+//! the precision adapt.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! What happens each batch (paper Fig 1): the CPU leader Bitpacks the
+//! master weights to each layer's current AWP format, "transfers" them to
+//! 4 simulated GPUs (PCIe model), each GPU runs the AOT-compiled JAX/Pallas
+//! fwd/bwd via PJRT, gradients are gathered and momentum-SGD applied, then
+//! AWP inspects the weight-norm change rates and widens layers that have
+//! begun to converge.
+
+use a2dtwp::awp::{PolicyKind, PrecisionPolicy};
+use a2dtwp::config::ExperimentConfig;
+use a2dtwp::coordinator::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::preset("alexnet_micro", 32, PolicyKind::Awp, "x86");
+    cfg.max_batches = 60;
+    cfg.val_every = 10;
+    cfg.target_error = 0.05;
+
+    println!("A²DTWP quickstart — {}", cfg.to_json().to_string_compact());
+    let mut trainer = Trainer::new(cfg)?;
+
+    for batch in 1..=60u64 {
+        let loss = trainer.step()?;
+        if batch % 10 == 0 {
+            let err = trainer.validate()?;
+            let formats: Vec<String> =
+                trainer.policy().formats().iter().map(|f| f.to_string()).collect();
+            println!(
+                "batch {batch:>3}  loss {loss:6.3}  val-err {err:5.3}  formats [{}]",
+                formats.join(", ")
+            );
+        }
+    }
+
+    let p = trainer.profiler();
+    println!("\nsimulated per-batch profile on {} (ms):", trainer.config().system.name);
+    for ph in a2dtwp::profiler::Phase::ALL {
+        println!("  {:<24} {:8.3}", ph.label(), p.avg_s(ph) * 1e3);
+    }
+    println!(
+        "\nAWP widened {} layer groups so far; transfer payload is now {:.2} bytes/weight.",
+        trainer.policy().controller().map_or(0, |c| c.events().len()),
+        trainer.curve().points.last().map_or(1.0, |pt| pt.bytes_per_weight)
+    );
+    Ok(())
+}

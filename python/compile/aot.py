@@ -1,0 +1,127 @@
+"""AOT pipeline: lower the Layer-2 models to HLO text + a JSON manifest.
+
+Python runs ONCE (``make artifacts``); the Rust coordinator loads the HLO
+text through the PJRT C API and Python never appears on the training path.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Artifacts per micro model:
+  <model>_train_b<shard>.hlo.txt   one per per-GPU shard size (batch/n_gpus)
+  <model>_infer_b<batch>.hlo.txt   validation-batch logits
+  manifest.json                    I/O specs + layer tables for the runtime
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# Per-GPU shard sizes to compile: global batches {16,32,64,128} over 4 GPUs.
+TRAIN_SHARDS = [4, 8, 16, 32]
+# Validation batch (one simulated GPU evaluates the held-out set).
+INFER_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(model_name, batch):
+    """Example-arg ShapeDtypeStructs for (ws…, bs…, masks, x, y)."""
+    ws, bs = M.param_shapes(model_name)
+    h, w, c = M.MICRO_MODELS[model_name]["input"]
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in ws]
+    args += [jax.ShapeDtypeStruct(s, jnp.float32) for s in bs]
+    args.append(jax.ShapeDtypeStruct((len(ws),), jnp.uint32))
+    args.append(jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32))
+    return args
+
+
+def lower_train(model_name, shard):
+    args = _specs(model_name, shard)
+    args.append(jax.ShapeDtypeStruct((shard,), jnp.uint32))  # labels
+    return jax.jit(M.make_train_step(model_name)).lower(*args)
+
+
+def lower_infer(model_name, batch):
+    args = _specs(model_name, batch)
+    return jax.jit(M.make_infer(model_name)).lower(*args)
+
+
+def _layer_table(model_name):
+    rows = []
+    for name, kind, cfg, blk in M.weighted_layers(model_name):
+        if kind == "conv":
+            wshape = [cfg["k"], cfg["k"], cfg["cin"], cfg["cout"]]
+        else:
+            wshape = [cfg["cin"], cfg["cout"]]
+        rows.append(
+            {
+                "name": name,
+                "kind": kind,
+                "block": blk,
+                "weight_shape": wshape,
+                "bias_shape": [cfg["cout"]],
+            }
+        )
+    return rows
+
+
+def build_manifest():
+    manifest = {"format": "hlo-text", "models": {}}
+    for name, spec in M.MICRO_MODELS.items():
+        h, w, c = spec["input"]
+        manifest["models"][name] = {
+            "input": [h, w, c],
+            "classes": spec["classes"],
+            "layers": _layer_table(name),
+            "train_shards": TRAIN_SHARDS,
+            "infer_batch": INFER_BATCH,
+            "train_files": {
+                str(s): f"{name}_train_b{s}.hlo.txt" for s in TRAIN_SHARDS
+            },
+            "infer_file": f"{name}_infer_b{INFER_BATCH}.hlo.txt",
+        }
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=list(M.MICRO_MODELS))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name in args.models:
+        for shard in TRAIN_SHARDS:
+            path = os.path.join(args.out_dir, f"{name}_train_b{shard}.hlo.txt")
+            text = to_hlo_text(lower_train(name, shard))
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text) / 1e6:.2f} MB)")
+        path = os.path.join(args.out_dir, f"{name}_infer_b{INFER_BATCH}.hlo.txt")
+        text = to_hlo_text(lower_infer(name, INFER_BATCH))
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(build_manifest(), f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

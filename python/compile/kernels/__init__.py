@@ -1,0 +1,14 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the model HLO).
+
+- ``bitunpack``: the paper's device-side ADT Bitunpack as a Pallas kernel —
+  bitcast f32 -> u32, AND with the per-layer precision mask, bitcast back.
+- ``masked_matmul``: MXU-tiled matmul that fuses the Bitunpack of the weight
+  operand into the weight load (TPU re-thinking of unpack-then-GEMM).
+- ``ref``: pure-jnp oracles both kernels are verified against.
+"""
+
+from .bitunpack import bitunpack, straight_through_truncate
+from .matmul import masked_matmul
+from . import ref
+
+__all__ = ["bitunpack", "straight_through_truncate", "masked_matmul", "ref"]

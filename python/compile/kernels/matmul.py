@@ -1,0 +1,82 @@
+"""Fused masked matmul — unpack-inside-the-GEMM, MXU-tiled.
+
+The data-motion-minimal form of the paper's idea on TPU: the FC layers'
+weight operand is Bitunpacked *as it is loaded* into VMEM for the matmul
+tile, so the truncated copy of W never exists in HBM (DESIGN.md §7).
+
+Backward pass is a custom VJP implementing the paper's straight-through
+semantics: gradients are computed against the truncated weights but are
+reported w.r.t. the master f32 weights (which is what the CPU updates).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .bitunpack import bitunpack
+
+# MXU-shaped output tile (the systolic array is 128x128).
+_BLOCK_N = 128
+_BLOCK_M = 128
+
+
+def _mm_kernel(x_ref, w_ref, mask_ref, o_ref):
+    """One (M-block, N-block) output tile: unpack W tile, then MXU dot."""
+    bits = lax.bitcast_convert_type(w_ref[...], jnp.uint32)
+    w_t = lax.bitcast_convert_type(bits & mask_ref[0], jnp.float32)
+    o_ref[...] = jnp.dot(x_ref[...], w_t, preferred_element_type=jnp.float32)
+
+
+def _mm_call(x, w, mask):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul shape mismatch: {x.shape} @ {w.shape}"
+    if m <= _BLOCK_M and n <= _BLOCK_N:
+        return pl.pallas_call(
+            _mm_kernel,
+            out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+            interpret=True,
+        )(x, w, mask)
+    grid = (pl.cdiv(m, _BLOCK_M), pl.cdiv(n, _BLOCK_N))
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((_BLOCK_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, _BLOCK_N), lambda i, j: (0, j)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK_M, _BLOCK_N), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, mask)
+
+
+@jax.custom_vjp
+def masked_matmul(x, w, mask):
+    """``x @ bitunpack(w, mask)`` with straight-through weight gradients.
+
+    x: (B, K) f32 activations; w: (K, N) f32 master weights;
+    mask: (1,) uint32 per-layer precision mask.
+    """
+    return _mm_call(x, w, mask)
+
+
+def _mm_fwd(x, w, mask):
+    return _mm_call(x, w, mask), (x, w, mask)
+
+
+def _mm_bwd(res, g):
+    x, w, mask = res
+    # dgrad uses the *truncated* weights (that is what the device holds);
+    # wgrad is x^T g, reported against the master weights (straight-through).
+    w_t = bitunpack(w, mask)
+    dx = jnp.dot(g, w_t.T, preferred_element_type=jnp.float32)
+    dw = jnp.dot(x.T, g, preferred_element_type=jnp.float32)
+    dmask = np.zeros((1,), dtype=jax.dtypes.float0)
+    return dx, dw, dmask
+
+
+masked_matmul.defvjp(_mm_fwd, _mm_bwd)

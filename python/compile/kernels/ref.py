@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: pytest asserts the Pallas
+kernels match them bit-exactly (bitunpack) / to f32 matmul tolerance
+(masked_matmul) across shapes, random bit patterns and RoundTo masks.
+
+The truncation law mirrors the Rust side (``rust/src/adt``): keeping the
+top ``r`` bytes of an IEEE-754 f32 word is ``bits & (0xFFFFFFFF << (32-8r))``.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def roundto_mask(round_to: int) -> int:
+    """Bit mask keeping the top ``round_to`` bytes of a 32-bit word."""
+    if not 1 <= round_to <= 4:
+        raise ValueError(f"round_to must be in 1..4, got {round_to}")
+    return (0xFFFFFFFF << (32 - 8 * round_to)) & 0xFFFFFFFF
+
+
+def bitunpack_ref(w, mask):
+    """Reference Bitunpack: truncate f32 mantissa bits via a u32 mask.
+
+    ``mask`` is a uint32 array of shape (1,) (runtime input so a single
+    AOT executable serves every precision state).
+    """
+    bits = lax.bitcast_convert_type(w, jnp.uint32)
+    return lax.bitcast_convert_type(bits & mask[0], jnp.float32)
+
+
+def masked_matmul_ref(x, w, mask):
+    """Reference fused kernel: ``x @ bitunpack(w, mask)`` in f32."""
+    return jnp.dot(x, bitunpack_ref(w, mask), preferred_element_type=jnp.float32)

@@ -1,0 +1,253 @@
+"""Layer-2: the micro CNNs (JAX fwd/bwd) that the Rust coordinator trains.
+
+Mirrors ``rust/src/models/zoo.rs`` (the manifest written by ``aot.py``
+carries the layer list and the Rust runtime cross-checks it). Weights are
+*functional inputs*: the CPU (Rust) owns the master copy and feeds it each
+batch together with one uint32 precision mask per weighted layer; every
+weight tensor passes through the Layer-1 Pallas kernels
+(``straight_through_truncate`` for conv, the fused ``masked_matmul`` for
+FC), so the executable computes gradients *at the truncated weights* while
+reporting them against the master weights — exactly the paper's Fig-1
+semantics.
+
+Substitutions vs the paper's full recipe (documented in DESIGN.md §3):
+32x32 inputs / 16 classes, no dropout (micro nets on synthetic data do not
+overfit within the run lengths used; weight decay is applied by the Rust
+optimizer).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import masked_matmul, straight_through_truncate
+
+# ---------------------------------------------------------------------------
+# Micro-model architecture tables (must mirror rust/src/models/zoo.rs).
+# Each entry: (name, kind, cfg). Weighted layers appear in the same order
+# as the Rust descriptors' weighted_layers().
+# ---------------------------------------------------------------------------
+
+MICRO_MODELS = {
+    "alexnet_micro": {
+        "input": (32, 32, 3),
+        "classes": 16,
+        "family": "sequential",
+        "layers": [
+            ("conv1", "conv", dict(k=5, cin=3, cout=32, stride=2, pad=2)),
+            ("pool1", "maxpool", dict(k=2, s=2)),
+            ("conv2", "conv", dict(k=3, cin=32, cout=64, stride=1, pad=1)),
+            ("pool2", "maxpool", dict(k=2, s=2)),
+            ("conv3", "conv", dict(k=3, cin=64, cout=96, stride=1, pad=1)),
+            ("fc4", "fc", dict(cin=4 * 4 * 96, cout=512)),
+            ("fc5", "fc", dict(cin=512, cout=256)),
+            ("fc6", "fc", dict(cin=256, cout=16)),
+        ],
+    },
+    "vgg_micro": {
+        "input": (32, 32, 3),
+        "classes": 16,
+        "family": "sequential",
+        "layers": [
+            ("conv1_1", "conv", dict(k=3, cin=3, cout=32, stride=1, pad=1)),
+            ("conv1_2", "conv", dict(k=3, cin=32, cout=32, stride=1, pad=1)),
+            ("pool1", "maxpool", dict(k=2, s=2)),
+            ("conv2_1", "conv", dict(k=3, cin=32, cout=64, stride=1, pad=1)),
+            ("conv2_2", "conv", dict(k=3, cin=64, cout=64, stride=1, pad=1)),
+            ("pool2", "maxpool", dict(k=2, s=2)),
+            ("conv3_1", "conv", dict(k=3, cin=64, cout=128, stride=1, pad=1)),
+            ("pool3", "maxpool", dict(k=2, s=2)),
+            ("fc4", "fc", dict(cin=4 * 4 * 128, cout=256)),
+            ("fc5", "fc", dict(cin=256, cout=16)),
+        ],
+    },
+    "resnet_micro": {
+        "input": (32, 32, 3),
+        "classes": 16,
+        "family": "resnet",
+        # stem + 3 stages x 2 blocks x 2 convs + fc (ResNet-20 family).
+        "stem": dict(k=3, cin=3, cout=16, stride=1, pad=1),
+        "stages": [(16, 16), (16, 32), (32, 64)],
+        "blocks_per_stage": 2,
+        "fc": dict(cin=64, cout=16),
+    },
+}
+
+
+def weighted_layers(model_name):
+    """Ordered (name, kind, cfg, block_label) for every weighted layer."""
+    spec = MICRO_MODELS[model_name]
+    out = []
+    if spec["family"] == "sequential":
+        for name, kind, cfg in spec["layers"]:
+            if kind in ("conv", "fc"):
+                out.append((name, kind, cfg, name))
+    else:
+        out.append(("conv1", "conv", spec["stem"], "stem"))
+        for si, (cin, cout) in enumerate(spec["stages"]):
+            for b in range(spec["blocks_per_stage"]):
+                blk = f"s{si + 1}b{b + 1}"
+                ci = cin if b == 0 else cout
+                stride = 1 if (si == 0 or b > 0) else 2
+                out.append(
+                    (f"{blk}_conv1", "conv", dict(k=3, cin=ci, cout=cout, stride=stride, pad=1), blk)
+                )
+                out.append(
+                    (f"{blk}_conv2", "conv", dict(k=3, cin=cout, cout=cout, stride=1, pad=1), blk)
+                )
+        out.append(("fc", "fc", spec["fc"], "fc"))
+    return out
+
+
+def param_shapes(model_name):
+    """Ordered weight and bias shapes (weights HWIO for conv, (K,N) for fc)."""
+    ws, bs = [], []
+    for _name, kind, cfg, _blk in weighted_layers(model_name):
+        if kind == "conv":
+            ws.append((cfg["k"], cfg["k"], cfg["cin"], cfg["cout"]))
+            bs.append((cfg["cout"],))
+        else:
+            ws.append((cfg["cin"], cfg["cout"]))
+            bs.append((cfg["cout"],))
+    return ws, bs
+
+
+def init_params(model_name, seed=0, bias_init=None):
+    """Paper §IV-B init: weights ~ N(0, 1e-2 variance), biases constant
+    (0.1 for AlexNet, 0 otherwise)."""
+    if bias_init is None:
+        bias_init = 0.1 if "alexnet" in model_name else 0.0
+    ws_shapes, bs_shapes = param_shapes(model_name)
+    key = jax.random.PRNGKey(seed)
+    ws, bs = [], []
+    for shp in ws_shapes:
+        key, sub = jax.random.split(key)
+        ws.append(jax.random.normal(sub, shp, jnp.float32) * 0.1)
+    for shp in bs_shapes:
+        bs.append(jnp.full(shp, bias_init, jnp.float32))
+    return ws, bs
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+_DN = ("NHWC", "HWIO", "NHWC")
+
+
+def _conv(x, w, b, stride, pad):
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=_DN,
+    )
+    return y + b
+
+
+def _maxpool(x, k, s):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, k, k, 1), (1, s, s, 1), "VALID"
+    )
+
+
+def _downsample_shortcut(x, cout):
+    """Parameter-free 'option A' shortcut: stride-2 average pool + channel
+    zero-pad (the Rust descriptor omits projection convs to match the
+    paper's 33-conv census)."""
+    y = lax.reduce_window(
+        x, 0.0, lax.add, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    ) * 0.25
+    cin = y.shape[-1]
+    if cout > cin:
+        y = jnp.pad(y, ((0, 0), (0, 0), (0, 0), (0, cout - cin)))
+    return y
+
+
+def forward(model_name, ws, bs, masks, x):
+    """Logits for a batch ``x`` (N,H,W,C) under per-layer precision masks.
+
+    ``masks``: uint32 (L,) — one Bitunpack mask per weighted layer; the
+    Pallas kernels consume them as (1,) slices.
+    """
+    spec = MICRO_MODELS[model_name]
+    layers = weighted_layers(model_name)
+    li = 0  # weighted-layer cursor
+
+    def mask_of(i):
+        return lax.dynamic_slice(masks, (i,), (1,))
+
+    if spec["family"] == "sequential":
+        flat_done = False
+        for name, kind, cfg in spec["layers"]:
+            if kind == "conv":
+                w_t = straight_through_truncate(ws[li], mask_of(li))
+                x = jax.nn.relu(_conv(x, w_t, bs[li], cfg["stride"], cfg["pad"]))
+                li += 1
+            elif kind == "maxpool":
+                x = _maxpool(x, cfg["k"], cfg["s"])
+            elif kind == "fc":
+                if not flat_done:
+                    x = x.reshape((x.shape[0], -1))
+                    flat_done = True
+                y = masked_matmul(x, ws[li], mask_of(li)) + bs[li]
+                is_last = li == len(layers) - 1
+                x = y if is_last else jax.nn.relu(y)
+                li += 1
+        return x
+
+    # resnet family
+    w_t = straight_through_truncate(ws[li], mask_of(li))
+    x = jax.nn.relu(_conv(x, w_t, bs[li], spec["stem"]["stride"], spec["stem"]["pad"]))
+    li += 1
+    for si, (_cin, cout) in enumerate(spec["stages"]):
+        for b in range(spec["blocks_per_stage"]):
+            stride = 1 if (si == 0 or b > 0) else 2
+            shortcut = x if stride == 1 and x.shape[-1] == cout else _downsample_shortcut(x, cout)
+            w1 = straight_through_truncate(ws[li], mask_of(li))
+            h = jax.nn.relu(_conv(x, w1, bs[li], stride, 1))
+            li += 1
+            w2 = straight_through_truncate(ws[li], mask_of(li))
+            h = _conv(h, w2, bs[li], 1, 1)
+            li += 1
+            x = jax.nn.relu(h + shortcut)
+    x = x.mean(axis=(1, 2))  # global average pool
+    logits = masked_matmul(x, ws[li], mask_of(li)) + bs[li]
+    return logits
+
+
+def loss_fn(model_name, ws, bs, masks, x, y):
+    """Mean softmax cross-entropy."""
+    logits = forward(model_name, ws, bs, masks, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+def make_train_step(model_name):
+    """(ws…, bs…, masks, x, y) -> (loss, dws…, dbs…), flat for AOT export."""
+    n = len(weighted_layers(model_name))
+
+    def train_step(*args):
+        ws = list(args[:n])
+        bs = list(args[n : 2 * n])
+        masks, x, y = args[2 * n], args[2 * n + 1], args[2 * n + 2]
+
+        def wrapped(ws_bs):
+            return loss_fn(model_name, ws_bs[:n], ws_bs[n:], masks, x, y)
+
+        loss, grads = jax.value_and_grad(wrapped)(ws + bs)
+        return (loss, *grads)
+
+    return train_step
+
+
+def make_infer(model_name):
+    """(ws…, bs…, masks, x) -> (logits,), flat for AOT export."""
+    n = len(weighted_layers(model_name))
+
+    def infer(*args):
+        ws = list(args[:n])
+        bs = list(args[n : 2 * n])
+        masks, x = args[2 * n], args[2 * n + 1]
+        return (forward(model_name, ws, bs, masks, x),)
+
+    return infer

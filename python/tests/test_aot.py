@@ -1,0 +1,83 @@
+"""AOT pipeline: HLO text emission and manifest integrity."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+
+def test_manifest_structure():
+    man = aot.build_manifest()
+    assert man["format"] == "hlo-text"
+    for name in M.MICRO_MODELS:
+        entry = man["models"][name]
+        assert entry["input"] == [32, 32, 3]
+        assert entry["classes"] == 16
+        layer_names = [l["name"] for l in entry["layers"]]
+        assert len(layer_names) == len(set(layer_names))
+        for l in entry["layers"]:
+            assert l["kind"] in ("conv", "fc")
+            assert int(np.prod(l["weight_shape"])) > 0
+        for shard, fname in entry["train_files"].items():
+            assert fname.endswith(f"_train_b{shard}.hlo.txt")
+
+
+def test_manifest_is_json_serializable():
+    s = json.dumps(aot.build_manifest(), sort_keys=True)
+    assert "alexnet_micro" in s
+
+
+def test_layer_order_matches_weighted_layers():
+    for name in M.MICRO_MODELS:
+        table = aot._layer_table(name)
+        layers = M.weighted_layers(name)
+        assert [t["name"] for t in table] == [l[0] for l in layers]
+        assert [t["block"] for t in table] == [l[3] for l in layers]
+
+
+def test_lowering_produces_parseable_hlo_text():
+    lowered = aot.lower_train("alexnet_micro", 4)
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # all params present in ENTRY: 2L weights/biases + masks + x + y
+    n = len(M.weighted_layers("alexnet_micro"))
+    entry = text[text.index("ENTRY") :]
+    entry = entry[: entry.index("\n}")]
+    assert entry.count("parameter(") == 2 * n + 3
+
+
+def test_infer_lowering_smaller_than_train():
+    train = aot.to_hlo_text(aot.lower_train("alexnet_micro", 4))
+    infer = aot.to_hlo_text(aot.lower_infer("alexnet_micro", 4))
+    assert len(infer) < len(train)  # no backward pass
+
+
+def test_lowered_train_executes_in_jax():
+    """The lowered computation must run under JAX itself (pre-PJRT-bridge
+    sanity; the Rust integration test covers the bridge)."""
+    import jax
+
+    name = "alexnet_micro"
+    shard = 4
+    step = jax.jit(M.make_train_step(name))
+    ws, bs = M.init_params(name, 0)
+    n = len(ws)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((shard, 32, 32, 3)).astype(np.float32))
+    y = jnp.asarray(np.arange(shard, dtype=np.uint32))
+    masks = jnp.full((n,), 0xFFFFFFFF, jnp.uint32)
+    out = step(*ws, *bs, masks, x, y)
+    assert np.isfinite(float(out[0]))
+
+
+@pytest.mark.parametrize("shard", aot.TRAIN_SHARDS)
+def test_spec_shapes(shard):
+    specs = aot._specs("vgg_micro", shard)
+    n = len(M.weighted_layers("vgg_micro"))
+    assert len(specs) == 2 * n + 2
+    assert specs[2 * n].shape == (n,)  # masks
+    assert specs[2 * n + 1].shape == (shard, 32, 32, 3)

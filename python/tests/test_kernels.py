@@ -1,0 +1,162 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Includes hypothesis sweeps over shapes and raw f32 bit patterns (the
+brief's required property coverage for the kernel layer).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bitunpack, masked_matmul, straight_through_truncate
+from compile.kernels.ref import bitunpack_ref, masked_matmul_ref, roundto_mask
+
+
+def mask_arr(r):
+    return jnp.array([roundto_mask(r)], dtype=jnp.uint32)
+
+
+def rand_f32(rng, shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# bitunpack
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("round_to", [1, 2, 3, 4])
+@pytest.mark.parametrize(
+    "shape", [(7,), (128,), (129,), (5, 5, 3, 32), (1536, 512), (513, 128)]
+)
+def test_bitunpack_matches_ref_bitexact(round_to, shape):
+    rng = np.random.default_rng(round_to * 100 + len(shape))
+    w = rand_f32(rng, shape)
+    got = np.asarray(bitunpack(jnp.asarray(w), mask_arr(round_to)))
+    exp = np.asarray(bitunpack_ref(jnp.asarray(w), mask_arr(round_to)))
+    assert (got.view(np.uint32) == exp.view(np.uint32)).all()
+
+
+def test_bitunpack_full_mask_is_identity():
+    rng = np.random.default_rng(0)
+    w = rand_f32(rng, (64, 128))
+    got = np.asarray(bitunpack(jnp.asarray(w), mask_arr(4)))
+    assert (got.view(np.uint32) == w.view(np.uint32)).all()
+
+
+def test_bitunpack_truncates_toward_zero():
+    rng = np.random.default_rng(1)
+    w = rand_f32(rng, (1000,))
+    for r in (1, 2, 3):
+        got = np.asarray(bitunpack(jnp.asarray(w), mask_arr(r)))
+        assert (np.abs(got) <= np.abs(w)).all()
+        assert (np.signbit(got) == np.signbit(w)).all()
+
+
+def test_bitunpack_matches_rust_adt_law():
+    """Keeping top r bytes == bits & (~0 << (32-8r)) — the exact law the
+    Rust adt module enforces, on raw bit patterns incl. NaN/Inf."""
+    rng = np.random.default_rng(2)
+    bits = rng.integers(0, 2**32, size=4096, dtype=np.uint32)
+    w = bits.view(np.float32)
+    for r in (1, 2, 3, 4):
+        got = np.asarray(bitunpack(jnp.asarray(w), mask_arr(r))).view(np.uint32)
+        exp = bits & np.uint32(roundto_mask(r))
+        assert (got == exp).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=4096),
+    r=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_bitunpack_hypothesis_shapes_and_bits(n, r, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2**32, size=n, dtype=np.uint32)
+    w = bits.view(np.float32)
+    got = np.asarray(bitunpack(jnp.asarray(w), mask_arr(r))).view(np.uint32)
+    assert (got == (bits & np.uint32(roundto_mask(r)))).all()
+
+
+def test_straight_through_gradient_is_identity():
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rand_f32(rng, (32, 16)))
+    g = jax.grad(lambda v: (straight_through_truncate(v, mask_arr(1)) * 3.0).sum())(w)
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+def test_straight_through_forward_is_truncated():
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rand_f32(rng, (128,)))
+    got = np.asarray(straight_through_truncate(w, mask_arr(2)))
+    exp = np.asarray(bitunpack_ref(w, mask_arr(2)))
+    assert (got.view(np.uint32) == exp.view(np.uint32)).all()
+
+
+# ---------------------------------------------------------------------------
+# masked_matmul
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("round_to", [1, 2, 3, 4])
+@pytest.mark.parametrize(
+    "mkn", [(4, 16, 16), (8, 256, 128), (64, 1536, 512), (130, 64, 140), (128, 100, 256)]
+)
+def test_masked_matmul_matches_ref(round_to, mkn):
+    m, k, n = mkn
+    rng = np.random.default_rng(round_to + m)
+    x = jnp.asarray(rand_f32(rng, (m, k)))
+    w = jnp.asarray(rand_f32(rng, (k, n)))
+    got = np.asarray(masked_matmul(x, w, mask_arr(round_to)))
+    exp = np.asarray(masked_matmul_ref(x, w, mask_arr(round_to)))
+    np.testing.assert_allclose(got, exp, rtol=1e-5, atol=1e-5)
+
+
+def test_masked_matmul_grads_are_straight_through():
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rand_f32(rng, (8, 32)))
+    w = jnp.asarray(rand_f32(rng, (32, 16)))
+    mask = mask_arr(2)
+
+    def loss(xv, wv):
+        return masked_matmul(xv, wv, mask).sum()
+
+    dx, dw = jax.grad(loss, argnums=(0, 1))(x, w)
+    w_t = bitunpack_ref(w, mask)
+    ones = jnp.ones((8, 16), jnp.float32)
+    # dgrad at the truncated weights, wgrad straight-through (= xᵀ·g).
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(ones @ w_t.T), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(x.T @ ones), rtol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=64),
+    k=st.integers(min_value=1, max_value=96),
+    n=st.integers(min_value=1, max_value=160),
+    r=st.integers(min_value=1, max_value=4),
+)
+def test_masked_matmul_hypothesis(m, k, n, r):
+    rng = np.random.default_rng(m * 1000 + k * 10 + n + r)
+    x = jnp.asarray(rand_f32(rng, (m, k)))
+    w = jnp.asarray(rand_f32(rng, (k, n)))
+    got = np.asarray(masked_matmul(x, w, mask_arr(r)))
+    exp = np.asarray(masked_matmul_ref(x, w, mask_arr(r)))
+    np.testing.assert_allclose(got, exp, rtol=2e-5, atol=2e-5)
+
+
+def test_jit_compatibility():
+    """Kernels must lower inside jit (the AOT path does exactly this)."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rand_f32(rng, (8, 64)))
+    w = jnp.asarray(rand_f32(rng, (64, 32)))
+
+    @jax.jit
+    def f(xv, wv, m):
+        return masked_matmul(xv, wv, m) + bitunpack(wv, m).sum()
+
+    out = f(x, w, mask_arr(3))
+    assert np.isfinite(np.asarray(out)).all()

@@ -1,0 +1,134 @@
+"""L2 correctness: model shapes, loss/grad structure, precision semantics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels.ref import roundto_mask
+
+MODELS = list(M.MICRO_MODELS)
+
+
+def setup(name, batch=4, seed=0):
+    ws, bs = M.init_params(name, seed)
+    n = len(ws)
+    rng = np.random.default_rng(seed)
+    h, w, c = M.MICRO_MODELS[name]["input"]
+    x = jnp.asarray(rng.standard_normal((batch, h, w, c)).astype(np.float32))
+    y = jnp.asarray((np.arange(batch) % M.MICRO_MODELS[name]["classes"]).astype(np.uint32))
+    masks = jnp.full((n,), roundto_mask(4), jnp.uint32)
+    return ws, bs, masks, x, y
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_forward_shapes(name):
+    ws, bs, masks, x, _y = setup(name)
+    logits = M.forward(name, ws, bs, masks, x)
+    assert logits.shape == (4, M.MICRO_MODELS[name]["classes"])
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_param_shapes_match_init(name):
+    ws_shapes, bs_shapes = M.param_shapes(name)
+    ws, bs = M.init_params(name, 1)
+    assert [w.shape for w in ws] == [tuple(s) for s in ws_shapes]
+    assert [b.shape for b in bs] == [tuple(s) for s in bs_shapes]
+
+
+def test_param_counts_match_rust_zoo():
+    """Hard-coded totals mirrored in rust/src/models/zoo.rs tests."""
+    totals = {}
+    for name in MODELS:
+        ws_shapes, _ = M.param_shapes(name)
+        totals[name] = sum(int(np.prod(s)) for s in ws_shapes)
+    assert totals["alexnet_micro"] == 997_728
+    assert totals["vgg_micro"] == 667_488
+    assert totals["resnet_micro"] == 171_952
+
+
+def test_bias_init_follows_paper():
+    ws, bs = M.init_params("alexnet_micro", 0)
+    assert all(float(b[0]) == pytest.approx(0.1) for b in bs)
+    ws, bs = M.init_params("vgg_micro", 0)
+    assert all(float(b[0]) == 0.0 for b in bs)
+
+
+@pytest.mark.parametrize("name", MODELS)
+def test_train_step_outputs(name):
+    ws, bs, masks, x, y = setup(name)
+    step = M.make_train_step(name)
+    out = step(*ws, *bs, masks, x, y)
+    n = len(ws)
+    assert len(out) == 1 + 2 * n
+    loss = float(out[0])
+    assert np.isfinite(loss) and loss > 0
+    for i, g in enumerate(out[1 : 1 + n]):
+        assert g.shape == ws[i].shape
+    for i, g in enumerate(out[1 + n :]):
+        assert g.shape == bs[i].shape
+
+
+def test_grads_match_finite_differences():
+    """Spot-check the straight-through machinery against finite differences
+    on a bias (bias path has no truncation so FD is exact-ish)."""
+    name = "alexnet_micro"
+    ws, bs, masks, x, y = setup(name, batch=2, seed=3)
+    step = M.make_train_step(name)
+    out = step(*ws, *bs, masks, x, y)
+    n = len(ws)
+    g_b0 = np.asarray(out[1 + n])[0]
+    eps = 1e-3
+    bs_hi = [b.at[0].add(eps) if i == 0 else b for i, b in enumerate(bs)]
+    bs_lo = [b.at[0].add(-eps) if i == 0 else b for i, b in enumerate(bs)]
+    hi = float(step(*ws, *bs_hi, masks, x, y)[0])
+    lo = float(step(*ws, *bs_lo, masks, x, y)[0])
+    fd = (hi - lo) / (2 * eps)
+    assert abs(fd - g_b0) < 5e-2 * max(1.0, abs(fd)), (fd, g_b0)
+
+
+def test_coarse_masks_change_loss():
+    name = "vgg_micro"
+    ws, bs, masks, x, y = setup(name, seed=5)
+    loss_full = float(M.loss_fn(name, ws, bs, masks, x, y))
+    masks8 = jnp.full_like(masks, roundto_mask(1))
+    loss8 = float(M.loss_fn(name, ws, bs, masks8, x, y))
+    assert loss_full != loss8  # 8-bit truncation must perturb the network
+    assert np.isfinite(loss8)
+
+
+def test_mask_equals_pretruncation():
+    """loss(w, mask_r) == loss(trunc_r(w), mask_full) — the property the
+    Rust integration test also enforces through PJRT."""
+    name = "alexnet_micro"
+    ws, bs, masks, x, y = setup(name, seed=7)
+    r = 2
+    masks_r = jnp.full_like(masks, roundto_mask(r))
+    l_masked = float(M.loss_fn(name, ws, bs, masks_r, x, y))
+    m = np.uint32(roundto_mask(r))
+    ws_t = [
+        jnp.asarray((np.asarray(w).view(np.uint32) & m).view(np.float32)) for w in ws
+    ]
+    l_pre = float(M.loss_fn(name, ws_t, bs, masks, x, y))
+    assert l_masked == l_pre
+
+
+def test_sgd_reduces_loss_quickly():
+    """A few full-precision SGD steps on one batch must reduce the loss —
+    the minimal end-to-end learnability check at the JAX layer."""
+    name = "alexnet_micro"
+    ws, bs, masks, x, y = setup(name, batch=8, seed=11)
+    step = jax.jit(M.make_train_step(name))
+    n = len(ws)
+    losses = []
+    lr = 2e-3
+    for _ in range(10):
+        out = step(*ws, *bs, masks, x, y)
+        losses.append(float(out[0]))
+        gws = out[1 : 1 + n]
+        gbs = out[1 + n :]
+        ws = [w - lr * g for w, g in zip(ws, gws)]
+        bs = [b - lr * g for b, g in zip(bs, gbs)]
+    assert losses[-1] < losses[0] * 0.9, losses

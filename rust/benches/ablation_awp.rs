@@ -1,0 +1,132 @@
+//! Ablation — AWP hyper-parameter sensitivity (T, INTERVAL, N) and the
+//! per-layer vs per-block grouping choice (paper §IV-B found block-level
+//! best for ResNet). Runs the controller on recorded weight-norm dynamics
+//! (synthetic trajectories fit to the observed micro-run decay rates), so
+//! the sweep is cheap and deterministic.
+//!
+//!     cargo bench --bench ablation_awp
+
+use a2dtwp::adt::RoundTo;
+use a2dtwp::awp::{AwpController, AwpParams};
+use a2dtwp::util::benchkit::Table;
+use a2dtwp::util::prng::Rng;
+
+/// Synthetic per-layer norm trajectories mirroring the measured micro-run
+/// dynamics: early growth, then steady ≈−2e−5/batch decay once the layer
+/// converges, with batch-to-batch noise. `converge_at` staggers layers.
+fn trajectory(batches: usize, converge_at: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut norm = 100.0f64;
+    (0..batches)
+        .map(|b| {
+            let drift = if b < converge_at { 3e-5 } else { -2.5e-5 };
+            norm *= 1.0 + drift + 6e-6 * rng.normal();
+            norm
+        })
+        .collect()
+}
+
+fn mean_bytes(ctl: &AwpController, layer_weights: &[usize]) -> f64 {
+    ctl.mean_bytes_per_weight(layer_weights)
+}
+
+fn run_controller(params: AwpParams, batches: usize) -> (usize, f64, Option<u64>) {
+    let layers = 6usize;
+    let trajs: Vec<Vec<f64>> =
+        (0..layers).map(|l| trajectory(batches, 50 + 60 * l, l as u64)).collect();
+    let mut ctl = AwpController::new(layers, params);
+    let weights = vec![1usize; layers];
+    let mut first_event = None;
+    for b in 0..batches {
+        let norms: Vec<f64> = (0..layers).map(|l| trajs[l][b]).collect();
+        let evs = ctl.observe_batch(&norms);
+        if first_event.is_none() && !evs.is_empty() {
+            first_event = Some(b as u64);
+        }
+    }
+    (ctl.events().len(), mean_bytes(&ctl, &weights), first_event)
+}
+
+fn main() {
+    let batches = 600;
+
+    let mut t = Table::new(
+        "AWP ablation — threshold T (INTERVAL=40, N=8)",
+        &["T", "widen events", "final bytes/weight", "first event @batch"],
+    );
+    for threshold in [-1e-3, -1e-4, -1e-5, -1e-6, 1e-9] {
+        let p = AwpParams { threshold, interval: 40, step_bits: 8, initial: RoundTo::B1 };
+        let (events, bw, first) = run_controller(p, batches);
+        t.row(&[
+            format!("{threshold:+.0e}"),
+            events.to_string(),
+            format!("{bw:.2}"),
+            first.map_or("never".into(), |b| b.to_string()),
+        ]);
+    }
+    t.print();
+    println!("  → too-strict T never widens (stuck at 8-bit); too-loose T widens immediately\n");
+
+    let mut t = Table::new(
+        "AWP ablation — INTERVAL (T=-1e-5, N=8)",
+        &["INTERVAL", "widen events", "final bytes/weight", "first event @batch"],
+    );
+    for interval in [5u32, 20, 40, 80, 200] {
+        let p = AwpParams { threshold: -1e-5, interval, step_bits: 8, initial: RoundTo::B1 };
+        let (events, bw, first) = run_controller(p, batches);
+        t.row(&[
+            interval.to_string(),
+            events.to_string(),
+            format!("{bw:.2}"),
+            first.map_or("never".into(), |b| b.to_string()),
+        ]);
+    }
+    t.print();
+    println!("  → INTERVAL controls how much noise evidence is demanded before widening\n");
+
+    let mut t = Table::new(
+        "AWP ablation — step N bits (T=-1e-5, INTERVAL=40)",
+        &["N", "widen events", "final bytes/weight"],
+    );
+    for step_bits in [8u32, 16, 24] {
+        let p = AwpParams { threshold: -1e-5, interval: 40, step_bits, initial: RoundTo::B1 };
+        let (events, bw, _) = run_controller(p, batches);
+        t.row(&[step_bits.to_string(), events.to_string(), format!("{bw:.2}")]);
+    }
+    t.print();
+    println!("  → larger N trades adaptation granularity for fewer transitions\n");
+
+    // grouping: per-layer vs per-block on staggered trajectories
+    let mut t = Table::new(
+        "AWP ablation — per-layer vs per-block grouping (ResNet §IV-B)",
+        &["grouping", "final bytes/weight", "widen events"],
+    );
+    for (name, groups) in [
+        ("per-layer", (0..6).collect::<Vec<_>>()),
+        ("per-block (pairs)", vec![0, 0, 1, 1, 2, 2]),
+    ] {
+        let layers = 6usize;
+        let trajs: Vec<Vec<f64>> =
+            (0..layers).map(|l| trajectory(600, 50 + 60 * l, l as u64)).collect();
+        let n_groups = groups.iter().max().unwrap() + 1;
+        let p = AwpParams { threshold: -1e-5, interval: 40, step_bits: 8, initial: RoundTo::B1 };
+        let mut ctl = AwpController::new(n_groups, p);
+        for b in 0..600 {
+            // group norm = sqrt(sum of member norms²)
+            let mut sums = vec![0f64; n_groups];
+            for (l, &g) in groups.iter().enumerate() {
+                sums[g] += trajs[l][b] * trajs[l][b];
+            }
+            let norms: Vec<f64> = sums.iter().map(|s| s.sqrt()).collect();
+            ctl.observe_batch(&norms);
+        }
+        let per_layer_bytes: f64 = groups
+            .iter()
+            .map(|&g| ctl.round_to(g).bytes() as f64)
+            .sum::<f64>()
+            / layers as f64;
+        t.row(&[name.to_string(), format!("{per_layer_bytes:.2}"), ctl.events().len().to_string()]);
+    }
+    t.print();
+    println!("  → block grouping smooths single-layer noise; the paper found it best for ResNet");
+}

@@ -1,0 +1,113 @@
+//! ADT micro-benchmarks — the *measured* CPU-side kernels on this host
+//! (single core; the paper's 16/40-core rates are calibrated in
+//! `sim::SystemProfile`, see DESIGN.md §3). Feeds EXPERIMENTS.md §Perf.
+//!
+//! Covers: Bitpack scalar vs AVX2 vs threaded at every RoundTo on
+//! full-size VGG/AlexNet/ResNet weight arrays; Bitunpack; l²-norm scalar
+//! vs SIMD; and a memcpy roofline reference.
+//!
+//!     cargo bench --bench bitpack_micro
+
+use a2dtwp::adt::{
+    bitpack_into, bitunpack_into, packed_len, AdtConfig, BitpackImpl, RoundTo,
+};
+use a2dtwp::awp::{l2_norm_fast, l2_norm_simd};
+use a2dtwp::models::model_by_name;
+use a2dtwp::util::benchkit::Bench;
+use a2dtwp::util::prng::Rng;
+use a2dtwp::util::stats::l2_norm;
+
+fn main() {
+    let threads = a2dtwp::util::threadpool::default_threads();
+    println!(
+        "host: {} thread(s), detected SIMD: {:?}\n",
+        threads,
+        BitpackImpl::detect()
+    );
+
+    // memcpy roofline reference on the VGG payload
+    let n = model_by_name("vgg_a").unwrap().total_weights();
+    let mut rng = Rng::new(1);
+    let mut weights = vec![0f32; n];
+    rng.fill_normal(&mut weights, 0.0, 0.1);
+    let bytes = n * 4;
+    let mut dst = vec![0u8; bytes];
+    Bench::new("memcpy 518MB (roofline ref)").warmup(2).iters(5).run_bytes(bytes, || {
+        let src =
+            unsafe { std::slice::from_raw_parts(weights.as_ptr() as *const u8, bytes) };
+        dst.copy_from_slice(src);
+        std::hint::black_box(&dst);
+    });
+    println!();
+
+    // Bitpack: scalar vs AVX2 (threaded fan-out is a no-op on 1 core but
+    // exercised for completeness)
+    let mut out = vec![0u8; bytes];
+    for rt in RoundTo::ALL {
+        let plen = packed_len(n, rt);
+        for (name, simd) in [("scalar", BitpackImpl::Scalar), ("avx2", BitpackImpl::Avx2)] {
+            let cfg = AdtConfig { threads: 1, simd, ..Default::default() };
+            Bench::new(format!("bitpack {rt} {name} (vgg 129.6M w)"))
+                .warmup(2)
+                .iters(5)
+                .run_bytes(bytes, || {
+                    bitpack_into(&weights, rt, &cfg, &mut out[..plen]);
+                    std::hint::black_box(&out);
+                });
+        }
+        let cfg = AdtConfig { threads, ..Default::default() };
+        Bench::new(format!("bitpack {rt} threaded×{threads}"))
+            .warmup(2)
+            .iters(5)
+            .run_bytes(bytes, || {
+                bitpack_into(&weights, rt, &cfg, &mut out[..plen]);
+                std::hint::black_box(&out);
+            });
+    }
+    println!();
+
+    // Bitunpack
+    let mut restored = vec![0f32; n];
+    for rt in [RoundTo::B1, RoundTo::B3] {
+        let plen = packed_len(n, rt);
+        let cfg = AdtConfig { threads, ..Default::default() };
+        bitpack_into(&weights, rt, &cfg, &mut out[..plen]);
+        Bench::new(format!("bitunpack {rt} (vgg)")).warmup(2).iters(5).run_bytes(plen, || {
+            bitunpack_into(&out[..plen], rt, &cfg, &mut restored);
+            std::hint::black_box(&restored);
+        });
+    }
+    println!();
+
+    // l²-norm: scalar vs SIMD vs threaded+SIMD
+    Bench::new("l2-norm scalar (vgg)").warmup(1).iters(3).run_bytes(bytes, || {
+        std::hint::black_box(l2_norm(&weights));
+    });
+    Bench::new("l2-norm avx2+fma").warmup(2).iters(5).run_bytes(bytes, || {
+        std::hint::black_box(l2_norm_simd(&weights));
+    });
+    Bench::new(format!("l2-norm avx2+fma threaded×{threads}")).warmup(2).iters(5).run_bytes(
+        bytes,
+        || {
+            std::hint::black_box(l2_norm_fast(&weights, threads));
+        },
+    );
+    println!();
+
+    // per-model pack cost at the paper's converged state (≈ 3× compression)
+    for model in ["alexnet", "vgg_a", "resnet34"] {
+        let m = model_by_name(model).unwrap();
+        let mn = m.total_weights();
+        let mut w = vec![0f32; mn];
+        Rng::new(2).fill_normal(&mut w, 0.0, 0.1);
+        let mut buf = vec![0u8; mn * 2];
+        let cfg = AdtConfig { threads, ..Default::default() };
+        Bench::new(format!("bitpack 16-bit {model} ({:.1}M w)", mn as f64 / 1e6))
+            .warmup(2)
+            .iters(5)
+            .run_bytes(mn * 4, || {
+                bitpack_into(&w, RoundTo::B2, &cfg, &mut buf[..mn * 2]);
+                std::hint::black_box(&buf);
+            });
+    }
+}

@@ -1,0 +1,83 @@
+//! Shared helpers for the paper-reproduction benches: the evaluation grid,
+//! trace loading (recording on first run), and oracle assembly.
+//!
+//! Not a bench itself — included via `#[path = "common.rs"] mod common;`.
+#![allow(dead_code)] // each bench uses a subset
+
+use a2dtwp::adt::RoundTo;
+use a2dtwp::awp::PolicyKind;
+use a2dtwp::config::ExperimentConfig;
+use a2dtwp::coordinator::load_or_record_trace;
+use a2dtwp::metrics::TrainCurve;
+use a2dtwp::models::{model_by_name, ModelDesc};
+
+/// The evaluation grid (paper §V-A): (micro model, batch sizes, val-error
+/// threshold standing in for the paper's top-5 thresholds).
+pub const GRID: [(&str, [usize; 3], f64); 3] = [
+    ("alexnet_micro", [16, 32, 64], 0.25),
+    ("vgg_micro", [16, 32, 64], 0.25),
+    ("resnet_micro", [32, 64, 128], 0.45),
+];
+
+/// Canonical trace-recording config (must match examples/precision_sweep.rs
+/// so benches and the sweep share the cache).
+pub fn trace_config(
+    model: &str,
+    batch: usize,
+    target: f64,
+    policy: PolicyKind,
+) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::preset(model, batch, policy, "x86");
+    cfg.target_error = target;
+    cfg.max_batches = 500;
+    cfg.val_every = 20;
+    if model.contains("resnet") {
+        cfg.sgd.schedule.initial = 0.05;
+        cfg.max_batches = 600;
+    }
+    cfg
+}
+
+/// Load (recording if missing) the trace for one configuration.
+pub fn trace(model: &str, batch: usize, target: f64, policy: PolicyKind) -> TrainCurve {
+    let cfg = trace_config(model, batch, target, policy);
+    load_or_record_trace(&cfg).expect("trace recording failed — run `make artifacts` first")
+}
+
+/// All traces one figure cell needs: baseline, awp, and the oracle's fixed
+/// candidates (fixed32 reuses the baseline trace: identical numerics, only
+/// its replayed per-batch time differs).
+pub struct CellTraces {
+    pub baseline: TrainCurve,
+    pub awp: TrainCurve,
+    pub fixed: Vec<(PolicyKind, TrainCurve)>,
+}
+
+pub fn cell_traces(model: &str, batch: usize, target: f64) -> CellTraces {
+    let baseline = trace(model, batch, target, PolicyKind::Baseline);
+    let awp = trace(model, batch, target, PolicyKind::Awp);
+    let fixed = vec![
+        (
+            PolicyKind::Fixed(RoundTo::B1),
+            trace(model, batch, target, PolicyKind::Fixed(RoundTo::B1)),
+        ),
+        (
+            PolicyKind::Fixed(RoundTo::B2),
+            trace(model, batch, target, PolicyKind::Fixed(RoundTo::B2)),
+        ),
+        (PolicyKind::Fixed(RoundTo::B4), baseline.clone()),
+    ];
+    CellTraces { baseline, awp, fixed }
+}
+
+/// Full-size counterpart descriptor for a micro model.
+pub fn full_desc(micro: &str) -> ModelDesc {
+    let name = a2dtwp::coordinator::Trainer::full_counterpart(micro);
+    model_by_name(name).unwrap()
+}
+
+/// Output directory for bench CSVs.
+pub fn out_dir() -> String {
+    std::fs::create_dir_all("artifacts/bench_out").ok();
+    "artifacts/bench_out".to_string()
+}

@@ -1,0 +1,73 @@
+//! Figure 3 — AlexNet top-5 validation error vs training time for
+//! baseline / oracle / A²DTWP, batch sizes 32 and 16, on the x86 profile.
+//!
+//! Regenerated from real micro-AlexNet convergence traces replayed against
+//! the full-size AlexNet timing model (DESIGN.md §6). The paper's curves
+//! stop at the 25% threshold; so do these.
+//!
+//!     cargo bench --bench fig3_alexnet
+
+#[path = "common.rs"]
+mod common;
+
+use a2dtwp::awp::PolicyKind;
+use a2dtwp::figures::{oracle_time, replay, time_to_error};
+use a2dtwp::sim::SystemProfile;
+use a2dtwp::util::benchkit::Table;
+
+fn main() {
+    let profile = SystemProfile::x86();
+    let desc = common::full_desc("alexnet_micro");
+    let threshold = 0.25;
+
+    for batch in [32usize, 16] {
+        let cells = common::cell_traces("alexnet_micro", batch, threshold);
+        let cands: Vec<(PolicyKind, &a2dtwp::metrics::TrainCurve)> =
+            cells.fixed.iter().map(|(k, c)| (*k, c)).collect();
+        let oracle =
+            oracle_time(&cands, &profile, &desc, batch, threshold).expect("oracle unreachable");
+
+        let mut t = Table::new(
+            format!("Fig 3 — alexnet b{batch} on x86: val error vs simulated time (s)"),
+            &["policy", "series (time:error …)"],
+        );
+        let mut csv = String::from("policy,batch,sim_time_s,val_error\n");
+        for (name, curve, kind) in [
+            ("baseline", &cells.baseline, PolicyKind::Baseline),
+            ("oracle", cands.iter().find(|(k, _)| *k == oracle.0).map(|(_, c)| *c).unwrap(), oracle.0),
+            ("a2dtwp", &cells.awp, PolicyKind::Awp),
+        ] {
+            let series = replay(curve, &profile, &desc, batch, kind);
+            let mut cells_str = Vec::new();
+            for (b, time, err, _) in &series {
+                cells_str.push(format!("{time:.0}:{err:.2}"));
+                csv.push_str(&format!("{name},{batch},{time:.2},{err:.4}\n"));
+                if *err <= threshold && *b > 0 {
+                    break;
+                }
+            }
+            t.row(&[name.to_string(), cells_str.join(" ")]);
+        }
+        t.print();
+
+        let tb = time_to_error(&cells.baseline, &profile, &desc, batch, PolicyKind::Baseline, threshold);
+        let ta = time_to_error(&cells.awp, &profile, &desc, batch, PolicyKind::Awp, threshold);
+        if let (Some(tb), Some(ta)) = (tb, ta) {
+            let orc = oracle.1;
+            println!(
+                "\n  time to 25% err — baseline {tb:.0}s  oracle({}) {orc:.0}s  a2dtwp {ta:.0}s",
+                oracle.0.name()
+            );
+            println!(
+                "  improvement vs baseline: oracle {:+.2}%  a2dtwp {:+.2}%   (paper b{batch}: oracle {} / a2dtwp {})",
+                (1.0 - orc / tb) * 100.0,
+                (1.0 - ta / tb) * 100.0,
+                if batch == 32 { "10.82%" } else { "11.52%" },
+                if batch == 32 { "6.61%" } else { "10.66%" },
+            );
+        }
+        let path = format!("{}/fig3_alexnet_b{batch}.csv", common::out_dir());
+        std::fs::write(&path, csv).ok();
+        println!("  wrote {path}\n");
+    }
+}

@@ -1,0 +1,88 @@
+//! Figure 5 — ImageNet1000: normalized A²DTWP execution time vs epoch
+//! count on the x86 system (AlexNet b64, VGG b64, ResNet b128).
+//!
+//! The paper's Fig 5 fixes the number of epochs (equal work for baseline
+//! and A²DTWP) and reports the elapsed-time ratio — convergence thresholds
+//! play no role, so the replay maps the AWP trace's compression trajectory
+//! onto the epoch axis (trace progress ∝ training progress; the 5× larger
+//! dataset is the same machinery with more batches per epoch) and
+//! integrates per-batch times.
+//!
+//!     cargo bench --bench fig5_imagenet1000
+
+#[path = "common.rs"]
+mod common;
+
+use a2dtwp::awp::PolicyKind;
+use a2dtwp::figures::batch_time;
+use a2dtwp::sim::SystemProfile;
+use a2dtwp::util::benchkit::Table;
+
+/// Paper Fig 5 grid: (micro model, batch, epoch counts, paper's normalized
+/// times for reference).
+const FIG5: [(&str, usize, &[u64], &[f64]); 3] = [
+    ("alexnet_micro", 64, &[4, 8, 12, 16, 20], &[0.995, 0.992, 0.992, 0.996, 0.990]),
+    ("vgg_micro", 64, &[2, 4, 6, 8], &[0.907, 0.920, 0.936, 0.932]),
+    ("resnet_micro", 128, &[4, 8, 12, 16], &[0.765, 0.770, 0.778, 0.777]),
+];
+
+fn main() {
+    let profile = SystemProfile::x86();
+    let mut csv = String::from("model,epochs,normalized_time,paper\n");
+    for (model, batch, epochs, paper) in FIG5 {
+        let desc = common::full_desc(model);
+        let threshold = common::GRID.iter().find(|g| g.0 == model).unwrap().2;
+        let awp_curve = common::trace(model, batch, threshold, PolicyKind::Awp);
+        let max_epochs = *epochs.last().unwrap();
+
+        // Compression trajectory: bytes/weight as a function of training
+        // progress fraction (0..1 of the recorded trace).
+        let pts = &awp_curve.points;
+        let last_batch = pts.last().map_or(1, |p| p.batch).max(1);
+        let bpw_at = |frac: f64| -> f64 {
+            let target = frac * last_batch as f64;
+            let mut prev = pts.first().unwrap();
+            for p in pts {
+                if p.batch as f64 >= target {
+                    let span = (p.batch - prev.batch) as f64;
+                    if span == 0.0 {
+                        return p.bytes_per_weight;
+                    }
+                    let f = (target - prev.batch as f64) / span;
+                    return prev.bytes_per_weight
+                        + f * (p.bytes_per_weight - prev.bytes_per_weight);
+                }
+                prev = p;
+            }
+            pts.last().unwrap().bytes_per_weight
+        };
+
+        let mut t = Table::new(
+            format!("Fig 5 — {model} b{batch}: normalized A²DTWP time vs epochs (x86)"),
+            &["epochs", "normalized", "paper"],
+        );
+        // Integrate per-epoch times in 100 steps per max-epoch span.
+        let steps = 100 * max_epochs as usize;
+        let base_step = batch_time(&profile, &desc, batch, PolicyKind::Baseline, 4.0);
+        let mut cum_awp = 0.0;
+        let mut cum_base = 0.0;
+        let mut step_idx = 0usize;
+        for (k, &e) in epochs.iter().enumerate() {
+            let until = (steps as f64 * e as f64 / max_epochs as f64) as usize;
+            while step_idx < until {
+                let frac = step_idx as f64 / steps as f64;
+                cum_awp += batch_time(&profile, &desc, batch, PolicyKind::Awp, bpw_at(frac));
+                cum_base += base_step;
+                step_idx += 1;
+            }
+            let norm = cum_awp / cum_base;
+            t.row(&[e.to_string(), format!("{norm:.3}"), format!("{:.3}", paper[k])]);
+            csv.push_str(&format!("{model},{e},{norm:.4},{}\n", paper[k]));
+        }
+        t.print();
+        println!();
+    }
+    let path = format!("{}/fig5_imagenet1000.csv", common::out_dir());
+    std::fs::write(&path, csv).ok();
+    println!("wrote {path}");
+}

@@ -1,0 +1,10 @@
+//! Table II — per-kernel performance profile, VGG b64, x86 system.
+//!
+//!     cargo bench --bench table2_profile
+
+#[path = "table_profile.rs"]
+mod table_profile;
+
+fn main() {
+    table_profile::run("x86", &table_profile::TABLE2_X86, "artifacts/bench_out/table2_x86.csv");
+}

@@ -1,0 +1,14 @@
+//! Table III — per-kernel performance profile, VGG b64, POWER system.
+//!
+//!     cargo bench --bench table3_profile
+
+#[path = "table_profile.rs"]
+mod table_profile;
+
+fn main() {
+    table_profile::run(
+        "power",
+        &table_profile::TABLE3_POWER,
+        "artifacts/bench_out/table3_power.csv",
+    );
+}

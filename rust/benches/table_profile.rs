@@ -1,0 +1,97 @@
+//! Shared implementation of the Table II / Table III benches: per-kernel
+//! per-batch profile of VGG b64 under 32-bit FP vs A²DTWP on one platform,
+//! with the paper's measured milliseconds alongside for comparison.
+
+use a2dtwp::coordinator::{formats_for_mean_bytes, SimRunner};
+use a2dtwp::models::vgg_a;
+use a2dtwp::profiler::{Phase, Profiler};
+use a2dtwp::sim::SystemProfile;
+use a2dtwp::util::benchkit::Table;
+
+/// Paper values, ms: (32-bit column, A²DTWP column) in Phase::ALL order.
+pub struct PaperColumn {
+    pub table_name: &'static str,
+    pub rows: [(Option<f64>, f64); 8],
+}
+
+pub const TABLE2_X86: PaperColumn = PaperColumn {
+    table_name: "Table II (x86)",
+    rows: [
+        (Some(153.93), 52.27),
+        (Some(68.51), 73.55),
+        (Some(128.72), 126.13),
+        (Some(33.51), 34.17),
+        (Some(54.39), 52.86),
+        (None, 3.88),
+        (None, 19.71),
+        (None, 4.51),
+    ],
+};
+
+pub const TABLE3_POWER: PaperColumn = PaperColumn {
+    table_name: "Table III (POWER)",
+    rows: [
+        (Some(39.12), 12.21),
+        (Some(17.34), 17.87),
+        (Some(69.78), 71.21),
+        (Some(12.66), 13.51),
+        (Some(41.29), 42.98),
+        (None, 0.93),
+        (None, 10.51),
+        (None, 1.11),
+    ],
+};
+
+pub fn run(system: &str, paper: &PaperColumn, csv_path: &str) {
+    let profile = SystemProfile::by_name(system).unwrap();
+    let mut runner = SimRunner::new(vgg_a(200), profile, Default::default(), 7);
+
+    let mut base_prof = Profiler::new();
+    runner.batch(None, 64, false).add_to(&mut base_prof);
+    // A²DTWP at the paper's converged ≈3× compression state.
+    let formats = formats_for_mean_bytes(&runner.desc, 4.0 / 3.0);
+    let mut adt_prof = Profiler::new();
+    runner.batch(Some(&formats), 64, true).add_to(&mut adt_prof);
+
+    let mut t = Table::new(
+        format!("{} reproduction — VGG b64 per-kernel ms", paper.table_name),
+        &["kernel", "32-bit (ours)", "32-bit (paper)", "A2DTWP (ours)", "A2DTWP (paper)"],
+    );
+    let mut csv = String::from("kernel,base_ours_ms,base_paper_ms,adt_ours_ms,adt_paper_ms\n");
+    for (i, ph) in Phase::ALL.iter().enumerate() {
+        let (pb, pa) = paper.rows[i];
+        let ours_b = if ph.adt_only() { None } else { Some(base_prof.avg_s(*ph) * 1e3) };
+        let ours_a = adt_prof.avg_s(*ph) * 1e3;
+        t.row(&[
+            ph.label().to_string(),
+            ours_b.map_or("N/A".into(), |v| format!("{v:.2}")),
+            pb.map_or("N/A".into(), |v| format!("{v:.2}")),
+            format!("{ours_a:.2}"),
+            format!("{pa:.2}"),
+        ]);
+        csv.push_str(&format!(
+            "{},{},{},{ours_a:.3},{pa}\n",
+            ph.label(),
+            ours_b.map_or(String::from(""), |v| format!("{v:.3}")),
+            pb.map_or(String::from(""), |v| format!("{v}")),
+        ));
+    }
+    t.print();
+
+    let reduction = base_prof.avg_s(Phase::H2D) / adt_prof.avg_s(Phase::H2D);
+    let paper_reduction = paper.rows[0].0.unwrap() / paper.rows[0].1;
+    println!(
+        "\n  CPU→GPU transfer reduction: {reduction:.2}× (paper {paper_reduction:.2}×)"
+    );
+    println!(
+        "  AWP share {:.2}% | ADT share {:.2}%   (paper {}: {} / {})",
+        adt_prof.awp_share() * 100.0,
+        adt_prof.adt_share() * 100.0,
+        paper.table_name,
+        if system == "x86" { "1.05%" } else { "0.54%" },
+        if system == "x86" { "6.60%" } else { "6.82%" },
+    );
+    std::fs::create_dir_all("artifacts/bench_out").ok();
+    std::fs::write(csv_path, csv).ok();
+    println!("  wrote {csv_path}");
+}

@@ -1,0 +1,263 @@
+//! Bitpack: truncate each f32 weight to its top `RoundTo` bytes.
+//!
+//! Packed format: for each weight `w`, the `r = RoundTo` most-significant
+//! bytes of the 32-bit word, stored least-significant-surviving-byte first
+//! (i.e. bytes `4−r .. 4` of the little-endian representation, in order).
+//! `Bitunpack` therefore reconstructs `f32::from_bits(bits & mask)` exactly.
+//!
+//! Three code paths, all byte-identical (tested):
+//! * scalar — Algorithm 2;
+//! * threaded — Algorithm 3 (`#pragma omp parallel for` analogue over the
+//!   crate's scoped thread pool, static schedule);
+//! * AVX2 — Algorithm 4 / Fig 2: `_mm256_shuffle_epi8` packs inside each
+//!   128-bit lane, `_mm256_permutevar8x32_epi32` compacts across lanes,
+//!   `_mm256_maskstore_epi32` writes only the surviving bytes.
+
+use super::RoundTo;
+use crate::util::threadpool::parallel_chunks;
+
+/// Packed output size in bytes for `n` weights.
+#[inline]
+pub fn packed_len(n: usize, round_to: RoundTo) -> usize {
+    n * round_to.bytes()
+}
+
+/// Which Bitpack inner loop to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BitpackImpl {
+    /// Portable byte-copy loop (Algorithm 2).
+    Scalar,
+    /// AVX2 byte-shuffle loop (Algorithm 4, x86 only).
+    Avx2,
+}
+
+impl BitpackImpl {
+    /// Pick the fastest implementation supported by this CPU.
+    pub fn detect() -> BitpackImpl {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return BitpackImpl::Avx2;
+            }
+        }
+        BitpackImpl::Scalar
+    }
+}
+
+/// Scalar Bitpack of `weights` into `out` (`out.len() == packed_len(..)`).
+pub fn bitpack_scalar_into(weights: &[f32], round_to: RoundTo, out: &mut [u8]) {
+    let r = round_to.bytes();
+    assert_eq!(out.len(), weights.len() * r);
+    match r {
+        4 => {
+            // Lossless: straight reinterpret copy.
+            for (i, w) in weights.iter().enumerate() {
+                out[i * 4..i * 4 + 4].copy_from_slice(&w.to_bits().to_le_bytes());
+            }
+        }
+        _ => {
+            let drop = 4 - r;
+            for (i, w) in weights.iter().enumerate() {
+                let b = w.to_bits().to_le_bytes();
+                out[i * r..(i + 1) * r].copy_from_slice(&b[drop..]);
+            }
+        }
+    }
+}
+
+/// Bitpack with the configured thread count and instruction set.
+pub fn bitpack_into(weights: &[f32], round_to: RoundTo, cfg: &super::AdtConfig, out: &mut [u8]) {
+    let r = round_to.bytes();
+    assert_eq!(out.len(), weights.len() * r, "output buffer size mismatch");
+    let kernel = move |_idx: usize, inp: &[f32], outp: &mut [u8]| match cfg.simd {
+        BitpackImpl::Scalar => bitpack_scalar_into(inp, round_to, outp),
+        BitpackImpl::Avx2 => bitpack_avx2_dispatch(inp, round_to, outp),
+    };
+    parallel_chunks(weights, out, 1, r, cfg.threads, cfg.min_per_thread, kernel);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn bitpack_avx2_dispatch(weights: &[f32], round_to: RoundTo, out: &mut [u8]) {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: AVX2 presence just checked.
+        unsafe { bitpack_avx2(weights, round_to, out) }
+    } else {
+        bitpack_scalar_into(weights, round_to, out)
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn bitpack_avx2_dispatch(weights: &[f32], round_to: RoundTo, out: &mut [u8]) {
+    bitpack_scalar_into(weights, round_to, out)
+}
+
+/// AVX2 inner loop over groups of 8 weights (paper Fig 2), scalar tail.
+///
+/// Per group: one 256-bit load, one in-lane byte shuffle packing the top
+/// `r` bytes of each dword to the lane bottom, one cross-lane dword
+/// permute compacting both lanes, one masked store of `8·r` bytes.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn bitpack_avx2(weights: &[f32], round_to: RoundTo, out: &mut [u8]) {
+    use std::arch::x86_64::*;
+    let r = round_to.bytes();
+    if r == 4 {
+        // Lossless copy — let memcpy do it.
+        let src = weights.as_ptr() as *const u8;
+        std::ptr::copy_nonoverlapping(src, out.as_mut_ptr(), weights.len() * 4);
+        return;
+    }
+
+    const Z: i8 = -128; // 0x80 → zero that output byte in pshufb
+
+    // In-lane shuffle control for each RoundTo: move the surviving (high)
+    // bytes of the 4 dwords in a 128-bit lane to the lane's low bytes.
+    let (shuf, perm, mask_dwords): (__m256i, __m256i, i32) = match r {
+        1 => (
+            _mm256_setr_epi8(
+                3, 7, 11, 15, Z, Z, Z, Z, Z, Z, Z, Z, Z, Z, Z, Z, //
+                3, 7, 11, 15, Z, Z, Z, Z, Z, Z, Z, Z, Z, Z, Z, Z,
+            ),
+            _mm256_setr_epi32(0, 4, 0, 0, 0, 0, 0, 0),
+            2,
+        ),
+        2 => (
+            _mm256_setr_epi8(
+                2, 3, 6, 7, 10, 11, 14, 15, Z, Z, Z, Z, Z, Z, Z, Z, //
+                2, 3, 6, 7, 10, 11, 14, 15, Z, Z, Z, Z, Z, Z, Z, Z,
+            ),
+            _mm256_setr_epi32(0, 1, 4, 5, 0, 0, 0, 0),
+            4,
+        ),
+        3 => (
+            _mm256_setr_epi8(
+                1, 2, 3, 5, 6, 7, 9, 10, 11, 13, 14, 15, Z, Z, Z, Z, //
+                1, 2, 3, 5, 6, 7, 9, 10, 11, 13, 14, 15, Z, Z, Z, Z,
+            ),
+            _mm256_setr_epi32(0, 1, 2, 4, 5, 6, 0, 0),
+            6,
+        ),
+        _ => unreachable!("r in 1..=3 here"),
+    };
+    // Store mask: first `mask_dwords` dwords enabled (MSB of each dword).
+    let store_mask = {
+        let mut lanes = [0i32; 8];
+        for l in lanes.iter_mut().take(mask_dwords as usize) {
+            *l = i32::MIN;
+        }
+        _mm256_setr_epi32(
+            lanes[0], lanes[1], lanes[2], lanes[3], lanes[4], lanes[5], lanes[6], lanes[7],
+        )
+    };
+
+    let groups = weights.len() / 8;
+    let out_stride = 8 * r;
+    let in_ptr = weights.as_ptr() as *const __m256i;
+    // Overlapping full-width stores: each group's 32-byte store writes
+    // 8·r valid bytes plus scratch that the next group's store overwrites.
+    // Groups whose 32-byte window would cross the output end fall back to
+    // the masked store (perf: full store avoids maskstore's ~1.7× cost,
+    // see EXPERIMENTS.md §Perf).
+    let full_store_groups = if out.len() >= 32 {
+        groups.min((out.len() - 32) / out_stride + 1)
+    } else {
+        0
+    };
+    for g in 0..groups {
+        // Step 1 (Fig 2): load 8 weights.
+        let v = _mm256_loadu_si256(in_ptr.add(g));
+        // Step 2: pack surviving bytes inside each 128-bit lane.
+        let packed_lanes = _mm256_shuffle_epi8(v, shuf);
+        // Step 3: compact the two lanes' payloads together.
+        let compact = _mm256_permutevar8x32_epi32(packed_lanes, perm);
+        // Step 4: store the surviving 8·r bytes.
+        let dst = out.as_mut_ptr().add(g * out_stride);
+        if g < full_store_groups {
+            _mm256_storeu_si256(dst as *mut __m256i, compact);
+        } else {
+            _mm256_maskstore_epi32(dst as *mut i32, store_mask, compact);
+        }
+    }
+    // Scalar tail.
+    let done = groups * 8;
+    bitpack_scalar_into(&weights[done..], round_to, &mut out[done * r..]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adt::AdtConfig;
+    use crate::util::prng::Rng;
+
+    fn random_weights(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| f32::from_bits(rng.next_u64() as u32)).collect()
+    }
+
+    #[test]
+    fn scalar_pack_layout() {
+        // 0x44332211 → bytes LE [0x11,0x22,0x33,0x44]; top 3 bytes are
+        // [0x22,0x33,0x44].
+        let w = [f32::from_bits(0x4433_2211)];
+        let mut out = vec![0u8; 3];
+        bitpack_scalar_into(&w, RoundTo::B3, &mut out);
+        assert_eq!(out, [0x22, 0x33, 0x44]);
+        let mut out1 = vec![0u8; 1];
+        bitpack_scalar_into(&w, RoundTo::B1, &mut out1);
+        assert_eq!(out1, [0x44]);
+        let mut out2 = vec![0u8; 2];
+        bitpack_scalar_into(&w, RoundTo::B2, &mut out2);
+        assert_eq!(out2, [0x33, 0x44]);
+    }
+
+    #[test]
+    fn avx2_matches_scalar_all_roundto() {
+        if BitpackImpl::detect() != BitpackImpl::Avx2 {
+            eprintln!("skipping: no AVX2");
+            return;
+        }
+        // Sizes straddling the 8-weight group boundary exercise the tail.
+        for n in [0usize, 1, 7, 8, 9, 16, 33, 1000, 4096, 4099] {
+            let w = random_weights(n, 42 + n as u64);
+            for rt in RoundTo::ALL {
+                let mut scalar = vec![0u8; packed_len(n, rt)];
+                bitpack_scalar_into(&w, rt, &mut scalar);
+                let mut simd = vec![0u8; packed_len(n, rt)];
+                bitpack_avx2_dispatch(&w, rt, &mut simd);
+                assert_eq!(scalar, simd, "n={n} rt={rt}");
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matches_scalar() {
+        let n = 100_000;
+        let w = random_weights(n, 7);
+        for rt in RoundTo::ALL {
+            for threads in [1usize, 2, 3, 8] {
+                let cfg = AdtConfig { threads, min_per_thread: 1024, ..Default::default() };
+                let mut out = vec![0u8; packed_len(n, rt)];
+                bitpack_into(&w, rt, &cfg, &mut out);
+                let mut reference = vec![0u8; packed_len(n, rt)];
+                bitpack_scalar_into(&w, rt, &mut reference);
+                assert_eq!(out, reference, "rt={rt} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let cfg = AdtConfig::default();
+        let mut out = Vec::new();
+        bitpack_into(&[], RoundTo::B3, &cfg, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "output buffer size mismatch")]
+    fn wrong_output_size_panics() {
+        let cfg = AdtConfig::default();
+        let mut out = vec![0u8; 5];
+        bitpack_into(&[1.0, 2.0], RoundTo::B3, &cfg, &mut out);
+    }
+}

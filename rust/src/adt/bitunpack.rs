@@ -1,0 +1,204 @@
+//! Bitunpack: restore packed weights to IEEE-754 32-bit layout
+//! (paper §III-C, Algorithm 5).
+//!
+//! The packed stream stores the top `r` bytes of each weight; Bitunpack
+//! shifts them back into the high bytes of a 32-bit word and zeroes the
+//! rest — `weight := Pw[off .. off+r] << (4 − r)·8` in the paper's notation.
+//!
+//! In the paper this runs as a CUDA kernel on the GPU. Here it exists in
+//! two places: this Rust implementation (used by the coordinator's workers
+//! before feeding the PJRT executable, and by the transfer round-trip
+//! tests) and the Pallas `bitunpack` kernel fused into the model graph
+//! (`python/compile/kernels/bitunpack.py`), which is the TPU analogue.
+
+use super::RoundTo;
+use crate::util::threadpool::parallel_chunks;
+
+/// The value a weight takes after a pack→unpack round trip at `round_to`.
+#[inline]
+pub fn masked_value(w: f32, round_to: RoundTo) -> f32 {
+    f32::from_bits(w.to_bits() & round_to.mask())
+}
+
+/// Apply the truncation mask in place (semantically pack+unpack without
+/// the transfer). Used by tests and by the oracle policy's fast path.
+pub fn mask_in_place(weights: &mut [f32], round_to: RoundTo) {
+    if round_to.is_lossless() {
+        return;
+    }
+    let mask = round_to.mask();
+    for w in weights.iter_mut() {
+        *w = f32::from_bits(w.to_bits() & mask);
+    }
+}
+
+/// Scalar Bitunpack: `out.len() * round_to.bytes() == packed.len()`.
+///
+/// Per-width specialized loops: each weight is rebuilt with one shift of a
+/// small little-endian read instead of byte-wise copies (≈20× faster than
+/// the naive `copy_from_slice` loop — see EXPERIMENTS.md §Perf).
+pub fn bitunpack_scalar_into(packed: &[u8], round_to: RoundTo, out: &mut [f32]) {
+    let r = round_to.bytes();
+    assert_eq!(packed.len(), out.len() * r);
+    match r {
+        1 => {
+            for (o, &b) in out.iter_mut().zip(packed) {
+                *o = f32::from_bits((b as u32) << 24);
+            }
+        }
+        2 => {
+            for (i, o) in out.iter_mut().enumerate() {
+                let v = u16::from_le_bytes([packed[2 * i], packed[2 * i + 1]]) as u32;
+                *o = f32::from_bits(v << 16);
+            }
+        }
+        3 => {
+            // bulk: unaligned 4-byte read overlapping the next weight's
+            // first byte; the shift discards it. Tail handled separately.
+            let n = out.len();
+            let bulk = n.saturating_sub(1);
+            for (i, o) in out[..bulk].iter_mut().enumerate() {
+                // SAFETY: i < n-1 ⇒ 3i+4 <= 3n-3+1 <= packed.len() for n>=2
+                let word = unsafe {
+                    (packed.as_ptr().add(3 * i) as *const u32).read_unaligned()
+                };
+                *o = f32::from_bits((u32::from_le(word) << 8) & 0xFFFF_FF00);
+            }
+            if n > 0 {
+                let i = n - 1;
+                let v = u32::from_le_bytes([
+                    0,
+                    packed[3 * i],
+                    packed[3 * i + 1],
+                    packed[3 * i + 2],
+                ]);
+                out[i] = f32::from_bits(v);
+            }
+        }
+        _ => {
+            for (i, o) in out.iter_mut().enumerate() {
+                let mut b = [0u8; 4];
+                b.copy_from_slice(&packed[i * 4..i * 4 + 4]);
+                *o = f32::from_bits(u32::from_le_bytes(b));
+            }
+        }
+    }
+}
+
+/// Threaded Bitunpack (the "massively parallel device side" analogue —
+/// each thread restores a disjoint shard, Algorithm 5's UnitId loop).
+pub fn bitunpack_into(packed: &[u8], round_to: RoundTo, cfg: &super::AdtConfig, out: &mut [f32]) {
+    let r = round_to.bytes();
+    assert_eq!(packed.len(), out.len() * r, "packed buffer size mismatch");
+    parallel_chunks(
+        packed,
+        out,
+        r,
+        1,
+        cfg.threads,
+        cfg.min_per_thread,
+        move |_idx, inp, outp| bitunpack_scalar_into(inp, round_to, outp),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{bitpack_scalar_into, packed_len, AdtConfig};
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn unpack_places_bytes_high() {
+        // packed [0x22,0x33,0x44] at r=3 → word 0x44332200
+        let packed = [0x22u8, 0x33, 0x44];
+        let mut out = [0f32; 1];
+        bitunpack_scalar_into(&packed, RoundTo::B3, &mut out);
+        assert_eq!(out[0].to_bits(), 0x4433_2200);
+        let packed1 = [0xBFu8];
+        bitunpack_scalar_into(&packed1, RoundTo::B1, &mut out);
+        assert_eq!(out[0].to_bits(), 0xBF00_0000); // -0.5: sign+exponent only
+        assert_eq!(out[0], -0.5);
+    }
+
+    #[test]
+    fn roundtrip_equals_mask_on_random_bits() {
+        let mut rng = Rng::new(99);
+        let w: Vec<f32> = (0..4097).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+        for rt in RoundTo::ALL {
+            let mut packed = vec![0u8; packed_len(w.len(), rt)];
+            bitpack_scalar_into(&w, rt, &mut packed);
+            let mut restored = vec![0f32; w.len()];
+            bitunpack_scalar_into(&packed, rt, &mut restored);
+            for (a, b) in w.iter().zip(&restored) {
+                assert_eq!(b.to_bits(), a.to_bits() & rt.mask());
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_matches_scalar() {
+        let mut rng = Rng::new(3);
+        let w: Vec<f32> = (0..50_000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for rt in RoundTo::ALL {
+            let mut packed = vec![0u8; packed_len(w.len(), rt)];
+            bitpack_scalar_into(&w, rt, &mut packed);
+            let mut a = vec![0f32; w.len()];
+            bitunpack_scalar_into(&packed, rt, &mut a);
+            let cfg = AdtConfig { threads: 5, min_per_thread: 1000, ..Default::default() };
+            let mut b = vec![0f32; w.len()];
+            bitunpack_into(&packed, rt, &cfg, &mut b);
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn mask_in_place_matches_masked_value() {
+        let mut rng = Rng::new(4);
+        let w: Vec<f32> = (0..100).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        for rt in RoundTo::ALL {
+            let mut m = w.clone();
+            mask_in_place(&mut m, rt);
+            for (orig, masked) in w.iter().zip(&m) {
+                assert_eq!(masked.to_bits(), masked_value(*orig, rt).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_error_bound() {
+        // For normal numbers, |w − mask(w)| < 2^(exp) · 2^(−kept_mantissa_bits)
+        let mut rng = Rng::new(12);
+        for _ in 0..1000 {
+            let w = rng.normal_f32(0.0, 1.0);
+            if !w.is_normal() {
+                continue;
+            }
+            for rt in [RoundTo::B2, RoundTo::B3] {
+                let kept_mantissa = rt.bits() as i32 - 9; // sign + 8 exponent bits
+                let ulp = 2f64.powi(w.abs().log2().floor() as i32 - kept_mantissa);
+                let err = (w as f64 - masked_value(w, rt) as f64).abs();
+                assert!(err <= ulp, "w={w} rt={rt} err={err} ulp={ulp}");
+            }
+        }
+    }
+
+    #[test]
+    fn truncation_preserves_sign_and_magnitude_order() {
+        // Truncation toward zero: |mask(w)| <= |w|, sign unchanged.
+        let mut rng = Rng::new(13);
+        for _ in 0..1000 {
+            let w = f32::from_bits(rng.next_u64() as u32);
+            if w.is_nan() {
+                continue;
+            }
+            for rt in RoundTo::ALL {
+                let m = masked_value(w, rt);
+                assert!(m.abs() <= w.abs());
+                assert_eq!(m.is_sign_negative(), w.is_sign_negative());
+            }
+        }
+    }
+}

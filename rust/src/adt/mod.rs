@@ -1,0 +1,193 @@
+//! ADT — the Approximate Data Transfer procedure (paper §III).
+//!
+//! * [`bitpack`] — CPU-side compression: each IEEE-754 f32 weight is
+//!   truncated to its most-significant `RoundTo` bytes (sign + exponent
+//!   survive first; mantissa bits are discarded low-to-high), exactly
+//!   Algorithm 2. Scalar, multi-threaded (OpenMP analogue) and AVX2
+//!   byte-shuffle (paper Fig 2 / Algorithm 4) implementations.
+//! * [`bitunpack`] — device-side restoration: packed bytes are placed back
+//!   in the high bytes of a 32-bit word, low bytes zeroed (Algorithm 5).
+//!   The GPU-side equivalent also exists as the L1 Pallas kernel
+//!   (`python/compile/kernels/bitunpack.py`) fused into the model graph.
+//! * [`RoundTo`] — the byte width chosen by AWP (bits rounded up to bytes:
+//!   paper §III-A, "if AWP provides the value 14, RoundTo will be set to 2").
+//!
+//! Invariants (enforced by tests in this module and property tests in
+//! `rust/tests/prop_adt.rs`):
+//!
+//! 1. `bitunpack(bitpack(w, r), r)[i]` equals `w[i]` with the low
+//!    `32 − 8r` bits zeroed — i.e. `mask(w[i], r)` — for every finite and
+//!    non-finite f32 bit pattern.
+//! 2. `RoundTo = 4` is lossless.
+//! 3. Truncation error of a normal f32 is bounded by `2^(e−p)` where `e` is
+//!    the unbiased exponent and `p` the surviving mantissa bits.
+//! 4. Scalar, threaded and SIMD paths produce byte-identical output.
+
+mod bitpack;
+mod bitunpack;
+
+pub use bitpack::{bitpack_into, bitpack_scalar_into, packed_len, BitpackImpl};
+pub use bitunpack::{bitunpack_into, bitunpack_scalar_into, mask_in_place, masked_value};
+
+/// Number of most-significant bytes kept per 32-bit weight. The paper's
+/// formats are 8/16/24/32-bit → RoundTo 1/2/3/4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RoundTo(u8);
+
+impl RoundTo {
+    pub const B1: RoundTo = RoundTo(1);
+    pub const B2: RoundTo = RoundTo(2);
+    pub const B3: RoundTo = RoundTo(3);
+    pub const B4: RoundTo = RoundTo(4);
+
+    /// All transfer formats in ascending precision order.
+    pub const ALL: [RoundTo; 4] = [RoundTo(1), RoundTo(2), RoundTo(3), RoundTo(4)];
+
+    /// From a byte count 1..=4.
+    pub fn from_bytes(b: u8) -> Option<RoundTo> {
+        (1..=4).contains(&b).then_some(RoundTo(b))
+    }
+
+    /// From a bit width, rounding *up* to the nearest whole byte
+    /// (paper §III-A: 14 bits → 2 bytes).
+    pub fn from_bits(bits: u32) -> Option<RoundTo> {
+        if bits == 0 || bits > 32 {
+            return None;
+        }
+        Some(RoundTo(bits.div_ceil(8) as u8))
+    }
+
+    #[inline]
+    pub fn bytes(self) -> usize {
+        self.0 as usize
+    }
+
+    #[inline]
+    pub fn bits(self) -> u32 {
+        self.0 as u32 * 8
+    }
+
+    /// Bit mask keeping the top `bytes` of a u32 word.
+    #[inline]
+    pub fn mask(self) -> u32 {
+        // 0xFF000000, 0xFFFF0000, 0xFFFFFF00, 0xFFFFFFFF
+        (!0u32) << (32 - self.bits())
+    }
+
+    /// Compression ratio versus full f32 (4/bytes).
+    pub fn ratio(self) -> f64 {
+        4.0 / self.0 as f64
+    }
+
+    pub fn is_lossless(self) -> bool {
+        self.0 == 4
+    }
+
+    /// Next wider format (saturating at 4 bytes) — AWP's `+= N` step with
+    /// the paper's N = 8 bits.
+    pub fn widen(self) -> RoundTo {
+        RoundTo((self.0 + 1).min(4))
+    }
+}
+
+impl std::fmt::Display for RoundTo {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}-bit", self.bits())
+    }
+}
+
+/// How many threads / which instruction set to use for Bitpack.
+#[derive(Clone, Copy, Debug)]
+pub struct AdtConfig {
+    pub threads: usize,
+    pub simd: BitpackImpl,
+    /// Minimum weights per thread before fan-out is worth it.
+    pub min_per_thread: usize,
+}
+
+impl Default for AdtConfig {
+    fn default() -> Self {
+        AdtConfig {
+            threads: crate::util::threadpool::default_threads(),
+            simd: BitpackImpl::detect(),
+            min_per_thread: 64 * 1024,
+        }
+    }
+}
+
+/// Pack `weights` into `out` (resized to exactly `packed_len`).
+pub fn bitpack(weights: &[f32], round_to: RoundTo, cfg: &AdtConfig, out: &mut Vec<u8>) {
+    out.resize(packed_len(weights.len(), round_to), 0);
+    bitpack_into(weights, round_to, cfg, out);
+}
+
+/// Unpack `packed` into `out` (resized to the weight count).
+pub fn bitunpack(packed: &[u8], round_to: RoundTo, cfg: &AdtConfig, out: &mut Vec<f32>) {
+    assert_eq!(packed.len() % round_to.bytes(), 0, "packed length mismatch");
+    out.resize(packed.len() / round_to.bytes(), 0.0);
+    bitunpack_into(packed, round_to, cfg, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundto_masks() {
+        assert_eq!(RoundTo::B1.mask(), 0xFF00_0000);
+        assert_eq!(RoundTo::B2.mask(), 0xFFFF_0000);
+        assert_eq!(RoundTo::B3.mask(), 0xFFFF_FF00);
+        assert_eq!(RoundTo::B4.mask(), 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn roundto_from_bits_rounds_up() {
+        assert_eq!(RoundTo::from_bits(14), Some(RoundTo::B2)); // paper's example
+        assert_eq!(RoundTo::from_bits(8), Some(RoundTo::B1));
+        assert_eq!(RoundTo::from_bits(9), Some(RoundTo::B2));
+        assert_eq!(RoundTo::from_bits(24), Some(RoundTo::B3));
+        assert_eq!(RoundTo::from_bits(32), Some(RoundTo::B4));
+        assert_eq!(RoundTo::from_bits(0), None);
+        assert_eq!(RoundTo::from_bits(33), None);
+    }
+
+    #[test]
+    fn widen_saturates() {
+        assert_eq!(RoundTo::B1.widen(), RoundTo::B2);
+        assert_eq!(RoundTo::B4.widen(), RoundTo::B4);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip_equals_mask() {
+        let weights: Vec<f32> = vec![1.0, -2.5, 3.141592653, 1e-20, -1e20, 0.0, f32::MIN_POSITIVE];
+        let cfg = AdtConfig { threads: 1, ..Default::default() };
+        for rt in RoundTo::ALL {
+            let mut packed = Vec::new();
+            bitpack(&weights, rt, &cfg, &mut packed);
+            assert_eq!(packed.len(), weights.len() * rt.bytes());
+            let mut restored = Vec::new();
+            bitunpack(&packed, rt, &cfg, &mut restored);
+            for (w, r) in weights.iter().zip(&restored) {
+                assert_eq!(r.to_bits(), w.to_bits() & rt.mask(), "rt={rt}");
+            }
+        }
+    }
+
+    #[test]
+    fn four_bytes_is_lossless() {
+        let weights: Vec<f32> = (0..1000).map(|i| (i as f32).sin() * 1e3).collect();
+        let cfg = AdtConfig::default();
+        let mut packed = Vec::new();
+        bitpack(&weights, RoundTo::B4, &cfg, &mut packed);
+        let mut restored = Vec::new();
+        bitunpack(&packed, RoundTo::B4, &cfg, &mut restored);
+        assert_eq!(weights, restored);
+    }
+
+    #[test]
+    fn ratio_and_display() {
+        assert_eq!(RoundTo::B1.ratio(), 4.0);
+        assert_eq!(RoundTo::B3.ratio(), 4.0 / 3.0);
+        assert_eq!(RoundTo::B2.to_string(), "16-bit");
+    }
+}

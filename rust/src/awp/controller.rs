@@ -1,0 +1,293 @@
+//! Algorithm 1 — the per-layer precision controller.
+
+use crate::adt::RoundTo;
+use crate::util::stats::rel_change;
+
+/// AWP hyper-parameters (paper §II + §V-A).
+///
+/// The paper's calibrated values: `T` = −5e−2 (AlexNet), −2e−3 (VGG),
+/// −2e−5 (ResNet); `INTERVAL` = 4000 (AlexNet/VGG), 2000 (ResNet);
+/// `N` = 8 bits (one byte, the pack granularity); start precision 8-bit.
+#[derive(Clone, Copy, Debug)]
+pub struct AwpParams {
+    /// Change-rate threshold `T`: δ < T counts toward a precision widen.
+    pub threshold: f64,
+    /// Number of below-threshold batches before widening (`INTERVAL`).
+    pub interval: u32,
+    /// Bits added per widen (`N`; byte granularity → multiples of 8).
+    pub step_bits: u32,
+    /// Precision every layer starts at.
+    pub initial: RoundTo,
+}
+
+impl AwpParams {
+    /// Paper §V-A values per model family.
+    pub fn for_model(family: &str) -> AwpParams {
+        let (threshold, interval) = match family {
+            f if f.contains("alexnet") => (-5e-2, 4000),
+            f if f.contains("vgg") => (-2e-3, 4000),
+            f if f.contains("resnet") => (-2e-5, 2000),
+            _ => (-1e-3, 2000),
+        };
+        AwpParams { threshold, interval, step_bits: 8, initial: RoundTo::B1 }
+    }
+
+    /// Scale `INTERVAL` for short runs (micro-model training uses far fewer
+    /// batches than ImageNet200's 4005/epoch; the paper sets INTERVAL ≈ one
+    /// epoch's worth of batches, which we preserve proportionally).
+    pub fn with_interval(mut self, interval: u32) -> AwpParams {
+        self.interval = interval;
+        self
+    }
+
+    pub fn with_threshold(mut self, t: f64) -> AwpParams {
+        self.threshold = t;
+        self
+    }
+}
+
+impl Default for AwpParams {
+    fn default() -> Self {
+        AwpParams { threshold: -1e-3, interval: 2000, step_bits: 8, initial: RoundTo::B1 }
+    }
+}
+
+/// A precision change decided by the controller (for logging/ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AwpEvent {
+    pub batch: u64,
+    pub layer: usize,
+    pub from: RoundTo,
+    pub to: RoundTo,
+}
+
+/// Per-layer controller state: `BitsPerLayer` + `IntervalCounter` of
+/// Algorithm 1 plus the previous-batch l²-norm needed for δ.
+#[derive(Clone, Debug)]
+pub struct AwpController {
+    params: AwpParams,
+    bits_per_layer: Vec<u32>,
+    interval_counter: Vec<u32>,
+    prev_norm: Vec<Option<f64>>,
+    batch: u64,
+    events: Vec<AwpEvent>,
+}
+
+impl AwpController {
+    pub fn new(num_layers: usize, params: AwpParams) -> Self {
+        AwpController {
+            params,
+            bits_per_layer: vec![params.initial.bits(); num_layers],
+            interval_counter: vec![0; num_layers],
+            prev_norm: vec![None; num_layers],
+            batch: 0,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.bits_per_layer.len()
+    }
+
+    pub fn params(&self) -> &AwpParams {
+        &self.params
+    }
+
+    /// Current transfer format of `layer` (bits rounded up to bytes).
+    pub fn round_to(&self, layer: usize) -> RoundTo {
+        RoundTo::from_bits(self.bits_per_layer[layer].min(32)).unwrap_or(RoundTo::B4)
+    }
+
+    /// All layers' current formats.
+    pub fn formats(&self) -> Vec<RoundTo> {
+        (0..self.num_layers()).map(|l| self.round_to(l)).collect()
+    }
+
+    /// Observe one layer's post-backprop l²-norm for the current batch.
+    /// Returns the widen event if this observation triggered one.
+    pub fn observe_layer(&mut self, layer: usize, l2_norm: f64) -> Option<AwpEvent> {
+        let delta = match self.prev_norm[layer] {
+            // First batch: no previous norm, no δ (loop starts at batch 1
+            // in effect; Algorithm 1's batch 0 has no W_{batch-1}).
+            None => {
+                self.prev_norm[layer] = Some(l2_norm);
+                return None;
+            }
+            Some(prev) => rel_change(l2_norm, prev),
+        };
+        self.prev_norm[layer] = Some(l2_norm);
+
+        if delta < self.params.threshold {
+            self.interval_counter[layer] += 1;
+        }
+        if self.interval_counter[layer] >= self.params.interval {
+            self.interval_counter[layer] = 0;
+            let from = self.round_to(layer);
+            if self.bits_per_layer[layer] < 32 {
+                self.bits_per_layer[layer] =
+                    (self.bits_per_layer[layer] + self.params.step_bits).min(32);
+                let ev = AwpEvent { batch: self.batch, layer, from, to: self.round_to(layer) };
+                self.events.push(ev);
+                return Some(ev);
+            }
+        }
+        None
+    }
+
+    /// Observe all layers at once (norms indexed by layer) and advance the
+    /// batch counter. Returns events triggered this batch.
+    pub fn observe_batch(&mut self, norms: &[f64]) -> Vec<AwpEvent> {
+        assert_eq!(norms.len(), self.num_layers(), "one norm per layer");
+        let evs: Vec<AwpEvent> =
+            norms.iter().enumerate().filter_map(|(l, &n)| self.observe_layer(l, n)).collect();
+        self.batch += 1;
+        evs
+    }
+
+    /// Every widen event so far (chronological).
+    pub fn events(&self) -> &[AwpEvent] {
+        &self.events
+    }
+
+    pub fn batches_seen(&self) -> u64 {
+        self.batch
+    }
+
+    /// Mean transfer bytes per weight across layers, weighted by layer
+    /// weight counts — the effective compression state of the network.
+    pub fn mean_bytes_per_weight(&self, layer_weights: &[usize]) -> f64 {
+        assert_eq!(layer_weights.len(), self.num_layers());
+        let total: usize = layer_weights.iter().sum();
+        if total == 0 {
+            return 4.0;
+        }
+        let bytes: f64 = layer_weights
+            .iter()
+            .enumerate()
+            .map(|(l, &n)| n as f64 * self.round_to(l).bytes() as f64)
+            .sum();
+        bytes / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(t: f64, interval: u32) -> AwpParams {
+        AwpParams { threshold: t, interval, step_bits: 8, initial: RoundTo::B1 }
+    }
+
+    #[test]
+    fn starts_at_initial_precision() {
+        let c = AwpController::new(3, params(-1e-3, 10));
+        assert_eq!(c.formats(), vec![RoundTo::B1; 3]);
+    }
+
+    #[test]
+    fn widens_after_interval_below_threshold_batches() {
+        let mut c = AwpController::new(1, params(-0.01, 3));
+        // norms decaying 5% per batch → δ = −0.05 < T = −0.01 every batch.
+        let mut norm = 1.0;
+        let mut widened_at = None;
+        for batch in 0..10 {
+            norm *= 0.95;
+            let evs = c.observe_batch(&[norm]);
+            if !evs.is_empty() && widened_at.is_none() {
+                widened_at = Some(batch);
+                assert_eq!(evs[0].from, RoundTo::B1);
+                assert_eq!(evs[0].to, RoundTo::B2);
+            }
+        }
+        // batch 0 establishes prev; batches 1,2,3 count → widen on batch 3.
+        assert_eq!(widened_at, Some(3));
+    }
+
+    #[test]
+    fn stable_norms_never_widen() {
+        let mut c = AwpController::new(2, params(-0.01, 2));
+        for _ in 0..100 {
+            c.observe_batch(&[1.0, 2.0]); // δ = 0, not < T
+        }
+        assert_eq!(c.formats(), vec![RoundTo::B1, RoundTo::B1]);
+        assert!(c.events().is_empty());
+    }
+
+    #[test]
+    fn growing_norms_never_widen() {
+        let mut c = AwpController::new(1, params(-0.01, 2));
+        let mut n = 1.0;
+        for _ in 0..50 {
+            n *= 1.1;
+            c.observe_batch(&[n]);
+        }
+        assert_eq!(c.round_to(0), RoundTo::B1);
+    }
+
+    #[test]
+    fn saturates_at_32_bits() {
+        let mut c = AwpController::new(1, params(-0.001, 1));
+        let mut n = 1.0;
+        for _ in 0..20 {
+            n *= 0.5;
+            c.observe_batch(&[n]);
+        }
+        assert_eq!(c.round_to(0), RoundTo::B4);
+        // exactly 3 widen events: 8→16→24→32
+        assert_eq!(c.events().len(), 3);
+    }
+
+    #[test]
+    fn layers_progress_independently() {
+        let mut c = AwpController::new(2, params(-0.01, 2));
+        let mut decaying = 1.0;
+        for _ in 0..10 {
+            decaying *= 0.9;
+            c.observe_batch(&[decaying, 1.0]);
+        }
+        assert!(c.round_to(0) > RoundTo::B1);
+        assert_eq!(c.round_to(1), RoundTo::B1);
+    }
+
+    #[test]
+    fn interval_counter_resets_on_widen() {
+        let mut c = AwpController::new(1, params(-0.01, 2));
+        // 2 decays → widen; then stable → no more widens even after many
+        // batches (counter was reset, δ no longer < T).
+        c.observe_batch(&[1.0]);
+        c.observe_batch(&[0.9]);
+        let evs = c.observe_batch(&[0.8]);
+        assert_eq!(evs.len(), 1);
+        for _ in 0..10 {
+            assert!(c.observe_batch(&[0.8]).is_empty());
+        }
+        assert_eq!(c.round_to(0), RoundTo::B2);
+    }
+
+    #[test]
+    fn mean_bytes_weighted() {
+        let mut c = AwpController::new(2, params(-0.01, 1));
+        // widen layer 0 three times → 32-bit; layer 1 stays 8-bit.
+        let mut n = 1.0;
+        for _ in 0..5 {
+            n *= 0.5;
+            c.observe_layer(0, n);
+        }
+        c.observe_layer(1, 1.0);
+        assert_eq!(c.round_to(0), RoundTo::B4);
+        // layer0: 3 weights @4B, layer1: 1 weight @1B → (12+1)/4
+        assert!((c.mean_bytes_per_weight(&[3, 1]) - 13.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_parameter_presets() {
+        let a = AwpParams::for_model("alexnet_micro");
+        assert_eq!(a.threshold, -5e-2);
+        assert_eq!(a.interval, 4000);
+        let r = AwpParams::for_model("resnet34");
+        assert_eq!(r.threshold, -2e-5);
+        assert_eq!(r.interval, 2000);
+        assert_eq!(r.initial, RoundTo::B1);
+        assert_eq!(r.step_bits, 8);
+    }
+}

@@ -1,0 +1,20 @@
+//! AWP — the Adaptive Weight Precision algorithm (paper §II, Algorithm 1)
+//! and the precision *policies* the evaluation compares
+//! (baseline / fixed / oracle / AWP).
+//!
+//! After every batch's backpropagation the controller computes, per layer,
+//! the l²-norm of the layer's weights and its relative change rate
+//! `δ = (|W_i| − |W_{i−1}|) / |W_{i−1}|`. Whenever `δ < T` for `INTERVAL`
+//! consecutive batches, the layer's transfer precision widens by `N` bits
+//! (byte granularity → one [`RoundTo`] step). Training starts at 8-bit for
+//! every layer.
+
+mod controller;
+mod norm;
+mod policy;
+
+pub use controller::{AwpController, AwpEvent, AwpParams};
+pub use norm::{l2_norm_fast, l2_norm_simd};
+pub use policy::{resnet_block_groups, Policy, PolicyKind, PrecisionPolicy};
+
+pub use crate::adt::RoundTo;

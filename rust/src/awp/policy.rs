@@ -1,0 +1,261 @@
+//! Precision policies compared in the paper's evaluation (§V-A):
+//!
+//! * `baseline` — 32-bit FP for the whole training;
+//! * `fixed(k)` — one of the 8/16/24/32-bit formats for the whole training
+//!   (the candidates the `oracle` picks from);
+//! * `oracle` — per (model, batch-size) the fixed format that first reaches
+//!   the accuracy threshold, with ADT compression;
+//! * `awp` — the adaptive controller (Algorithm 1), i.e. A²DTWP when
+//!   combined with ADT.
+//!
+//! ResNet adapts precision at the *building-block* level rather than
+//! per-layer (paper §IV-B): a layer→group map aggregates the per-layer
+//! norms (√Σnᵢ²) and one controller cell drives every layer in the group.
+
+use super::controller::{AwpController, AwpEvent, AwpParams};
+use crate::adt::RoundTo;
+
+/// Which policy to run (CLI / config selectable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolicyKind {
+    Baseline,
+    Fixed(RoundTo),
+    /// Oracle with its chosen format (selection happens offline, see
+    /// `benches/fig4_normalized.rs` which sweeps the fixed candidates).
+    Oracle(RoundTo),
+    Awp,
+}
+
+impl PolicyKind {
+    pub fn parse(s: &str) -> Option<PolicyKind> {
+        match s {
+            "baseline" => Some(PolicyKind::Baseline),
+            "awp" => Some(PolicyKind::Awp),
+            "fixed8" => Some(PolicyKind::Fixed(RoundTo::B1)),
+            "fixed16" => Some(PolicyKind::Fixed(RoundTo::B2)),
+            "fixed24" => Some(PolicyKind::Fixed(RoundTo::B3)),
+            "fixed32" => Some(PolicyKind::Fixed(RoundTo::B4)),
+            "oracle8" => Some(PolicyKind::Oracle(RoundTo::B1)),
+            "oracle16" => Some(PolicyKind::Oracle(RoundTo::B2)),
+            "oracle24" => Some(PolicyKind::Oracle(RoundTo::B3)),
+            "oracle32" => Some(PolicyKind::Oracle(RoundTo::B4)),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            PolicyKind::Baseline => "baseline".into(),
+            PolicyKind::Fixed(rt) => format!("fixed{}", rt.bits()),
+            PolicyKind::Oracle(rt) => format!("oracle{}", rt.bits()),
+            PolicyKind::Awp => "awp".into(),
+        }
+    }
+
+    /// Does this policy route weights through ADT compression?
+    /// (The 32-bit baseline sends raw f32; everything else packs.)
+    pub fn uses_adt(&self) -> bool {
+        !matches!(self, PolicyKind::Baseline)
+    }
+
+    /// Does this policy need per-batch l²-norms (AWP only)?
+    pub fn needs_norms(&self) -> bool {
+        matches!(self, PolicyKind::Awp)
+    }
+}
+
+/// Runtime policy state: decides each layer's transfer format every batch.
+#[derive(Clone, Debug)]
+pub enum Policy {
+    Static { formats: Vec<RoundTo>, kind: PolicyKind },
+    Adaptive { ctl: AwpController, groups: Vec<usize>, formats: Vec<RoundTo> },
+}
+
+/// Common interface used by the coordinator.
+pub trait PrecisionPolicy {
+    /// Per-layer transfer formats for the upcoming batch.
+    fn formats(&self) -> &[RoundTo];
+    /// Feed post-backprop per-layer weight norms; returns AWP widen events.
+    fn observe_batch(&mut self, layer_norms: &[f64]) -> Vec<AwpEvent>;
+    /// Whether observe_batch actually needs norms (lets the coordinator
+    /// skip the l²-norm pass entirely for static policies, as the paper's
+    /// baseline does).
+    fn needs_norms(&self) -> bool;
+    fn kind(&self) -> PolicyKind;
+}
+
+impl Policy {
+    /// Build a policy for `num_layers` layers.
+    ///
+    /// `block_groups`: optional layer→group map (ResNet building blocks);
+    /// identity grouping when `None`.
+    pub fn new(
+        kind: PolicyKind,
+        num_layers: usize,
+        params: AwpParams,
+        block_groups: Option<Vec<usize>>,
+    ) -> Policy {
+        match kind {
+            PolicyKind::Baseline => {
+                Policy::Static { formats: vec![RoundTo::B4; num_layers], kind }
+            }
+            PolicyKind::Fixed(rt) | PolicyKind::Oracle(rt) => {
+                Policy::Static { formats: vec![rt; num_layers], kind }
+            }
+            PolicyKind::Awp => {
+                let groups = match block_groups {
+                    Some(g) => {
+                        assert_eq!(g.len(), num_layers, "group map must cover every layer");
+                        g
+                    }
+                    None => (0..num_layers).collect(),
+                };
+                let num_groups = groups.iter().copied().max().map_or(0, |m| m + 1);
+                let ctl = AwpController::new(num_groups, params);
+                let formats = vec![params.initial; num_layers];
+                Policy::Adaptive { ctl, groups, formats }
+            }
+        }
+    }
+
+    /// Access the AWP controller (None for static policies).
+    pub fn controller(&self) -> Option<&AwpController> {
+        match self {
+            Policy::Adaptive { ctl, .. } => Some(ctl),
+            _ => None,
+        }
+    }
+}
+
+impl PrecisionPolicy for Policy {
+    fn formats(&self) -> &[RoundTo] {
+        match self {
+            Policy::Static { formats, .. } => formats,
+            Policy::Adaptive { formats, .. } => formats,
+        }
+    }
+
+    fn observe_batch(&mut self, layer_norms: &[f64]) -> Vec<AwpEvent> {
+        match self {
+            Policy::Static { .. } => Vec::new(),
+            Policy::Adaptive { ctl, groups, formats } => {
+                assert_eq!(layer_norms.len(), groups.len());
+                // Aggregate layer norms into group norms: √Σ nᵢ² (the norm
+                // of the concatenated weight vector).
+                let mut sumsq = vec![0f64; ctl.num_layers()];
+                for (layer, &g) in groups.iter().enumerate() {
+                    sumsq[g] += layer_norms[layer] * layer_norms[layer];
+                }
+                let group_norms: Vec<f64> = sumsq.iter().map(|s| s.sqrt()).collect();
+                let events = ctl.observe_batch(&group_norms);
+                if !events.is_empty() {
+                    for (layer, &g) in groups.iter().enumerate() {
+                        formats[layer] = ctl.round_to(g);
+                    }
+                }
+                events
+            }
+        }
+    }
+
+    fn needs_norms(&self) -> bool {
+        matches!(self, Policy::Adaptive { .. })
+    }
+
+    fn kind(&self) -> PolicyKind {
+        match self {
+            Policy::Static { kind, .. } => *kind,
+            Policy::Adaptive { .. } => PolicyKind::Awp,
+        }
+    }
+}
+
+/// Build the ResNet layer→building-block map from per-layer block labels:
+/// consecutive layers sharing a label form one group (paper §IV-B: "best
+/// results when adapting precision at the Resnet building block level").
+pub fn resnet_block_groups(block_labels: &[&str]) -> Vec<usize> {
+    let mut groups = Vec::with_capacity(block_labels.len());
+    let mut current = 0usize;
+    for (i, label) in block_labels.iter().enumerate() {
+        if i > 0 && *label != block_labels[i - 1] {
+            current += 1;
+        }
+        groups.push(current);
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn awp_params() -> AwpParams {
+        AwpParams { threshold: -0.01, interval: 2, step_bits: 8, initial: RoundTo::B1 }
+    }
+
+    #[test]
+    fn baseline_is_all_32() {
+        let p = Policy::new(PolicyKind::Baseline, 4, awp_params(), None);
+        assert_eq!(p.formats(), vec![RoundTo::B4; 4]);
+        assert!(!p.needs_norms());
+        assert!(!p.kind().uses_adt());
+    }
+
+    #[test]
+    fn fixed_and_oracle_hold_their_format() {
+        let mut p = Policy::new(PolicyKind::Fixed(RoundTo::B2), 3, awp_params(), None);
+        assert_eq!(p.formats(), vec![RoundTo::B2; 3]);
+        assert!(p.observe_batch(&[1.0, 1.0, 1.0]).is_empty());
+        assert_eq!(p.formats(), vec![RoundTo::B2; 3]);
+        let o = Policy::new(PolicyKind::Oracle(RoundTo::B3), 3, awp_params(), None);
+        assert_eq!(o.formats(), vec![RoundTo::B3; 3]);
+        assert!(o.kind().uses_adt());
+    }
+
+    #[test]
+    fn awp_policy_tracks_controller() {
+        let mut p = Policy::new(PolicyKind::Awp, 2, awp_params(), None);
+        assert!(p.needs_norms());
+        let mut n = 1.0;
+        for _ in 0..5 {
+            n *= 0.9;
+            p.observe_batch(&[n, 1.0]);
+        }
+        assert!(p.formats()[0] > RoundTo::B1);
+        assert_eq!(p.formats()[1], RoundTo::B1);
+    }
+
+    #[test]
+    fn grouped_layers_move_together() {
+        // layers 0,1 in group 0; layers 2,3 in group 1
+        let groups = vec![0, 0, 1, 1];
+        let mut p = Policy::new(PolicyKind::Awp, 4, awp_params(), Some(groups));
+        let mut n = 1.0;
+        for _ in 0..5 {
+            n *= 0.9;
+            // only layers 0,1 decay; 2,3 stable
+            p.observe_batch(&[n, n, 1.0, 1.0]);
+        }
+        let f = p.formats();
+        assert_eq!(f[0], f[1]);
+        assert!(f[0] > RoundTo::B1);
+        assert_eq!(f[2], RoundTo::B1);
+        assert_eq!(f[3], RoundTo::B1);
+    }
+
+    #[test]
+    fn block_group_map_from_labels() {
+        let labels = ["stem", "b1", "b1", "b2", "b2", "b2", "fc"];
+        assert_eq!(resnet_block_groups(&labels), vec![0, 1, 1, 2, 2, 2, 3]);
+        assert_eq!(resnet_block_groups(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn policy_kind_parse_roundtrip() {
+        for s in ["baseline", "awp", "fixed8", "fixed16", "fixed24", "fixed32", "oracle24"] {
+            let k = PolicyKind::parse(s).unwrap();
+            assert_eq!(k.name(), s);
+        }
+        assert!(PolicyKind::parse("bogus").is_none());
+    }
+}

@@ -1,0 +1,178 @@
+//! Experiment configuration: one typed struct covering the whole stack,
+//! buildable from CLI args or a JSON config file, with the paper's
+//! per-model presets (§IV-B, §V-A).
+
+use crate::adt::AdtConfig;
+use crate::awp::{AwpParams, PolicyKind};
+use crate::optim::SgdConfig;
+use crate::sim::SystemProfile;
+use crate::util::json::Json;
+
+/// Execution mode (see DESIGN.md §6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Train the micro model for real through the AOT executables;
+    /// time is accounted from the simulator.
+    Real,
+    /// Full-size descriptors; compute is accounted only (no execution),
+    /// ADT/AWP costs measured on real full-size weight arrays.
+    Simulated,
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Model name (zoo key; Real mode requires a `_micro` model).
+    pub model: String,
+    pub batch_size: usize,
+    pub policy: PolicyKind,
+    pub system: SystemProfile,
+    pub mode: ExecMode,
+    pub awp: AwpParams,
+    pub sgd: SgdConfig,
+    pub adt: AdtConfig,
+    /// Batches to train (Real mode) or simulate.
+    pub max_batches: u64,
+    /// Validate every N batches (Real mode).
+    pub val_every: u64,
+    /// Validation error threshold defining "time-to-accuracy".
+    pub target_error: f64,
+    /// Synthetic dataset sizes.
+    pub train_size: u64,
+    pub val_size: u64,
+    pub seed: u64,
+    /// Directory holding AOT artifacts.
+    pub artifacts_dir: String,
+}
+
+impl ExperimentConfig {
+    /// Paper-faithful defaults for a (model, batch) pair. Initial LRs from
+    /// §IV-B: AlexNet 1e-2 at b64, halved/quartered at b32/b16; VGG 1e-2;
+    /// ResNet 1e-2 at b32, 0.1 otherwise. Micro runs scale AWP's INTERVAL
+    /// to the run length (see `AwpParams::with_interval`).
+    pub fn preset(model: &str, batch_size: usize, policy: PolicyKind, system: &str) -> Self {
+        let initial_lr: f32 = if model.contains("alexnet") {
+            match batch_size {
+                b if b >= 64 => 1e-2,
+                32 => 5e-3,
+                _ => 2.5e-3,
+            }
+        } else if model.contains("vgg") {
+            1e-2
+        } else if model.ends_with("_micro") {
+            // micro ResNet (no batch norm, Fixup init) trains stably at
+            // 0.05 across batch sizes; the paper's full-size values below
+            // apply in simulated mode only.
+            5e-2
+        } else {
+            // resnet: paper uses 0.1 except batch size 32 (§IV-B)
+            if batch_size == 32 {
+                1e-2
+            } else {
+                0.1
+            }
+        };
+        // Micro-run AWP calibration, done by the paper's own §V-A method
+        // (monitor per-layer δ once validation error starts dropping, set
+        // T to the observed average decay): micro runs show steady decay
+        // of ≈−2e−5/batch on converging FC layers, so T = −1e−5 with an
+        // INTERVAL of 40 batches (≈ the paper's one-epoch cadence scaled
+        // to the 128-batch micro epoch). Full-size simulated runs keep the
+        // paper's exact values from `AwpParams::for_model`.
+        let awp = if model.ends_with("_micro") {
+            AwpParams::for_model(model).with_interval(40).with_threshold(-1e-5)
+        } else {
+            AwpParams::for_model(model)
+        };
+        ExperimentConfig {
+            model: model.to_string(),
+            batch_size,
+            policy,
+            system: SystemProfile::by_name(system).unwrap_or_else(SystemProfile::x86),
+            mode: if model.ends_with("_micro") { ExecMode::Real } else { ExecMode::Simulated },
+            awp,
+            sgd: SgdConfig::paper_defaults(initial_lr, 400),
+            adt: AdtConfig::default(),
+            max_batches: 600,
+            val_every: 20,
+            target_error: 0.30,
+            train_size: 4096,
+            val_size: 512,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+
+    /// Serialize (for run provenance in logs / EXPERIMENTS.md).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("policy", Json::str(self.policy.name())),
+            ("system", Json::str(self.system.name)),
+            (
+                "mode",
+                Json::str(match self.mode {
+                    ExecMode::Real => "real",
+                    ExecMode::Simulated => "simulated",
+                }),
+            ),
+            ("awp_threshold", Json::num(self.awp.threshold)),
+            ("awp_interval", Json::num(self.awp.interval as f64)),
+            ("lr", Json::num(self.sgd.schedule.initial as f64)),
+            ("momentum", Json::num(self.sgd.momentum as f64)),
+            ("weight_decay", Json::num(self.sgd.weight_decay as f64)),
+            ("max_batches", Json::num(self.max_batches as f64)),
+            ("val_every", Json::num(self.val_every as f64)),
+            ("target_error", Json::num(self.target_error)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_follow_paper_lr_rules() {
+        let a64 = ExperimentConfig::preset("alexnet_micro", 64, PolicyKind::Awp, "x86");
+        let a32 = ExperimentConfig::preset("alexnet_micro", 32, PolicyKind::Awp, "x86");
+        let a16 = ExperimentConfig::preset("alexnet_micro", 16, PolicyKind::Awp, "x86");
+        assert_eq!(a64.sgd.schedule.initial, 1e-2);
+        assert_eq!(a32.sgd.schedule.initial, 5e-3);
+        assert_eq!(a16.sgd.schedule.initial, 2.5e-3);
+        let v = ExperimentConfig::preset("vgg_micro", 16, PolicyKind::Baseline, "power");
+        assert_eq!(v.sgd.schedule.initial, 1e-2);
+        assert_eq!(v.system.name, "power");
+    }
+
+    #[test]
+    fn mode_follows_model_kind() {
+        assert_eq!(
+            ExperimentConfig::preset("vgg_a", 64, PolicyKind::Awp, "x86").mode,
+            ExecMode::Simulated
+        );
+        assert_eq!(
+            ExperimentConfig::preset("vgg_micro", 64, PolicyKind::Awp, "x86").mode,
+            ExecMode::Real
+        );
+    }
+
+    #[test]
+    fn json_provenance_contains_keys() {
+        let c = ExperimentConfig::preset("resnet_micro", 32, PolicyKind::Awp, "x86");
+        let j = c.to_json();
+        assert_eq!(j.req_str("policy").unwrap(), "awp");
+        assert_eq!(j.req_usize("batch_size").unwrap(), 32);
+        assert!(j.req_f64("awp_threshold").unwrap() < 0.0);
+    }
+
+    #[test]
+    fn momentum_and_decay_are_paper_values() {
+        let c = ExperimentConfig::preset("alexnet_micro", 64, PolicyKind::Baseline, "x86");
+        assert_eq!(c.sgd.momentum, 0.9);
+        assert_eq!(c.sgd.weight_decay, 5e-4);
+        assert_eq!(c.sgd.schedule.decay_factor, 0.16);
+    }
+}

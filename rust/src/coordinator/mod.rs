@@ -1,0 +1,30 @@
+//! Layer-3 coordinator — the paper's training orchestration (Fig 1).
+//!
+//! The CPU **leader** owns the master f32 weights and the optimizer. Each
+//! batch it:
+//!   1. asks the precision [`crate::awp::Policy`] for per-layer formats,
+//!   2. ADT-**Bitpack**s the weights (measured, threaded + AVX2),
+//!   3. **broadcasts** packed weights + raw biases to every simulated GPU
+//!      (accounted by the [`crate::interconnect`] simulator),
+//!   4. has each GPU **worker** compute its gradient shard — in *Real*
+//!      mode by executing the AOT-compiled JAX model via PJRT (device-side
+//!      Bitunpack happens inside the graph as the L1 Pallas kernel),
+//!   5. **gathers** the f32 gradient contributions (accounted),
+//!   6. applies momentum-SGD on the CPU,
+//!   7. feeds per-layer l²-norms to AWP (measured),
+//!   8. records the per-phase profile and the validation trajectory.
+//!
+//! Two runners share this pipeline:
+//! * [`Trainer`] — Real mode: micro models, true numerics, simulated time
+//!   attributed to the *full-size* counterpart on the selected platform.
+//! * [`SimRunner`] — Simulated mode: full-size models; compute accounted
+//!   only, ADT/AWP costs measured on real full-size arrays (Tables II/III,
+//!   Figs 4/5).
+
+mod simrun;
+mod trainer;
+mod trainlog;
+
+pub use simrun::{formats_for_mean_bytes, SimBatchProfile, SimRunner};
+pub use trainer::{TrainReport, Trainer};
+pub use trainlog::{load_or_record_trace, trace_path, TraceKey};

@@ -1,0 +1,290 @@
+//! Simulated-mode runner: full-size models, accounted compute, *measured*
+//! ADT/AWP CPU costs on real full-size weight arrays.
+//!
+//! Regenerates Tables II/III and provides the per-batch time model for
+//! Figs 4/5: `batch_time(formats)` = Bitpack (measured) + H2D broadcast of
+//! the packed payload + device Bitunpack + conv + fc + gradient D2H + SGD
+//! update + AWP l²-norm (measured).
+
+use crate::adt::{self, AdtConfig, RoundTo};
+use crate::awp::l2_norm_fast;
+use crate::device::GpuPool;
+use crate::interconnect::Interconnect;
+use crate::models::ModelDesc;
+use crate::profiler::{Phase, Profiler};
+use crate::sim::SystemProfile;
+use crate::util::prng::Rng;
+use crate::util::timer::Stopwatch;
+
+/// Per-phase seconds of one simulated batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimBatchProfile {
+    pub bitpack_s: f64,
+    pub h2d_s: f64,
+    pub unpack_s: f64,
+    pub conv_s: f64,
+    pub fc_s: f64,
+    pub d2h_s: f64,
+    pub update_s: f64,
+    pub awp_norm_s: f64,
+}
+
+impl SimBatchProfile {
+    pub fn total(&self) -> f64 {
+        self.bitpack_s
+            + self.h2d_s
+            + self.unpack_s
+            + self.conv_s
+            + self.fc_s
+            + self.d2h_s
+            + self.update_s
+            + self.awp_norm_s
+    }
+
+    pub fn add_to(&self, p: &mut Profiler) {
+        p.add(Phase::Bitpack, self.bitpack_s);
+        p.add(Phase::H2D, self.h2d_s);
+        p.add(Phase::Bitunpack, self.unpack_s);
+        p.add(Phase::Conv, self.conv_s);
+        p.add(Phase::Fc, self.fc_s);
+        p.add(Phase::D2H, self.d2h_s);
+        p.add(Phase::GradUpdate, self.update_s);
+        p.add(Phase::AwpNorm, self.awp_norm_s);
+        p.end_batch();
+    }
+}
+
+/// Choose per-layer formats for a full-size model whose weighted mean
+/// bytes/weight best approximates `target` (≥1, ≤4). Larger layers get the
+/// finer formats first (mirrors AWP's tendency: big FC layers converge —
+/// and widen — later, so we assign coarse formats to the largest layers
+/// until the budget is met).
+pub fn formats_for_mean_bytes(desc: &ModelDesc, target: f64) -> Vec<RoundTo> {
+    let counts = desc.weight_counts();
+    let total: usize = counts.iter().sum();
+    let base = target.floor().clamp(1.0, 4.0) as usize;
+    let frac = (target - base as f64).clamp(0.0, 1.0);
+    let base_rt = RoundTo::from_bytes(base as u8).unwrap();
+    let mut formats = vec![base_rt; counts.len()];
+    if frac > 0.0 && base < 4 {
+        // widen the smallest layers first toward ≈frac of weights at
+        // base+1 bytes, never overshooting the byte budget …
+        let mut order: Vec<usize> = (0..counts.len()).collect();
+        order.sort_by_key(|&i| counts[i]);
+        let budget = (total as f64 * frac) as usize;
+        let mut widened = 0usize;
+        let mut chosen: Vec<usize> = Vec::new();
+        for &i in &order {
+            if widened + counts[i] > budget {
+                break;
+            }
+            formats[i] = RoundTo::from_bytes(base as u8 + 1).unwrap();
+            widened += counts[i];
+            chosen.push(i);
+        }
+        // … then spend the residual budget widening the already-chosen
+        // smallest layers further while it reduces |mean − target|.
+        let mut residual = budget.saturating_sub(widened);
+        for &i in &chosen {
+            if counts[i] <= residual && formats[i].bytes() < 4 {
+                formats[i] = formats[i].widen();
+                residual -= counts[i];
+            }
+        }
+    }
+    formats
+}
+
+/// Full-size simulated runner.
+pub struct SimRunner {
+    pub desc: ModelDesc,
+    profile: SystemProfile,
+    pool: GpuPool,
+    interconnect: Interconnect,
+    adt: AdtConfig,
+    /// Real full-size weights (measured Bitpack / l²-norm targets).
+    weights: Vec<Vec<f32>>,
+    pack_buf: Vec<u8>,
+}
+
+impl SimRunner {
+    pub fn new(desc: ModelDesc, profile: SystemProfile, adt: AdtConfig, seed: u64) -> SimRunner {
+        let mut rng = Rng::new(seed);
+        let weights: Vec<Vec<f32>> = desc
+            .weight_counts()
+            .iter()
+            .map(|&n| {
+                let mut v = vec![0f32; n];
+                rng.fill_normal(&mut v, 0.0, 0.1);
+                v
+            })
+            .collect();
+        SimRunner {
+            pool: GpuPool::new(profile.clone(), &desc),
+            interconnect: Interconnect::new(profile.clone()),
+            profile,
+            adt,
+            weights,
+            pack_buf: Vec::new(),
+            desc,
+        }
+    }
+
+    pub fn system(&self) -> &SystemProfile {
+        &self.profile
+    }
+
+    /// Measure Bitpack of the real full-size weights at `formats`.
+    /// Returns (seconds, packed bytes).
+    pub fn measure_bitpack(&mut self, formats: &[RoundTo]) -> (f64, usize) {
+        assert_eq!(formats.len(), self.weights.len());
+        let mut bytes = 0usize;
+        let sw = Stopwatch::start();
+        for (w, &rt) in self.weights.iter().zip(formats) {
+            let need = adt::packed_len(w.len(), rt);
+            if self.pack_buf.len() < need {
+                self.pack_buf.resize(need, 0);
+            }
+            adt::bitpack_into(w, rt, &self.adt, &mut self.pack_buf[..need]);
+            bytes += need;
+        }
+        (sw.elapsed_s(), bytes)
+    }
+
+    /// Measure the AWP l²-norm pass over the real full-size weights.
+    pub fn measure_norms(&self) -> (f64, Vec<f64>) {
+        let sw = Stopwatch::start();
+        let norms: Vec<f64> =
+            self.weights.iter().map(|w| l2_norm_fast(w, self.adt.threads)).collect();
+        (sw.elapsed_s(), norms)
+    }
+
+    /// One simulated batch under `formats` (None ⇒ 32-bit baseline without
+    /// ADT). CPU-side ADT/AWP costs use the platform's calibrated rates —
+    /// this host has a single core, so paper-scale tables cannot use raw
+    /// local measurements (those live in `benches/bitpack_micro` + §Perf).
+    /// `include_norms`: AWP runs the l²-norm pass (fixed/oracle policies
+    /// pack but do not monitor norms).
+    pub fn batch(
+        &mut self,
+        formats: Option<&[RoundTo]>,
+        batch_size: usize,
+        include_norms: bool,
+    ) -> SimBatchProfile {
+        let bias_bytes = self.desc.total_biases() * 4;
+        let full_bytes = self.desc.weight_bytes_f32();
+        let mut prof = SimBatchProfile::default();
+        let packed_bytes = match formats {
+            None => {
+                prof.bitpack_s = 0.0;
+                full_bytes
+            }
+            Some(fs) => {
+                let packed: usize = self
+                    .desc
+                    .weight_counts()
+                    .iter()
+                    .zip(fs)
+                    .map(|(&n, rt)| n * rt.bytes())
+                    .sum();
+                prof.bitpack_s = self.profile.pack_time(full_bytes);
+                if include_norms {
+                    prof.awp_norm_s = self.profile.norm_time(full_bytes);
+                }
+                packed
+            }
+        };
+        prof.h2d_s = self.interconnect.broadcast(packed_bytes + bias_bytes).seconds;
+        let unpack_payload = if formats.is_some() { packed_bytes } else { 0 };
+        let b = self.pool.batch_time(batch_size, unpack_payload);
+        prof.unpack_s = b.unpack_s;
+        prof.conv_s = b.conv_s;
+        prof.fc_s = b.fc_s;
+        prof.d2h_s = self.interconnect.gather(full_bytes + bias_bytes).seconds;
+        prof.update_s = self.profile.update_time(self.desc.param_count());
+        prof
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::vgg_a;
+
+    fn runner() -> SimRunner {
+        SimRunner::new(vgg_a(200), SystemProfile::x86(), AdtConfig::default(), 3)
+    }
+
+    #[test]
+    fn formats_hit_target_mean() {
+        let desc = vgg_a(200);
+        for target in [1.0, 1.33, 2.0, 2.5, 4.0] {
+            let fs = formats_for_mean_bytes(&desc, target);
+            let counts = desc.weight_counts();
+            let total: usize = counts.iter().sum();
+            let mean: f64 = fs
+                .iter()
+                .zip(&counts)
+                .map(|(f, &n)| f.bytes() as f64 * n as f64)
+                .sum::<f64>()
+                / total as f64;
+            assert!((mean - target).abs() < 0.35, "target={target} mean={mean}");
+        }
+    }
+
+    #[test]
+    fn baseline_batch_matches_table2_envelope() {
+        let mut r = runner();
+        let p = r.batch(None, 64, false);
+        // Table II 32-bit rows (ms): 153.93 + 68.51 + 128.72 + 33.51 + 54.39
+        assert!((p.h2d_s * 1e3 - 153.93).abs() < 2.0, "h2d={}", p.h2d_s * 1e3);
+        assert!((p.d2h_s * 1e3 - 68.51).abs() < 1.0);
+        assert!((p.conv_s * 1e3 - 128.72).abs() < 3.0);
+        assert!((p.fc_s * 1e3 - 33.51).abs() < 1.0);
+        assert!((p.update_s * 1e3 - 54.39).abs() < 1.0);
+        assert_eq!(p.bitpack_s, 0.0);
+        assert_eq!(p.unpack_s, 0.0);
+    }
+
+    #[test]
+    fn packed_batch_cuts_h2d_by_compression_ratio() {
+        let mut r = runner();
+        let formats = vec![RoundTo::B1; r.desc.weight_counts().len()];
+        let p = r.batch(Some(&formats), 64, true);
+        let base = r.batch(None, 64, false);
+        let ratio = base.h2d_s / p.h2d_s;
+        assert!((3.5..4.3).contains(&ratio), "ratio={ratio}");
+        assert!(p.unpack_s > 0.0);
+        assert!(p.awp_norm_s > 0.0);
+        assert!(p.bitpack_s > 0.0);
+    }
+
+    #[test]
+    fn a2dtwp_profile_reproduces_table2_column() {
+        // At the paper's converged ≈3× compression state the simulated
+        // A²DTWP column must land on Table II's magnitudes.
+        let mut r = runner();
+        let formats = formats_for_mean_bytes(&r.desc, 4.0 / 3.0);
+        let p = r.batch(Some(&formats), 64, true);
+        assert!((p.bitpack_s * 1e3 - 19.71).abs() < 0.5, "pack={}", p.bitpack_s * 1e3);
+        assert!((p.awp_norm_s * 1e3 - 3.88).abs() < 0.2, "norm={}", p.awp_norm_s * 1e3);
+        // h2d in the right neighbourhood of 52.27 ms (±20%: format mix
+        // approximates the paper's unknown exact per-layer state)
+        assert!((40.0..65.0).contains(&(p.h2d_s * 1e3)), "h2d={}", p.h2d_s * 1e3);
+        assert!((p.unpack_s * 1e3 - 4.51).abs() < 1.5, "unpack={}", p.unpack_s * 1e3);
+    }
+
+    #[test]
+    fn measured_bitpack_runs_on_full_vgg() {
+        let mut r = runner();
+        let formats = formats_for_mean_bytes(&r.desc, 4.0 / 3.0);
+        let (secs, bytes) = r.measure_bitpack(&formats);
+        assert!(secs > 0.0);
+        // ~1.33 B/weight over 129.6M weights
+        assert!((bytes as f64 / r.desc.total_weights() as f64 - 4.0 / 3.0).abs() < 0.35);
+        let (nsecs, norms) = r.measure_norms();
+        assert!(nsecs > 0.0);
+        assert_eq!(norms.len(), r.desc.weight_counts().len());
+        assert!(norms.iter().all(|n| *n > 0.0));
+    }
+}

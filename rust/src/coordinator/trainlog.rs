@@ -1,0 +1,109 @@
+//! Convergence-trace cache: Real-mode micro runs are expensive relative to
+//! the accounted sweeps of Figs 4/5, so each (model, batch, policy, seed)
+//! trace is recorded once and cached as JSON under `artifacts/traces/`.
+//!
+//! A trace stores (batch, val_error, bytes_per_weight, …) points — the
+//! time axis is *recomputed per target system* by the benches, so one
+//! trace serves both the x86 and POWER figures.
+
+use crate::awp::PolicyKind;
+use crate::config::ExperimentConfig;
+use crate::coordinator::Trainer;
+use crate::metrics::TrainCurve;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+/// Cache key for one convergence trace.
+#[derive(Clone, Debug)]
+pub struct TraceKey {
+    pub model: String,
+    pub batch_size: usize,
+    pub policy: PolicyKind,
+    pub seed: u64,
+}
+
+impl TraceKey {
+    pub fn file_name(&self) -> String {
+        format!(
+            "{}_b{}_{}_s{}.json",
+            self.model,
+            self.batch_size,
+            self.policy.name(),
+            self.seed
+        )
+    }
+}
+
+/// Path of the cached trace (under `<artifacts>/traces/`).
+pub fn trace_path(artifacts_dir: &str, key: &TraceKey) -> PathBuf {
+    PathBuf::from(artifacts_dir).join("traces").join(key.file_name())
+}
+
+/// Load a cached trace, or run Real-mode training to record (and cache) it.
+pub fn load_or_record_trace(cfg: &ExperimentConfig) -> Result<TrainCurve> {
+    let key = TraceKey {
+        model: cfg.model.clone(),
+        batch_size: cfg.batch_size,
+        policy: cfg.policy,
+        seed: cfg.seed,
+    };
+    let path = trace_path(&cfg.artifacts_dir, &key);
+    if let Ok(text) = std::fs::read_to_string(&path) {
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        return Ok(TrainCurve::from_json(&json).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?);
+    }
+    eprintln!(
+        "[trace] recording {} b{} {} (seed {}) …",
+        key.model,
+        key.batch_size,
+        key.policy.name(),
+        key.seed
+    );
+    let mut trainer = Trainer::new(cfg.clone())?;
+    let report = trainer.run()?;
+    std::fs::create_dir_all(path.parent().unwrap())?;
+    std::fs::write(&path, report.curve.to_json().to_string_pretty())
+        .with_context(|| format!("writing {path:?}"))?;
+    eprintln!(
+        "[trace] {}: {} batches, best err {:.3}, reached={} ({} AWP events)",
+        key.file_name(),
+        report.batches_run,
+        report.curve.best_error().unwrap_or(f64::NAN),
+        report.reached_target,
+        report.awp_events,
+    );
+    Ok(report.curve)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_file_names_are_unique_per_key() {
+        let a = TraceKey {
+            model: "vgg_micro".into(),
+            batch_size: 64,
+            policy: PolicyKind::Awp,
+            seed: 42,
+        };
+        let b = TraceKey { batch_size: 32, ..a.clone() };
+        let c = TraceKey { policy: PolicyKind::Baseline, ..a.clone() };
+        assert_ne!(a.file_name(), b.file_name());
+        assert_ne!(a.file_name(), c.file_name());
+        assert_eq!(a.file_name(), "vgg_micro_b64_awp_s42.json");
+    }
+
+    #[test]
+    fn trace_path_under_artifacts() {
+        let k = TraceKey {
+            model: "m".into(),
+            batch_size: 16,
+            policy: PolicyKind::Fixed(crate::adt::RoundTo::B2),
+            seed: 1,
+        };
+        let p = trace_path("artifacts", &k);
+        assert!(p.to_string_lossy().contains("artifacts/traces/m_b16_fixed16_s1.json"));
+    }
+}

@@ -1,0 +1,206 @@
+//! Batching loader over the synthetic dataset: epoch shuffling, GPU
+//! sharding (each batch splits evenly across the pool, paper §III: "the
+//! different samples of each batch are evenly distributed across all
+//! GPUs"), and disjoint train/validation splits.
+
+use super::synth::SynthDataset;
+use crate::util::prng::Rng;
+
+/// Train or validation split — disjoint index ranges of the generator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+}
+
+/// One materialized batch.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// Flattened NHWC images, length = batch_size · sample_len.
+    pub images: Vec<f32>,
+    /// One label per sample.
+    pub labels: Vec<u32>,
+    /// Per-GPU shard boundaries (sample index ranges).
+    pub shards: Vec<(usize, usize)>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Image slice of shard `g`.
+    pub fn shard_images(&self, g: usize, sample_len: usize) -> &[f32] {
+        let (s, e) = self.shards[g];
+        &self.images[s * sample_len..e * sample_len]
+    }
+
+    pub fn shard_labels(&self, g: usize) -> &[u32] {
+        let (s, e) = self.shards[g];
+        &self.labels[s..e]
+    }
+}
+
+/// Epoch-shuffling batch loader.
+#[derive(Clone, Debug)]
+pub struct Loader {
+    dataset: SynthDataset,
+    batch_size: usize,
+    n_shards: usize,
+    train_size: u64,
+    val_size: u64,
+    order: Vec<u64>,
+    cursor: usize,
+    epoch: u64,
+    rng: Rng,
+}
+
+impl Loader {
+    pub fn new(
+        dataset: SynthDataset,
+        batch_size: usize,
+        n_shards: usize,
+        train_size: u64,
+        val_size: u64,
+        seed: u64,
+    ) -> Loader {
+        assert!(batch_size > 0 && n_shards > 0);
+        assert_eq!(
+            batch_size % n_shards,
+            0,
+            "batch must split evenly across GPUs (paper §III)"
+        );
+        let mut loader = Loader {
+            dataset,
+            batch_size,
+            n_shards,
+            train_size,
+            val_size,
+            order: (0..train_size).collect(),
+            cursor: 0,
+            epoch: 0,
+            rng: Rng::new(seed ^ 0x10AD_E4),
+        };
+        loader.reshuffle();
+        loader
+    }
+
+    pub fn dataset(&self) -> &SynthDataset {
+        &self.dataset
+    }
+    pub fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+    /// Batches per epoch (partial trailing batch dropped, as in the paper's
+    /// fixed batch counts per epoch).
+    pub fn batches_per_epoch(&self) -> u64 {
+        self.train_size / self.batch_size as u64
+    }
+
+    fn reshuffle(&mut self) {
+        self.rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    fn shards_for(&self, n: usize) -> Vec<(usize, usize)> {
+        let per = n / self.n_shards;
+        (0..self.n_shards).map(|g| (g * per, (g + 1) * per)).collect()
+    }
+
+    /// Next training batch; rolls into a new shuffled epoch when exhausted.
+    pub fn next_train(&mut self) -> Batch {
+        if self.cursor + self.batch_size > self.order.len() {
+            self.epoch += 1;
+            self.reshuffle();
+        }
+        let idxs = &self.order[self.cursor..self.cursor + self.batch_size];
+        self.cursor += self.batch_size;
+        let (images, labels) = self.dataset.batch(idxs);
+        Batch { images, labels, shards: self.shards_for(self.batch_size) }
+    }
+
+    /// Deterministic validation batches (fixed order, disjoint from train:
+    /// indices `train_size .. train_size + val_size`).
+    pub fn val_batches(&self, batch_size: usize) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let mut start = self.train_size;
+        let end = self.train_size + self.val_size;
+        while start + batch_size as u64 <= end {
+            let idxs: Vec<u64> = (start..start + batch_size as u64).collect();
+            let (images, labels) = self.dataset.batch(&idxs);
+            out.push(Batch { images, labels, shards: self.shards_for(batch_size) });
+            start += batch_size as u64;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loader(batch: usize, shards: usize) -> Loader {
+        Loader::new(SynthDataset::default_micro(1), batch, shards, 256, 64, 11)
+    }
+
+    #[test]
+    fn batches_have_right_shape() {
+        let mut l = loader(32, 4);
+        let b = l.next_train();
+        assert_eq!(b.len(), 32);
+        assert_eq!(b.images.len(), 32 * l.dataset().sample_len());
+        assert_eq!(b.shards, vec![(0, 8), (8, 16), (16, 24), (24, 32)]);
+        let sl = l.dataset().sample_len();
+        assert_eq!(b.shard_images(1, sl).len(), 8 * sl);
+        assert_eq!(b.shard_labels(3).len(), 8);
+    }
+
+    #[test]
+    fn epoch_rolls_and_reshuffles() {
+        let mut l = loader(64, 1);
+        assert_eq!(l.batches_per_epoch(), 4);
+        let first_epoch: Vec<u32> = (0..4).flat_map(|_| l.next_train().labels).collect();
+        assert_eq!(l.epoch(), 0);
+        let _ = l.next_train();
+        assert_eq!(l.epoch(), 1);
+        let mut second_epoch: Vec<u32> = l.next_train().labels;
+        second_epoch.extend(l.next_train().labels);
+        // Different shuffle order (astronomically unlikely to coincide).
+        assert_ne!(&first_epoch[..128], &second_epoch[..]);
+    }
+
+    #[test]
+    fn train_epoch_covers_every_sample_once() {
+        let mut l = loader(32, 2);
+        let mut label_counts = vec![0usize; 16];
+        for _ in 0..l.batches_per_epoch() {
+            for lab in l.next_train().labels {
+                label_counts[lab as usize] += 1;
+            }
+        }
+        // 256 samples / 16 classes = 16 each
+        assert!(label_counts.iter().all(|&c| c == 16), "{label_counts:?}");
+    }
+
+    #[test]
+    fn val_is_deterministic_and_disjoint() {
+        let l = loader(32, 2);
+        let v1 = l.val_batches(32);
+        let v2 = l.val_batches(32);
+        assert_eq!(v1.len(), 2);
+        assert_eq!(v1[0].images, v2[0].images);
+        assert_eq!(v1[1].labels, v2[1].labels);
+    }
+
+    #[test]
+    #[should_panic(expected = "evenly")]
+    fn uneven_shard_split_rejected() {
+        loader(30, 4);
+    }
+}

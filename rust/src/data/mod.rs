@@ -1,0 +1,15 @@
+//! Synthetic labelled image data — the ImageNet substitute.
+//!
+//! AWP's dynamics depend on how weight norms evolve under SGD, not on
+//! ImageNet's semantics, so the dataset substrate generates a *learnable*
+//! classification task deterministically from a seed: each class owns a
+//! smoothed random template; samples are shifted, noisy instances of their
+//! class template. Convolutional structure matters (templates are spatial
+//! and samples are randomly translated), so conv nets beat linear models —
+//! giving the validation-error curves of Fig 3 real shape.
+
+mod loader;
+mod synth;
+
+pub use loader::{Batch, Loader, Split};
+pub use synth::SynthDataset;

@@ -1,0 +1,108 @@
+//! Simulated GPU device — the compute side of the paper's testbeds.
+//!
+//! In *Simulated* mode the device only accounts time: conv/fc/unpack costs
+//! come from the system profile's calibrated effective throughputs applied
+//! to the model descriptor's flop counts. In *Real* mode the coordinator
+//! additionally executes the AOT-compiled JAX model on the PJRT CPU client
+//! for true gradient numerics — but timing still comes from here, because
+//! the point of the experiment is the paper's platform, not this CPU.
+
+use crate::models::ModelDesc;
+use crate::sim::SystemProfile;
+
+/// Per-batch compute-time breakdown of the simulated GPU pool.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ComputeBreakdown {
+    /// Convolution kernels (fwd + dgrad + wgrad), seconds.
+    pub conv_s: f64,
+    /// Fully-connected GEMMs, seconds.
+    pub fc_s: f64,
+    /// Device-side Bitunpack of the packed weight stream, seconds.
+    pub unpack_s: f64,
+}
+
+impl ComputeBreakdown {
+    pub fn total(&self) -> f64 {
+        self.conv_s + self.fc_s + self.unpack_s
+    }
+}
+
+/// The pooled GPUs of one platform, processing batches data-parallel.
+#[derive(Clone, Debug)]
+pub struct GpuPool {
+    profile: SystemProfile,
+    /// Cached per-sample fwd flop split of the bound model.
+    conv_fwd_flops: u64,
+    fc_fwd_flops: u64,
+}
+
+impl GpuPool {
+    /// Bind a pool to a model descriptor (caches the flop split).
+    pub fn new(profile: SystemProfile, model: &ModelDesc) -> GpuPool {
+        let mut conv = 0u64;
+        let mut fc = 0u64;
+        for (_, flops, is_conv) in model.fwd_flops_by_layer() {
+            if is_conv {
+                conv += flops;
+            } else {
+                fc += flops;
+            }
+        }
+        GpuPool { profile, conv_fwd_flops: conv, fc_fwd_flops: fc }
+    }
+
+    pub fn n_gpus(&self) -> usize {
+        self.profile.n_gpus
+    }
+
+    /// Simulated time for one data-parallel batch (the whole pool works in
+    /// parallel; the profile's rates are aggregate). `packed_bytes` is the
+    /// per-GPU packed weight payload to Bitunpack (0 ⇒ no ADT).
+    pub fn batch_time(&self, batch: usize, packed_bytes: usize) -> ComputeBreakdown {
+        let (conv_s, fc_s) = self.profile.compute_time(self.conv_fwd_flops, self.fc_fwd_flops, batch);
+        ComputeBreakdown { conv_s, fc_s, unpack_s: self.profile.unpack_time(packed_bytes) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{alexnet, vgg_a};
+
+    #[test]
+    fn vgg_b64_matches_calibration() {
+        let pool = GpuPool::new(SystemProfile::x86(), &vgg_a(200));
+        let b = pool.batch_time(64, 0);
+        assert!((b.conv_s / 0.12872 - 1.0).abs() < 0.02, "conv={}", b.conv_s);
+        assert!((b.fc_s / 0.03351 - 1.0).abs() < 0.02, "fc={}", b.fc_s);
+        assert_eq!(b.unpack_s, 0.0);
+    }
+
+    #[test]
+    fn compute_scales_linearly_with_batch() {
+        let pool = GpuPool::new(SystemProfile::power(), &vgg_a(200));
+        let b32 = pool.batch_time(32, 0);
+        let b64 = pool.batch_time(64, 0);
+        assert!((b64.conv_s / b32.conv_s - 2.0).abs() < 1e-9);
+        assert!((b64.fc_s / b32.fc_s - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn alexnet_is_fc_heavy_vgg_is_conv_heavy() {
+        // AlexNet's 72M of its 75M weights are FC → FC share of compute is
+        // far larger than VGG's; this asymmetry drives the batch-size
+        // sensitivity in Fig 4.
+        let x86 = SystemProfile::x86();
+        let a = GpuPool::new(x86.clone(), &alexnet(200)).batch_time(64, 0);
+        let v = GpuPool::new(x86, &vgg_a(200)).batch_time(64, 0);
+        assert!(a.fc_s / a.conv_s > 5.0 * (v.fc_s / v.conv_s));
+    }
+
+    #[test]
+    fn unpack_time_proportional_to_payload() {
+        let pool = GpuPool::new(SystemProfile::x86(), &vgg_a(200));
+        let one = pool.batch_time(64, 100 << 20).unpack_s;
+        let two = pool.batch_time(64, 200 << 20).unpack_s;
+        assert!((two / one - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,136 @@
+//! Interconnect simulator — the CPU↔GPU links of the paper's testbeds.
+//!
+//! The paper's performance claim lives entirely in these links: PCIe 3.0 x8
+//! on the x86 node and NVLink 2.0 on the POWER node. Since neither is
+//! available, transfers are *accounted* rather than performed: each
+//! [`Transfer`] computes its wall time from the system profile's effective
+//! bandwidth and is accumulated per batch by the coordinator's profiler.
+//!
+//! The simulator also models the link-sharing structure that makes the
+//! paper's broadcast expensive: all `n_gpus` GPUs receive the full weight
+//! payload every batch (Fig 1), so host-to-device cost scales with
+//! `n_gpus · payload`, while gradients return at full f32 width.
+
+use crate::sim::SystemProfile;
+
+/// Direction of a simulated transfer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// Host → device (weights + biases, possibly ADT-packed).
+    H2D,
+    /// Device → host (f32 gradient contributions).
+    D2H,
+}
+
+/// One accounted transfer.
+#[derive(Clone, Copy, Debug)]
+pub struct Transfer {
+    pub direction: Direction,
+    /// Payload bytes delivered to / received from *each* GPU.
+    pub bytes_per_gpu: usize,
+    /// Simulated wall time for the whole broadcast/gather.
+    pub seconds: f64,
+}
+
+/// Simulated CPU↔GPU interconnect of one platform.
+#[derive(Clone, Debug)]
+pub struct Interconnect {
+    profile: SystemProfile,
+    /// Cumulative accounted time per direction (seconds).
+    pub h2d_total_s: f64,
+    pub d2h_total_s: f64,
+    pub h2d_bytes_total: u64,
+    pub d2h_bytes_total: u64,
+}
+
+impl Interconnect {
+    pub fn new(profile: SystemProfile) -> Self {
+        Interconnect {
+            profile,
+            h2d_total_s: 0.0,
+            d2h_total_s: 0.0,
+            h2d_bytes_total: 0,
+            d2h_bytes_total: 0,
+        }
+    }
+
+    pub fn profile(&self) -> &SystemProfile {
+        &self.profile
+    }
+
+    /// Account a host→device broadcast of `bytes_per_gpu` to every GPU.
+    pub fn broadcast(&mut self, bytes_per_gpu: usize) -> Transfer {
+        let seconds = self.profile.h2d_time(bytes_per_gpu);
+        self.h2d_total_s += seconds;
+        self.h2d_bytes_total += (bytes_per_gpu * self.profile.n_gpus) as u64;
+        Transfer { direction: Direction::H2D, bytes_per_gpu, seconds }
+    }
+
+    /// Account a device→host gather of `bytes_per_gpu` from every GPU.
+    pub fn gather(&mut self, bytes_per_gpu: usize) -> Transfer {
+        let seconds = self.profile.d2h_time(bytes_per_gpu);
+        self.d2h_total_s += seconds;
+        self.d2h_bytes_total += (bytes_per_gpu * self.profile.n_gpus) as u64;
+        Transfer { direction: Direction::D2H, bytes_per_gpu, seconds }
+    }
+
+    /// Reset accumulated accounting (per-experiment reuse).
+    pub fn reset(&mut self) {
+        self.h2d_total_s = 0.0;
+        self.d2h_total_s = 0.0;
+        self.h2d_bytes_total = 0;
+        self.d2h_bytes_total = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn broadcast_accounts_bandwidth_and_latency() {
+        let mut ic = Interconnect::new(SystemProfile::x86());
+        let t = ic.broadcast(518_298_368);
+        assert_eq!(t.direction, Direction::H2D);
+        assert!((t.seconds - 0.15393).abs() < 0.002, "t={}", t.seconds);
+        assert_eq!(ic.h2d_bytes_total, 4 * 518_298_368);
+    }
+
+    #[test]
+    fn packed_broadcast_is_cheaper_by_ratio() {
+        let mut ic = Interconnect::new(SystemProfile::power());
+        let full = ic.broadcast(518_298_368).seconds;
+        let packed = ic.broadcast(518_298_368 / 4).seconds;
+        assert!((full / packed - 4.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn gather_uses_d2h_rate() {
+        let mut ic = Interconnect::new(SystemProfile::x86());
+        let t = ic.gather(518_298_368);
+        assert!((t.seconds - 0.06851).abs() < 0.001, "t={}", t.seconds);
+        assert_eq!(ic.d2h_bytes_total, 4 * 518_298_368);
+    }
+
+    #[test]
+    fn accounting_accumulates_and_resets() {
+        let mut ic = Interconnect::new(SystemProfile::x86());
+        ic.broadcast(1000);
+        ic.broadcast(1000);
+        ic.gather(500);
+        assert!(ic.h2d_total_s > 0.0);
+        assert_eq!(ic.h2d_bytes_total, 8000);
+        assert_eq!(ic.d2h_bytes_total, 2000);
+        ic.reset();
+        assert_eq!(ic.h2d_total_s, 0.0);
+        assert_eq!(ic.h2d_bytes_total, 0);
+    }
+
+    #[test]
+    fn latency_dominates_tiny_transfers() {
+        let mut ic = Interconnect::new(SystemProfile::x86());
+        let tiny = ic.broadcast(64).seconds;
+        assert!(tiny >= ic.profile().link_latency_s);
+        assert!(tiny < 2.0 * ic.profile().link_latency_s);
+    }
+}

@@ -1,0 +1,52 @@
+//! # A²DTWP — Adaptive Weight Precision + Approximate Data Transfer
+//!
+//! A production-shaped reproduction of *"Reducing Data Motion to Accelerate
+//! the Training of Deep Neural Networks"* (Zhuang, Malossi, Casas, 2020).
+//!
+//! The paper accelerates data-parallel DNN training on heterogeneous
+//! CPU + multi-GPU nodes by compressing network weights before every
+//! CPU→GPU transfer:
+//!
+//! * [`awp`] — the **Adaptive Weight Precision** algorithm (paper §II,
+//!   Algorithm 1): a per-layer controller that watches the relative change
+//!   rate of each layer's weight l²-norm and widens that layer's transfer
+//!   precision (8 → 16 → 24 → 32 bits) as training converges.
+//! * [`adt`] — the **Approximate Data Transfer** procedure (paper §III):
+//!   `Bitpack` truncates each f32 weight to its top `RoundTo` bytes on the
+//!   CPU (scalar / multi-threaded / AVX2 paths, mirroring the paper's
+//!   OpenMP + `_mm256_shuffle_epi8` implementation), `Bitunpack` restores
+//!   32-bit layout on the device side.
+//! * [`coordinator`] — the Layer-3 training orchestrator: CPU leader owns
+//!   master weights + momentum SGD, per-GPU workers compute gradient shards
+//!   through AOT-compiled JAX/Pallas executables loaded via PJRT
+//!   ([`runtime`]).
+//!
+//! Everything the paper's testbed provided is built as a substrate:
+//! [`interconnect`] (PCIe / NVLink transfer simulation), [`device`]
+//! (GPU compute-time model), [`data`] (synthetic learnable image set),
+//! [`models`] (Table-I descriptors + micro variants), [`optim`]
+//! (momentum SGD + exponential LR decay), [`profiler`] (Table II/III
+//! emitters), and dependency-free [`util`] plumbing (PRNG, JSON, CLI,
+//! thread pool, bench kit).
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod adt;
+pub mod awp;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod device;
+pub mod figures;
+pub mod interconnect;
+pub mod metrics;
+pub mod models;
+pub mod optim;
+pub mod profiler;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

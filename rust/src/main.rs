@@ -1,0 +1,221 @@
+//! `a2dtwp` — launcher CLI for the A²DTWP training system.
+//!
+//! Subcommands:
+//!   train    Real-mode training of a micro model through the AOT
+//!            executables (paper Fig 1 pipeline, true numerics).
+//!   profile  Simulated-mode per-kernel batch profile of a full-size
+//!            model (the paper's Table II/III).
+//!   models   Print the model zoo (paper Table I census + param counts).
+//!   info     Runtime/platform diagnostics.
+//!
+//! Examples:
+//!   a2dtwp train --model alexnet_micro --batch-size 32 --policy awp
+//!   a2dtwp train --model vgg_micro --batch-size 64 --policy baseline --system power
+//!   a2dtwp profile --model vgg_a --batch-size 64 --system x86
+
+use a2dtwp::awp::PolicyKind;
+use a2dtwp::config::ExperimentConfig;
+use a2dtwp::coordinator::{formats_for_mean_bytes, SimRunner, Trainer};
+use a2dtwp::models::{model_by_name, MODEL_NAMES};
+use a2dtwp::profiler::Profiler;
+use a2dtwp::sim::SystemProfile;
+use a2dtwp::util::benchkit::Table;
+use a2dtwp::util::cli::{Args, Spec};
+
+const USAGE: &str = "usage: a2dtwp <train|profile|models|info> [options]
+  common options:
+    --model NAME         (train: *_micro; profile: alexnet|vgg_a|resnet34)
+    --batch-size N       global batch (split across 4 simulated GPUs)
+    --policy P           baseline|awp|fixed8|fixed16|fixed24|fixed32
+    --system S           x86|power
+    --max-batches N      training length cap
+    --val-every N        validation cadence (batches)
+    --target-error E     stop when top-1 val error <= E
+    --seed N             PRNG seed
+    --artifacts DIR      AOT artifacts directory (default: artifacts)
+    --csv PATH           also write the result table as CSV";
+
+fn main() {
+    let spec = Spec {
+        options: &[
+            "model",
+            "batch-size",
+            "policy",
+            "system",
+            "max-batches",
+            "val-every",
+            "target-error",
+            "seed",
+            "lr",
+            "artifacts",
+            "csv",
+        ],
+        flags: &["verbose", "help"],
+    };
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(argv, &spec) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if args.flag("help") || args.positional().is_empty() {
+        println!("{USAGE}");
+        return;
+    }
+    let cmd = args.positional()[0].as_str();
+    let result = match cmd {
+        "train" => cmd_train(&args),
+        "profile" => cmd_profile(&args),
+        "models" => cmd_models(),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
+    let model = args.get_or("model", "alexnet_micro").to_string();
+    let batch = args.get_usize("batch-size", 32)?;
+    let policy = PolicyKind::parse(args.get_or("policy", "awp"))
+        .ok_or_else(|| format!("unknown policy '{}'", args.get_or("policy", "awp")))?;
+    let system = args.get_or("system", "x86");
+    if SystemProfile::by_name(system).is_none() {
+        return Err(format!("unknown system '{system}' (x86|power)"));
+    }
+    let mut cfg = ExperimentConfig::preset(&model, batch, policy, system);
+    cfg.max_batches = args.get_u64("max-batches", cfg.max_batches)?;
+    cfg.val_every = args.get_u64("val-every", cfg.val_every)?;
+    cfg.target_error = args.get_f64("target-error", cfg.target_error)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    cfg.sgd.schedule.initial = args.get_f64("lr", cfg.sgd.schedule.initial as f64)? as f32;
+    cfg.artifacts_dir = args.get_or("artifacts", &cfg.artifacts_dir).to_string();
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = build_config(args).map_err(|e| anyhow::anyhow!(e))?;
+    println!("config: {}", cfg.to_json().to_string_compact());
+    let mut trainer = Trainer::new(cfg.clone())?;
+    let report = trainer.run()?;
+    let mut t = Table::new(
+        format!(
+            "{} b{} {} on {} — validation trajectory",
+            cfg.model,
+            cfg.batch_size,
+            cfg.policy.name(),
+            cfg.system.name
+        ),
+        &["batch", "sim_time_s", "val_error", "train_loss", "bytes/weight"],
+    );
+    for p in &report.curve.points {
+        t.row(&[
+            p.batch.to_string(),
+            format!("{:.3}", p.sim_time_s),
+            format!("{:.4}", p.val_error),
+            format!("{:.4}", p.train_loss),
+            format!("{:.2}", p.bytes_per_weight),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nbatches={} reached_target={} final_loss={:.4} awp_events={}",
+        report.batches_run, report.reached_target, report.final_loss, report.awp_events
+    );
+    println!("\nper-batch profile (avg ms):");
+    for ph in a2dtwp::profiler::Phase::ALL {
+        println!("  {:<24} {:8.3}", ph.label(), report.profiler.avg_s(ph) * 1e3);
+    }
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, report.curve.to_csv())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> anyhow::Result<()> {
+    let model = args.get_or("model", "vgg_a");
+    let batch = args.get_usize("batch-size", 64).map_err(|e| anyhow::anyhow!(e))?;
+    let system = args.get_or("system", "x86");
+    let desc = model_by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+    let profile = SystemProfile::by_name(system)
+        .ok_or_else(|| anyhow::anyhow!("unknown system '{system}'"))?;
+    let mut runner = SimRunner::new(desc, profile, Default::default(), 7);
+
+    // 32-bit baseline column
+    let mut base_prof = Profiler::new();
+    runner.batch(None, batch, false).add_to(&mut base_prof);
+    // A²DTWP column at the paper's converged ≈3× compression state
+    let formats = formats_for_mean_bytes(&runner.desc, 4.0 / 3.0);
+    let mut adt_prof = Profiler::new();
+    runner.batch(Some(&formats), batch, true).add_to(&mut adt_prof);
+
+    let mut t = Table::new(
+        format!("{model} b{batch} on {system} — per-kernel profile (ms)"),
+        &["kernel", "32-bit FP", "A2DTWP"],
+    );
+    for (label, base, adt) in Profiler::table_rows(&base_prof, &adt_prof) {
+        t.row(&[
+            label,
+            base.map_or("N/A".into(), |v| format!("{v:.2}")),
+            format!("{adt:.2}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nAWP share: {:.2}%  ADT share: {:.2}%  (paper x86: 1.05% / 6.60%)",
+        adt_prof.awp_share() * 100.0,
+        adt_prof.adt_share() * 100.0
+    );
+    if let Some(path) = args.get("csv") {
+        t.save_csv(path)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_models() -> anyhow::Result<()> {
+    let mut t = Table::new(
+        "model zoo (paper Table I)",
+        &["model", "input", "conv", "fc", "weights", "biases", "fwd GFLOP/sample"],
+    );
+    for name in MODEL_NAMES {
+        let m = model_by_name(name).unwrap();
+        let (conv, fc) = m.layer_census();
+        t.row(&[
+            name.to_string(),
+            format!("{}x{}x{}", m.input.0, m.input.1, m.input.2),
+            conv.to_string(),
+            fc.to_string(),
+            m.total_weights().to_string(),
+            m.total_biases().to_string(),
+            format!("{:.2}", m.fwd_flops_per_sample() as f64 / 1e9),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    println!("a2dtwp — AWP + ADT reproduction (Zhuang, Malossi, Casas, 2020)");
+    let exec = a2dtwp::runtime::Executor::new()?;
+    println!("PJRT platform: {}", exec.platform());
+    println!(
+        "Bitpack impl:  {:?} ({} threads)",
+        a2dtwp::adt::BitpackImpl::detect(),
+        a2dtwp::util::threadpool::default_threads()
+    );
+    match a2dtwp::runtime::Manifest::load("artifacts") {
+        Ok(m) => println!("artifacts:     {} models: {:?}", m.models.len(), m.models.keys()),
+        Err(_) => println!("artifacts:     missing — run `make artifacts`"),
+    }
+    Ok(())
+}

@@ -1,0 +1,185 @@
+//! Metric recording: training-curve logs (validation error vs batches vs
+//! simulated time — the Fig 3 data), CSV emission and JSON reports.
+
+use crate::util::json::Json;
+
+/// One validation measurement during training (the paper samples "elapse
+/// time and validation error every 4000 batches"; micro runs sample more
+/// densely).
+#[derive(Clone, Copy, Debug)]
+pub struct ValPoint {
+    pub batch: u64,
+    /// Simulated wall-clock seconds since training start.
+    pub sim_time_s: f64,
+    /// Validation error in [0,1] (1 − accuracy).
+    pub val_error: f64,
+    /// Training loss at this point (smoothed).
+    pub train_loss: f64,
+    /// Mean transfer bytes per weight at this point (compression state).
+    pub bytes_per_weight: f64,
+}
+
+/// A full training curve for one (model, batch, policy) configuration.
+#[derive(Clone, Debug, Default)]
+pub struct TrainCurve {
+    pub model: String,
+    pub policy: String,
+    pub batch_size: usize,
+    pub system: String,
+    pub points: Vec<ValPoint>,
+}
+
+impl TrainCurve {
+    pub fn new(model: &str, policy: &str, batch_size: usize, system: &str) -> TrainCurve {
+        TrainCurve {
+            model: model.into(),
+            policy: policy.into(),
+            batch_size,
+            system: system.into(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, p: ValPoint) {
+        self.points.push(p);
+    }
+
+    /// First simulated time at which `val_error <= threshold` (linear
+    /// interpolation between samples); None if never reached.
+    pub fn time_to_error(&self, threshold: f64) -> Option<f64> {
+        let mut prev: Option<&ValPoint> = None;
+        for p in &self.points {
+            if p.val_error <= threshold {
+                return Some(match prev {
+                    None => p.sim_time_s,
+                    Some(q) => {
+                        if (q.val_error - p.val_error).abs() < 1e-12 {
+                            p.sim_time_s
+                        } else {
+                            let f = (q.val_error - threshold) / (q.val_error - p.val_error);
+                            q.sim_time_s + f * (p.sim_time_s - q.sim_time_s)
+                        }
+                    }
+                });
+            }
+            prev = Some(p);
+        }
+        None
+    }
+
+    /// First batch index at which `val_error <= threshold`.
+    pub fn batches_to_error(&self, threshold: f64) -> Option<u64> {
+        self.points.iter().find(|p| p.val_error <= threshold).map(|p| p.batch)
+    }
+
+    /// Lowest validation error observed.
+    pub fn best_error(&self) -> Option<f64> {
+        self.points.iter().map(|p| p.val_error).min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("policy", Json::str(&self.policy)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("system", Json::str(&self.system)),
+            (
+                "points",
+                Json::arr(self.points.iter().map(|p| {
+                    Json::obj(vec![
+                        ("batch", Json::num(p.batch as f64)),
+                        ("sim_time_s", Json::num(p.sim_time_s)),
+                        ("val_error", Json::num(p.val_error)),
+                        ("train_loss", Json::num(p.train_loss)),
+                        ("bytes_per_weight", Json::num(p.bytes_per_weight)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrainCurve, crate::util::json::JsonError> {
+        let mut c = TrainCurve::new(
+            j.req_str("model")?,
+            j.req_str("policy")?,
+            j.req_usize("batch_size")?,
+            j.req_str("system")?,
+        );
+        for p in j.req_arr("points")? {
+            c.push(ValPoint {
+                batch: p.req_usize("batch")? as u64,
+                sim_time_s: p.req_f64("sim_time_s")?,
+                val_error: p.req_f64("val_error")?,
+                // train_loss may be null (NaN before the first batch)
+                train_loss: p.get("train_loss").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
+                bytes_per_weight: p.req_f64("bytes_per_weight")?,
+            });
+        }
+        Ok(c)
+    }
+
+    /// CSV rendering (columns match Fig 3's axes).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("batch,sim_time_s,val_error,train_loss,bytes_per_weight\n");
+        for p in &self.points {
+            s.push_str(&format!(
+                "{},{:.6},{:.4},{:.4},{:.3}\n",
+                p.batch, p.sim_time_s, p.val_error, p.train_loss, p.bytes_per_weight
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn curve() -> TrainCurve {
+        let mut c = TrainCurve::new("alexnet_micro", "awp", 32, "x86");
+        for (b, t, e) in [(0u64, 0.0, 0.9), (10, 1.0, 0.5), (20, 2.0, 0.3), (30, 3.0, 0.25)] {
+            c.push(ValPoint {
+                batch: b,
+                sim_time_s: t,
+                val_error: e,
+                train_loss: e * 2.0,
+                bytes_per_weight: 1.0,
+            });
+        }
+        c
+    }
+
+    #[test]
+    fn time_to_error_interpolates() {
+        let c = curve();
+        // threshold 0.4 lies between (1.0, 0.5) and (2.0, 0.3): t = 1.5
+        assert!((c.time_to_error(0.4).unwrap() - 1.5).abs() < 1e-9);
+        assert_eq!(c.time_to_error(0.9).unwrap(), 0.0);
+        assert!(c.time_to_error(0.1).is_none());
+        assert_eq!(c.batches_to_error(0.3), Some(20));
+    }
+
+    #[test]
+    fn best_error() {
+        assert_eq!(curve().best_error(), Some(0.25));
+        assert_eq!(TrainCurve::default().best_error(), None);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = curve();
+        let j = c.to_json();
+        let c2 = TrainCurve::from_json(&Json::parse(&j.to_string_compact()).unwrap()).unwrap();
+        assert_eq!(c2.model, c.model);
+        assert_eq!(c2.points.len(), c.points.len());
+        assert_eq!(c2.points[2].batch, 20);
+        assert!((c2.points[3].val_error - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let csv = curve().to_csv();
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.starts_with("batch,"));
+    }
+}

@@ -1,0 +1,265 @@
+//! Layer / model descriptors with exact parameter and flop accounting.
+
+/// One network layer. Only parameterized layers carry weights; pooling
+/// layers participate in shape propagation only.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    Conv {
+        in_ch: usize,
+        out_ch: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+    },
+    Fc {
+        in_features: usize,
+        out_features: usize,
+    },
+    MaxPool {
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+    },
+    AvgPoolGlobal,
+}
+
+/// A named layer with a building-block label (used by ResNet's per-block
+/// AWP grouping; conv/fc layers of other nets each get their own label).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerDesc {
+    pub name: String,
+    pub kind: LayerKind,
+    pub block: String,
+}
+
+impl LayerDesc {
+    pub fn is_weighted(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv { .. } | LayerKind::Fc { .. })
+    }
+
+    /// Weight-tensor element count (excludes bias).
+    pub fn weight_count(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { in_ch, out_ch, kernel, .. } => kernel * kernel * in_ch * out_ch,
+            LayerKind::Fc { in_features, out_features } => in_features * out_features,
+            _ => 0,
+        }
+    }
+
+    /// Bias element count (one per output channel / feature).
+    pub fn bias_count(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { out_ch, .. } => out_ch,
+            LayerKind::Fc { out_features, .. } => out_features,
+            _ => 0,
+        }
+    }
+
+    /// Output spatial size given input (h, w). Channels are implicit in
+    /// the layer kind.
+    pub fn out_hw(&self, in_hw: (usize, usize)) -> (usize, usize) {
+        match self.kind {
+            LayerKind::Conv { kernel, stride, padding, .. } => {
+                let f = |x: usize| (x + 2 * padding - kernel) / stride + 1;
+                (f(in_hw.0), f(in_hw.1))
+            }
+            LayerKind::MaxPool { kernel, stride, padding } => {
+                let f = |x: usize| (x + 2 * padding - kernel) / stride + 1;
+                (f(in_hw.0), f(in_hw.1))
+            }
+            LayerKind::AvgPoolGlobal => (1, 1),
+            LayerKind::Fc { .. } => (1, 1),
+        }
+    }
+
+    /// Forward multiply-add flops per *sample* at the given input spatial
+    /// size (2 flops per MAC).
+    pub fn fwd_flops(&self, in_hw: (usize, usize)) -> u64 {
+        match self.kind {
+            LayerKind::Conv { in_ch, out_ch, kernel, .. } => {
+                let (oh, ow) = self.out_hw(in_hw);
+                2 * (kernel * kernel * in_ch * out_ch * oh * ow) as u64
+            }
+            LayerKind::Fc { in_features, out_features } => 2 * (in_features * out_features) as u64,
+            // Pooling cost is negligible next to conv/fc; counted as one
+            // op per output element for completeness.
+            LayerKind::MaxPool { kernel, stride, padding } => {
+                let f = |x: usize| (x + 2 * padding - kernel) / stride + 1;
+                (f(in_hw.0) * f(in_hw.1) * kernel * kernel) as u64
+            }
+            LayerKind::AvgPoolGlobal => (in_hw.0 * in_hw.1) as u64,
+        }
+    }
+}
+
+/// A full network description.
+#[derive(Clone, Debug)]
+pub struct ModelDesc {
+    pub name: String,
+    /// Input (height, width, channels).
+    pub input: (usize, usize, usize),
+    pub num_classes: usize,
+    pub layers: Vec<LayerDesc>,
+}
+
+impl ModelDesc {
+    /// Indices of weighted layers (the layers AWP/ADT operate on).
+    pub fn weighted_layers(&self) -> Vec<usize> {
+        self.layers
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.is_weighted())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Per-weighted-layer weight counts, in layer order.
+    pub fn weight_counts(&self) -> Vec<usize> {
+        self.layers.iter().filter(|l| l.is_weighted()).map(|l| l.weight_count()).collect()
+    }
+
+    /// Per-weighted-layer bias counts, in layer order.
+    pub fn bias_counts(&self) -> Vec<usize> {
+        self.layers.iter().filter(|l| l.is_weighted()).map(|l| l.bias_count()).collect()
+    }
+
+    /// Per-weighted-layer block labels (for AWP grouping).
+    pub fn block_labels(&self) -> Vec<&str> {
+        self.layers.iter().filter(|l| l.is_weighted()).map(|l| l.block.as_str()).collect()
+    }
+
+    /// Total trainable parameters (weights + biases).
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_count() + l.bias_count()).sum()
+    }
+
+    /// Total weight elements (what ADT transfers; biases are sent raw,
+    /// paper §III: "We do not apply the Bitpack procedure to the biases").
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_count()).sum()
+    }
+
+    pub fn total_biases(&self) -> usize {
+        self.layers.iter().map(|l| l.bias_count()).sum()
+    }
+
+    /// Count of (conv, fc) layers — Table I sanity ("Alexnet is composed
+    /// of 5 convolutional layers and 4 fully-connected ones", …).
+    pub fn layer_census(&self) -> (usize, usize) {
+        let conv =
+            self.layers.iter().filter(|l| matches!(l.kind, LayerKind::Conv { .. })).count();
+        let fc = self.layers.iter().filter(|l| matches!(l.kind, LayerKind::Fc { .. })).count();
+        (conv, fc)
+    }
+
+    /// Forward flops per sample, summed over layers with spatial tracking.
+    pub fn fwd_flops_per_sample(&self) -> u64 {
+        let mut hw = (self.input.0, self.input.1);
+        let mut total = 0u64;
+        for l in &self.layers {
+            total += l.fwd_flops(hw);
+            hw = l.out_hw(hw);
+        }
+        total
+    }
+
+    /// Backward flops per sample ≈ 2× forward (dgrad + wgrad GEMMs).
+    pub fn bwd_flops_per_sample(&self) -> u64 {
+        2 * self.fwd_flops_per_sample()
+    }
+
+    /// Per-weighted-layer forward flops (device-time model wants the
+    /// conv/fc split).
+    pub fn fwd_flops_by_layer(&self) -> Vec<(String, u64, bool)> {
+        let mut hw = (self.input.0, self.input.1);
+        let mut out = Vec::new();
+        for l in &self.layers {
+            if l.is_weighted() {
+                let is_conv = matches!(l.kind, LayerKind::Conv { .. });
+                out.push((l.name.clone(), l.fwd_flops(hw), is_conv));
+            }
+            hw = l.out_hw(hw);
+        }
+        out
+    }
+
+    /// Bytes of one full f32 weight set (the baseline CPU→GPU payload).
+    pub fn weight_bytes_f32(&self) -> usize {
+        self.total_weights() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(name: &str, i: usize, o: usize, k: usize, s: usize, p: usize) -> LayerDesc {
+        LayerDesc {
+            name: name.into(),
+            kind: LayerKind::Conv { in_ch: i, out_ch: o, kernel: k, stride: s, padding: p },
+            block: name.into(),
+        }
+    }
+
+    #[test]
+    fn conv_counts() {
+        let l = conv("c", 3, 64, 11, 4, 2);
+        assert_eq!(l.weight_count(), 11 * 11 * 3 * 64);
+        assert_eq!(l.bias_count(), 64);
+        // AlexNet's first conv: 224 → (224+4−11)/4+1 = 55
+        assert_eq!(l.out_hw((224, 224)), (55, 55));
+        assert_eq!(l.fwd_flops((224, 224)), 2 * (11 * 11 * 3 * 64 * 55 * 55) as u64);
+    }
+
+    #[test]
+    fn fc_counts() {
+        let l = LayerDesc {
+            name: "fc".into(),
+            kind: LayerKind::Fc { in_features: 256, out_features: 10 },
+            block: "fc".into(),
+        };
+        assert_eq!(l.weight_count(), 2560);
+        assert_eq!(l.bias_count(), 10);
+        assert_eq!(l.fwd_flops((1, 1)), 5120);
+    }
+
+    #[test]
+    fn pool_shapes() {
+        let p = LayerDesc {
+            name: "p".into(),
+            kind: LayerKind::MaxPool { kernel: 3, stride: 2, padding: 0 },
+            block: "p".into(),
+        };
+        assert_eq!(p.out_hw((55, 55)), (27, 27));
+        assert_eq!(p.weight_count(), 0);
+        assert!(!p.is_weighted());
+    }
+
+    #[test]
+    fn model_aggregation() {
+        let m = ModelDesc {
+            name: "toy".into(),
+            input: (8, 8, 3),
+            num_classes: 4,
+            layers: vec![
+                conv("c1", 3, 8, 3, 1, 1),
+                LayerDesc {
+                    name: "p".into(),
+                    kind: LayerKind::MaxPool { kernel: 2, stride: 2, padding: 0 },
+                    block: "p".into(),
+                },
+                LayerDesc {
+                    name: "fc".into(),
+                    kind: LayerKind::Fc { in_features: 8 * 4 * 4, out_features: 4 },
+                    block: "fc".into(),
+                },
+            ],
+        };
+        assert_eq!(m.total_weights(), 3 * 3 * 3 * 8 + 128 * 4);
+        assert_eq!(m.total_biases(), 8 + 4);
+        assert_eq!(m.param_count(), m.total_weights() + m.total_biases());
+        assert_eq!(m.layer_census(), (1, 1));
+        assert_eq!(m.weight_counts().len(), 2);
+        assert_eq!(m.weighted_layers(), vec![0, 2]);
+    }
+}

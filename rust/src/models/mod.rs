@@ -1,0 +1,20 @@
+//! Model zoo: the paper's Table-I network configurations as descriptors
+//! (full-size AlexNet / VGG-A / ResNet-34) plus the micro variants the AOT
+//! executables actually train end-to-end.
+//!
+//! Descriptors are the single Rust-side source of truth for
+//! * per-layer weight/bias counts (what ADT packs and AWP monitors),
+//! * per-layer forward/backward flop counts (what the GPU-time model uses),
+//! * ResNet building-block labels (AWP adapts per block, paper §IV-B).
+//!
+//! The micro variants are mirrored in `python/compile/model.py`; the AOT
+//! manifest carries the Python-side layer list and `runtime::manifest`
+//! cross-checks it against these descriptors at load time.
+
+mod descriptor;
+mod zoo;
+
+pub use descriptor::{LayerDesc, LayerKind, ModelDesc};
+pub use zoo::{
+    alexnet, alexnet_micro, model_by_name, resnet34, resnet_micro, vgg_a, vgg_micro, MODEL_NAMES,
+};

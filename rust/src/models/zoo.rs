@@ -1,0 +1,310 @@
+//! The concrete networks: the paper's Table-I configurations at full size
+//! (200-class ImageNet inputs, 224×224×3) and the micro variants
+//! (32×32×3, 16 classes) that the AOT executables train end-to-end.
+//!
+//! Full-size descriptors drive the Fig 4/5 and Table II/III simulations —
+//! their weight counts are what ADT packs and the interconnect carries.
+//! Note: ResNet-34's three 1×1 projection shortcuts are omitted to match
+//! the paper's census of "33 convolutional layers and a single
+//! fully-connected one" (Table I counts main-path convs only); their
+//! 0.6M weights are <3% of the model and do not change any trend.
+
+use super::descriptor::{LayerDesc, LayerKind, ModelDesc};
+
+fn conv(name: &str, block: &str, i: usize, o: usize, k: usize, s: usize, p: usize) -> LayerDesc {
+    LayerDesc {
+        name: name.into(),
+        kind: LayerKind::Conv { in_ch: i, out_ch: o, kernel: k, stride: s, padding: p },
+        block: block.into(),
+    }
+}
+
+fn fc(name: &str, block: &str, i: usize, o: usize) -> LayerDesc {
+    LayerDesc {
+        name: name.into(),
+        kind: LayerKind::Fc { in_features: i, out_features: o },
+        block: block.into(),
+    }
+}
+
+fn maxpool(name: &str, k: usize, s: usize, p: usize) -> LayerDesc {
+    LayerDesc {
+        name: name.into(),
+        kind: LayerKind::MaxPool { kernel: k, stride: s, padding: p },
+        block: name.into(),
+    }
+}
+
+fn avgpool(name: &str) -> LayerDesc {
+    LayerDesc { name: name.into(), kind: LayerKind::AvgPoolGlobal, block: name.into() }
+}
+
+/// All registered model names (full-size then micro).
+pub const MODEL_NAMES: [&str; 6] =
+    ["alexnet", "vgg_a", "resnet34", "alexnet_micro", "vgg_micro", "resnet_micro"];
+
+/// Look a model up by name.
+pub fn model_by_name(name: &str) -> Option<ModelDesc> {
+    match name {
+        "alexnet" => Some(alexnet(200)),
+        "vgg_a" => Some(vgg_a(200)),
+        "resnet34" => Some(resnet34(200)),
+        "alexnet_micro" => Some(alexnet_micro(16)),
+        "vgg_micro" => Some(vgg_micro(16)),
+        "resnet_micro" => Some(resnet_micro(16)),
+        _ => None,
+    }
+}
+
+/// The paper's modified AlexNet: 5 conv + 4 FC (one extra FC-4096), §IV-B.
+pub fn alexnet(classes: usize) -> ModelDesc {
+    ModelDesc {
+        name: "alexnet".into(),
+        input: (224, 224, 3),
+        num_classes: classes,
+        layers: vec![
+            conv("conv1", "conv1", 3, 64, 11, 4, 2),
+            maxpool("pool1", 3, 2, 0),
+            conv("conv2", "conv2", 64, 192, 5, 1, 2),
+            maxpool("pool2", 3, 2, 0),
+            conv("conv3", "conv3", 192, 384, 3, 1, 1),
+            conv("conv4", "conv4", 384, 384, 3, 1, 1),
+            conv("conv5", "conv5", 384, 256, 3, 1, 1),
+            maxpool("pool5", 3, 2, 0),
+            fc("fc6", "fc6", 6 * 6 * 256, 4096),
+            fc("fc7", "fc7", 4096, 4096),
+            fc("fc7b", "fc7b", 4096, 4096), // the paper's extra FC-4096
+            fc("fc8", "fc8", 4096, classes),
+        ],
+    }
+}
+
+/// VGG configuration A (8 conv + 3 FC), §IV-B / Table I.
+pub fn vgg_a(classes: usize) -> ModelDesc {
+    ModelDesc {
+        name: "vgg_a".into(),
+        input: (224, 224, 3),
+        num_classes: classes,
+        layers: vec![
+            conv("conv1_1", "conv1_1", 3, 64, 3, 1, 1),
+            maxpool("pool1", 2, 2, 0),
+            conv("conv2_1", "conv2_1", 64, 128, 3, 1, 1),
+            maxpool("pool2", 2, 2, 0),
+            conv("conv3_1", "conv3_1", 128, 256, 3, 1, 1),
+            conv("conv3_2", "conv3_2", 256, 256, 3, 1, 1),
+            maxpool("pool3", 2, 2, 0),
+            conv("conv4_1", "conv4_1", 256, 512, 3, 1, 1),
+            conv("conv4_2", "conv4_2", 512, 512, 3, 1, 1),
+            maxpool("pool4", 2, 2, 0),
+            conv("conv5_1", "conv5_1", 512, 512, 3, 1, 1),
+            conv("conv5_2", "conv5_2", 512, 512, 3, 1, 1),
+            maxpool("pool5", 2, 2, 0),
+            fc("fc6", "fc6", 7 * 7 * 512, 4096),
+            fc("fc7", "fc7", 4096, 4096),
+            fc("fc8", "fc8", 4096, classes),
+        ],
+    }
+}
+
+/// ResNet-34 (33 main-path conv + 1 FC). Block labels group the two convs
+/// of each residual block — AWP adapts at block level (paper §IV-B).
+pub fn resnet34(classes: usize) -> ModelDesc {
+    let mut layers = vec![conv("conv1", "stem", 3, 64, 7, 2, 3), maxpool("pool1", 3, 2, 1)];
+    let stages: [(usize, usize, usize); 4] =
+        [(64, 64, 3), (64, 128, 4), (128, 256, 6), (256, 512, 3)];
+    for (stage_idx, &(in_ch, out_ch, blocks)) in stages.iter().enumerate() {
+        for b in 0..blocks {
+            let block = format!("s{}b{}", stage_idx + 1, b + 1);
+            let (ci, stride) = if b == 0 {
+                (in_ch, if stage_idx == 0 { 1 } else { 2 })
+            } else {
+                (out_ch, 1)
+            };
+            layers.push(conv(&format!("{block}_conv1"), &block, ci, out_ch, 3, stride, 1));
+            layers.push(conv(&format!("{block}_conv2"), &block, out_ch, out_ch, 3, 1, 1));
+        }
+    }
+    layers.push(avgpool("avgpool"));
+    layers.push(fc("fc", "fc", 512, classes));
+    ModelDesc { name: "resnet34".into(), input: (224, 224, 3), num_classes: classes, layers }
+}
+
+/// Micro AlexNet for end-to-end training at 32×32 (≈1.0M params).
+/// Same shape grammar as the full model: big-stride stem, pool, two more
+/// convs, 3-deep FC head.
+pub fn alexnet_micro(classes: usize) -> ModelDesc {
+    ModelDesc {
+        name: "alexnet_micro".into(),
+        input: (32, 32, 3),
+        num_classes: classes,
+        layers: vec![
+            conv("conv1", "conv1", 3, 32, 5, 2, 2),
+            maxpool("pool1", 2, 2, 0),
+            conv("conv2", "conv2", 32, 64, 3, 1, 1),
+            maxpool("pool2", 2, 2, 0),
+            conv("conv3", "conv3", 64, 96, 3, 1, 1),
+            fc("fc4", "fc4", 4 * 4 * 96, 512),
+            fc("fc5", "fc5", 512, 256),
+            fc("fc6", "fc6", 256, classes),
+        ],
+    }
+}
+
+/// Micro VGG: stacked 3×3 convs with doubling widths (≈0.67M params).
+pub fn vgg_micro(classes: usize) -> ModelDesc {
+    ModelDesc {
+        name: "vgg_micro".into(),
+        input: (32, 32, 3),
+        num_classes: classes,
+        layers: vec![
+            conv("conv1_1", "conv1_1", 3, 32, 3, 1, 1),
+            conv("conv1_2", "conv1_2", 32, 32, 3, 1, 1),
+            maxpool("pool1", 2, 2, 0),
+            conv("conv2_1", "conv2_1", 32, 64, 3, 1, 1),
+            conv("conv2_2", "conv2_2", 64, 64, 3, 1, 1),
+            maxpool("pool2", 2, 2, 0),
+            conv("conv3_1", "conv3_1", 64, 128, 3, 1, 1),
+            maxpool("pool3", 2, 2, 0),
+            fc("fc4", "fc4", 4 * 4 * 128, 256),
+            fc("fc5", "fc5", 256, classes),
+        ],
+    }
+}
+
+/// Micro ResNet (ResNet-20 family, ≈0.29M params): stem + 3 stages × 2
+/// residual blocks × 2 convs + FC, with per-block labels for grouped AWP.
+pub fn resnet_micro(classes: usize) -> ModelDesc {
+    let mut layers = vec![conv("conv1", "stem", 3, 16, 3, 1, 1)];
+    let stages: [(usize, usize); 3] = [(16, 16), (16, 32), (32, 64)];
+    for (stage_idx, &(in_ch, out_ch)) in stages.iter().enumerate() {
+        for b in 0..2usize {
+            let block = format!("s{}b{}", stage_idx + 1, b + 1);
+            let (ci, stride) =
+                if b == 0 { (in_ch, if stage_idx == 0 { 1 } else { 2 }) } else { (out_ch, 1) };
+            layers.push(conv(&format!("{block}_conv1"), &block, ci, out_ch, 3, stride, 1));
+            layers.push(conv(&format!("{block}_conv2"), &block, out_ch, out_ch, 3, 1, 1));
+        }
+    }
+    layers.push(avgpool("avgpool"));
+    layers.push(fc("fc", "fc", 64, classes));
+    ModelDesc { name: "resnet_micro".into(), input: (32, 32, 3), num_classes: classes, layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alexnet_census_and_params() {
+        let m = alexnet(200);
+        assert_eq!(m.layer_census(), (5, 4)); // paper: 5 conv + 4 FC
+        assert_eq!(m.total_weights(), 75_328_192);
+        assert_eq!(m.total_biases(), 64 + 192 + 384 + 384 + 256 + 4096 * 3 + 200);
+    }
+
+    #[test]
+    fn vgg_census_and_params() {
+        let m = vgg_a(200);
+        assert_eq!(m.layer_census(), (8, 3)); // paper: 8 conv + 3 FC
+        assert_eq!(m.total_weights(), 129_574_592);
+        // ≈ 518 MB of f32 weights — the paper's ~0.5 GB VGG payload.
+        assert_eq!(m.weight_bytes_f32(), 518_298_368);
+    }
+
+    #[test]
+    fn resnet34_census_and_params() {
+        let m = resnet34(200);
+        assert_eq!(m.layer_census(), (33, 1)); // paper: 33 conv + 1 FC
+        assert_eq!(m.total_weights(), 21_198_016);
+        // 16 residual blocks + stem + fc = 18 AWP groups
+        let labels = m.block_labels();
+        let mut uniq: Vec<&str> = labels.clone();
+        uniq.dedup();
+        assert_eq!(uniq.len(), 18);
+    }
+
+    #[test]
+    fn spatial_shapes_propagate_to_heads() {
+        // If any stride/padding were wrong the FC input would mismatch and
+        // fwd_flops would be inconsistent; spot-check final spatial dims.
+        let m = vgg_a(200);
+        let mut hw = (224, 224);
+        for l in &m.layers {
+            hw = l.out_hw(hw);
+        }
+        assert_eq!(hw, (1, 1));
+        let m = resnet34(200);
+        let mut hw = (224, 224);
+        for l in &m.layers {
+            if matches!(l.kind, LayerKind::AvgPoolGlobal) {
+                assert_eq!(hw, (7, 7)); // standard ResNet-34 final map
+            }
+            hw = l.out_hw(hw);
+        }
+    }
+
+    #[test]
+    fn flop_counts_are_plausible() {
+        // Known magnitudes: VGG-A fwd ≈ 15.2 GFLOP on 224² (2 flops/MAC);
+        // AlexNet ≈ 1.4 G, ResNet-34 ≈ 7.3 G.
+        let v = vgg_a(200).fwd_flops_per_sample() as f64 / 1e9;
+        assert!((14.0..17.0).contains(&v), "vgg {v} GFLOP");
+        let a = alexnet(200).fwd_flops_per_sample() as f64 / 1e9;
+        assert!((1.2..1.9).contains(&a), "alexnet {a} GFLOP");
+        let r = resnet34(200).fwd_flops_per_sample() as f64 / 1e9;
+        assert!((6.5..8.0).contains(&r), "resnet {r} GFLOP");
+    }
+
+    #[test]
+    fn micro_models_are_small_and_complete() {
+        for name in ["alexnet_micro", "vgg_micro", "resnet_micro"] {
+            let m = model_by_name(name).unwrap();
+            let p = m.param_count();
+            assert!(p > 100_000 && p < 3_000_000, "{name}: {p} params");
+            // All spatial paths must reach the classifier cleanly.
+            let mut hw = (m.input.0, m.input.1);
+            for l in &m.layers {
+                hw = l.out_hw(hw);
+            }
+            assert_eq!(hw, (1, 1), "{name}");
+            assert_eq!(m.num_classes, 16);
+        }
+    }
+
+    #[test]
+    fn micro_fc_inputs_match_conv_output() {
+        // alexnet_micro: 32 →conv s2→ 16 →pool→ 8 →conv→ 8 →pool→ 4 →conv→ 4
+        let m = alexnet_micro(16);
+        let mut hw = (32, 32);
+        let mut ch = 3usize;
+        for l in &m.layers {
+            if let LayerKind::Fc { in_features, .. } = l.kind {
+                assert_eq!(in_features, hw.0 * hw.1 * ch);
+                break;
+            }
+            if let LayerKind::Conv { out_ch, .. } = l.kind {
+                ch = out_ch;
+            }
+            hw = l.out_hw(hw);
+        }
+    }
+
+    #[test]
+    fn registry_is_complete() {
+        for name in MODEL_NAMES {
+            assert!(model_by_name(name).is_some(), "{name} missing");
+        }
+        assert!(model_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn resnet_block_grouping_pairs_convs() {
+        let m = resnet_micro(16);
+        let labels = m.block_labels();
+        // stem, then pairs s1b1,s1b1, s1b2,s1b2, ..., then fc
+        assert_eq!(labels[0], "stem");
+        assert_eq!(labels[1], "s1b1");
+        assert_eq!(labels[2], "s1b1");
+        assert_eq!(*labels.last().unwrap(), "fc");
+    }
+}

@@ -1,0 +1,11 @@
+//! CPU-side optimizer — momentum SGD with weight decay and exponential
+//! learning-rate decay (paper §IV-B).
+//!
+//! The parameter update runs on the CPU leader (paper Fig 1:
+//! `W ← W − μ·(1/n)·Σ ΔWᵢ` after gathering per-GPU gradient
+//! contributions); the momentum and decay settings follow §IV-B:
+//! momentum 0.9, L2 penalty 5·10⁻⁴, exponential LR decay.
+
+mod sgd;
+
+pub use sgd::{LrSchedule, MomentumSgd, SgdConfig};

@@ -1,0 +1,207 @@
+//! Per-kernel batch profiler → the paper's Table II/III structure.
+//!
+//! Every coordinator step reports the time of each training-loop phase;
+//! the profiler accumulates per-phase totals and batch counts and renders
+//! the per-batch averages the paper tabulates (§V-G), including the
+//! AWP/ADT share-of-batch percentages quoted in the text.
+
+use std::fmt;
+
+/// The training-loop phases the paper profiles (Tables II & III rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Weights (+biases) CPU→GPU.
+    H2D,
+    /// Gradient contributions GPU→CPU.
+    D2H,
+    /// Convolution kernels.
+    Conv,
+    /// Fully-connected kernels.
+    Fc,
+    /// CPU-side SGD parameter update.
+    GradUpdate,
+    /// AWP's l²-norm monitoring.
+    AwpNorm,
+    /// ADT Bitpack (CPU).
+    Bitpack,
+    /// ADT Bitunpack (device).
+    Bitunpack,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 8] = [
+        Phase::H2D,
+        Phase::D2H,
+        Phase::Conv,
+        Phase::Fc,
+        Phase::GradUpdate,
+        Phase::AwpNorm,
+        Phase::Bitpack,
+        Phase::Bitunpack,
+    ];
+
+    /// The paper's row label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::H2D => "Data Transfer CPU→GPU",
+            Phase::D2H => "Data Transfer GPU→CPU",
+            Phase::Conv => "Convolution",
+            Phase::Fc => "Fully-connected",
+            Phase::GradUpdate => "Gradient update",
+            Phase::AwpNorm => "AWP (l2-norm)",
+            Phase::Bitpack => "ADT (Bitpack)",
+            Phase::Bitunpack => "ADT (Bitunpack)",
+        }
+    }
+
+    /// Rows that only exist under A²DTWP (N/A in the 32-bit FP column).
+    pub fn adt_only(&self) -> bool {
+        matches!(self, Phase::AwpNorm | Phase::Bitpack | Phase::Bitunpack)
+    }
+
+    fn idx(&self) -> usize {
+        Phase::ALL.iter().position(|p| p == self).unwrap()
+    }
+}
+
+impl fmt::Display for Phase {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Accumulates per-phase time over batches.
+#[derive(Clone, Debug, Default)]
+pub struct Profiler {
+    totals_s: [f64; 8],
+    batches: u64,
+}
+
+impl Profiler {
+    pub fn new() -> Profiler {
+        Profiler::default()
+    }
+
+    /// Add `seconds` to `phase` for the current batch.
+    pub fn add(&mut self, phase: Phase, seconds: f64) {
+        self.totals_s[phase.idx()] += seconds;
+    }
+
+    /// Mark one batch complete.
+    pub fn end_batch(&mut self) {
+        self.batches += 1;
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches
+    }
+
+    /// Per-batch average seconds of `phase`.
+    pub fn avg_s(&self, phase: Phase) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.totals_s[phase.idx()] / self.batches as f64
+        }
+    }
+
+    pub fn total_s(&self, phase: Phase) -> f64 {
+        self.totals_s[phase.idx()]
+    }
+
+    /// Average total batch time (sum of phases).
+    pub fn avg_batch_s(&self) -> f64 {
+        Phase::ALL.iter().map(|p| self.avg_s(*p)).sum()
+    }
+
+    /// AWP's share of batch time (paper §V-G: 1.05% x86 / 0.54% POWER).
+    pub fn awp_share(&self) -> f64 {
+        self.avg_s(Phase::AwpNorm) / self.avg_batch_s()
+    }
+
+    /// ADT's share of batch time (paper §V-G: 6.60% x86 / 6.82% POWER).
+    pub fn adt_share(&self) -> f64 {
+        (self.avg_s(Phase::Bitpack) + self.avg_s(Phase::Bitunpack)) / self.avg_batch_s()
+    }
+
+    /// Render the paper's two-column table given a baseline profiler
+    /// (32-bit FP) and this profiler (A²DTWP). Returns (label, baseline
+    /// ms or None, a2dtwp ms) rows in paper order.
+    pub fn table_rows(baseline: &Profiler, a2dtwp: &Profiler) -> Vec<(String, Option<f64>, f64)> {
+        Phase::ALL
+            .iter()
+            .map(|p| {
+                let base =
+                    if p.adt_only() { None } else { Some(baseline.avg_s(*p) * 1e3) };
+                (p.label().to_string(), base, a2dtwp.avg_s(*p) * 1e3)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averages_over_batches() {
+        let mut p = Profiler::new();
+        p.add(Phase::H2D, 0.1);
+        p.end_batch();
+        p.add(Phase::H2D, 0.3);
+        p.add(Phase::Conv, 0.2);
+        p.end_batch();
+        assert_eq!(p.batches(), 2);
+        assert!((p.avg_s(Phase::H2D) - 0.2).abs() < 1e-12);
+        assert!((p.avg_s(Phase::Conv) - 0.1).abs() < 1e-12);
+        assert_eq!(p.avg_s(Phase::Fc), 0.0);
+    }
+
+    #[test]
+    fn shares_match_paper_arithmetic() {
+        // Reconstruct Table II's A²DTWP column; shares must come out at
+        // the paper's quoted 1.05% / 6.60%.
+        let mut p = Profiler::new();
+        for (ph, ms) in [
+            (Phase::H2D, 52.27),
+            (Phase::D2H, 73.55),
+            (Phase::Conv, 126.13),
+            (Phase::Fc, 34.17),
+            (Phase::GradUpdate, 52.86),
+            (Phase::AwpNorm, 3.88),
+            (Phase::Bitpack, 19.71),
+            (Phase::Bitunpack, 4.51),
+        ] {
+            p.add(ph, ms * 1e-3);
+        }
+        p.end_batch();
+        assert!((p.awp_share() - 0.0105).abs() < 0.0003, "{}", p.awp_share());
+        assert!((p.adt_share() - 0.0660).abs() < 0.001, "{}", p.adt_share());
+    }
+
+    #[test]
+    fn table_rows_structure() {
+        let mut base = Profiler::new();
+        base.add(Phase::H2D, 0.15393);
+        base.end_batch();
+        let mut adt = Profiler::new();
+        adt.add(Phase::H2D, 0.05227);
+        adt.add(Phase::Bitpack, 0.01971);
+        adt.end_batch();
+        let rows = Profiler::table_rows(&base, &adt);
+        assert_eq!(rows.len(), 8);
+        assert_eq!(rows[0].0, "Data Transfer CPU→GPU");
+        assert!((rows[0].1.unwrap() - 153.93).abs() < 0.01);
+        assert!((rows[0].2 - 52.27).abs() < 0.01);
+        // ADT-only rows have no baseline column
+        let bitpack_row = rows.iter().find(|r| r.0.contains("Bitpack")).unwrap();
+        assert!(bitpack_row.1.is_none());
+    }
+
+    #[test]
+    fn empty_profiler_is_safe() {
+        let p = Profiler::new();
+        assert_eq!(p.avg_s(Phase::H2D), 0.0);
+        assert_eq!(p.avg_batch_s(), 0.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Compiled-executable cache + typed execute wrappers.
+//!
+//! The training path calls `train_step` once per (GPU shard, batch):
+//! inputs are the master weights, biases, per-layer precision masks, the
+//! shard's images and labels; outputs are (loss, d_ws…, d_bs…). Everything
+//! crosses the PJRT boundary as `xla::Literal`s.
+
+use super::manifest::ModelManifest;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Outputs of one train-step execution.
+#[derive(Clone, Debug)]
+pub struct TrainOutputs {
+    pub loss: f32,
+    /// One gradient tensor per weighted layer (weights), layer order.
+    pub grad_ws: Vec<Vec<f32>>,
+    /// One gradient tensor per weighted layer (biases), layer order.
+    pub grad_bs: Vec<Vec<f32>>,
+}
+
+/// PJRT CPU client + executable cache.
+pub struct Executor {
+    client: xla::PjRtClient,
+    /// (hlo path) → compiled executable.
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Executor {
+    pub fn new() -> Result<Executor> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Executor { client, cache: BTreeMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached).
+    pub fn load(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        let key = path.as_ref().to_string_lossy().to_string();
+        if self.cache.contains_key(&key) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {key}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {key}"))?;
+        self.cache.insert(key, exe);
+        Ok(())
+    }
+
+    fn get(&self, path: impl AsRef<Path>) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = path.as_ref().to_string_lossy().to_string();
+        self.cache.get(&key).ok_or_else(|| anyhow!("executable not loaded: {key}"))
+    }
+
+    /// Assemble the common input prefix (ws…, bs…, masks) + extras.
+    fn build_inputs(
+        model: &ModelManifest,
+        ws: &[Vec<f32>],
+        bs: &[Vec<f32>],
+        masks: &[u32],
+        extras: Vec<xla::Literal>,
+    ) -> Result<Vec<xla::Literal>> {
+        let n = model.num_layers();
+        anyhow::ensure!(ws.len() == n && bs.len() == n, "param tensor count mismatch");
+        anyhow::ensure!(masks.len() == n, "one mask per weighted layer");
+        let mut inputs = Vec::with_capacity(2 * n + 1 + extras.len());
+        for (i, w) in ws.iter().enumerate() {
+            let shape: Vec<i64> =
+                model.layers[i].weight_shape.iter().map(|&d| d as i64).collect();
+            anyhow::ensure!(
+                w.len() == model.layers[i].weight_count(),
+                "layer {i} weight size mismatch"
+            );
+            inputs.push(xla::Literal::vec1(w).reshape(&shape)?);
+        }
+        for (i, b) in bs.iter().enumerate() {
+            anyhow::ensure!(
+                b.len() == model.layers[i].bias_count(),
+                "layer {i} bias size mismatch"
+            );
+            inputs.push(xla::Literal::vec1(b));
+        }
+        inputs.push(xla::Literal::vec1(masks));
+        inputs.extend(extras);
+        Ok(inputs)
+    }
+
+    /// Run one train step on a shard. `images` is flattened NHWC of
+    /// `shard` samples; `labels` has `shard` entries.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &mut self,
+        hlo_path: impl AsRef<Path>,
+        model: &ModelManifest,
+        ws: &[Vec<f32>],
+        bs: &[Vec<f32>],
+        masks: &[u32],
+        images: &[f32],
+        labels: &[u32],
+        shard: usize,
+    ) -> Result<TrainOutputs> {
+        self.load(&hlo_path)?;
+        let (h, w, c) = model.input;
+        anyhow::ensure!(images.len() == shard * h * w * c, "image buffer size mismatch");
+        anyhow::ensure!(labels.len() == shard, "label buffer size mismatch");
+        let x = xla::Literal::vec1(images).reshape(&[shard as i64, h as i64, w as i64, c as i64])?;
+        let y = xla::Literal::vec1(labels);
+        let inputs = Self::build_inputs(model, ws, bs, masks, vec![x, y])?;
+        let exe = self.get(&hlo_path)?;
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .context("train_step execute")?[0][0]
+            .to_literal_sync()?;
+        let mut parts = result.to_tuple()?;
+        let n = model.num_layers();
+        anyhow::ensure!(parts.len() == 1 + 2 * n, "unexpected output arity {}", parts.len());
+        let grad_bs: Vec<Vec<f32>> =
+            parts.split_off(1 + n).into_iter().map(|l| l.to_vec::<f32>()).collect::<Result<_, _>>()?;
+        let grad_ws: Vec<Vec<f32>> =
+            parts.split_off(1).into_iter().map(|l| l.to_vec::<f32>()).collect::<Result<_, _>>()?;
+        let loss = parts[0].to_vec::<f32>()?[0];
+        Ok(TrainOutputs { loss, grad_ws, grad_bs })
+    }
+
+    /// Run inference: returns flattened logits (batch × classes).
+    #[allow(clippy::too_many_arguments)]
+    pub fn infer(
+        &mut self,
+        hlo_path: impl AsRef<Path>,
+        model: &ModelManifest,
+        ws: &[Vec<f32>],
+        bs: &[Vec<f32>],
+        masks: &[u32],
+        images: &[f32],
+        batch: usize,
+    ) -> Result<Vec<f32>> {
+        self.load(&hlo_path)?;
+        let (h, w, c) = model.input;
+        anyhow::ensure!(images.len() == batch * h * w * c, "image buffer size mismatch");
+        let x = xla::Literal::vec1(images).reshape(&[batch as i64, h as i64, w as i64, c as i64])?;
+        let inputs = Self::build_inputs(model, ws, bs, masks, vec![x])?;
+        let exe = self.get(&hlo_path)?;
+        let result =
+            exe.execute::<xla::Literal>(&inputs).context("infer execute")?[0][0]
+                .to_literal_sync()?;
+        let logits = result.to_tuple1()?;
+        Ok(logits.to_vec::<f32>()?)
+    }
+}

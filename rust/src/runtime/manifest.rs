@@ -1,0 +1,253 @@
+//! The AOT manifest: what `python/compile/aot.py` produced and how to feed
+//! it. Cross-checked against the Rust model descriptors at load time so the
+//! two layer tables can never drift silently.
+
+use crate::models::ModelDesc;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One weighted layer as exported by the Python side.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerInfo {
+    pub name: String,
+    pub kind: String, // "conv" | "fc"
+    pub block: String,
+    pub weight_shape: Vec<usize>,
+    pub bias_shape: Vec<usize>,
+}
+
+impl LayerInfo {
+    pub fn weight_count(&self) -> usize {
+        self.weight_shape.iter().product()
+    }
+    pub fn bias_count(&self) -> usize {
+        self.bias_shape.iter().product()
+    }
+}
+
+/// Manifest entry for one model.
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    pub input: (usize, usize, usize),
+    pub classes: usize,
+    pub layers: Vec<LayerInfo>,
+    /// shard size → HLO file for the train step.
+    pub train_files: BTreeMap<usize, String>,
+    pub infer_batch: usize,
+    pub infer_file: String,
+}
+
+impl ModelManifest {
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn total_weights(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_count()).sum()
+    }
+
+    /// Per-layer weight counts in layer order (ADT/AWP operate on these).
+    pub fn weight_counts(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.weight_count()).collect()
+    }
+
+    pub fn bias_counts(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.bias_count()).collect()
+    }
+
+    /// Verify this manifest agrees with the Rust-side descriptor: same
+    /// layer order, same weight/bias counts, same block labels.
+    pub fn check_against(&self, desc: &ModelDesc) -> Result<()> {
+        let rust_w = desc.weight_counts();
+        let rust_b = desc.bias_counts();
+        let rust_blocks = desc.block_labels();
+        if rust_w.len() != self.layers.len() {
+            bail!(
+                "{}: manifest has {} weighted layers, descriptor has {}",
+                self.name,
+                self.layers.len(),
+                rust_w.len()
+            );
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.weight_count() != rust_w[i] {
+                bail!(
+                    "{} layer {} ({}): weight count {} != descriptor {}",
+                    self.name,
+                    i,
+                    l.name,
+                    l.weight_count(),
+                    rust_w[i]
+                );
+            }
+            if l.bias_count() != rust_b[i] {
+                bail!("{} layer {} ({}): bias count mismatch", self.name, i, l.name);
+            }
+            if l.block != rust_blocks[i] {
+                bail!(
+                    "{} layer {} ({}): block label '{}' != descriptor '{}'",
+                    self.name,
+                    i,
+                    l.name,
+                    l.block,
+                    rust_blocks[i]
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The whole artifacts manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let mut models = BTreeMap::new();
+        let model_obj = json
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing 'models'"))?;
+        for (name, m) in model_obj {
+            let input = m.req_arr("input").map_err(|e| anyhow!("{e}"))?;
+            let to_usize = |j: &Json| j.as_usize().ok_or_else(|| anyhow!("bad dim"));
+            let layers = m
+                .req_arr("layers")
+                .map_err(|e| anyhow!("{e}"))?
+                .iter()
+                .map(|l| -> Result<LayerInfo> {
+                    Ok(LayerInfo {
+                        name: l.req_str("name").map_err(|e| anyhow!("{e}"))?.to_string(),
+                        kind: l.req_str("kind").map_err(|e| anyhow!("{e}"))?.to_string(),
+                        block: l.req_str("block").map_err(|e| anyhow!("{e}"))?.to_string(),
+                        weight_shape: l
+                            .req_arr("weight_shape")
+                            .map_err(|e| anyhow!("{e}"))?
+                            .iter()
+                            .map(to_usize)
+                            .collect::<Result<_>>()?,
+                        bias_shape: l
+                            .req_arr("bias_shape")
+                            .map_err(|e| anyhow!("{e}"))?
+                            .iter()
+                            .map(to_usize)
+                            .collect::<Result<_>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let mut train_files = BTreeMap::new();
+            if let Some(tf) = m.get("train_files").and_then(|t| t.as_obj()) {
+                for (shard, file) in tf {
+                    train_files.insert(
+                        shard.parse::<usize>().context("bad shard key")?,
+                        file.as_str().ok_or_else(|| anyhow!("bad file"))?.to_string(),
+                    );
+                }
+            }
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    input: (
+                        to_usize(&input[0])?,
+                        to_usize(&input[1])?,
+                        to_usize(&input[2])?,
+                    ),
+                    classes: m.req_usize("classes").map_err(|e| anyhow!("{e}"))?,
+                    layers,
+                    train_files,
+                    infer_batch: m.req_usize("infer_batch").map_err(|e| anyhow!("{e}"))?,
+                    infer_file: m.req_str("infer_file").map_err(|e| anyhow!("{e}"))?.to_string(),
+                },
+            );
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})", self.models.keys()))
+    }
+
+    /// Absolute path of a model's train HLO for a shard size.
+    pub fn train_path(&self, model: &str, shard: usize) -> Result<PathBuf> {
+        let m = self.model(model)?;
+        let f = m.train_files.get(&shard).ok_or_else(|| {
+            anyhow!(
+                "no train artifact for shard {shard} (have {:?}) — re-run `make artifacts`",
+                m.train_files.keys()
+            )
+        })?;
+        Ok(self.dir.join(f))
+    }
+
+    pub fn infer_path(&self, model: &str) -> Result<PathBuf> {
+        let m = self.model(model)?;
+        Ok(self.dir.join(&m.infer_file))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text",
+      "models": {
+        "alexnet_micro": {
+          "input": [32, 32, 3],
+          "classes": 16,
+          "infer_batch": 64,
+          "infer_file": "alexnet_micro_infer_b64.hlo.txt",
+          "train_shards": [4, 8],
+          "train_files": {"4": "a_b4.hlo.txt", "8": "a_b8.hlo.txt"},
+          "layers": [
+            {"name": "conv1", "kind": "conv", "block": "conv1",
+             "weight_shape": [5,5,3,32], "bias_shape": [32]},
+            {"name": "fc4", "kind": "fc", "block": "fc4",
+             "weight_shape": [1536,512], "bias_shape": [512]}
+          ]
+        }
+      }
+    }"#;
+
+    fn sample_manifest() -> Manifest {
+        let dir = std::env::temp_dir().join(format!("a2dtwp_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = sample_manifest();
+        let mm = m.model("alexnet_micro").unwrap();
+        assert_eq!(mm.input, (32, 32, 3));
+        assert_eq!(mm.num_layers(), 2);
+        assert_eq!(mm.layers[0].weight_count(), 5 * 5 * 3 * 32);
+        assert_eq!(mm.weight_counts(), vec![2400, 786_432]);
+        assert!(m.train_path("alexnet_micro", 4).unwrap().ends_with("a_b4.hlo.txt"));
+        assert!(m.train_path("alexnet_micro", 16).is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_gives_actionable_error() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

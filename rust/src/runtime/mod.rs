@@ -1,0 +1,13 @@
+//! PJRT runtime — loads the AOT artifacts and runs them from the hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU client): HLO text →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! One compiled executable per (model, function, batch) variant, cached.
+//! Python never runs here; the Rust binary is self-contained once
+//! `make artifacts` has produced `artifacts/`.
+
+mod executor;
+mod manifest;
+
+pub use executor::{Executor, TrainOutputs};
+pub use manifest::{LayerInfo, Manifest, ModelManifest};

@@ -1,0 +1,6 @@
+//! Testbed simulation: profiles of the paper's two hardware platforms and
+//! the calibration constants that map model descriptors to wall-clock time.
+
+mod system;
+
+pub use system::{SystemProfile, SYSTEM_NAMES};

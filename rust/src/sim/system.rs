@@ -1,0 +1,249 @@
+//! The paper's two evaluation platforms (§IV-D) as simulation profiles.
+//!
+//! Neither testbed is available (repro band 0/5), so each platform is a
+//! set of *effective* rates calibrated against the paper's own measured
+//! VGG-b64 profile (Tables II and III). The calibration is deliberately
+//! transparent: every constant below is `measured bytes-or-flops ÷ the
+//! paper's measured milliseconds`, so the simulator reproduces Tables
+//! II/III at the calibration point by construction and extrapolates to
+//! other models/batch sizes through the descriptors' byte/flop counts.
+//! DESIGN.md §3 records the substitution.
+
+/// Names accepted by `--system`.
+pub const SYSTEM_NAMES: [&str; 2] = ["x86", "power"];
+
+/// Effective-rate profile of one CPU + multi-GPU platform.
+#[derive(Clone, Debug)]
+pub struct SystemProfile {
+    pub name: &'static str,
+    /// GPUs per node (both paper systems: 4).
+    pub n_gpus: usize,
+    /// Aggregate effective CPU→GPU bandwidth, bytes/s: every GPU receives
+    /// the full weight payload each batch (paper Fig 1), so
+    /// `h2d time = n_gpus · payload / h2d_bps`.
+    pub h2d_bps: f64,
+    /// Aggregate effective GPU→CPU bandwidth, bytes/s (gradient return).
+    pub d2h_bps: f64,
+    /// Per-transfer setup latency, seconds.
+    pub link_latency_s: f64,
+    /// Effective aggregate convolution throughput, flop/s (includes cuDNN
+    /// algorithmic speedups; calibrated, see module docs).
+    pub conv_flops: f64,
+    /// Effective aggregate fully-connected (GEMM) throughput, flop/s.
+    pub fc_flops: f64,
+    /// CPU-side SGD update rate, parameters/s.
+    pub update_params_per_s: f64,
+    /// Effective GPU-side Bitunpack throughput, packed bytes/s (paper
+    /// Algorithm 5 runs as a CUDA kernel; Tables II/III give its cost).
+    pub unpack_bps: f64,
+    /// Effective CPU Bitpack throughput, *input* bytes/s (OpenMP + SIMD on
+    /// the platform's full CPU; this host has 1 core, so paper-scale
+    /// tables use this calibrated rate while the real single-core rate is
+    /// measured by `benches/bitpack_micro` and reported in §Perf).
+    pub pack_bps: f64,
+    /// Effective CPU l²-norm throughput, bytes/s (same calibration note).
+    pub norm_bps: f64,
+    /// Byte-per-flop ratio of the platform (paper §V-B: x86 1.22, POWER
+    /// 0.86 — smaller ratio ⇒ transfers hurt more ⇒ larger A²DTWP gains).
+    pub bytes_per_flop: f64,
+    /// CPU threads available for Bitpack / l²-norm (paper: 16 / 40).
+    pub cpu_threads: usize,
+}
+
+/// VGG-A/200 f32 payload used for calibration (Table II/III workload):
+/// 129,574,592 weights × 4 B = 518,298,368 B, broadcast to 4 GPUs.
+const VGG_PAYLOAD: f64 = 518_298_368.0;
+/// VGG-A fwd flops/sample at 224² (descriptor-exact, see models tests).
+const VGG_CONV_FWD: f64 = 15.10e9; // conv layers only
+const VGG_FC_FWD: f64 = 0.2407e9; // fc layers only
+/// fwd + bwd ≈ 3× fwd (dgrad + wgrad each ≈ fwd cost).
+const TRAIN_MULT: f64 = 3.0;
+const B64: f64 = 64.0;
+
+impl SystemProfile {
+    /// 2× 8-core Xeon E5-2630v3 + 2× K80 (4× GK210), PCIe 3.0 x8.
+    /// Calibration: Table II (x86, VGG b64, ms): h2d 153.93, d2h 68.51,
+    /// conv 128.72, fc 33.51, update 54.39, unpack 4.51 (of ~172.8 MB).
+    pub fn x86() -> SystemProfile {
+        SystemProfile {
+            name: "x86",
+            n_gpus: 4,
+            h2d_bps: 4.0 * VGG_PAYLOAD / 0.15393,
+            d2h_bps: 4.0 * VGG_PAYLOAD / 0.06851,
+            link_latency_s: 25e-6,
+            conv_flops: TRAIN_MULT * VGG_CONV_FWD * B64 / 0.12872,
+            fc_flops: TRAIN_MULT * VGG_FC_FWD * B64 / 0.03351,
+            update_params_per_s: 129_574_592.0 / 0.05439,
+            // A²DTWP moves ≈ payload/3 packed bytes; Table II: 4.51 ms.
+            unpack_bps: (VGG_PAYLOAD / 3.0) / 0.00451,
+            // Table II: Bitpack 19.71 ms, l²-norm 3.88 ms over the full
+            // f32 weight array.
+            pack_bps: VGG_PAYLOAD / 0.01971,
+            norm_bps: VGG_PAYLOAD / 0.00388,
+            bytes_per_flop: 1.22,
+            cpu_threads: 16,
+        }
+    }
+
+    /// 2× POWER9 8335-GTG + 4× V100, NVLink 2.0.
+    /// Calibration: Table III (POWER, VGG b64, ms): h2d 39.12, d2h 17.34,
+    /// conv 69.78, fc 12.66, update 41.29, unpack 1.11.
+    pub fn power() -> SystemProfile {
+        SystemProfile {
+            name: "power",
+            n_gpus: 4,
+            h2d_bps: 4.0 * VGG_PAYLOAD / 0.03912,
+            d2h_bps: 4.0 * VGG_PAYLOAD / 0.01734,
+            link_latency_s: 8e-6,
+            conv_flops: TRAIN_MULT * VGG_CONV_FWD * B64 / 0.06978,
+            fc_flops: TRAIN_MULT * VGG_FC_FWD * B64 / 0.01266,
+            update_params_per_s: 129_574_592.0 / 0.04129,
+            unpack_bps: (VGG_PAYLOAD / 3.0) / 0.00111,
+            // Table III: Bitpack 10.51 ms, l²-norm 0.93 ms.
+            pack_bps: VGG_PAYLOAD / 0.01051,
+            norm_bps: VGG_PAYLOAD / 0.00093,
+            bytes_per_flop: 0.86,
+            cpu_threads: 40,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<SystemProfile> {
+        match name {
+            "x86" => Some(SystemProfile::x86()),
+            "power" => Some(SystemProfile::power()),
+            _ => None,
+        }
+    }
+
+    // ---- timing model ------------------------------------------------------
+
+    /// CPU→GPU broadcast time for `bytes` of (possibly packed) payload
+    /// delivered to every GPU.
+    pub fn h2d_time(&self, bytes: usize) -> f64 {
+        self.link_latency_s + self.n_gpus as f64 * bytes as f64 / self.h2d_bps
+    }
+
+    /// GPU→CPU gradient-return time: every GPU sends a full f32 gradient
+    /// set (gradients are never compressed — paper §VI discusses why
+    /// gradient-compression work is orthogonal).
+    pub fn d2h_time(&self, bytes: usize) -> f64 {
+        self.link_latency_s + self.n_gpus as f64 * bytes as f64 / self.d2h_bps
+    }
+
+    /// GPU compute time for one batch split across the GPUs:
+    /// conv and fc pools have separately calibrated throughputs.
+    pub fn compute_time(&self, conv_fwd_flops_per_sample: u64, fc_fwd_flops_per_sample: u64, batch: usize) -> (f64, f64) {
+        let conv = TRAIN_MULT * conv_fwd_flops_per_sample as f64 * batch as f64 / self.conv_flops;
+        let fc = TRAIN_MULT * fc_fwd_flops_per_sample as f64 * batch as f64 / self.fc_flops;
+        (conv, fc)
+    }
+
+    /// CPU-side optimizer update time for `params` parameters.
+    pub fn update_time(&self, params: usize) -> f64 {
+        params as f64 / self.update_params_per_s
+    }
+
+    /// GPU-side Bitunpack time for `packed_bytes` (zero when nothing is
+    /// packed, e.g. the 32-bit baseline skips ADT entirely).
+    pub fn unpack_time(&self, packed_bytes: usize) -> f64 {
+        if packed_bytes == 0 {
+            0.0
+        } else {
+            packed_bytes as f64 / self.unpack_bps
+        }
+    }
+
+    /// CPU Bitpack time for `input_bytes` of f32 weights.
+    pub fn pack_time(&self, input_bytes: usize) -> f64 {
+        input_bytes as f64 / self.pack_bps
+    }
+
+    /// CPU l²-norm time for `input_bytes` of f32 weights.
+    pub fn norm_time(&self, input_bytes: usize) -> f64 {
+        input_bytes as f64 / self.norm_bps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::vgg_a;
+
+    const MS: f64 = 1e-3;
+
+    #[test]
+    fn x86_reproduces_table2_calibration_rows() {
+        let s = SystemProfile::x86();
+        let payload = vgg_a(200).weight_bytes_f32();
+        assert!((s.h2d_time(payload) / (153.93 * MS) - 1.0).abs() < 0.01);
+        assert!((s.d2h_time(payload) / (68.51 * MS) - 1.0).abs() < 0.01);
+        let m = vgg_a(200);
+        let conv_fwd: u64 = m
+            .fwd_flops_by_layer()
+            .iter()
+            .filter(|(_, _, is_conv)| *is_conv)
+            .map(|(_, f, _)| f)
+            .sum();
+        let fc_fwd: u64 = m
+            .fwd_flops_by_layer()
+            .iter()
+            .filter(|(_, _, is_conv)| !is_conv)
+            .map(|(_, f, _)| f)
+            .sum();
+        let (conv_t, fc_t) = s.compute_time(conv_fwd, fc_fwd, 64);
+        // calibration constants used rounded flop totals; within 2%.
+        assert!((conv_t / (128.72 * MS) - 1.0).abs() < 0.02, "conv_t={conv_t}");
+        assert!((fc_t / (33.51 * MS) - 1.0).abs() < 0.02, "fc_t={fc_t}");
+        assert!((s.update_time(m.total_weights()) / (54.39 * MS) - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn power_reproduces_table3_calibration_rows() {
+        let s = SystemProfile::power();
+        let payload = vgg_a(200).weight_bytes_f32();
+        assert!((s.h2d_time(payload) / (39.12 * MS) - 1.0).abs() < 0.01);
+        assert!((s.d2h_time(payload) / (17.34 * MS) - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn packed_transfer_is_proportionally_cheaper() {
+        let s = SystemProfile::x86();
+        let payload = vgg_a(200).weight_bytes_f32();
+        let full = s.h2d_time(payload);
+        let third = s.h2d_time(payload / 3);
+        // paper: 2.94× reduction at ≈3× compression
+        let ratio = full / third;
+        assert!((2.9..3.1).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn power_is_compute_richer_per_byte() {
+        // The core of the paper's x86-vs-POWER argument (§V-B): POWER has
+        // less transfer bandwidth per flop, so data motion hurts more.
+        let x = SystemProfile::x86();
+        let p = SystemProfile::power();
+        assert!(p.bytes_per_flop < x.bytes_per_flop);
+        // Peak-spec ratio behind those numbers: 28.85/6.44 ≈ 4.5× flops
+        // vs ≈3.9× h2d bandwidth (Table II/III calibration).
+        assert!((p.h2d_bps / x.h2d_bps) < 4.48);
+    }
+
+    #[test]
+    fn unpack_is_minor_versus_transfer_savings() {
+        // ADT is only worth it because unpack ≪ transfer-time saved.
+        for s in [SystemProfile::x86(), SystemProfile::power()] {
+            let payload = vgg_a(200).weight_bytes_f32();
+            let saved = s.h2d_time(payload) - s.h2d_time(payload / 3);
+            let cost = s.unpack_time(payload / 3);
+            assert!(cost < saved / 5.0, "{}: cost={cost} saved={saved}", s.name);
+        }
+    }
+
+    #[test]
+    fn by_name_registry() {
+        for n in SYSTEM_NAMES {
+            assert!(SystemProfile::by_name(n).is_some());
+        }
+        assert!(SystemProfile::by_name("arm").is_none());
+    }
+}

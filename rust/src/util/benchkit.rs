@@ -1,0 +1,204 @@
+//! Criterion-style benchmark kit (criterion itself is unavailable offline).
+//!
+//! Provides warmup + repeated measurement with mean/σ/median reporting, and
+//! a table printer used by the paper-reproduction benches to emit the same
+//! rows/series the paper's tables and figures report. Benches are declared
+//! with `harness = false` and call [`Bench::run`] / [`Table`] directly.
+
+use super::stats::Summary;
+use super::timer::{fmt_duration, Stopwatch};
+
+/// One micro-benchmark: `name`, warmup iterations, measured iterations.
+pub struct Bench {
+    pub name: String,
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+/// Result of a bench run.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    /// Optional throughput denominator (bytes processed per iteration).
+    pub bytes_per_iter: Option<usize>,
+}
+
+impl BenchResult {
+    pub fn gib_per_s(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| b as f64 / self.mean_s / (1u64 << 30) as f64)
+    }
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Bench { name: name.into(), warmup_iters: 3, iters: 10 }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.iters = n;
+        self
+    }
+
+    /// Run `f` and report. `f` should perform one full iteration.
+    pub fn run<F: FnMut()>(&self, mut f: F) -> BenchResult {
+        self.run_with_bytes(None, &mut f)
+    }
+
+    /// Like [`run`], with a bytes-per-iteration denominator for GiB/s output.
+    pub fn run_bytes<F: FnMut()>(&self, bytes: usize, mut f: F) -> BenchResult {
+        self.run_with_bytes(Some(bytes), &mut f)
+    }
+
+    fn run_with_bytes(&self, bytes: Option<usize>, f: &mut dyn FnMut()) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Summary::new();
+        for _ in 0..self.iters.max(1) {
+            let sw = Stopwatch::start();
+            f();
+            samples.push(sw.elapsed_s());
+        }
+        let res = BenchResult {
+            name: self.name.clone(),
+            mean_s: samples.mean(),
+            std_s: samples.std(),
+            median_s: samples.median(),
+            min_s: samples.min(),
+            bytes_per_iter: bytes,
+        };
+        print_result(&res);
+        res
+    }
+}
+
+fn print_result(r: &BenchResult) {
+    let tp = match r.gib_per_s() {
+        Some(g) => format!("  {g:7.2} GiB/s"),
+        None => String::new(),
+    };
+    println!(
+        "  {:<44} {:>12} ± {:<10} (median {:>12}){}",
+        r.name,
+        fmt_duration(r.mean_s),
+        fmt_duration(r.std_s),
+        fmt_duration(r.median_s),
+        tp
+    );
+}
+
+/// Fixed-width table printer for paper-style tables/figure series.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let hdr: Vec<String> =
+            self.headers.iter().zip(&widths).map(|(h, w)| format!("{h:<w$}")).collect();
+        println!("| {} |", hdr.join(" | "));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        println!("|-{}-|", sep.join("-|-"));
+        for row in &self.rows {
+            let cells: Vec<String> =
+                row.iter().zip(&widths).map(|(c, w)| format!("{c:<w$}")).collect();
+            println!("| {} |", cells.join(" | "));
+        }
+    }
+
+    /// Render as CSV (for plotting / EXPERIMENTS.md appendices).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&self.headers.join(","));
+        s.push('\n');
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Write the CSV next to the bench outputs.
+    pub fn save_csv(&self, path: &str) -> std::io::Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_counts() {
+        let mut calls = 0usize;
+        let b = Bench::new("noop").warmup(2).iters(5);
+        let r = b.run(|| calls += 1);
+        assert_eq!(calls, 7);
+        assert!(r.mean_s >= 0.0);
+        assert_eq!(r.bytes_per_iter, None);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let b = Bench::new("bytes").warmup(0).iters(3);
+        let r = b.run_bytes(1 << 20, || {
+            std::hint::black_box(vec![0u8; 1024]);
+        });
+        assert!(r.gib_per_s().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn table_csv_roundtrip() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.rowf(&[&3, &4.5]);
+        let csv = t.to_csv();
+        assert_eq!(csv, "a,b\n1,2\n3,4.5\n");
+        t.print();
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+}

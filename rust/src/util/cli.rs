@@ -1,0 +1,139 @@
+//! Tiny CLI argument parser (the clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+//! Unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: named options + positionals, with typed accessors.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declares which names are value-options vs boolean flags.
+pub struct Spec<'a> {
+    /// options that take a value, e.g. `["model", "batch-size"]`
+    pub options: &'a [&'a str],
+    /// boolean flags, e.g. `["verbose"]`
+    pub flags: &'a [&'a str],
+}
+
+impl Args {
+    /// Parse from an iterator of raw argv strings (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, spec: &Spec) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if spec.flags.contains(&name.as_str()) {
+                    if inline_val.is_some() {
+                        return Err(format!("flag --{name} does not take a value"));
+                    }
+                    out.flags.push(name);
+                } else if spec.options.contains(&name.as_str()) {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("option --{name} requires a value"))?,
+                    };
+                    out.opts.insert(name, v);
+                } else {
+                    return Err(format!("unknown option --{name}"));
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: expected integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: expected number, got '{s}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: expected integer, got '{s}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec<'static> {
+        Spec { options: &["model", "batch-size"], flags: &["verbose"] }
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, String> {
+        Args::parse(args.iter().map(|s| s.to_string()), &spec())
+    }
+
+    #[test]
+    fn basic_forms() {
+        let a = parse(&["train", "--model", "vgg", "--batch-size=64", "--verbose"]).unwrap();
+        assert_eq!(a.positional(), &["train".to_string()]);
+        assert_eq!(a.get("model"), Some("vgg"));
+        assert_eq!(a.get_usize("batch-size", 0).unwrap(), 64);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("other"));
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["--nope"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["--model"]).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(parse(&["--verbose=yes"]).is_err());
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse(&["--batch-size", "abc"]).unwrap();
+        assert!(a.get_usize("batch-size", 0).is_err());
+        assert_eq!(a.get_f64("missing", 1.5).unwrap(), 1.5);
+    }
+}

@@ -1,0 +1,20 @@
+//! Dependency-free plumbing: PRNG, JSON, CLI parsing, statistics, timers,
+//! a scoped thread pool, a criterion-style bench kit and a mini
+//! property-testing harness.
+//!
+//! The build environment vendors only the `xla` crate's dependency closure,
+//! so everything a framework normally pulls from crates.io (rand, serde,
+//! rayon, clap, criterion, proptest) is implemented here as a substrate.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod prng;
+pub mod propcheck;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;
+
+pub use prng::Rng;
+pub use stats::Summary;
+pub use timer::Stopwatch;

@@ -1,0 +1,155 @@
+//! Mini property-based testing harness (the proptest substitute).
+//!
+//! A property is a closure over a [`Gen`] (seeded case generator). The
+//! runner executes `cases` random cases; on failure it reports the case
+//! seed so the exact case replays deterministically:
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the libxla rpath)
+//! use a2dtwp::util::propcheck::{check, Gen};
+//! check("reverse twice is identity", 200, |g: &mut Gen| {
+//!     let xs = g.vec_f32(0..100, -1.0, 1.0);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+
+use super::prng::Rng;
+use std::ops::Range;
+
+/// Per-case generator: thin typed veneer over the crate PRNG.
+pub struct Gen {
+    rng: Rng,
+    /// Seed of the current case (printed on failure for replay).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    pub fn from_seed(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed), case_seed: seed }
+    }
+
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        assert!(r.start < r.end);
+        r.start + self.rng.below(r.end - r.start)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn u32(&mut self) -> u32 {
+        self.rng.next_u64() as u32
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    /// f32 with a wide dynamic range (including subnormals/negatives) built
+    /// from random bits, but excluding NaN/Inf so equality tests stay sane.
+    pub fn f32_any_finite(&mut self) -> f32 {
+        loop {
+            let x = f32::from_bits(self.u32());
+            if x.is_finite() {
+                return x;
+            }
+        }
+    }
+
+    /// Raw-bit f32 including NaN and infinities (bit-level properties).
+    pub fn f32_any_bits(&mut self) -> f32 {
+        f32::from_bits(self.u32())
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn vec_f32(&mut self, len: Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_f32_bits(&mut self, len: Range<usize>) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_any_bits()).collect()
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics (test failure) with the case
+/// seed on the first failing case.
+pub fn check<F: Fn(&mut Gen)>(name: &str, cases: usize, prop: F) {
+    // Fixed master seed → deterministic CI; per-case seeds derived from it.
+    let mut master = Rng::new(0xA2D7_0000 ^ name.len() as u64);
+    for case in 0..cases {
+        let case_seed = master.next_u64() ^ case as u64;
+        let mut g = Gen::from_seed(case_seed);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(payload) = outcome {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (replay seed {case_seed:#018x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed (used when debugging a reported failure).
+pub fn replay<F: Fn(&mut Gen)>(seed: u64, prop: F) {
+    let mut g = Gen::from_seed(seed);
+    prop(&mut g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("add commutes", 100, |g| {
+            let a = g.f32_in(-10.0, 10.0);
+            let b = g.f32_in(-10.0, 10.0);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let res = std::panic::catch_unwind(|| {
+            check("always fails", 5, |_g| panic!("boom"));
+        });
+        let err = res.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("replay seed"), "{msg}");
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 300, |g| {
+            let n = g.usize_in(3..17);
+            assert!((3..17).contains(&n));
+            let x = g.f32_in(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&x));
+            let v = g.vec_f32(0..9, 0.0, 1.0);
+            assert!(v.len() < 9);
+        });
+    }
+
+    #[test]
+    fn finite_generator_is_finite() {
+        check("finite", 500, |g| {
+            assert!(g.f32_any_finite().is_finite());
+        });
+    }
+}

@@ -1,0 +1,147 @@
+//! Small statistics kit used by the profiler and the bench harness.
+
+/// Summary statistics over a sample of f64 observations.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    xs: Vec<f64>,
+    sorted: bool,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { xs: Vec::new(), sorted: true }
+    }
+
+    pub fn from(xs: impl IntoIterator<Item = f64>) -> Self {
+        let mut s = Summary::new();
+        for x in xs {
+            s.push(x);
+        }
+        s
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.xs.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    /// Sample standard deviation (n-1 denominator; 0 for n<2).
+    pub fn std(&self) -> f64 {
+        let n = self.xs.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+    pub fn max(&self) -> f64 {
+        self.xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+    pub fn sum(&self) -> f64 {
+        self.xs.iter().sum()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    /// Linear-interpolated quantile, q in [0,1].
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return f64::NAN;
+        }
+        self.ensure_sorted();
+        let pos = q.clamp(0.0, 1.0) * (self.xs.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.xs[lo] * (1.0 - frac) + self.xs[hi] * frac
+    }
+
+    pub fn median(&mut self) -> f64 {
+        self.quantile(0.5)
+    }
+}
+
+/// l²-norm of a slice (scalar reference; the SIMD path lives in `awp::norm`).
+pub fn l2_norm(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+}
+
+/// Relative change rate δ = (|w_i| − |w_{i−1}|) / |w_{i−1}| (paper §II).
+pub fn rel_change(curr: f64, prev: f64) -> f64 {
+    if prev == 0.0 {
+        if curr == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        }
+    } else {
+        (curr - prev) / prev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::from([1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean(), 2.5);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.median(), 2.5);
+        assert!((s.std() - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let mut s = Summary::from([0.0, 10.0]);
+        assert_eq!(s.quantile(0.25), 2.5);
+        assert_eq!(s.quantile(0.0), 0.0);
+        assert_eq!(s.quantile(1.0), 10.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let mut s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.median().is_nan());
+    }
+
+    #[test]
+    fn l2_matches_hand_computation() {
+        assert!((l2_norm(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(l2_norm(&[]), 0.0);
+    }
+
+    #[test]
+    fn rel_change_edge_cases() {
+        assert_eq!(rel_change(1.1, 1.0), 0.10000000000000009);
+        assert_eq!(rel_change(0.0, 0.0), 0.0);
+        assert!(rel_change(1.0, 0.0).is_infinite());
+        assert!(rel_change(0.9, 1.0) < 0.0);
+    }
+}

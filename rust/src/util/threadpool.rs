@@ -1,0 +1,215 @@
+//! Scoped data-parallel helpers (the OpenMP substitute).
+//!
+//! The paper's Bitpack uses `#pragma omp parallel for`; here the same
+//! chunked static schedule is built on `crossbeam_utils::thread::scope`.
+//! No queueing, no work stealing — Bitpack/l²-norm workloads are perfectly
+//! regular, so a static partition is both fastest and deterministic.
+
+use crossbeam_utils::thread;
+
+/// Number of worker threads to use by default: the machine's logical CPU
+/// count, clamped to 16 to mirror the paper's 16-core x86 node.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(16)
+}
+
+/// Split `len` items into at most `parts` contiguous ranges of near-equal
+/// size. Returns `(start, end)` pairs; never returns empty ranges.
+pub fn partition(len: usize, parts: usize) -> Vec<(usize, usize)> {
+    if len == 0 || parts == 0 {
+        return Vec::new();
+    }
+    let parts = parts.min(len);
+    let base = len / parts;
+    let extra = len % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let sz = base + usize::from(i < extra);
+        out.push((start, start + sz));
+        start += sz;
+    }
+    out
+}
+
+/// Run `f(chunk_index, start, end)` over a static partition of `[0, len)`
+/// on `threads` OS threads. `f` must be `Sync` (it is called concurrently).
+///
+/// Falls back to inline execution for a single thread or tiny inputs, so
+/// callers can use it unconditionally without paying spawn costs.
+pub fn parallel_ranges<F>(len: usize, threads: usize, min_per_thread: usize, f: F)
+where
+    F: Fn(usize, usize, usize) + Sync,
+{
+    let threads = if min_per_thread > 0 {
+        threads.min(len.div_ceil(min_per_thread)).max(1)
+    } else {
+        threads.max(1)
+    };
+    let ranges = partition(len, threads);
+    if ranges.len() <= 1 {
+        if let Some(&(s, e)) = ranges.first() {
+            f(0, s, e);
+        }
+        return;
+    }
+    thread::scope(|scope| {
+        for (i, &(s, e)) in ranges.iter().enumerate() {
+            let f = &f;
+            scope.spawn(move |_| f(i, s, e));
+        }
+    })
+    .expect("worker thread panicked");
+}
+
+/// Parallel map over chunks of a mutable output slice: each thread owns a
+/// disjoint `&mut` sub-slice. `f(chunk_index, in_chunk, out_chunk)`.
+///
+/// `in_stride`/`out_stride` express that each logical item occupies a fixed
+/// number of elements in each slice (e.g. Bitpack: 1 f32 in → `round_to`
+/// bytes out).
+pub fn parallel_chunks<I, O, F>(
+    input: &[I],
+    output: &mut [O],
+    in_stride: usize,
+    out_stride: usize,
+    threads: usize,
+    min_items_per_thread: usize,
+    f: F,
+) where
+    I: Sync,
+    O: Send,
+    F: Fn(usize, &[I], &mut [O]) + Sync,
+{
+    assert_eq!(input.len() % in_stride, 0, "input not a multiple of stride");
+    let items = input.len() / in_stride;
+    assert_eq!(output.len(), items * out_stride, "output size mismatch");
+    let threads = threads
+        .min(if min_items_per_thread > 0 { items.div_ceil(min_items_per_thread) } else { threads })
+        .max(1);
+    let ranges = partition(items, threads);
+    if ranges.len() <= 1 {
+        f(0, input, output);
+        return;
+    }
+    // Carve the output into disjoint &mut chunks up front.
+    let mut out_rest = output;
+    let mut out_chunks: Vec<&mut [O]> = Vec::with_capacity(ranges.len());
+    let mut prev_end = 0;
+    for &(s, e) in &ranges {
+        debug_assert_eq!(s, prev_end);
+        let (head, tail) = out_rest.split_at_mut((e - s) * out_stride);
+        out_chunks.push(head);
+        out_rest = tail;
+        prev_end = e;
+    }
+    thread::scope(|scope| {
+        for (i, (&(s, e), out_chunk)) in ranges.iter().zip(out_chunks).enumerate() {
+            let f = &f;
+            let in_chunk = &input[s * in_stride..e * in_stride];
+            scope.spawn(move |_| f(i, in_chunk, out_chunk));
+        }
+    })
+    .expect("worker thread panicked");
+}
+
+/// Parallel fold: run `f(start,end) -> T` over a static partition and reduce
+/// the per-thread results with `combine`. Used by the SIMD l²-norm.
+pub fn parallel_fold<T, F, C>(len: usize, threads: usize, min_per_thread: usize, f: F, combine: C) -> Option<T>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+    C: Fn(T, T) -> T,
+{
+    let threads = if min_per_thread > 0 {
+        threads.min(len.div_ceil(min_per_thread.max(1))).max(1)
+    } else {
+        threads.max(1)
+    };
+    let ranges = partition(len, threads);
+    if ranges.is_empty() {
+        return None;
+    }
+    if ranges.len() == 1 {
+        let (s, e) = ranges[0];
+        return Some(f(s, e));
+    }
+    let results = thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .map(|&(s, e)| {
+                let f = &f;
+                scope.spawn(move |_| f(s, e))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect::<Vec<T>>()
+    })
+    .expect("scope failed");
+    results.into_iter().reduce(combine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn partition_covers_exactly() {
+        for len in [0usize, 1, 7, 16, 1000, 1023] {
+            for parts in [1usize, 2, 3, 8, 16] {
+                let rs = partition(len, parts);
+                let total: usize = rs.iter().map(|(s, e)| e - s).sum();
+                assert_eq!(total, len);
+                let mut prev = 0;
+                for &(s, e) in &rs {
+                    assert_eq!(s, prev);
+                    assert!(e > s);
+                    prev = e;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_ranges_visits_everything() {
+        let n = 10_000;
+        let counter = AtomicUsize::new(0);
+        parallel_ranges(n, 8, 1, |_, s, e| {
+            counter.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), n);
+    }
+
+    #[test]
+    fn parallel_chunks_matches_serial() {
+        let input: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let mut out_par = vec![0u8; 3000];
+        let mut out_ser = vec![0u8; 3000];
+        let work = |_, inp: &[f32], out: &mut [u8]| {
+            for (i, &x) in inp.iter().enumerate() {
+                let b = (x as u32).to_le_bytes();
+                out[i * 3..i * 3 + 3].copy_from_slice(&b[..3]);
+            }
+        };
+        parallel_chunks(&input, &mut out_par, 1, 3, 7, 1, work);
+        work(0, &input, &mut out_ser);
+        assert_eq!(out_par, out_ser);
+    }
+
+    #[test]
+    fn parallel_fold_sums() {
+        let got = parallel_fold(1000, 4, 1, |s, e| (s..e).sum::<usize>(), |a, b| a + b);
+        assert_eq!(got, Some((0..1000).sum()));
+        assert_eq!(parallel_fold(0, 4, 1, |s, e| (s..e).sum::<usize>(), |a, b| a + b), None);
+    }
+
+    #[test]
+    fn single_thread_inline_path() {
+        let hits = AtomicUsize::new(0);
+        parallel_ranges(10, 1, 1, |i, s, e| {
+            assert_eq!((i, s, e), (0, 0, 10));
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+}

@@ -1,0 +1,118 @@
+//! Failure injection: every load/parse/configuration error path must fail
+//! loudly with an actionable message — never panic, never compute garbage.
+
+use a2dtwp::awp::PolicyKind;
+use a2dtwp::config::ExperimentConfig;
+use a2dtwp::coordinator::Trainer;
+use a2dtwp::runtime::{Executor, Manifest};
+use std::path::PathBuf;
+
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("a2dtwp_fail_{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn missing_artifacts_dir_is_actionable() {
+    let err = Manifest::load("/nonexistent/a2dtwp").unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn corrupt_manifest_json_is_reported_with_path() {
+    let dir = scratch("corrupt");
+    std::fs::write(dir.join("manifest.json"), "{ not json !!").unwrap();
+    let err = Manifest::load(&dir).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("manifest.json"), "{msg}");
+}
+
+#[test]
+fn manifest_with_missing_fields_is_rejected() {
+    let dir = scratch("fields");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"models": {"m": {"input": [32,32,3]}}}"#,
+    )
+    .unwrap();
+    assert!(Manifest::load(&dir).is_err());
+}
+
+#[test]
+fn truncated_hlo_file_fails_at_compile_not_execute() {
+    let dir = scratch("hlo");
+    let path = dir.join("broken.hlo.txt");
+    std::fs::write(&path, "HloModule broken\nENTRY main {").unwrap();
+    let mut exec = Executor::new().unwrap();
+    let err = exec.load(&path).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("broken.hlo.txt"), "{msg}");
+}
+
+#[test]
+fn manifest_descriptor_drift_is_detected() {
+    // A manifest whose layer table disagrees with the Rust zoo must be
+    // rejected at Trainer construction (the cross-check in
+    // runtime::manifest::check_against).
+    let dir = scratch("drift");
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"format":"hlo-text","models":{"alexnet_micro":{
+            "input":[32,32,3],"classes":16,"infer_batch":64,
+            "infer_file":"x.hlo.txt","train_files":{"8":"y.hlo.txt"},
+            "layers":[{"name":"conv1","kind":"conv","block":"conv1",
+                       "weight_shape":[3,3,3,8],"bias_shape":[8]}]}}}"#,
+    )
+    .unwrap();
+    let mut cfg =
+        ExperimentConfig::preset("alexnet_micro", 32, PolicyKind::Baseline, "x86");
+    cfg.artifacts_dir = dir.to_string_lossy().to_string();
+    let err = match Trainer::new(cfg) {
+        Err(e) => e,
+        Ok(_) => panic!("drifted manifest accepted"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("weighted layers") || msg.contains("weight count"), "{msg}");
+}
+
+#[test]
+fn unknown_model_and_bad_batch_are_rejected() {
+    let cfg = ExperimentConfig::preset("nonexistent_micro", 32, PolicyKind::Awp, "x86");
+    assert!(Trainer::new(cfg).is_err());
+    if Manifest::load("artifacts").is_ok() {
+        // batch not divisible by GPU count
+        let mut cfg = ExperimentConfig::preset("alexnet_micro", 32, PolicyKind::Awp, "x86");
+        cfg.batch_size = 30;
+        assert!(Trainer::new(cfg).is_err());
+        // shard size with no compiled artifact (batch 256 → shard 64)
+        let mut cfg = ExperimentConfig::preset("alexnet_micro", 32, PolicyKind::Awp, "x86");
+        cfg.batch_size = 256;
+        let err = match Trainer::new(cfg) {
+            Err(e) => e,
+            Ok(_) => panic!("uncompiled shard size accepted"),
+        };
+        assert!(format!("{err:#}").contains("shard"), "{err:#}");
+    }
+}
+
+#[test]
+fn corrupt_trace_cache_is_surfaced_not_silently_retrained() {
+    let dir = scratch("trace");
+    std::fs::create_dir_all(dir.join("traces")).unwrap();
+    // Write a corrupt cached trace, then point a config at it.
+    let mut cfg = ExperimentConfig::preset("alexnet_micro", 32, PolicyKind::Baseline, "x86");
+    cfg.artifacts_dir = dir.to_string_lossy().to_string();
+    let key = a2dtwp::coordinator::TraceKey {
+        model: cfg.model.clone(),
+        batch_size: cfg.batch_size,
+        policy: cfg.policy,
+        seed: cfg.seed,
+    };
+    let path = a2dtwp::coordinator::trace_path(&cfg.artifacts_dir, &key);
+    std::fs::write(&path, "{{{{").unwrap();
+    let err = a2dtwp::coordinator::load_or_record_trace(&cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("json"), "{msg}");
+}

@@ -1,0 +1,72 @@
+//! Integration over the figure-replay pipeline using the recorded trace
+//! cache (skips for any trace not yet recorded — `cargo bench` records
+//! them; `examples/precision_sweep` records all).
+
+use a2dtwp::awp::PolicyKind;
+use a2dtwp::coordinator::{trace_path, TraceKey};
+use a2dtwp::figures::{replay, time_to_error};
+use a2dtwp::metrics::TrainCurve;
+use a2dtwp::models::model_by_name;
+use a2dtwp::sim::SystemProfile;
+use a2dtwp::util::json::Json;
+
+fn load_trace(model: &str, batch: usize, policy: PolicyKind) -> Option<TrainCurve> {
+    let key = TraceKey { model: model.into(), batch_size: batch, policy, seed: 42 };
+    let path = trace_path("artifacts", &key);
+    let text = std::fs::read_to_string(&path).ok()?;
+    Some(TrainCurve::from_json(&Json::parse(&text).ok()?).ok()?)
+}
+
+#[test]
+fn recorded_traces_replay_consistently() {
+    let Some(curve) = load_trace("alexnet_micro", 32, PolicyKind::Awp) else {
+        eprintln!("SKIP: no recorded trace (run examples/precision_sweep)");
+        return;
+    };
+    let desc = model_by_name("alexnet").unwrap();
+    for system in ["x86", "power"] {
+        let profile = SystemProfile::by_name(system).unwrap();
+        let series = replay(&curve, &profile, &desc, 32, PolicyKind::Awp);
+        assert_eq!(series.len(), curve.points.len());
+        // cumulative time strictly increases batch over batch
+        for w in series.windows(2) {
+            assert!(w[1].1 > w[0].1, "{system}: time not monotone");
+        }
+        // bytes/weight never decreases (AWP monotone precision)
+        for w in series.windows(2) {
+            assert!(w[1].3 >= w[0].3 - 1e-9, "{system}: compression regressed");
+        }
+    }
+}
+
+#[test]
+fn power_replay_is_faster_than_x86() {
+    let Some(curve) = load_trace("alexnet_micro", 32, PolicyKind::Baseline) else {
+        eprintln!("SKIP: no recorded trace");
+        return;
+    };
+    let desc = model_by_name("alexnet").unwrap();
+    let threshold = curve.best_error().map(|e| (e + 0.1).min(0.9)).unwrap_or(0.5);
+    let tx = time_to_error(&curve, &SystemProfile::x86(), &desc, 32, PolicyKind::Baseline, threshold);
+    let tp =
+        time_to_error(&curve, &SystemProfile::power(), &desc, 32, PolicyKind::Baseline, threshold);
+    if let (Some(tx), Some(tp)) = (tx, tp) {
+        assert!(tp < tx, "POWER ({tp}) must beat x86 ({tx}) in absolute time");
+    }
+}
+
+#[test]
+fn awp_trace_shows_adaptive_compression() {
+    let Some(curve) = load_trace("alexnet_micro", 32, PolicyKind::Awp) else {
+        eprintln!("SKIP: no recorded trace");
+        return;
+    };
+    let first = curve.points.first().unwrap().bytes_per_weight;
+    let last = curve.points.last().unwrap().bytes_per_weight;
+    assert!((0.99..=1.01).contains(&first), "AWP starts at 8-bit (1 B/w), got {first}");
+    assert!(last >= first, "compression state must widen or hold, {first} -> {last}");
+    // baseline trace stays at 4 B/w
+    if let Some(base) = load_trace("alexnet_micro", 32, PolicyKind::Baseline) {
+        assert!(base.points.iter().all(|p| (p.bytes_per_weight - 4.0).abs() < 1e-9));
+    }
+}

@@ -1,0 +1,130 @@
+//! Property-based tests over the ADT compression invariants
+//! (DESIGN.md module inventory #3), via the crate's propcheck harness.
+
+use a2dtwp::adt::{
+    bitpack_into, bitpack_scalar_into, bitunpack_into, bitunpack_scalar_into, mask_in_place,
+    masked_value, packed_len, AdtConfig, BitpackImpl, RoundTo,
+};
+use a2dtwp::util::propcheck::{check, Gen};
+
+fn any_roundto(g: &mut Gen) -> RoundTo {
+    *g.pick(&RoundTo::ALL)
+}
+
+#[test]
+fn prop_roundtrip_equals_mask_law() {
+    // ∀ bit patterns (incl. NaN/Inf/subnormals), pack→unpack == bits & mask
+    check("roundtrip == mask law", 300, |g| {
+        let w = g.vec_f32_bits(0..300);
+        let rt = any_roundto(g);
+        let mut packed = vec![0u8; packed_len(w.len(), rt)];
+        bitpack_scalar_into(&w, rt, &mut packed);
+        let mut restored = vec![0f32; w.len()];
+        bitunpack_scalar_into(&packed, rt, &mut restored);
+        for (a, b) in w.iter().zip(&restored) {
+            assert_eq!(b.to_bits(), a.to_bits() & rt.mask());
+        }
+    });
+}
+
+#[test]
+fn prop_all_impls_byte_identical() {
+    // scalar / AVX2 / threaded produce identical packed streams
+    check("impl equivalence", 150, |g| {
+        let w = g.vec_f32_bits(0..2000);
+        let rt = any_roundto(g);
+        let threads = g.usize_in(1..5);
+        let mut scalar = vec![0u8; packed_len(w.len(), rt)];
+        bitpack_scalar_into(&w, rt, &mut scalar);
+        for simd in [BitpackImpl::Scalar, BitpackImpl::Avx2] {
+            let cfg = AdtConfig { threads, simd, min_per_thread: 64 };
+            let mut out = vec![0u8; packed_len(w.len(), rt)];
+            bitpack_into(&w, rt, &cfg, &mut out);
+            assert_eq!(out, scalar, "simd={simd:?} threads={threads}");
+        }
+    });
+}
+
+#[test]
+fn prop_truncation_is_idempotent_and_monotone_in_precision() {
+    check("idempotence + refinement", 300, |g| {
+        let w = g.f32_any_bits();
+        let rt = any_roundto(g);
+        let once = masked_value(w, rt);
+        // idempotent
+        assert_eq!(masked_value(once, rt).to_bits(), once.to_bits());
+        // widening refines: re-truncating a wider value at rt gives rt's value
+        let wider = rt.widen();
+        assert_eq!(masked_value(masked_value(w, wider), rt).to_bits(), once.to_bits());
+        // 4-byte is lossless
+        assert_eq!(masked_value(w, RoundTo::B4).to_bits(), w.to_bits());
+    });
+}
+
+#[test]
+fn prop_truncation_toward_zero_and_sign_preserving() {
+    check("toward zero", 400, |g| {
+        let w = g.f32_any_finite();
+        let rt = any_roundto(g);
+        let m = masked_value(w, rt);
+        assert!(m.abs() <= w.abs(), "w={w} m={m}");
+        assert_eq!(m.is_sign_negative(), w.is_sign_negative());
+        // error bound: one ULP of the surviving mantissa width
+        if w.is_normal() && rt != RoundTo::B1 {
+            let kept_mantissa = rt.bits() as i32 - 9;
+            let ulp = 2f64.powi(w.abs().log2().floor() as i32 - kept_mantissa);
+            assert!((w as f64 - m as f64).abs() <= ulp);
+        }
+    });
+}
+
+#[test]
+fn prop_packed_stream_parses_at_any_split() {
+    // packing is positional: concatenating two packed streams equals
+    // packing the concatenation (threaded partitioning relies on this)
+    check("stream concatenation", 200, |g| {
+        let a = g.vec_f32_bits(0..100);
+        let b = g.vec_f32_bits(0..100);
+        let rt = any_roundto(g);
+        let mut pa = vec![0u8; packed_len(a.len(), rt)];
+        bitpack_scalar_into(&a, rt, &mut pa);
+        let mut pb = vec![0u8; packed_len(b.len(), rt)];
+        bitpack_scalar_into(&b, rt, &mut pb);
+        let joined: Vec<f32> = a.iter().chain(b.iter()).copied().collect();
+        let mut pj = vec![0u8; packed_len(joined.len(), rt)];
+        bitpack_scalar_into(&joined, rt, &mut pj);
+        let concat: Vec<u8> = pa.into_iter().chain(pb).collect();
+        assert_eq!(pj, concat);
+    });
+}
+
+#[test]
+fn prop_threaded_unpack_matches_mask_in_place() {
+    check("unpack == mask_in_place", 150, |g| {
+        let w = g.vec_f32_bits(1..1500);
+        let rt = any_roundto(g);
+        let threads = g.usize_in(1..5);
+        let cfg = AdtConfig { threads, min_per_thread: 64, ..Default::default() };
+        let mut packed = vec![0u8; packed_len(w.len(), rt)];
+        bitpack_into(&w, rt, &cfg, &mut packed);
+        let mut unpacked = vec![0f32; w.len()];
+        bitunpack_into(&packed, rt, &cfg, &mut unpacked);
+        let mut masked = w.clone();
+        mask_in_place(&mut masked, rt);
+        for (a, b) in unpacked.iter().zip(&masked) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_compression_ratio_exact() {
+    check("payload arithmetic", 200, |g| {
+        let n = g.usize_in(0..10_000);
+        let rt = any_roundto(g);
+        assert_eq!(packed_len(n, rt), n * rt.bytes());
+        // ratio × packed == full payload
+        let full = n * 4;
+        assert_eq!((packed_len(n, rt) as f64 * rt.ratio()).round() as usize, full);
+    });
+}

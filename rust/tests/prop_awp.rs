@@ -1,0 +1,151 @@
+//! Property-based tests over AWP controller invariants (Algorithm 1) and
+//! the policy layer.
+
+use a2dtwp::adt::RoundTo;
+use a2dtwp::awp::{AwpController, AwpParams, Policy, PolicyKind, PrecisionPolicy};
+use a2dtwp::util::propcheck::{check, Gen};
+
+fn any_params(g: &mut Gen) -> AwpParams {
+    AwpParams {
+        threshold: -(10f64.powi(-(g.usize_in(1..7) as i32))),
+        interval: g.usize_in(1..50) as u32,
+        step_bits: 8,
+        initial: RoundTo::B1,
+    }
+}
+
+fn random_norm_walk(g: &mut Gen, len: usize) -> Vec<f64> {
+    let mut n = 1.0 + g.f32_in(0.0, 10.0) as f64;
+    (0..len)
+        .map(|_| {
+            n *= 1.0 + g.f32_in(-0.05, 0.05) as f64;
+            n
+        })
+        .collect()
+}
+
+#[test]
+fn prop_precision_is_monotonically_nondecreasing() {
+    // Algorithm 1 only ever *adds* bits.
+    check("monotone precision", 120, |g| {
+        let params = any_params(g);
+        let layers = g.usize_in(1..8);
+        let mut ctl = AwpController::new(layers, params);
+        let mut prev = ctl.formats();
+        let walks: Vec<Vec<f64>> = (0..layers).map(|_| random_norm_walk(g, 200)).collect();
+        for b in 0..200 {
+            let norms: Vec<f64> = (0..layers).map(|l| walks[l][b]).collect();
+            ctl.observe_batch(&norms);
+            let cur = ctl.formats();
+            for (p, c) in prev.iter().zip(&cur) {
+                assert!(c >= p, "precision must never narrow");
+            }
+            prev = cur;
+        }
+    });
+}
+
+#[test]
+fn prop_events_are_consistent_with_formats() {
+    // replaying the event log from the initial state reproduces formats
+    check("event log reproduces state", 100, |g| {
+        let params = any_params(g);
+        let layers = g.usize_in(1..6);
+        let mut ctl = AwpController::new(layers, params);
+        let walks: Vec<Vec<f64>> = (0..layers).map(|_| random_norm_walk(g, 150)).collect();
+        for b in 0..150 {
+            let norms: Vec<f64> = (0..layers).map(|l| walks[l][b]).collect();
+            ctl.observe_batch(&norms);
+        }
+        let mut bits = vec![params.initial.bits(); layers];
+        for ev in ctl.events() {
+            assert_eq!(ev.to.bits(), ev.from.bits() + params.step_bits);
+            bits[ev.layer] = ev.to.bits();
+        }
+        for (l, &b) in bits.iter().enumerate() {
+            assert_eq!(ctl.round_to(l), RoundTo::from_bits(b).unwrap());
+        }
+        // events are chronologically ordered
+        for w in ctl.events().windows(2) {
+            assert!(w[0].batch <= w[1].batch);
+        }
+    });
+}
+
+#[test]
+fn prop_widen_requires_interval_evidence() {
+    // the first widen can never occur before INTERVAL qualifying batches
+    check("interval gate", 100, |g| {
+        let params = any_params(g);
+        let mut ctl = AwpController::new(1, params);
+        let walk = random_norm_walk(g, 120);
+        for (b, &n) in walk.iter().enumerate() {
+            let evs = ctl.observe_batch(&[n]);
+            if !evs.is_empty() {
+                assert!(
+                    b as u32 >= params.interval,
+                    "widened at batch {b} with interval {}",
+                    params.interval
+                );
+                return;
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_static_policies_ignore_norms() {
+    check("static policies inert", 100, |g| {
+        let layers = g.usize_in(1..6);
+        let kind = *g.pick(&[
+            PolicyKind::Baseline,
+            PolicyKind::Fixed(RoundTo::B1),
+            PolicyKind::Fixed(RoundTo::B3),
+            PolicyKind::Oracle(RoundTo::B2),
+        ]);
+        let mut p = Policy::new(kind, layers, AwpParams::default(), None);
+        let before = p.formats().to_vec();
+        for _ in 0..50 {
+            let norms: Vec<f64> = (0..layers).map(|_| g.f32_in(0.0, 100.0) as f64).collect();
+            assert!(p.observe_batch(&norms).is_empty());
+        }
+        assert_eq!(p.formats(), &before[..]);
+        assert!(!p.needs_norms());
+    });
+}
+
+#[test]
+fn prop_grouped_layers_always_share_formats() {
+    check("group coherence", 80, |g| {
+        let blocks = g.usize_in(1..4);
+        let per_block = g.usize_in(1..4);
+        let layers = blocks * per_block;
+        let groups: Vec<usize> = (0..layers).map(|l| l / per_block).collect();
+        let params = any_params(g);
+        let mut p = Policy::new(PolicyKind::Awp, layers, params, Some(groups.clone()));
+        for _ in 0..100 {
+            let norms: Vec<f64> = (0..layers).map(|_| g.f32_in(0.1, 10.0) as f64).collect();
+            p.observe_batch(&norms);
+            let f = p.formats();
+            for (l, &grp) in groups.iter().enumerate() {
+                assert_eq!(f[l], f[grp * per_block], "layer {l} diverged from its block");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_mean_bytes_bounded() {
+    check("mean bytes in [1,4]", 100, |g| {
+        let layers = g.usize_in(1..6);
+        let params = any_params(g);
+        let mut ctl = AwpController::new(layers, params);
+        let weights: Vec<usize> = (0..layers).map(|_| g.usize_in(1..10_000)).collect();
+        for _ in 0..100 {
+            let norms: Vec<f64> = (0..layers).map(|_| g.f32_in(0.1, 10.0) as f64).collect();
+            ctl.observe_batch(&norms);
+            let m = ctl.mean_bytes_per_weight(&weights);
+            assert!((1.0..=4.0).contains(&m), "mean={m}");
+        }
+    });
+}

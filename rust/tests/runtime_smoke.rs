@@ -1,0 +1,184 @@
+//! Integration: load real AOT artifacts and execute them via PJRT.
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use a2dtwp::runtime::{Executor, Manifest};
+use a2dtwp::util::prng::Rng;
+
+fn artifacts() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+fn random_params(
+    m: &a2dtwp::runtime::ModelManifest,
+    seed: u64,
+) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+    let mut rng = Rng::new(seed);
+    let ws = m
+        .layers
+        .iter()
+        .map(|l| {
+            let mut v = vec![0f32; l.weight_count()];
+            rng.fill_normal(&mut v, 0.0, 0.05);
+            v
+        })
+        .collect();
+    let bs = m.layers.iter().map(|l| vec![0f32; l.bias_count()]).collect();
+    (ws, bs)
+}
+
+#[test]
+fn train_step_executes_and_returns_grads() {
+    let Some(manifest) = artifacts() else { return };
+    let model = manifest.model("alexnet_micro").unwrap().clone();
+    let mut exec = Executor::new().unwrap();
+    let shard = 4usize;
+    let (h, w, c) = model.input;
+    let mut rng = Rng::new(7);
+    let mut images = vec![0f32; shard * h * w * c];
+    rng.fill_normal(&mut images, 0.0, 1.0);
+    let labels: Vec<u32> = (0..shard as u32).collect();
+    let (ws, bs) = random_params(&model, 1);
+    let masks = vec![0xFFFF_FFFFu32; model.num_layers()];
+    let path = manifest.train_path("alexnet_micro", shard).unwrap();
+    let out = exec
+        .train_step(&path, &model, &ws, &bs, &masks, &images, &labels, shard)
+        .unwrap();
+    assert!(out.loss.is_finite(), "loss={}", out.loss);
+    assert_eq!(out.grad_ws.len(), model.num_layers());
+    assert_eq!(out.grad_bs.len(), model.num_layers());
+    for (i, g) in out.grad_ws.iter().enumerate() {
+        assert_eq!(g.len(), model.layers[i].weight_count());
+        assert!(g.iter().all(|x| x.is_finite()));
+    }
+    // gradients are non-trivial
+    let gnorm: f32 = out.grad_ws.iter().flatten().map(|x| x * x).sum::<f32>();
+    assert!(gnorm > 0.0);
+}
+
+#[test]
+fn masks_change_numerics_consistently_with_rust_adt() {
+    // Feeding a coarser mask must equal feeding pre-truncated weights with
+    // the full mask: the in-graph Pallas bitunpack == rust adt::mask law.
+    let Some(manifest) = artifacts() else { return };
+    let model = manifest.model("alexnet_micro").unwrap().clone();
+    let mut exec = Executor::new().unwrap();
+    let shard = 4usize;
+    let (h, w, c) = model.input;
+    let mut rng = Rng::new(9);
+    let mut images = vec![0f32; shard * h * w * c];
+    rng.fill_normal(&mut images, 0.0, 1.0);
+    let labels: Vec<u32> = (0..shard as u32).map(|i| i % 16).collect();
+    let (ws, bs) = random_params(&model, 2);
+    let path = manifest.train_path("alexnet_micro", shard).unwrap();
+
+    let rt = a2dtwp::adt::RoundTo::B2;
+    let masks_coarse = vec![rt.mask(); model.num_layers()];
+    let out_masked = exec
+        .train_step(&path, &model, &ws, &bs, &masks_coarse, &images, &labels, shard)
+        .unwrap();
+
+    let ws_trunc: Vec<Vec<f32>> = ws
+        .iter()
+        .map(|w| {
+            let mut t = w.clone();
+            a2dtwp::adt::mask_in_place(&mut t, rt);
+            t
+        })
+        .collect();
+    let masks_full = vec![0xFFFF_FFFFu32; model.num_layers()];
+    let out_pre = exec
+        .train_step(&path, &model, &ws_trunc, &bs, &masks_full, &images, &labels, shard)
+        .unwrap();
+
+    assert_eq!(out_masked.loss.to_bits(), out_pre.loss.to_bits());
+    for (a, b) in out_masked.grad_ws.iter().zip(&out_pre.grad_ws) {
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}
+
+#[test]
+fn manifest_agrees_with_rust_descriptors_for_all_models() {
+    let Some(manifest) = artifacts() else { return };
+    for (name, mm) in &manifest.models {
+        let desc = a2dtwp::models::model_by_name(name)
+            .unwrap_or_else(|| panic!("manifest model '{name}' missing from zoo"));
+        mm.check_against(&desc).unwrap();
+        // every advertised artifact file exists
+        for f in mm.train_files.values() {
+            assert!(manifest.dir.join(f).exists(), "{f} missing");
+        }
+        assert!(manifest.dir.join(&mm.infer_file).exists());
+    }
+}
+
+#[test]
+fn all_models_execute_one_train_step() {
+    let Some(manifest) = artifacts() else { return };
+    let mut exec = Executor::new().unwrap();
+    for name in ["alexnet_micro", "vgg_micro", "resnet_micro"] {
+        let model = manifest.model(name).unwrap().clone();
+        let shard = 4usize;
+        let (h, w, c) = model.input;
+        let mut rng = Rng::new(11);
+        let mut images = vec![0f32; shard * h * w * c];
+        rng.fill_normal(&mut images, 0.0, 1.0);
+        let labels: Vec<u32> = (0..shard as u32).map(|i| i % 16).collect();
+        let (ws, bs) = random_params(&model, 3);
+        let masks = vec![0xFFFF_0000u32; model.num_layers()];
+        let path = manifest.train_path(name, shard).unwrap();
+        let out = exec
+            .train_step(&path, &model, &ws, &bs, &masks, &images, &labels, shard)
+            .unwrap();
+        assert!(out.loss.is_finite(), "{name} loss={}", out.loss);
+        assert_eq!(out.grad_ws.len(), model.num_layers(), "{name}");
+    }
+}
+
+#[test]
+fn wrong_input_sizes_are_rejected() {
+    let Some(manifest) = artifacts() else { return };
+    let model = manifest.model("alexnet_micro").unwrap().clone();
+    let mut exec = Executor::new().unwrap();
+    let (ws, bs) = random_params(&model, 1);
+    let masks = vec![0u32; model.num_layers()];
+    let path = manifest.train_path("alexnet_micro", 4).unwrap();
+    // images too short
+    let bad_images = vec![0f32; 7];
+    let labels = vec![0u32; 4];
+    assert!(exec
+        .train_step(&path, &model, &ws, &bs, &masks, &bad_images, &labels, 4)
+        .is_err());
+    // wrong mask count
+    let (h, w, c) = model.input;
+    let images = vec![0f32; 4 * h * w * c];
+    let bad_masks = vec![0u32; 1];
+    assert!(exec
+        .train_step(&path, &model, &ws, &bs, &bad_masks, &images, &labels, 4)
+        .is_err());
+}
+
+#[test]
+fn infer_returns_logits_for_val_batch() {
+    let Some(manifest) = artifacts() else { return };
+    let model = manifest.model("alexnet_micro").unwrap().clone();
+    let mut exec = Executor::new().unwrap();
+    let batch = model.infer_batch;
+    let (h, w, c) = model.input;
+    let mut rng = Rng::new(3);
+    let mut images = vec![0f32; batch * h * w * c];
+    rng.fill_normal(&mut images, 0.0, 1.0);
+    let (ws, bs) = random_params(&model, 5);
+    let masks = vec![0xFF00_0000u32; model.num_layers()];
+    let path = manifest.infer_path("alexnet_micro").unwrap();
+    let logits = exec.infer(&path, &model, &ws, &bs, &masks, &images, batch).unwrap();
+    assert_eq!(logits.len(), batch * model.classes);
+    assert!(logits.iter().all(|x| x.is_finite()));
+}
