@@ -9,13 +9,15 @@
 //!     cargo bench --bench bitpack_micro
 
 use a2dtwp::adt::{
-    bitpack_into, bitunpack_into, packed_len, AdtConfig, BitpackImpl, RoundTo,
+    bitpack_into, bitunpack_into, packed_len, AdtConfig, BitpackImpl, BitunpackImpl, RoundTo,
 };
 use a2dtwp::awp::{l2_norm_fast, l2_norm_simd};
+use a2dtwp::coordinator::PackArena;
 use a2dtwp::models::model_by_name;
 use a2dtwp::util::benchkit::Bench;
 use a2dtwp::util::prng::Rng;
 use a2dtwp::util::stats::l2_norm;
+use a2dtwp::util::threadpool::{parallel_reduce_slices, reduce_slices_into};
 
 fn main() {
     let threads = a2dtwp::util::threadpool::default_threads();
@@ -66,16 +68,119 @@ fn main() {
     }
     println!();
 
-    // Bitunpack
+    // Bitunpack: scalar vs AVX2 vs threaded (the full sweep lives in
+    // `cargo bench --bench bitunpack_micro`)
     let mut restored = vec![0f32; n];
     for rt in [RoundTo::B1, RoundTo::B3] {
         let plen = packed_len(n, rt);
+        let pack_cfg = AdtConfig { threads, ..Default::default() };
+        bitpack_into(&weights, rt, &pack_cfg, &mut out[..plen]);
+        for (name, unpack_simd) in
+            [("scalar", BitunpackImpl::Scalar), ("avx2", BitunpackImpl::Avx2)]
+        {
+            let cfg = AdtConfig { threads: 1, unpack_simd, ..Default::default() };
+            Bench::new(format!("bitunpack {rt} {name} (vgg)")).warmup(2).iters(5).run_bytes(
+                plen,
+                || {
+                    bitunpack_into(&out[..plen], rt, &cfg, &mut restored);
+                    std::hint::black_box(&restored);
+                },
+            );
+        }
         let cfg = AdtConfig { threads, ..Default::default() };
-        bitpack_into(&weights, rt, &cfg, &mut out[..plen]);
-        Bench::new(format!("bitunpack {rt} (vgg)")).warmup(2).iters(5).run_bytes(plen, || {
-            bitunpack_into(&out[..plen], rt, &cfg, &mut restored);
-            std::hint::black_box(&restored);
-        });
+        Bench::new(format!("bitunpack {rt} threaded x{threads}")).warmup(2).iters(5).run_bytes(
+            plen,
+            || {
+                bitunpack_into(&out[..plen], rt, &cfg, &mut restored);
+                std::hint::black_box(&restored);
+            },
+        );
+    }
+    println!();
+
+    // Step-loop kernels: the coordinator's arena'd per-layer pack vs the
+    // historical shared-buffer loop (fresh allocation per batch), and the
+    // fused gradient reduce vs the historical accumulate-then-scale loops.
+    {
+        let desc = model_by_name("vgg_a").unwrap();
+        let counts = desc.weight_counts();
+        let mut rng = Rng::new(4);
+        let layer_ws: Vec<Vec<f32>> = counts
+            .iter()
+            .map(|&c| {
+                let mut v = vec![0f32; c];
+                rng.fill_normal(&mut v, 0.0, 0.1);
+                v
+            })
+            .collect();
+        let formats = vec![RoundTo::B2; counts.len()];
+        let cfg = AdtConfig { threads, ..Default::default() };
+        let mut arena = PackArena::new(&counts);
+        Bench::new(format!("arena per-layer pack 16-bit vgg x{threads}"))
+            .warmup(2)
+            .iters(5)
+            .run_bytes(bytes, || {
+                std::hint::black_box(arena.pack_layers(&layer_ws, &formats, &cfg));
+            });
+        Bench::new("historical pack loop (alloc + per-layer serial)")
+            .warmup(2)
+            .iters(5)
+            .run_bytes(bytes, || {
+                let mut buf = Vec::new();
+                for (w, &rt) in layer_ws.iter().zip(&formats) {
+                    let need = packed_len(w.len(), rt);
+                    if buf.len() < need {
+                        buf.resize(need, 0);
+                    }
+                    bitpack_into(w, rt, &cfg, &mut buf[..need]);
+                }
+                std::hint::black_box(&buf);
+            });
+        println!();
+
+        // fused gradient reduce over 4 simulated GPU shards
+        let n_shards = 4usize;
+        let gn = 8_000_000usize;
+        let shards: Vec<Vec<f32>> = (0..n_shards)
+            .map(|_| {
+                let mut v = vec![0f32; gn];
+                rng.fill_normal(&mut v, 0.0, 0.01);
+                v
+            })
+            .collect();
+        let srcs: Vec<&[f32]> = shards.iter().map(|v| v.as_slice()).collect();
+        let mut sum = vec![0f32; gn];
+        let inv = 1.0 / n_shards as f32;
+        let grad_bytes = gn * 4 * n_shards;
+        Bench::new("grad reduce: historical accumulate+scale (2 passes)")
+            .warmup(2)
+            .iters(5)
+            .run_bytes(grad_bytes, || {
+                sum.fill(0.0);
+                for s in &srcs {
+                    for (a, b) in sum.iter_mut().zip(*s) {
+                        *a += b;
+                    }
+                }
+                for v in sum.iter_mut() {
+                    *v *= inv;
+                }
+                std::hint::black_box(&sum);
+            });
+        Bench::new("grad reduce: fused 8-wide (1 pass)").warmup(2).iters(5).run_bytes(
+            grad_bytes,
+            || {
+                reduce_slices_into(&mut sum, &srcs, inv);
+                std::hint::black_box(&sum);
+            },
+        );
+        Bench::new(format!("grad reduce: fused threaded x{threads}")).warmup(2).iters(5).run_bytes(
+            grad_bytes,
+            || {
+                parallel_reduce_slices(&mut sum, &srcs, inv, threads, 64 * 1024);
+                std::hint::black_box(&sum);
+            },
+        );
     }
     println!();
 

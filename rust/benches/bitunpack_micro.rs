@@ -1,0 +1,123 @@
+//! Bitunpack micro-benchmarks — the unpack mirror of `bitpack_micro`,
+//! measuring the *restore* direction of the transfer path on this host.
+//! Feeds EXPERIMENTS.md §Perf.
+//!
+//! Covers: Bitunpack scalar vs AVX2 at every RoundTo on the full-size VGG
+//! payload, the threaded fan-out, and a memcpy roofline reference. Prints
+//! the AVX2-over-scalar speedup per format and a verdict against the ≥2×
+//! target at r=3 (the hardest format: 24-bit payloads are the least
+//! SIMD-friendly). Skips gracefully on hosts without AVX2.
+//!
+//!     cargo bench --bench bitunpack_micro
+
+use a2dtwp::adt::{
+    bitpack_into, bitunpack_into, packed_len, AdtConfig, BitunpackImpl, RoundTo,
+};
+use a2dtwp::models::model_by_name;
+use a2dtwp::util::benchkit::Bench;
+use a2dtwp::util::prng::Rng;
+
+fn main() {
+    let threads = a2dtwp::util::threadpool::default_threads();
+    let detected = BitunpackImpl::detect();
+    println!("host: {threads} thread(s), detected unpack SIMD: {detected:?}\n");
+
+    let n = model_by_name("vgg_a").unwrap().total_weights();
+    let full_bytes = n * 4;
+    let mut rng = Rng::new(1);
+    let mut weights = vec![0f32; n];
+    rng.fill_normal(&mut weights, 0.0, 0.1);
+    let mut packed = vec![0u8; full_bytes];
+    let mut restored = vec![0f32; n];
+
+    // memcpy roofline reference on the restored payload
+    Bench::new("memcpy 518MB (roofline ref)").warmup(2).iters(5).run_bytes(full_bytes, || {
+        let src =
+            unsafe { std::slice::from_raw_parts(weights.as_ptr() as *const u8, full_bytes) };
+        let dst = unsafe {
+            std::slice::from_raw_parts_mut(restored.as_mut_ptr() as *mut u8, full_bytes)
+        };
+        dst.copy_from_slice(src);
+        std::hint::black_box(&restored);
+    });
+    println!();
+
+    for rt in RoundTo::ALL {
+        let plen = packed_len(n, rt);
+        let pack_cfg = AdtConfig { threads, ..Default::default() };
+        bitpack_into(&weights, rt, &pack_cfg, &mut packed[..plen]);
+
+        let mut mean_by_impl = Vec::new();
+        for (name, unpack_simd) in
+            [("scalar", BitunpackImpl::Scalar), ("avx2", BitunpackImpl::Avx2)]
+        {
+            let cfg = AdtConfig { threads: 1, unpack_simd, ..Default::default() };
+            let r = Bench::new(format!("bitunpack {rt} {name} (vgg 129.6M w)"))
+                .warmup(2)
+                .iters(5)
+                .run_bytes(full_bytes, || {
+                    bitunpack_into(&packed[..plen], rt, &cfg, &mut restored);
+                    std::hint::black_box(&restored);
+                });
+            mean_by_impl.push(r.mean_s);
+        }
+        let speedup = mean_by_impl[0] / mean_by_impl[1];
+        println!("    -> {rt}: avx2 over scalar {speedup:.2}x (DRAM-bound at 518MB)");
+
+        let cfg = AdtConfig { threads, ..Default::default() };
+        Bench::new(format!("bitunpack {rt} threaded x{threads}"))
+            .warmup(2)
+            .iters(5)
+            .run_bytes(full_bytes, || {
+                bitunpack_into(&packed[..plen], rt, &cfg, &mut restored);
+                std::hint::black_box(&restored);
+            });
+        println!();
+    }
+
+    // Kernel-resident sweep: a typical conv-layer payload that fits in
+    // cache, so the ratio measures the kernels, not the host's DRAM
+    // bandwidth (at 518MB both paths converge on the memcpy roofline —
+    // see EXPERIMENTS.md §Perf). The ≥2× acceptance verdict at r=3 is
+    // judged here.
+    let kn = 200_000usize;
+    let mut kpacked = vec![0u8; kn * 4];
+    let mut krestored = vec![0f32; kn];
+    let mut speedup_r3 = None;
+    println!("kernel-resident sweep ({kn} weights, cache-hot):");
+    for rt in [RoundTo::B1, RoundTo::B2, RoundTo::B3] {
+        let plen = packed_len(kn, rt);
+        let pack_cfg = AdtConfig { threads: 1, ..Default::default() };
+        bitpack_into(&weights[..kn], rt, &pack_cfg, &mut kpacked[..plen]);
+        let mut mean_by_impl = Vec::new();
+        for (name, unpack_simd) in
+            [("scalar", BitunpackImpl::Scalar), ("avx2", BitunpackImpl::Avx2)]
+        {
+            let cfg = AdtConfig { threads: 1, unpack_simd, ..Default::default() };
+            let r = Bench::new(format!("bitunpack {rt} {name} (200K w, cache-hot)"))
+                .warmup(10)
+                .iters(50)
+                .run_bytes(kn * 4, || {
+                    bitunpack_into(&kpacked[..plen], rt, &cfg, &mut krestored);
+                    std::hint::black_box(&krestored);
+                });
+            mean_by_impl.push(r.mean_s);
+        }
+        let speedup = mean_by_impl[0] / mean_by_impl[1];
+        println!("    -> {rt}: avx2 over scalar {speedup:.2}x");
+        if rt == RoundTo::B3 {
+            speedup_r3 = Some(speedup);
+        }
+    }
+    println!();
+
+    match (detected, speedup_r3) {
+        (BitunpackImpl::Avx2, Some(s)) => {
+            let verdict = if s >= 2.0 { "PASS" } else { "BELOW TARGET" };
+            println!(
+                "r=3 AVX2-over-scalar unpack speedup (cache-hot): {s:.2}x (target >= 2x): {verdict}"
+            );
+        }
+        _ => println!("SKIP speedup verdict: host has no AVX2 (scalar fallback measured twice)"),
+    }
+}

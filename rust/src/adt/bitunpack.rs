@@ -10,6 +10,17 @@
 //! before feeding the PJRT executable, and by the transfer round-trip
 //! tests) and the Pallas `bitunpack` kernel fused into the model graph
 //! (`python/compile/kernels/bitunpack.py`), which is the TPU analogue.
+//!
+//! Three code paths, all byte-identical (tested):
+//! * scalar — per-width shift loops;
+//! * threaded — chunked static schedule over the scoped pool;
+//! * AVX2 — the exact inverse of the Bitpack kernel (paper Fig 2 read
+//!   backwards): `_mm256_permutevar8x32_epi32` spreads the packed payload
+//!   across lanes, `_mm256_shuffle_epi8` re-inserts the zero low bytes,
+//!   one full-width store writes 8 restored weights. Loads overlap by
+//!   `32 − 8·r` scratch bytes, so trailing groups whose window would cross
+//!   the packed end fall back to the scalar tail (see EXPERIMENTS.md §Perf
+//!   for the overlapping-load rationale).
 
 use super::RoundTo;
 use crate::util::threadpool::parallel_chunks;
@@ -29,6 +40,28 @@ pub fn mask_in_place(weights: &mut [f32], round_to: RoundTo) {
     let mask = round_to.mask();
     for w in weights.iter_mut() {
         *w = f32::from_bits(w.to_bits() & mask);
+    }
+}
+
+/// Which Bitunpack inner loop to use (mirrors [`super::BitpackImpl`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BitunpackImpl {
+    /// Portable per-width shift loops.
+    Scalar,
+    /// AVX2 permute+shuffle loop (inverse of Bitpack Algorithm 4, x86 only).
+    Avx2,
+}
+
+impl BitunpackImpl {
+    /// Pick the fastest implementation supported by this CPU.
+    pub fn detect() -> BitunpackImpl {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx2") {
+                return BitunpackImpl::Avx2;
+            }
+        }
+        BitunpackImpl::Scalar
     }
 }
 
@@ -86,19 +119,110 @@ pub fn bitunpack_scalar_into(packed: &[u8], round_to: RoundTo, out: &mut [f32]) 
 }
 
 /// Threaded Bitunpack (the "massively parallel device side" analogue —
-/// each thread restores a disjoint shard, Algorithm 5's UnitId loop).
+/// each thread restores a disjoint shard, Algorithm 5's UnitId loop), with
+/// the configured instruction set inside each chunk.
 pub fn bitunpack_into(packed: &[u8], round_to: RoundTo, cfg: &super::AdtConfig, out: &mut [f32]) {
     let r = round_to.bytes();
     assert_eq!(packed.len(), out.len() * r, "packed buffer size mismatch");
-    parallel_chunks(
-        packed,
-        out,
-        r,
-        1,
-        cfg.threads,
-        cfg.min_per_thread,
-        move |_idx, inp, outp| bitunpack_scalar_into(inp, round_to, outp),
-    );
+    let kernel = move |_idx: usize, inp: &[u8], outp: &mut [f32]| match cfg.unpack_simd {
+        BitunpackImpl::Scalar => bitunpack_scalar_into(inp, round_to, outp),
+        BitunpackImpl::Avx2 => bitunpack_avx2_dispatch(inp, round_to, outp),
+    };
+    parallel_chunks(packed, out, r, 1, cfg.threads, cfg.min_per_thread, kernel);
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn bitunpack_avx2_dispatch(packed: &[u8], round_to: RoundTo, out: &mut [f32]) {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        // SAFETY: AVX2 presence just checked.
+        unsafe { bitunpack_avx2(packed, round_to, out) }
+    } else {
+        bitunpack_scalar_into(packed, round_to, out)
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub(crate) fn bitunpack_avx2_dispatch(packed: &[u8], round_to: RoundTo, out: &mut [f32]) {
+    bitunpack_scalar_into(packed, round_to, out)
+}
+
+/// AVX2 inner loop over groups of 8 weights: the byte-exact inverse of
+/// `bitpack_avx2` (paper Fig 2, arrows reversed), scalar tail.
+///
+/// Per group: one (overlapping) 256-bit load of the next `8·r` payload
+/// bytes, one cross-lane dword permute spreading each lane's payload, one
+/// in-lane byte shuffle placing the `r` surviving bytes at the top of each
+/// dword and zeroing the rest, one full-width store of 8 restored f32s.
+/// The store is always exactly 32 valid bytes, so — unlike the pack
+/// direction — no masked store is ever needed; only the *load* overlaps.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn bitunpack_avx2(packed: &[u8], round_to: RoundTo, out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let r = round_to.bytes();
+    if r == 4 {
+        // Lossless copy — let memcpy do it.
+        let dst = out.as_mut_ptr() as *mut u8;
+        std::ptr::copy_nonoverlapping(packed.as_ptr(), dst, packed.len());
+        return;
+    }
+
+    const Z: i8 = -128; // 0x80 → zero that output byte in pshufb
+
+    // `perm` undoes the pack kernel's cross-lane compaction: it routes the
+    // dwords holding each lane's `4·r` payload bytes back to that lane.
+    // `shuf` undoes the in-lane compaction: output dword j takes payload
+    // bytes r·j .. r·j+r of its lane, placed in the dword's high bytes.
+    let (perm, shuf): (__m256i, __m256i) = match r {
+        1 => (
+            _mm256_setr_epi32(0, 0, 0, 0, 1, 1, 1, 1),
+            _mm256_setr_epi8(
+                Z, Z, Z, 0, Z, Z, Z, 1, Z, Z, Z, 2, Z, Z, Z, 3, //
+                Z, Z, Z, 0, Z, Z, Z, 1, Z, Z, Z, 2, Z, Z, Z, 3,
+            ),
+        ),
+        2 => (
+            _mm256_setr_epi32(0, 1, 0, 0, 2, 3, 0, 0),
+            _mm256_setr_epi8(
+                Z, Z, 0, 1, Z, Z, 2, 3, Z, Z, 4, 5, Z, Z, 6, 7, //
+                Z, Z, 0, 1, Z, Z, 2, 3, Z, Z, 4, 5, Z, Z, 6, 7,
+            ),
+        ),
+        3 => (
+            _mm256_setr_epi32(0, 1, 2, 0, 3, 4, 5, 0),
+            _mm256_setr_epi8(
+                Z, 0, 1, 2, Z, 3, 4, 5, Z, 6, 7, 8, Z, 9, 10, 11, //
+                Z, 0, 1, 2, Z, 3, 4, 5, Z, 6, 7, 8, Z, 9, 10, 11,
+            ),
+        ),
+        _ => unreachable!("r in 1..=3 here"),
+    };
+
+    let groups = out.len() / 8;
+    let in_stride = 8 * r;
+    // Overlapping full-width loads: each group's 32-byte load reads its
+    // 8·r payload bytes plus scratch bytes owned by later groups (the
+    // permute/shuffle discard them). Groups whose 32-byte window would
+    // cross the packed end fall to the scalar tail.
+    let simd_groups = if packed.len() >= 32 {
+        groups.min((packed.len() - 32) / in_stride + 1)
+    } else {
+        0
+    };
+    let out_ptr = out.as_mut_ptr() as *mut __m256i;
+    for g in 0..simd_groups {
+        // Step 1 (Fig 2 inverse): load the group's packed payload.
+        let v = _mm256_loadu_si256(packed.as_ptr().add(g * in_stride) as *const __m256i);
+        // Step 2: spread each lane's payload dwords back to its lane.
+        let spread = _mm256_permutevar8x32_epi32(v, perm);
+        // Step 3: place payload bytes high in each dword, zero the rest.
+        let restored = _mm256_shuffle_epi8(spread, shuf);
+        // Step 4: store 8 restored f32 words.
+        _mm256_storeu_si256(out_ptr.add(g), restored);
+    }
+    // Scalar tail (also covers trailing groups excluded by the load window).
+    let done = simd_groups * 8;
+    bitunpack_scalar_into(&packed[done * r..], round_to, &mut out[done..]);
 }
 
 #[cfg(test)]
@@ -136,6 +260,31 @@ mod tests {
     }
 
     #[test]
+    fn avx2_matches_scalar_all_roundto() {
+        if BitunpackImpl::detect() != BitunpackImpl::Avx2 {
+            eprintln!("skipping: no AVX2");
+            return;
+        }
+        // Sizes straddling the 8-weight group boundary exercise both the
+        // overlapping-load gate and the scalar tail.
+        for n in [0usize, 1, 7, 8, 9, 16, 33, 1000, 4096, 4099] {
+            let mut rng = Rng::new(77 + n as u64);
+            let w: Vec<f32> = (0..n).map(|_| f32::from_bits(rng.next_u64() as u32)).collect();
+            for rt in RoundTo::ALL {
+                let mut packed = vec![0u8; packed_len(n, rt)];
+                bitpack_scalar_into(&w, rt, &mut packed);
+                let mut scalar = vec![0f32; n];
+                bitunpack_scalar_into(&packed, rt, &mut scalar);
+                let mut simd = vec![1f32; n]; // poison: store must overwrite
+                bitunpack_avx2_dispatch(&packed, rt, &mut simd);
+                let a: Vec<u32> = scalar.iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u32> = simd.iter().map(|x| x.to_bits()).collect();
+                assert_eq!(a, b, "n={n} rt={rt}");
+            }
+        }
+    }
+
+    #[test]
     fn threaded_matches_scalar() {
         let mut rng = Rng::new(3);
         let w: Vec<f32> = (0..50_000).map(|_| rng.normal_f32(0.0, 1.0)).collect();
@@ -144,14 +293,31 @@ mod tests {
             bitpack_scalar_into(&w, rt, &mut packed);
             let mut a = vec![0f32; w.len()];
             bitunpack_scalar_into(&packed, rt, &mut a);
-            let cfg = AdtConfig { threads: 5, min_per_thread: 1000, ..Default::default() };
-            let mut b = vec![0f32; w.len()];
-            bitunpack_into(&packed, rt, &cfg, &mut b);
-            assert_eq!(
-                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
-                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
-            );
+            for unpack_simd in [BitunpackImpl::Scalar, BitunpackImpl::Avx2] {
+                let cfg = AdtConfig {
+                    threads: 5,
+                    min_per_thread: 1000,
+                    unpack_simd,
+                    ..Default::default()
+                };
+                let mut b = vec![0f32; w.len()];
+                bitunpack_into(&packed, rt, &cfg, &mut b);
+                assert_eq!(
+                    a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "rt={rt} unpack_simd={unpack_simd:?}"
+                );
+            }
         }
+    }
+
+    #[test]
+    fn detect_is_consistent_with_bitpack_detect() {
+        // Both kernels gate on the same CPU feature, so detection agrees.
+        use crate::adt::BitpackImpl;
+        let pack = BitpackImpl::detect();
+        let unpack = BitunpackImpl::detect();
+        assert_eq!(pack == BitpackImpl::Avx2, unpack == BitunpackImpl::Avx2);
     }
 
     #[test]

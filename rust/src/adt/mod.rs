@@ -7,7 +7,9 @@
 //!   byte-shuffle (paper Fig 2 / Algorithm 4) implementations.
 //! * [`bitunpack`] — device-side restoration: packed bytes are placed back
 //!   in the high bytes of a 32-bit word, low bytes zeroed (Algorithm 5).
-//!   The GPU-side equivalent also exists as the L1 Pallas kernel
+//!   Scalar, multi-threaded, and AVX2 (the exact inverse of the Fig 2
+//!   pack shuffle) implementations, mirroring Bitpack's dispatch. The
+//!   GPU-side equivalent also exists as the L1 Pallas kernel
 //!   (`python/compile/kernels/bitunpack.py`) fused into the model graph.
 //! * [`RoundTo`] — the byte width chosen by AWP (bits rounded up to bytes:
 //!   paper §III-A, "if AWP provides the value 14, RoundTo will be set to 2").
@@ -27,7 +29,9 @@ mod bitpack;
 mod bitunpack;
 
 pub use bitpack::{bitpack_into, bitpack_scalar_into, packed_len, BitpackImpl};
-pub use bitunpack::{bitunpack_into, bitunpack_scalar_into, mask_in_place, masked_value};
+pub use bitunpack::{
+    bitunpack_into, bitunpack_scalar_into, mask_in_place, masked_value, BitunpackImpl,
+};
 
 /// Number of most-significant bytes kept per 32-bit weight. The paper's
 /// formats are 8/16/24/32-bit → RoundTo 1/2/3/4.
@@ -96,11 +100,14 @@ impl std::fmt::Display for RoundTo {
     }
 }
 
-/// How many threads / which instruction set to use for Bitpack.
+/// How many threads / which instruction set to use for Bitpack/Bitunpack.
 #[derive(Clone, Copy, Debug)]
 pub struct AdtConfig {
     pub threads: usize,
     pub simd: BitpackImpl,
+    /// Instruction set for the unpack direction (benches force each side
+    /// independently; `detect()` picks AVX2 where available).
+    pub unpack_simd: BitunpackImpl,
     /// Minimum weights per thread before fan-out is worth it.
     pub min_per_thread: usize,
 }
@@ -110,6 +117,7 @@ impl Default for AdtConfig {
         AdtConfig {
             threads: crate::util::threadpool::default_threads(),
             simd: BitpackImpl::detect(),
+            unpack_simd: BitunpackImpl::detect(),
             min_per_thread: 64 * 1024,
         }
     }

@@ -1,0 +1,474 @@
+//! Step arena: every buffer the leader's per-batch hot loop touches,
+//! allocated once and reused for the lifetime of a run.
+//!
+//! Before this existed, `Trainer::step()` re-allocated the full-model
+//! gradient accumulators every batch, grew a single shared pack buffer,
+//! and re-collected formats/masks vectors — all on the measured leader
+//! path the paper is about shrinking. The arena owns:
+//!
+//! * per-layer pack buffers ([`PackArena`]) with grow-only lazy sizing
+//!   (reallocation only on AWP widening events), packable in parallel;
+//! * the gradient accumulators `sum_gw` / `sum_gb` (targets of the fused
+//!   threaded reduce in `threadpool::parallel_reduce_slices`);
+//! * the per-step caches: formats, device masks, packed-byte total, mean
+//!   bytes/weight, the AWP norm scratch, and the SGD decay mask.
+//!
+//! Steady-state discipline: after the first batch, none of the arena
+//! methods allocate when `threads == 1` (the inline thread-pool paths).
+//! `Trainer::step()` asserts this with `util::benchkit::AllocCheck`.
+
+use crate::adt::{self, AdtConfig, RoundTo};
+use crate::runtime::TrainOutputs;
+use crate::util::threadpool::parallel_reduce_slices;
+use crossbeam_utils::thread;
+
+/// Fan-out threshold (elements per thread) for the fused gradient reduce.
+const REDUCE_MIN_PER_THREAD: usize = 64 * 1024;
+
+/// Contiguous layer ranges with near-equal *total weight* — the parallel
+/// pack's work-balanced partition. A plain layer-count split would starve
+/// every worker but one on models where a single FC layer dominates.
+fn partition_layers_by_weight(counts: &[usize], parts: usize) -> Vec<(usize, usize)> {
+    let n = counts.len();
+    if n == 0 || parts == 0 {
+        return Vec::new();
+    }
+    let parts = parts.min(n);
+    let total: usize = counts.iter().sum();
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0usize;
+    let mut cum = 0usize;
+    for (l, &c) in counts.iter().enumerate() {
+        cum += c;
+        let k = out.len();
+        if k + 1 == parts {
+            break;
+        }
+        // close the range once its fair weight share is reached, or when
+        // the remaining layers only just cover the remaining ranges
+        let must_close = l >= n - parts + k;
+        if must_close || cum * parts >= total * (k + 1) {
+            out.push((start, l + 1));
+            start = l + 1;
+        }
+    }
+    if start < n {
+        out.push((start, n));
+    }
+    out
+}
+
+/// Reusable per-layer Bitpack output buffers.
+///
+/// Buffers grow lazily to each layer's current packed size and never
+/// shrink; AWP only widens formats (monotone B1→B4), so growth happens at
+/// most three times per layer over a run and the steady state is
+/// allocation-free. Distinct layers can be packed concurrently — the
+/// single shared `pack_buf` this replaces serialized the per-layer pack
+/// loop by construction.
+pub struct PackArena {
+    bufs: Vec<Vec<u8>>,
+    /// Packed length of each layer under the formats of the current step.
+    lens: Vec<usize>,
+    /// Did the most recent `pack_layers` grow any buffer? (True on first
+    /// use and AWP widening steps — the steps where allocation is
+    /// legitimate; the coordinator's zero-alloc assert keys off this.)
+    grew: bool,
+}
+
+impl PackArena {
+    pub fn new(weight_counts: &[usize]) -> PackArena {
+        PackArena {
+            bufs: weight_counts.iter().map(|_| Vec::new()).collect(),
+            lens: vec![0; weight_counts.len()],
+            grew: false,
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Whether the most recent [`pack_layers`](Self::pack_layers) call
+    /// had to grow a lazy buffer (and therefore allocated).
+    pub fn grew_last_pack(&self) -> bool {
+        self.grew
+    }
+
+    /// Pack every layer at its format into the arena buffers; returns the
+    /// total packed bytes. Parallel strategy is chosen by layer balance:
+    ///
+    /// * one layer dominates (≥ half the weights — e.g. VGG's fc1) →
+    ///   serial over layers with *within-layer* threading (the
+    ///   `parallel_chunks` split inside `bitpack_into`), because no
+    ///   layer-granularity partition can balance that;
+    /// * balanced layers → disjoint layer spans packed concurrently,
+    ///   spans weight-balanced via [`partition_layers_by_weight`];
+    /// * one thread → inline, allocation-free in steady state.
+    ///
+    /// Output bytes are identical on every path — each runs the same
+    /// per-layer kernel.
+    pub fn pack_layers(&mut self, ws: &[Vec<f32>], formats: &[RoundTo], cfg: &AdtConfig) -> usize {
+        let n = ws.len();
+        assert_eq!(n, self.bufs.len(), "layer count mismatch");
+        assert_eq!(n, formats.len(), "format count mismatch");
+        let mut total_weights = 0usize;
+        let mut max_weights = 0usize;
+        self.grew = false;
+        for l in 0..n {
+            let need = adt::packed_len(ws[l].len(), formats[l]);
+            self.lens[l] = need;
+            if self.bufs[l].len() < need {
+                // grows only when a layer's format widens (or first use)
+                self.bufs[l].resize(need, 0);
+                self.grew = true;
+            }
+            total_weights += ws[l].len();
+            max_weights = max_weights.max(ws[l].len());
+        }
+        if cfg.threads <= 1 || n <= 1 || max_weights * 2 >= total_weights {
+            for l in 0..n {
+                adt::bitpack_into(&ws[l], formats[l], cfg, &mut self.bufs[l][..self.lens[l]]);
+            }
+        } else {
+            let single = AdtConfig { threads: 1, ..*cfg };
+            let weight_counts: Vec<usize> = ws.iter().map(|w| w.len()).collect();
+            let ranges = partition_layers_by_weight(&weight_counts, cfg.threads);
+            let lens = &self.lens;
+            let mut rest: &mut [Vec<u8>] = &mut self.bufs;
+            thread::scope(|scope| {
+                for &(s, e) in &ranges {
+                    let (head, tail) = rest.split_at_mut(e - s);
+                    rest = tail;
+                    scope.spawn(move |_| {
+                        for (off, buf) in head.iter_mut().enumerate() {
+                            let l = s + off;
+                            adt::bitpack_into(&ws[l], formats[l], &single, &mut buf[..lens[l]]);
+                        }
+                    });
+                }
+            })
+            .expect("pack worker panicked");
+        }
+        self.total_packed()
+    }
+
+    /// The packed bytes of layer `l` from the most recent `pack_layers`.
+    pub fn layer(&self, l: usize) -> &[u8] {
+        &self.bufs[l][..self.lens[l]]
+    }
+
+    pub fn total_packed(&self) -> usize {
+        self.lens.iter().sum()
+    }
+}
+
+/// All reusable state of one `Trainer::step()` (see module docs).
+pub struct StepArena {
+    pub pack: PackArena,
+    /// Gradient accumulators, one per weighted layer (weights / biases).
+    pub sum_gw: Vec<Vec<f32>>,
+    pub sum_gb: Vec<Vec<f32>>,
+    /// AWP norm scratch (one slot per layer).
+    pub norms: Vec<f64>,
+    formats: Vec<RoundTo>,
+    masks: Vec<u32>,
+    /// SGD decay mask over [weights…, biases…]: weights decay, biases don't.
+    decay: Vec<bool>,
+    weight_counts: Vec<usize>,
+    total_weights: usize,
+    mean_bytes_per_weight: f64,
+    packed_bytes_total: usize,
+    formats_changed: bool,
+}
+
+impl StepArena {
+    pub fn new(weight_counts: &[usize], bias_counts: &[usize]) -> StepArena {
+        let n = weight_counts.len();
+        assert_eq!(bias_counts.len(), n, "weight/bias layer count mismatch");
+        let mut decay = vec![true; n];
+        decay.extend(std::iter::repeat(false).take(n));
+        StepArena {
+            pack: PackArena::new(weight_counts),
+            sum_gw: weight_counts.iter().map(|&c| vec![0f32; c]).collect(),
+            sum_gb: bias_counts.iter().map(|&c| vec![0f32; c]).collect(),
+            norms: vec![0f64; n],
+            formats: vec![RoundTo::B4; n],
+            masks: vec![u32::MAX; n],
+            decay,
+            weight_counts: weight_counts.to_vec(),
+            total_weights: weight_counts.iter().sum(),
+            mean_bytes_per_weight: 4.0,
+            packed_bytes_total: n * 4, // placeholder; begin_step overwrites
+            formats_changed: false,
+        }
+    }
+
+    /// Refresh the per-step caches from the policy's current formats.
+    /// Allocation-free; also records whether the formats differ from the
+    /// previous `begin_step` (introspection — the coordinator's zero-alloc
+    /// assertion keys off [`PackArena::grew_last_pack`], which survives
+    /// interleaved `begin_step` calls from validation).
+    pub fn begin_step(&mut self, formats: &[RoundTo]) {
+        assert_eq!(formats.len(), self.formats.len(), "layer count changed");
+        self.formats_changed = self.formats != formats;
+        self.formats.copy_from_slice(formats);
+        let mut bytes = 0usize;
+        for (l, (&rt, &cnt)) in formats.iter().zip(&self.weight_counts).enumerate() {
+            self.masks[l] = rt.mask();
+            bytes += adt::packed_len(cnt, rt);
+        }
+        self.packed_bytes_total = bytes;
+        self.mean_bytes_per_weight = if self.total_weights == 0 {
+            4.0
+        } else {
+            bytes as f64 / self.total_weights as f64
+        };
+    }
+
+    pub fn formats(&self) -> &[RoundTo] {
+        &self.formats
+    }
+
+    /// Device-side precision masks for the current formats.
+    pub fn masks(&self) -> &[u32] {
+        &self.masks
+    }
+
+    /// Decay mask over [weights…, biases…] for `MomentumSgd::step_split`.
+    pub fn decay(&self) -> &[bool] {
+        &self.decay
+    }
+
+    /// Weighted mean transfer bytes per weight under the current formats.
+    pub fn mean_bytes_per_weight(&self) -> f64 {
+        self.mean_bytes_per_weight
+    }
+
+    /// Did the most recent `begin_step` change any layer's format?
+    /// (True on widening steps, where lazy pack-buffer growth is expected.)
+    pub fn formats_changed(&self) -> bool {
+        self.formats_changed
+    }
+
+    /// Σ over layers of `adt::packed_len` under the current formats —
+    /// computed independently of the pack loop, so the coordinator can
+    /// cross-check the bytes the pack loop reports.
+    pub fn packed_bytes_total(&self) -> usize {
+        self.packed_bytes_total
+    }
+
+    /// Pack all layers into the arena buffers (see [`PackArena::pack_layers`]).
+    pub fn pack_layers(&mut self, ws: &[Vec<f32>], cfg: &AdtConfig) -> usize {
+        self.pack.pack_layers(ws, &self.formats, cfg)
+    }
+
+    /// Fused threaded reduce of per-shard gradients into `sum_gw`/`sum_gb`,
+    /// scaled by `1/outs.len()` — one pass, replacing the historical
+    /// accumulate-then-scale double loop. `scratch` is the caller's slice
+    /// table (capacity ≥ `outs.len()`), reused across layers without
+    /// reallocating. Reduction order over shards is the task order, so the
+    /// result is bit-identical to the sequential loop at any thread count.
+    pub fn reduce_shards<'a>(
+        &mut self,
+        outs: &'a [TrainOutputs],
+        threads: usize,
+        scratch: &mut Vec<&'a [f32]>,
+    ) {
+        assert!(!outs.is_empty(), "at least one shard output required");
+        let inv = 1.0 / outs.len() as f32;
+        for l in 0..self.sum_gw.len() {
+            scratch.clear();
+            for o in outs {
+                scratch.push(&o.grad_ws[l]);
+            }
+            parallel_reduce_slices(&mut self.sum_gw[l], scratch, inv, threads, REDUCE_MIN_PER_THREAD);
+            scratch.clear();
+            for o in outs {
+                scratch.push(&o.grad_bs[l]);
+            }
+            parallel_reduce_slices(&mut self.sum_gb[l], scratch, inv, threads, REDUCE_MIN_PER_THREAD);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adt::{bitpack_scalar_into, packed_len, BitpackImpl, BitunpackImpl};
+    use crate::util::benchkit::AllocCheck;
+    use crate::util::prng::Rng;
+
+    fn random_weights(counts: &[usize], seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        counts
+            .iter()
+            .map(|&n| {
+                let mut v = vec![0f32; n];
+                rng.fill_normal(&mut v, 0.0, 0.3);
+                v
+            })
+            .collect()
+    }
+
+    fn scalar_cfg(threads: usize) -> AdtConfig {
+        AdtConfig {
+            threads,
+            simd: BitpackImpl::Scalar,
+            unpack_simd: BitunpackImpl::Scalar,
+            min_per_thread: 16,
+        }
+    }
+
+    #[test]
+    fn pack_layers_matches_scalar_reference_at_any_thread_count() {
+        let counts = [130usize, 7, 4096, 1];
+        let ws = random_weights(&counts, 3);
+        let formats = [RoundTo::B1, RoundTo::B3, RoundTo::B2, RoundTo::B4];
+        let mut reference: Vec<Vec<u8>> = Vec::new();
+        for (w, &rt) in ws.iter().zip(&formats) {
+            let mut out = vec![0u8; packed_len(w.len(), rt)];
+            bitpack_scalar_into(w, rt, &mut out);
+            reference.push(out);
+        }
+        for threads in [1usize, 2, 3, 8] {
+            let mut arena = PackArena::new(&counts);
+            let total = arena.pack_layers(&ws, &formats, &scalar_cfg(threads));
+            assert_eq!(total, reference.iter().map(|r| r.len()).sum::<usize>());
+            for (l, r) in reference.iter().enumerate() {
+                assert_eq!(arena.layer(l), &r[..], "layer {l} threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn begin_step_caches_masks_and_byte_accounting() {
+        let counts = [100usize, 300];
+        let mut arena = StepArena::new(&counts, &[10, 30]);
+        arena.begin_step(&[RoundTo::B1, RoundTo::B3]);
+        assert_eq!(arena.masks(), &[0xFF00_0000, 0xFFFF_FF00]);
+        assert_eq!(arena.packed_bytes_total(), 100 + 900);
+        let want_mbpw = 1000.0 / 400.0;
+        assert!((arena.mean_bytes_per_weight() - want_mbpw).abs() < 1e-12);
+        assert_eq!(arena.decay(), &[true, true, false, false]);
+    }
+
+    #[test]
+    fn steady_state_pack_is_allocation_free_single_thread() {
+        let counts = [513usize, 64];
+        let ws = random_weights(&counts, 9);
+        let mut arena = StepArena::new(&counts, &[8, 8]);
+        let cfg = scalar_cfg(1);
+        // warmup step (fills the lazy pack buffers)
+        arena.begin_step(&[RoundTo::B2, RoundTo::B3]);
+        arena.pack_layers(&ws, &cfg);
+        assert!(arena.formats_changed(), "first step departs from the B4 init state");
+        // steady state at unchanged formats: zero heap allocations
+        let check = AllocCheck::begin();
+        arena.begin_step(&[RoundTo::B2, RoundTo::B3]);
+        assert!(!arena.formats_changed());
+        let total = arena.pack_layers(&ws, &cfg);
+        assert_eq!(check.count(), 0, "steady-state pack allocated");
+        assert_eq!(total, arena.packed_bytes_total());
+        assert!(!arena.pack.grew_last_pack(), "steady pack reported growth");
+        // a widening step may grow buffers once — and must report it even
+        // if extra begin_step calls (e.g. validation) land in between
+        arena.begin_step(&[RoundTo::B3, RoundTo::B3]);
+        assert!(arena.formats_changed());
+        arena.begin_step(&[RoundTo::B3, RoundTo::B3]); // validate()-style repeat
+        assert!(!arena.formats_changed(), "repeat begin_step clears the transient flag");
+        arena.pack_layers(&ws, &cfg);
+        assert!(arena.pack.grew_last_pack(), "widening pack must report growth");
+        // … after which the wider steady state is allocation-free again
+        let check = AllocCheck::begin();
+        arena.begin_step(&[RoundTo::B3, RoundTo::B3]);
+        arena.pack_layers(&ws, &cfg);
+        assert!(!arena.pack.grew_last_pack());
+        assert_eq!(check.count(), 0, "post-widening steady state allocated");
+    }
+
+    #[test]
+    fn weight_partition_balances_and_covers() {
+        // balanced layers split near-evenly by weight
+        let counts = [1000usize, 900, 1100, 950, 1050];
+        let ranges = partition_layers_by_weight(&counts, 2);
+        assert_eq!(ranges.first().unwrap().0, 0);
+        assert_eq!(ranges.last().unwrap().1, counts.len());
+        let mut prev_end = 0;
+        let mut loads = Vec::new();
+        for &(s, e) in &ranges {
+            assert_eq!(s, prev_end);
+            assert!(e > s);
+            prev_end = e;
+            loads.push(counts[s..e].iter().sum::<usize>());
+        }
+        let total: usize = counts.iter().sum();
+        for &load in &loads {
+            assert!(load * 3 >= total, "a worker got starved: {loads:?}");
+        }
+        // degenerate shapes stay well-formed
+        for (cs, parts) in [(&[5usize, 1][..], 2), (&[1, 5][..], 2), (&[7][..], 4)] {
+            let rs = partition_layers_by_weight(cs, parts);
+            assert_eq!(rs.first().unwrap().0, 0);
+            assert_eq!(rs.last().unwrap().1, cs.len());
+            assert!(rs.len() <= parts.min(cs.len()));
+            assert!(rs.iter().all(|&(s, e)| e > s));
+        }
+        assert!(partition_layers_by_weight(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn balanced_layers_pack_identically_across_thread_counts() {
+        // all layers similar size → exercises the cross-layer parallel
+        // branch (no dominant layer)
+        let counts = [700usize, 650, 720, 680, 710, 690];
+        let ws = random_weights(&counts, 21);
+        let formats = vec![RoundTo::B2; counts.len()];
+        let mut reference: Vec<Vec<u8>> = Vec::new();
+        for (w, &rt) in ws.iter().zip(&formats) {
+            let mut out = vec![0u8; packed_len(w.len(), rt)];
+            bitpack_scalar_into(w, rt, &mut out);
+            reference.push(out);
+        }
+        for threads in [2usize, 3, 5] {
+            let mut arena = PackArena::new(&counts);
+            arena.pack_layers(&ws, &formats, &scalar_cfg(threads));
+            for (l, r) in reference.iter().enumerate() {
+                assert_eq!(arena.layer(l), &r[..], "layer {l} threads {threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_shards_averages_and_is_steady_state_alloc_free() {
+        let counts = [33usize, 8];
+        let biases = [4usize, 2];
+        let mut arena = StepArena::new(&counts, &biases);
+        let make_out = |seed: u64| TrainOutputs {
+            loss: 0.0,
+            grad_ws: random_weights(&counts, seed),
+            grad_bs: random_weights(&biases, seed + 100),
+        };
+        let outs = vec![make_out(1), make_out(2), make_out(3)];
+        let mut scratch: Vec<&[f32]> = Vec::with_capacity(outs.len());
+        arena.reduce_shards(&outs, 1, &mut scratch); // warmup
+        let check = AllocCheck::begin();
+        arena.reduce_shards(&outs, 1, &mut scratch);
+        assert_eq!(check.count(), 0, "steady-state reduce allocated");
+        // value check against the naive sequential average
+        for l in 0..counts.len() {
+            for i in 0..counts[l] {
+                let want = (outs[0].grad_ws[l][i] + outs[1].grad_ws[l][i]
+                    + outs[2].grad_ws[l][i])
+                    * (1.0 / 3.0);
+                assert_eq!(arena.sum_gw[l][i].to_bits(), want.to_bits());
+            }
+            for i in 0..biases[l] {
+                let want = (outs[0].grad_bs[l][i] + outs[1].grad_bs[l][i]
+                    + outs[2].grad_bs[l][i])
+                    * (1.0 / 3.0);
+                assert_eq!(arena.sum_gb[l][i].to_bits(), want.to_bits());
+            }
+        }
+    }
+}

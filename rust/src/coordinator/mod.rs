@@ -20,11 +20,19 @@
 //! * [`SimRunner`] — Simulated mode: full-size models; compute accounted
 //!   only, ADT/AWP costs measured on real full-size arrays (Tables II/III,
 //!   Figs 4/5).
+//!
+//! Both run their measured CPU kernels out of a [`StepArena`]/[`PackArena`]
+//! (buffers allocated once, reused every batch), execute per-GPU shards
+//! concurrently, and reduce gradients with the fused threaded kernel in
+//! `util::threadpool` — see `arena` module docs for the steady-state
+//! zero-allocation contract.
 
+mod arena;
 mod simrun;
 mod trainer;
 mod trainlog;
 
+pub use arena::{PackArena, StepArena};
 pub use simrun::{formats_for_mean_bytes, SimBatchProfile, SimRunner};
 pub use trainer::{TrainReport, Trainer};
 pub use trainlog::{load_or_record_trace, trace_path, TraceKey};

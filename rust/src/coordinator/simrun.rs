@@ -6,7 +6,8 @@
 //! the packed payload + device Bitunpack + conv + fc + gradient D2H + SGD
 //! update + AWP l²-norm (measured).
 
-use crate::adt::{self, AdtConfig, RoundTo};
+use super::arena::PackArena;
+use crate::adt::{AdtConfig, RoundTo};
 use crate::awp::l2_norm_fast;
 use crate::device::GpuPool;
 use crate::interconnect::Interconnect;
@@ -104,14 +105,16 @@ pub struct SimRunner {
     adt: AdtConfig,
     /// Real full-size weights (measured Bitpack / l²-norm targets).
     weights: Vec<Vec<f32>>,
-    pack_buf: Vec<u8>,
+    /// Per-layer pack buffers, allocated once (same arena the Trainer's
+    /// hot loop uses, so Tables II/III measure the production kernels).
+    pack: PackArena,
 }
 
 impl SimRunner {
     pub fn new(desc: ModelDesc, profile: SystemProfile, adt: AdtConfig, seed: u64) -> SimRunner {
         let mut rng = Rng::new(seed);
-        let weights: Vec<Vec<f32>> = desc
-            .weight_counts()
+        let counts = desc.weight_counts();
+        let weights: Vec<Vec<f32>> = counts
             .iter()
             .map(|&n| {
                 let mut v = vec![0f32; n];
@@ -125,7 +128,7 @@ impl SimRunner {
             profile,
             adt,
             weights,
-            pack_buf: Vec::new(),
+            pack: PackArena::new(&counts),
             desc,
         }
     }
@@ -134,20 +137,14 @@ impl SimRunner {
         &self.profile
     }
 
-    /// Measure Bitpack of the real full-size weights at `formats`.
-    /// Returns (seconds, packed bytes).
+    /// Measure Bitpack of the real full-size weights at `formats` through
+    /// the arena's per-layer parallel path. Returns (seconds, packed bytes).
+    /// Buffers are pre-sized, so the measurement covers only the kernel —
+    /// no allocation or `resize` noise.
     pub fn measure_bitpack(&mut self, formats: &[RoundTo]) -> (f64, usize) {
         assert_eq!(formats.len(), self.weights.len());
-        let mut bytes = 0usize;
         let sw = Stopwatch::start();
-        for (w, &rt) in self.weights.iter().zip(formats) {
-            let need = adt::packed_len(w.len(), rt);
-            if self.pack_buf.len() < need {
-                self.pack_buf.resize(need, 0);
-            }
-            adt::bitpack_into(w, rt, &self.adt, &mut self.pack_buf[..need]);
-            bytes += need;
-        }
+        let bytes = self.pack.pack_layers(&self.weights, formats, &self.adt);
         (sw.elapsed_s(), bytes)
     }
 

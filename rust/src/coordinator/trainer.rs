@@ -1,8 +1,16 @@
 //! Real-mode trainer: true gradient numerics through the AOT executables,
 //! wall-clock attributed to the full-size counterpart model on the chosen
 //! platform (DESIGN.md §6 "hybrid").
+//!
+//! The per-batch hot loop is arena-backed (`coordinator::arena`): packing,
+//! gradient reduction, and the SGD update run out of buffers allocated
+//! once at construction, the per-GPU shards execute concurrently on the
+//! scoped pool, and the gradient contributions are combined with the fused
+//! threaded reduce. In steady state (batch ≥ 2) the leader-owned sections
+//! perform zero heap allocations on the single-thread inline path — the
+//! `AllocCheck` guards in `step()` enforce this in debug builds.
 
-use crate::adt::{self, RoundTo};
+use super::arena::StepArena;
 use crate::awp::{l2_norm_fast, Policy, PrecisionPolicy};
 use crate::config::ExperimentConfig;
 use crate::data::{Loader, SynthDataset};
@@ -12,8 +20,10 @@ use crate::metrics::{TrainCurve, ValPoint};
 use crate::models::{model_by_name, ModelDesc};
 use crate::optim::MomentumSgd;
 use crate::profiler::{Phase, Profiler};
-use crate::runtime::{Executor, Manifest, ModelManifest};
+use crate::runtime::{Executor, Manifest, ModelManifest, TrainOutputs};
+use crate::util::benchkit::AllocCheck;
 use crate::util::prng::Rng;
+use crate::util::threadpool::parallel_join;
 use anyhow::{bail, Context, Result};
 
 /// Final report of a training run.
@@ -33,8 +43,6 @@ pub struct Trainer {
     manifest: ModelManifest,
     /// Full-size counterpart driving the simulated time axis.
     full_desc: ModelDesc,
-    /// Micro descriptor (numerics side).
-    micro_desc: ModelDesc,
     exec: Executor,
     policy: Policy,
     ws: Vec<Vec<f32>>,
@@ -46,7 +54,9 @@ pub struct Trainer {
     profiler: Profiler,
     curve: TrainCurve,
     sim_time_s: f64,
-    pack_buf: Vec<u8>,
+    /// Reusable per-step buffers (pack outputs, gradient accumulators,
+    /// format/mask caches, decay mask, AWP norm scratch).
+    arena: StepArena,
     smoothed_loss: f64,
     train_path: std::path::PathBuf,
     infer_path: std::path::PathBuf,
@@ -113,8 +123,12 @@ impl Trainer {
         let bs: Vec<Vec<f32>> =
             manifest.layers.iter().map(|l| vec![bias_init; l.bias_count()]).collect();
 
-        let mut sizes: Vec<usize> = ws.iter().map(|w| w.len()).collect();
-        sizes.extend(bs.iter().map(|b| b.len()));
+        let weight_counts: Vec<usize> = ws.iter().map(|w| w.len()).collect();
+        let bias_counts: Vec<usize> = bs.iter().map(|b| b.len()).collect();
+        let arena = StepArena::new(&weight_counts, &bias_counts);
+
+        let mut sizes = weight_counts;
+        sizes.extend(&bias_counts);
         let opt = MomentumSgd::new(cfg.sgd, &sizes);
 
         let block_groups = if cfg.model.contains("resnet") {
@@ -137,7 +151,6 @@ impl Trainer {
             exec: Executor::new()?,
             manifest,
             full_desc,
-            micro_desc,
             policy,
             ws,
             bs,
@@ -148,7 +161,7 @@ impl Trainer {
             profiler: Profiler::new(),
             curve,
             sim_time_s: 0.0,
-            pack_buf: Vec::new(),
+            arena,
             cfg,
             smoothed_loss: f64::NAN,
             train_path,
@@ -172,11 +185,6 @@ impl Trainer {
         &self.ws
     }
 
-    /// Current per-layer transfer formats.
-    fn formats(&self) -> Vec<RoundTo> {
-        self.policy.formats().to_vec()
-    }
-
     /// Full-size packed payload implied by the micro policy state: the
     /// micro network's weighted mean bytes/weight applied to the full
     /// counterpart's weight count (DESIGN.md §6).
@@ -184,44 +192,55 @@ impl Trainer {
         (self.full_desc.total_weights() as f64 * mean_bytes_per_weight) as usize
     }
 
-    fn mean_bytes_per_weight(&self) -> f64 {
-        let counts = self.micro_desc.weight_counts();
-        let total: usize = counts.iter().sum();
-        let bytes: f64 = self
-            .formats()
-            .iter()
-            .zip(&counts)
-            .map(|(f, &n)| f.bytes() as f64 * n as f64)
-            .sum();
-        bytes / total as f64
+    /// Weighted mean transfer bytes/weight under the policy's current
+    /// formats (refreshes the arena caches; allocation-free).
+    fn mean_bytes_per_weight(&mut self) -> f64 {
+        self.arena.begin_step(self.policy.formats());
+        self.arena.mean_bytes_per_weight()
+    }
+
+    /// Steady-state allocation guard over an arena-managed hot section.
+    /// Only enforceable on the inline single-thread path — with fan-out,
+    /// the scoped pool's spawn boxes land on this thread by design — and
+    /// only after the first batch (cold caches may fill lazily).
+    fn assert_steady_no_alloc(&self, section: &AllocCheck, what: &str) {
+        debug_assert!(
+            self.profiler.batches() == 0 || self.cfg.adt.threads > 1 || section.count() == 0,
+            "steady-state heap allocation detected in {what}"
+        );
     }
 
     /// Run one training batch; returns the mean shard loss.
     pub fn step(&mut self) -> Result<f64> {
         let cfg_threads = self.cfg.adt.threads;
-        let formats = self.formats();
         let uses_adt = self.cfg.policy.uses_adt();
+        self.arena.begin_step(self.policy.formats());
 
         // ---- 1-2: Bitpack — really runs on the micro weights (numerics /
         // code path), accounted at the platform's calibrated full-size
         // rate (this host has one core; see sim::SystemProfile docs).
-        let mut packed_micro_bytes = 0usize;
         if uses_adt {
-            for (l, w) in self.ws.iter().enumerate() {
-                let rt = formats[l];
-                let need = adt::packed_len(w.len(), rt);
-                if self.pack_buf.len() < need {
-                    self.pack_buf.resize(need, 0);
-                }
-                adt::bitpack_into(w, rt, &self.cfg.adt, &mut self.pack_buf[..need]);
-                packed_micro_bytes += need;
+            let section = AllocCheck::begin();
+            let packed_micro_bytes = self.arena.pack_layers(&self.ws, &self.cfg.adt);
+            if !self.arena.pack.grew_last_pack() {
+                // steps that widened a format may grow the lazy pack
+                // buffers once; every other step must be allocation-free
+                self.assert_steady_no_alloc(&section, "bitpack");
             }
+            // Keep the micro-byte accounting honest: what the pack loop
+            // reports must equal Σ adt::packed_len over layers under the
+            // current formats (computed independently in begin_step).
+            debug_assert_eq!(
+                packed_micro_bytes,
+                self.arena.packed_bytes_total(),
+                "packed-byte accounting drifted from Σ packed_len"
+            );
             self.profiler
                 .add(Phase::Bitpack, self.cfg.system.pack_time(self.full_desc.weight_bytes_f32()));
         }
 
         // ---- 3: broadcast (accounted at full size) ------------------------
-        let mbpw = self.mean_bytes_per_weight();
+        let mbpw = self.arena.mean_bytes_per_weight();
         let payload = if uses_adt {
             self.full_packed_bytes(mbpw)
         } else {
@@ -233,57 +252,56 @@ impl Trainer {
         // device-side unpack (accounted; in-graph Pallas kernel does the
         // real numerics below)
         let unpack_payload = if uses_adt { self.full_packed_bytes(mbpw) } else { 0 };
-        let _ = packed_micro_bytes; // (micro bytes only used for asserts)
         let breakdown = self.pool.batch_time(self.cfg.batch_size, unpack_payload);
         self.profiler.add(Phase::Bitunpack, breakdown.unpack_s);
         self.profiler.add(Phase::Conv, breakdown.conv_s);
         self.profiler.add(Phase::Fc, breakdown.fc_s);
 
-        // ---- 4: per-GPU shards through PJRT -------------------------------
-        let masks: Vec<u32> = formats.iter().map(|f| f.mask()).collect();
+        // ---- 4: per-GPU shards through PJRT, executed concurrently --------
         let n_gpus = self.cfg.system.n_gpus;
         let shard = self.cfg.batch_size / n_gpus;
         let batch = self.loader.next_train();
         let sample_len = self.loader.dataset().sample_len();
-        let path = self.train_path.clone();
-
-        let n = self.manifest.num_layers();
-        let mut sum_gw: Vec<Vec<f32>> = self.ws.iter().map(|w| vec![0f32; w.len()]).collect();
-        let mut sum_gb: Vec<Vec<f32>> = self.bs.iter().map(|b| vec![0f32; b.len()]).collect();
+        self.exec.load(&self.train_path)?;
+        let outs: Vec<Result<TrainOutputs>> = {
+            let exec = &self.exec;
+            let manifest = &self.manifest;
+            let ws = &self.ws;
+            let bs = &self.bs;
+            let masks = self.arena.masks();
+            let path = &self.train_path;
+            let batch_ref = &batch;
+            // parallel_join preserves task order, so the reduction below
+            // sees shard outputs exactly as the old sequential loop did.
+            parallel_join(n_gpus, move |g| {
+                exec.train_step_loaded(
+                    path,
+                    manifest,
+                    ws,
+                    bs,
+                    masks,
+                    batch_ref.shard_images(g, sample_len),
+                    batch_ref.shard_labels(g),
+                    shard,
+                )
+            })
+        };
+        let mut shard_outs: Vec<TrainOutputs> = Vec::with_capacity(n_gpus);
         let mut loss_sum = 0f64;
-        for g in 0..n_gpus {
-            let out = self.exec.train_step(
-                &path,
-                &self.manifest,
-                &self.ws,
-                &self.bs,
-                &masks,
-                batch.shard_images(g, sample_len),
-                batch.shard_labels(g),
-                shard,
-            )?;
+        for out in outs {
+            let out = out?;
             loss_sum += out.loss as f64;
-            for l in 0..n {
-                for (a, b) in sum_gw[l].iter_mut().zip(&out.grad_ws[l]) {
-                    *a += b;
-                }
-                for (a, b) in sum_gb[l].iter_mut().zip(&out.grad_bs[l]) {
-                    *a += b;
-                }
-            }
-        }
-        let inv = 1.0 / n_gpus as f32;
-        for gw in &mut sum_gw {
-            for v in gw.iter_mut() {
-                *v *= inv;
-            }
-        }
-        for gb in &mut sum_gb {
-            for v in gb.iter_mut() {
-                *v *= inv;
-            }
+            shard_outs.push(out);
         }
         let loss = loss_sum / n_gpus as f64;
+
+        // Fused threaded reduce into the arena accumulators: one pass does
+        // accumulate + 1/n_gpus scaling, bit-identical to the old
+        // accumulate-then-scale double loop over shards in task order.
+        let mut src_scratch: Vec<&[f32]> = Vec::with_capacity(n_gpus);
+        let section = AllocCheck::begin();
+        self.arena.reduce_shards(&shard_outs, cfg_threads, &mut src_scratch);
+        self.assert_steady_no_alloc(&section, "gradient reduce");
 
         // ---- 5: gather gradients (always f32, accounted at full size) -----
         let d2h = self
@@ -292,31 +310,34 @@ impl Trainer {
         self.profiler.add(Phase::D2H, d2h.seconds);
 
         // ---- 6: SGD update on the CPU leader -------------------------------
-        let mut params: Vec<Vec<f32>> = Vec::with_capacity(2 * n);
-        params.append(&mut self.ws);
-        params.append(&mut self.bs);
-        let mut grads = sum_gw;
-        grads.append(&mut sum_gb);
-        let mut decay = vec![true; n];
-        decay.extend(vec![false; n]);
-        self.opt.step(&mut params, &grads, &decay);
-        self.bs = params.split_off(n);
-        self.ws = params;
+        let section = AllocCheck::begin();
+        self.opt.step_split(
+            &mut self.ws,
+            &mut self.bs,
+            &self.arena.sum_gw,
+            &self.arena.sum_gb,
+            self.arena.decay(),
+            cfg_threads,
+        );
+        self.assert_steady_no_alloc(&section, "sgd update");
         self.profiler
             .add(Phase::GradUpdate, self.cfg.system.update_time(self.full_desc.param_count()));
 
         // ---- 7: AWP norms — computed for real on the micro weights,
         // accounted at the calibrated full-size rate.
         if self.policy.needs_norms() {
-            let norms: Vec<f64> =
-                self.ws.iter().map(|w| l2_norm_fast(w, cfg_threads)).collect();
+            let section = AllocCheck::begin();
+            for (slot, w) in self.arena.norms.iter_mut().zip(&self.ws) {
+                *slot = l2_norm_fast(w, cfg_threads);
+            }
+            self.assert_steady_no_alloc(&section, "awp norms");
             self.profiler
                 .add(Phase::AwpNorm, self.cfg.system.norm_time(self.full_desc.weight_bytes_f32()));
-            self.policy.observe_batch(&norms);
+            self.policy.observe_batch(&self.arena.norms);
         }
 
         self.profiler.end_batch();
-        self.sim_time_s += self.last_batch_sim_time();
+        self.sim_time_s += self.profiler.last_batch_s();
 
         self.smoothed_loss = if self.smoothed_loss.is_nan() {
             loss
@@ -326,31 +347,25 @@ impl Trainer {
         Ok(loss)
     }
 
-    /// Simulated duration of the batch just profiled (sum of phase times
-    /// added this batch = avg×batches − running total; we track via diff).
-    fn last_batch_sim_time(&self) -> f64 {
-        // profiler stores totals; avg_batch×batches == total. The easiest
-        // exact per-batch figure: recompute total and subtract previous.
-        let total: f64 = crate::profiler::Phase::ALL
-            .iter()
-            .map(|p| self.profiler.total_s(*p))
-            .sum();
-        total - self.sim_time_s
-    }
-
     /// Validation top-1 error under the *device-side* view of the weights
     /// (current masks), as the paper measures during training.
     pub fn validate(&mut self) -> Result<f64> {
-        let masks: Vec<u32> = self.formats().iter().map(|f| f.mask()).collect();
+        self.arena.begin_step(self.policy.formats());
         let vb = self.manifest.infer_batch;
-        let path = self.infer_path.clone();
         let batches = self.loader.val_batches(vb);
         let mut correct = 0usize;
         let mut total = 0usize;
         let classes = self.manifest.classes;
         for b in batches {
-            let logits =
-                self.exec.infer(&path, &self.manifest, &self.ws, &self.bs, &masks, &b.images, vb)?;
+            let logits = self.exec.infer(
+                &self.infer_path,
+                &self.manifest,
+                &self.ws,
+                &self.bs,
+                self.arena.masks(),
+                &b.images,
+                vb,
+            )?;
             for (i, &label) in b.labels.iter().enumerate() {
                 let row = &logits[i * classes..(i + 1) * classes];
                 let argmax = row
@@ -373,24 +388,26 @@ impl Trainer {
         let mut final_loss = f64::NAN;
         // initial point
         let err0 = self.validate()?;
+        let bpw0 = self.mean_bytes_per_weight();
         self.curve.push(ValPoint {
             batch: 0,
             sim_time_s: 0.0,
             val_error: err0,
             train_loss: f64::NAN,
-            bytes_per_weight: self.mean_bytes_per_weight(),
+            bytes_per_weight: bpw0,
         });
         for b in 1..=self.cfg.max_batches {
             final_loss = self.step()?;
             batches_run = b;
             if b % self.cfg.val_every == 0 {
                 let err = self.validate()?;
+                let bpw = self.mean_bytes_per_weight();
                 self.curve.push(ValPoint {
                     batch: b,
                     sim_time_s: self.sim_time_s,
                     val_error: err,
                     train_loss: self.smoothed_loss,
-                    bytes_per_weight: self.mean_bytes_per_weight(),
+                    bytes_per_weight: bpw,
                 });
                 if err <= self.cfg.target_error {
                     reached = true;

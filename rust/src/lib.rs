@@ -50,3 +50,9 @@ pub mod util;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
+
+/// Counting allocator (System pass-through + thread-local event counter):
+/// lets the coordinator assert its steady-state hot sections perform zero
+/// heap allocations (`util::benchkit::AllocCheck`).
+#[global_allocator]
+static GLOBAL_ALLOC: util::benchkit::CountingAlloc = util::benchkit::CountingAlloc;

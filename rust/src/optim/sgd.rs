@@ -1,4 +1,43 @@
 //! Momentum SGD + weight decay + exponential LR schedule.
+//!
+//! The update loop is the leader's per-batch `GradUpdate` phase (Table
+//! II/III row), so it gets the same treatment as the ADT kernels: a fused
+//! 8-wide-unrolled inner kernel (one pass computes decayed gradient,
+//! velocity, and weight together) threaded over the scoped pool via
+//! `threadpool::parallel_zip3`, and a zero-allocation [`MomentumSgd::step_split`]
+//! entry point that updates weights and biases from the coordinator's
+//! arena buffers without the historical append/split_off tensor shuffle.
+
+use crate::util::threadpool::parallel_zip3;
+
+/// Fan-out threshold for the threaded update (elements per thread).
+const UPDATE_MIN_PER_THREAD: usize = 64 * 1024;
+
+/// Fused momentum-SGD inner kernel over one tensor chunk, 8-wide unrolled
+/// like `threadpool::reduce_slices_into`:
+/// `v ← m·v + (g + wd·w)`, `w ← w − lr·v` in a single pass.
+fn sgd_update_kernel(w: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, m: f32, wd: f32) {
+    debug_assert_eq!(w.len(), v.len());
+    debug_assert_eq!(w.len(), g.len());
+    let n = w.len();
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let base = c * 8;
+        for k in 0..8 {
+            let i = base + k;
+            let grad = g[i] + wd * w[i];
+            let nv = m * v[i] + grad;
+            v[i] = nv;
+            w[i] -= lr * nv;
+        }
+    }
+    for i in chunks * 8..n {
+        let grad = g[i] + wd * w[i];
+        let nv = m * v[i] + grad;
+        v[i] = nv;
+        w[i] -= lr * nv;
+    }
+}
 
 /// Exponential step decay: `lr = initial · factor^(batch / every)`.
 ///
@@ -88,11 +127,25 @@ impl MomentumSgd {
     /// `decay_mask[i]` disables weight decay for tensor `i` (biases are
     /// conventionally not decayed).
     pub fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>], decay_mask: &[bool]) {
+        self.step_threaded(params, grads, decay_mask, 1);
+    }
+
+    /// [`step`](Self::step) with the fused kernel fanned out over `threads`
+    /// worker threads per tensor (numerics are per-element, so the result
+    /// is bit-identical at any thread count).
+    pub fn step_threaded(
+        &mut self,
+        params: &mut [Vec<f32>],
+        grads: &[Vec<f32>],
+        decay_mask: &[bool],
+        threads: usize,
+    ) {
         assert_eq!(params.len(), self.velocity.len());
         assert_eq!(grads.len(), self.velocity.len());
         assert_eq!(decay_mask.len(), self.velocity.len());
         let lr = self.current_lr();
         let m = self.cfg.momentum;
+        let wd_base = self.cfg.weight_decay;
         for ((w, g), (v, &decay)) in params
             .iter_mut()
             .zip(grads)
@@ -100,12 +153,54 @@ impl MomentumSgd {
         {
             assert_eq!(w.len(), v.len(), "param tensor size changed");
             assert_eq!(g.len(), v.len(), "grad tensor size mismatch");
-            let wd = if decay { self.cfg.weight_decay } else { 0.0 };
-            for i in 0..w.len() {
-                let grad = g[i] + wd * w[i];
-                v[i] = m * v[i] + grad;
-                w[i] -= lr * v[i];
-            }
+            let wd = if decay { wd_base } else { 0.0 };
+            parallel_zip3(w, v, g, threads, UPDATE_MIN_PER_THREAD, |wc, vc, gc| {
+                sgd_update_kernel(wc, vc, gc, lr, m, wd)
+            });
+        }
+        self.batch += 1;
+    }
+
+    /// Apply one update step directly from the coordinator's split weight /
+    /// bias buffers — the zero-allocation path: no tensor vector is moved
+    /// or rebuilt. Velocity slots `0..n` belong to the weight tensors and
+    /// `n..2n` to the bias tensors (the construction-time layout);
+    /// `decay_mask` covers both halves in that order, exactly like the
+    /// concatenated [`step`](Self::step) call it replaces.
+    pub fn step_split(
+        &mut self,
+        ws: &mut [Vec<f32>],
+        bs: &mut [Vec<f32>],
+        grad_ws: &[Vec<f32>],
+        grad_bs: &[Vec<f32>],
+        decay_mask: &[bool],
+        threads: usize,
+    ) {
+        let n = ws.len();
+        assert_eq!(bs.len(), n, "weight/bias tensor count mismatch");
+        assert_eq!(grad_ws.len(), n);
+        assert_eq!(grad_bs.len(), n);
+        assert_eq!(self.velocity.len(), 2 * n, "velocity layout mismatch");
+        assert_eq!(decay_mask.len(), 2 * n, "decay mask covers both halves");
+        let lr = self.current_lr();
+        let m = self.cfg.momentum;
+        let wd_base = self.cfg.weight_decay;
+        let (vel_w, vel_b) = self.velocity.split_at_mut(n);
+        for (i, ((w, g), v)) in ws.iter_mut().zip(grad_ws).zip(vel_w.iter_mut()).enumerate() {
+            assert_eq!(w.len(), v.len(), "param tensor size changed");
+            assert_eq!(g.len(), v.len(), "grad tensor size mismatch");
+            let wd = if decay_mask[i] { wd_base } else { 0.0 };
+            parallel_zip3(w, v, g, threads, UPDATE_MIN_PER_THREAD, |wc, vc, gc| {
+                sgd_update_kernel(wc, vc, gc, lr, m, wd)
+            });
+        }
+        for (i, ((b, g), v)) in bs.iter_mut().zip(grad_bs).zip(vel_b.iter_mut()).enumerate() {
+            assert_eq!(b.len(), v.len(), "param tensor size changed");
+            assert_eq!(g.len(), v.len(), "grad tensor size mismatch");
+            let wd = if decay_mask[n + i] { wd_base } else { 0.0 };
+            parallel_zip3(b, v, g, threads, UPDATE_MIN_PER_THREAD, |bc, vc, gc| {
+                sgd_update_kernel(bc, vc, gc, lr, m, wd)
+            });
         }
         self.batch += 1;
     }
@@ -208,5 +303,82 @@ mod tests {
         let mut opt = MomentumSgd::new(cfg, &[2]);
         let mut p = vec![vec![0.0f32, 0.0]];
         opt.step(&mut p, &[vec![1.0]], &[false]);
+    }
+
+    fn sample_state(seed: u64, sizes: &[usize]) -> (Vec<Vec<f32>>, Vec<Vec<f32>>) {
+        let mut rng = crate::util::prng::Rng::new(seed);
+        let params: Vec<Vec<f32>> = sizes
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.normal_f32(0.0, 0.5)).collect())
+            .collect();
+        let grads: Vec<Vec<f32>> = sizes
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.normal_f32(0.0, 0.1)).collect())
+            .collect();
+        (params, grads)
+    }
+
+    fn bits(tensors: &[Vec<f32>]) -> Vec<Vec<u32>> {
+        tensors.iter().map(|t| t.iter().map(|x| x.to_bits()).collect()).collect()
+    }
+
+    #[test]
+    fn step_split_matches_concatenated_step_bit_for_bit() {
+        // sizes straddle the 8-wide unroll boundary
+        let w_sizes = [53usize, 8, 1024];
+        let b_sizes = [7usize, 1, 33];
+        let all_sizes: Vec<usize> = w_sizes.iter().chain(&b_sizes).copied().collect();
+        let cfg = SgdConfig::paper_defaults(0.01, 50);
+        let n = w_sizes.len();
+        let mut decay = vec![true; n];
+        decay.extend(vec![false; n]);
+
+        // reference: historical concatenated path
+        let mut opt_a = MomentumSgd::new(cfg, &all_sizes);
+        let (mut params_a, grads_a) = sample_state(5, &all_sizes);
+        for _ in 0..3 {
+            opt_a.step(&mut params_a, &grads_a, &decay);
+        }
+
+        // split path over the same state
+        let mut opt_b = MomentumSgd::new(cfg, &all_sizes);
+        let (params_b, grads_b) = sample_state(5, &all_sizes);
+        let (mut ws, mut bs) = {
+            let mut p = params_b;
+            let bs = p.split_off(n);
+            (p, bs)
+        };
+        let (gws, gbs) = {
+            let mut g = grads_b;
+            let gbs = g.split_off(n);
+            (g, gbs)
+        };
+        for _ in 0..3 {
+            opt_b.step_split(&mut ws, &mut bs, &gws, &gbs, &decay, 1);
+        }
+
+        let mut joined = ws;
+        joined.extend(bs);
+        assert_eq!(bits(&params_a), bits(&joined));
+        assert_eq!(opt_a.batches_applied(), opt_b.batches_applied());
+    }
+
+    #[test]
+    fn threaded_update_is_bit_identical() {
+        let sizes = [200_000usize];
+        let cfg = SgdConfig::paper_defaults(0.05, 1000);
+        let (params0, grads) = sample_state(9, &sizes);
+        let run = |threads: usize| {
+            let mut opt = MomentumSgd::new(cfg, &sizes);
+            let mut p = params0.clone();
+            for _ in 0..2 {
+                opt.step_threaded(&mut p, &grads, &[true], threads);
+            }
+            bits(&p)
+        };
+        let serial = run(1);
+        for threads in [2usize, 3, 8] {
+            assert_eq!(serial, run(threads), "threads={threads}");
+        }
     }
 }

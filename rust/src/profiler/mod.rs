@@ -75,6 +75,10 @@ impl fmt::Display for Phase {
 pub struct Profiler {
     totals_s: [f64; 8],
     batches: u64,
+    /// Seconds added since the last `end_batch` (the in-flight batch).
+    current_batch_s: f64,
+    /// Total of the most recently completed batch, recorded at `end_batch`.
+    last_batch_s: f64,
 }
 
 impl Profiler {
@@ -85,15 +89,25 @@ impl Profiler {
     /// Add `seconds` to `phase` for the current batch.
     pub fn add(&mut self, phase: Phase, seconds: f64) {
         self.totals_s[phase.idx()] += seconds;
+        self.current_batch_s += seconds;
     }
 
-    /// Mark one batch complete.
+    /// Mark one batch complete, recording its per-phase sum for
+    /// [`last_batch_s`](Self::last_batch_s).
     pub fn end_batch(&mut self) {
+        self.last_batch_s = self.current_batch_s;
+        self.current_batch_s = 0.0;
         self.batches += 1;
     }
 
     pub fn batches(&self) -> u64 {
         self.batches
+    }
+
+    /// Exact duration (sum of phase times) of the most recently completed
+    /// batch. Zero before the first `end_batch`.
+    pub fn last_batch_s(&self) -> f64 {
+        self.last_batch_s
     }
 
     /// Per-batch average seconds of `phase`.
@@ -155,6 +169,23 @@ mod tests {
         assert!((p.avg_s(Phase::H2D) - 0.2).abs() < 1e-12);
         assert!((p.avg_s(Phase::Conv) - 0.1).abs() < 1e-12);
         assert_eq!(p.avg_s(Phase::Fc), 0.0);
+    }
+
+    #[test]
+    fn last_batch_is_recorded_per_batch() {
+        let mut p = Profiler::new();
+        assert_eq!(p.last_batch_s(), 0.0);
+        p.add(Phase::H2D, 0.1);
+        p.add(Phase::Conv, 0.2);
+        p.end_batch();
+        assert!((p.last_batch_s() - 0.3).abs() < 1e-12);
+        p.add(Phase::H2D, 0.05);
+        // in-flight time is not visible until end_batch
+        assert!((p.last_batch_s() - 0.3).abs() < 1e-12);
+        p.end_batch();
+        assert!((p.last_batch_s() - 0.05).abs() < 1e-12);
+        // totals unaffected by the per-batch bookkeeping
+        assert!((p.total_s(Phase::H2D) - 0.15).abs() < 1e-12);
     }
 
     #[test]

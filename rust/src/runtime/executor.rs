@@ -104,6 +104,26 @@ impl Executor {
         shard: usize,
     ) -> Result<TrainOutputs> {
         self.load(&hlo_path)?;
+        self.train_step_loaded(hlo_path, model, ws, bs, masks, images, labels, shard)
+    }
+
+    /// [`train_step`](Self::train_step) against an executable that was
+    /// already [`load`](Self::load)ed. Takes `&self`: the compiled
+    /// executable cache is only read, and `PjRtLoadedExecutable::execute`
+    /// is thread-safe, so the coordinator runs one call per GPU shard
+    /// concurrently on the scoped pool (`threadpool::parallel_join`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step_loaded(
+        &self,
+        hlo_path: impl AsRef<Path>,
+        model: &ModelManifest,
+        ws: &[Vec<f32>],
+        bs: &[Vec<f32>],
+        masks: &[u32],
+        images: &[f32],
+        labels: &[u32],
+        shard: usize,
+    ) -> Result<TrainOutputs> {
         let (h, w, c) = model.input;
         anyhow::ensure!(images.len() == shard * h * w * c, "image buffer size mismatch");
         anyhow::ensure!(labels.len() == shard, "label buffer size mismatch");

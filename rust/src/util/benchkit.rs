@@ -1,12 +1,81 @@
 //! Criterion-style benchmark kit (criterion itself is unavailable offline).
 //!
-//! Provides warmup + repeated measurement with mean/σ/median reporting, and
-//! a table printer used by the paper-reproduction benches to emit the same
-//! rows/series the paper's tables and figures report. Benches are declared
-//! with `harness = false` and call [`Bench::run`] / [`Table`] directly.
+//! Provides warmup + repeated measurement with mean/σ/median reporting, a
+//! table printer used by the paper-reproduction benches to emit the same
+//! rows/series the paper's tables and figures report, and a thread-local
+//! allocation counter ([`CountingAlloc`] / [`AllocCheck`]) that the
+//! coordinator uses to *assert* its hot sections stay allocation-free in
+//! steady state. Benches are declared with `harness = false` and call
+//! [`Bench::run`] / [`Table`] directly.
 
 use super::stats::Summary;
 use super::timer::{fmt_duration, Stopwatch};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+thread_local! {
+    static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Global allocator wrapper: defers to [`System`] and counts allocations
+/// (alloc / alloc_zeroed / realloc, not frees) in a thread-local counter.
+/// Installed crate-wide from `lib.rs`; the per-event cost is one
+/// thread-local increment, which is noise even inside the benches.
+pub struct CountingAlloc;
+
+#[inline]
+fn bump_alloc_count() {
+    // try_with: the allocator can be called during TLS teardown, where
+    // accessing the counter would panic — skip counting there.
+    let _ = THREAD_ALLOCS.try_with(|c| c.set(c.get() + 1));
+}
+
+// SAFETY: pure pass-through to `System`; the counter has no effect on the
+// returned memory.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump_alloc_count();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump_alloc_count();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump_alloc_count();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+/// Allocation events observed on *this thread* since process start.
+pub fn thread_alloc_count() -> u64 {
+    THREAD_ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+/// Scoped allocation check: snapshot the thread counter at `begin()`, read
+/// the delta with `count()`. Only counts the calling thread — spawn boxes
+/// land on the spawning thread, worker-internal allocations do not; the
+/// coordinator therefore asserts on the single-thread inline path.
+pub struct AllocCheck {
+    start: u64,
+}
+
+impl AllocCheck {
+    pub fn begin() -> AllocCheck {
+        AllocCheck { start: thread_alloc_count() }
+    }
+
+    /// Allocation events on this thread since `begin()`.
+    pub fn count(&self) -> u64 {
+        thread_alloc_count() - self.start
+    }
+}
 
 /// One micro-benchmark: `name`, warmup iterations, measured iterations.
 pub struct Bench {
@@ -165,6 +234,41 @@ impl Table {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn alloc_check_sees_heap_activity() {
+        let check = AllocCheck::begin();
+        let v: Vec<u64> = (0..64).collect();
+        std::hint::black_box(&v);
+        assert!(check.count() > 0, "allocation not observed");
+    }
+
+    #[test]
+    fn alloc_check_is_zero_for_alloc_free_code() {
+        let mut buf = vec![0f32; 1024]; // allocate BEFORE the check
+        let check = AllocCheck::begin();
+        for (i, b) in buf.iter_mut().enumerate() {
+            *b = i as f32 * 0.5;
+        }
+        std::hint::black_box(&buf);
+        assert_eq!(check.count(), 0, "arithmetic loop must not allocate");
+    }
+
+    #[test]
+    fn alloc_counter_is_thread_local() {
+        let check = AllocCheck::begin();
+        std::thread::spawn(|| {
+            let v: Vec<u64> = (0..1024).collect();
+            std::hint::black_box(&v);
+        })
+        .join()
+        .unwrap();
+        // The child thread's Vec must not count here; only the spawn
+        // machinery's own allocations on this thread may.
+        let direct: Vec<u64> = (0..1024).collect();
+        std::hint::black_box(&direct);
+        assert!(check.count() >= 1);
+    }
 
     #[test]
     fn bench_measures_and_counts() {

@@ -4,6 +4,12 @@
 //! chunked static schedule is built on `crossbeam_utils::thread::scope`.
 //! No queueing, no work stealing — Bitpack/l²-norm workloads are perfectly
 //! regular, so a static partition is both fastest and deterministic.
+//!
+//! Every helper takes an allocation-free inline fast path when a single
+//! thread would be used (one thread requested, or the input is under the
+//! `min_per_thread` fan-out threshold). The coordinator's steady-state
+//! zero-allocation guarantee (`coordinator::arena`) relies on this: with
+//! `threads == 1` no partition vector and no spawn boxes are ever built.
 
 use crossbeam_utils::thread;
 
@@ -32,25 +38,37 @@ pub fn partition(len: usize, parts: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// Effective thread count for `len` items (fan out only when every thread
+/// gets at least `min_per_thread` items).
+fn effective_threads(len: usize, threads: usize, min_per_thread: usize) -> usize {
+    if min_per_thread > 0 {
+        threads.min(len.div_ceil(min_per_thread)).max(1)
+    } else {
+        threads.max(1)
+    }
+}
+
 /// Run `f(chunk_index, start, end)` over a static partition of `[0, len)`
 /// on `threads` OS threads. `f` must be `Sync` (it is called concurrently).
 ///
-/// Falls back to inline execution for a single thread or tiny inputs, so
-/// callers can use it unconditionally without paying spawn costs.
+/// Falls back to inline execution (no allocation, no spawn) for a single
+/// thread or tiny inputs, so callers can use it unconditionally without
+/// paying spawn costs.
 pub fn parallel_ranges<F>(len: usize, threads: usize, min_per_thread: usize, f: F)
 where
     F: Fn(usize, usize, usize) + Sync,
 {
-    let threads = if min_per_thread > 0 {
-        threads.min(len.div_ceil(min_per_thread)).max(1)
-    } else {
-        threads.max(1)
-    };
+    if len == 0 {
+        return;
+    }
+    let threads = effective_threads(len, threads, min_per_thread);
+    if threads <= 1 {
+        f(0, 0, len);
+        return;
+    }
     let ranges = partition(len, threads);
     if ranges.len() <= 1 {
-        if let Some(&(s, e)) = ranges.first() {
-            f(0, s, e);
-        }
+        f(0, 0, len);
         return;
     }
     thread::scope(|scope| {
@@ -84,9 +102,11 @@ pub fn parallel_chunks<I, O, F>(
     assert_eq!(input.len() % in_stride, 0, "input not a multiple of stride");
     let items = input.len() / in_stride;
     assert_eq!(output.len(), items * out_stride, "output size mismatch");
-    let threads = threads
-        .min(if min_items_per_thread > 0 { items.div_ceil(min_items_per_thread) } else { threads })
-        .max(1);
+    let threads = effective_threads(items, threads, min_items_per_thread);
+    if threads <= 1 || items <= 1 {
+        f(0, input, output);
+        return;
+    }
     let ranges = partition(items, threads);
     if ranges.len() <= 1 {
         f(0, input, output);
@@ -115,24 +135,28 @@ pub fn parallel_chunks<I, O, F>(
 
 /// Parallel fold: run `f(start,end) -> T` over a static partition and reduce
 /// the per-thread results with `combine`. Used by the SIMD l²-norm.
-pub fn parallel_fold<T, F, C>(len: usize, threads: usize, min_per_thread: usize, f: F, combine: C) -> Option<T>
+pub fn parallel_fold<T, F, C>(
+    len: usize,
+    threads: usize,
+    min_per_thread: usize,
+    f: F,
+    combine: C,
+) -> Option<T>
 where
     T: Send,
     F: Fn(usize, usize) -> T + Sync,
     C: Fn(T, T) -> T,
 {
-    let threads = if min_per_thread > 0 {
-        threads.min(len.div_ceil(min_per_thread.max(1))).max(1)
-    } else {
-        threads.max(1)
-    };
-    let ranges = partition(len, threads);
-    if ranges.is_empty() {
+    if len == 0 {
         return None;
     }
+    let threads = effective_threads(len, threads, min_per_thread.max(1));
+    if threads <= 1 {
+        return Some(f(0, len));
+    }
+    let ranges = partition(len, threads);
     if ranges.len() == 1 {
-        let (s, e) = ranges[0];
-        return Some(f(s, e));
+        return Some(f(0, len));
     }
     let results = thread::scope(|scope| {
         let handles: Vec<_> = ranges
@@ -146,6 +170,155 @@ where
     })
     .expect("scope failed");
     results.into_iter().reduce(combine)
+}
+
+/// Run `f(0), f(1), …, f(n-1)` concurrently on the scoped pool and return
+/// the results in task order. Used by the coordinator to execute the
+/// per-GPU gradient shards of one batch at the same time: result order —
+/// and therefore the gradient reduction order — is identical to the
+/// sequential loop, so the aggregate is bit-for-bit reproducible.
+pub fn parallel_join<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![f(0)];
+    }
+    thread::scope(|scope| {
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let f = &f;
+                scope.spawn(move |_| f(i))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker thread panicked")).collect::<Vec<T>>()
+    })
+    .expect("scope failed")
+}
+
+/// Fused gradient reduce, serial kernel: `dst[i] = (Σ_s srcs[s][i]) · scale`
+/// in one pass, 8-wide unrolled. Accumulation order over `srcs` is the
+/// source order for every element, so the threaded version below and this
+/// serial version are bit-for-bit identical.
+///
+/// Replaces the coordinator's separate accumulate-then-scale loops (two
+/// full passes over every gradient tensor) with a single fused pass.
+pub fn reduce_slices_into(dst: &mut [f32], srcs: &[&[f32]], scale: f32) {
+    let n = dst.len();
+    for s in srcs {
+        assert_eq!(s.len(), n, "source slice length mismatch");
+    }
+    let Some((first, rest)) = srcs.split_first() else {
+        dst.fill(0.0);
+        return;
+    };
+    let chunks = n / 8;
+    for c in 0..chunks {
+        let base = c * 8;
+        let mut acc = [0f32; 8];
+        acc.copy_from_slice(&first[base..base + 8]);
+        for s in rest {
+            let sv = &s[base..base + 8];
+            for (a, &v) in acc.iter_mut().zip(sv) {
+                *a += v;
+            }
+        }
+        for (k, a) in acc.iter().enumerate() {
+            dst[base + k] = a * scale;
+        }
+    }
+    for i in chunks * 8..n {
+        let mut acc = first[i];
+        for s in rest {
+            acc += s[i];
+        }
+        dst[i] = acc * scale;
+    }
+}
+
+/// Threaded fused gradient reduce: partitions `dst` and runs
+/// [`reduce_slices_into`] on each chunk. Per-element accumulation order is
+/// unchanged, so the result is bit-identical to the serial kernel at any
+/// thread count. Inline (allocation-free) when one thread suffices.
+pub fn parallel_reduce_slices(
+    dst: &mut [f32],
+    srcs: &[&[f32]],
+    scale: f32,
+    threads: usize,
+    min_per_thread: usize,
+) {
+    let len = dst.len();
+    for s in srcs {
+        assert_eq!(s.len(), len, "source slice length mismatch");
+    }
+    let threads = effective_threads(len, threads, min_per_thread);
+    if threads <= 1 || len == 0 {
+        reduce_slices_into(dst, srcs, scale);
+        return;
+    }
+    let ranges = partition(len, threads);
+    if ranges.len() <= 1 {
+        reduce_slices_into(dst, srcs, scale);
+        return;
+    }
+    thread::scope(|scope| {
+        let mut rest = dst;
+        for &(s, e) in &ranges {
+            let (head, tail) = rest.split_at_mut(e - s);
+            rest = tail;
+            scope.spawn(move |_| {
+                let subs: Vec<&[f32]> = srcs.iter().map(|src| &src[s..e]).collect();
+                reduce_slices_into(head, &subs, scale);
+            });
+        }
+    })
+    .expect("worker thread panicked");
+}
+
+/// Run `f` over matched disjoint chunks of two mutable slices and one
+/// shared slice — the SGD update shape (weights, velocity, gradient).
+/// Inline (allocation-free) when one thread suffices.
+pub fn parallel_zip3<F>(
+    a: &mut [f32],
+    b: &mut [f32],
+    c: &[f32],
+    threads: usize,
+    min_per_thread: usize,
+    f: F,
+) where
+    F: Fn(&mut [f32], &mut [f32], &[f32]) + Sync,
+{
+    let len = a.len();
+    assert_eq!(b.len(), len, "slice length mismatch");
+    assert_eq!(c.len(), len, "slice length mismatch");
+    let threads = effective_threads(len, threads, min_per_thread);
+    if threads <= 1 || len == 0 {
+        f(a, b, c);
+        return;
+    }
+    let ranges = partition(len, threads);
+    if ranges.len() <= 1 {
+        f(a, b, c);
+        return;
+    }
+    thread::scope(|scope| {
+        let mut a_rest = a;
+        let mut b_rest = b;
+        for &(s, e) in &ranges {
+            let (a_head, a_tail) = a_rest.split_at_mut(e - s);
+            let (b_head, b_tail) = b_rest.split_at_mut(e - s);
+            a_rest = a_tail;
+            b_rest = b_tail;
+            let f = &f;
+            let c_chunk = &c[s..e];
+            scope.spawn(move |_| f(a_head, b_head, c_chunk));
+        }
+    })
+    .expect("worker thread panicked");
 }
 
 #[cfg(test)]
@@ -211,5 +384,83 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn join_returns_results_in_task_order() {
+        for n in [0usize, 1, 2, 7] {
+            let got = parallel_join(n, |i| i * i);
+            let want: Vec<usize> = (0..n).map(|i| i * i).collect();
+            assert_eq!(got, want);
+        }
+        // task order is preserved even when later tasks finish first
+        let got = parallel_join(4, |i| {
+            std::thread::sleep(std::time::Duration::from_millis((4 - i as u64) * 3));
+            i
+        });
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn reduce_matches_naive_accumulate() {
+        let n = 1037; // odd: exercises the unroll tail
+        let a: Vec<f32> = (0..n).map(|i| (i as f32).sin()).collect();
+        let b: Vec<f32> = (0..n).map(|i| (i as f32).cos()).collect();
+        let c: Vec<f32> = (0..n).map(|i| 1.0 / (i + 1) as f32).collect();
+        let srcs = [a.as_slice(), b.as_slice(), c.as_slice()];
+        let scale = 1.0 / 3.0;
+        let mut fused = vec![0f32; n];
+        reduce_slices_into(&mut fused, &srcs, scale);
+        for i in 0..n {
+            let want = (a[i] + b[i] + c[i]) * scale;
+            assert_eq!(fused[i].to_bits(), want.to_bits(), "i={i}");
+        }
+    }
+
+    #[test]
+    fn threaded_reduce_is_bit_identical_to_serial() {
+        let n = 100_003;
+        let srcs_owned: Vec<Vec<f32>> = (0..4)
+            .map(|s| (0..n).map(|i| ((i * 31 + s * 7) as f32).sin() * 0.1).collect())
+            .collect();
+        let srcs: Vec<&[f32]> = srcs_owned.iter().map(|v| v.as_slice()).collect();
+        let mut serial = vec![0f32; n];
+        reduce_slices_into(&mut serial, &srcs, 0.25);
+        for threads in [1usize, 2, 3, 8] {
+            let mut par = vec![0f32; n];
+            parallel_reduce_slices(&mut par, &srcs, 0.25, threads, 64);
+            assert_eq!(
+                serial.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                par.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn reduce_with_no_sources_zeroes() {
+        let mut dst = vec![1f32; 9];
+        reduce_slices_into(&mut dst, &[], 0.5);
+        assert!(dst.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn zip3_covers_all_elements_at_any_thread_count() {
+        let n = 10_001;
+        let grad: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        for threads in [1usize, 2, 5] {
+            let mut w = vec![0f32; n];
+            let mut v = vec![0f32; n];
+            parallel_zip3(&mut w, &mut v, &grad, threads, 16, |wc, vc, gc| {
+                for ((wi, vi), gi) in wc.iter_mut().zip(vc.iter_mut()).zip(gc) {
+                    *vi = *gi;
+                    *wi -= *gi;
+                }
+            });
+            for i in 0..n {
+                assert_eq!(v[i], grad[i]);
+                assert_eq!(w[i], -grad[i]);
+            }
+        }
     }
 }

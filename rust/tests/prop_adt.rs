@@ -3,7 +3,7 @@
 
 use a2dtwp::adt::{
     bitpack_into, bitpack_scalar_into, bitunpack_into, bitunpack_scalar_into, mask_in_place,
-    masked_value, packed_len, AdtConfig, BitpackImpl, RoundTo,
+    masked_value, packed_len, AdtConfig, BitpackImpl, BitunpackImpl, RoundTo,
 };
 use a2dtwp::util::propcheck::{check, Gen};
 
@@ -37,10 +37,62 @@ fn prop_all_impls_byte_identical() {
         let mut scalar = vec![0u8; packed_len(w.len(), rt)];
         bitpack_scalar_into(&w, rt, &mut scalar);
         for simd in [BitpackImpl::Scalar, BitpackImpl::Avx2] {
-            let cfg = AdtConfig { threads, simd, min_per_thread: 64 };
+            let cfg = AdtConfig { threads, simd, min_per_thread: 64, ..Default::default() };
             let mut out = vec![0u8; packed_len(w.len(), rt)];
             bitpack_into(&w, rt, &cfg, &mut out);
             assert_eq!(out, scalar, "simd={simd:?} threads={threads}");
+        }
+    });
+}
+
+#[test]
+fn prop_unpack_impls_byte_identical() {
+    // scalar / AVX2 / threaded Bitunpack restore identical words from any
+    // packed stream (the unpack mirror of `prop_all_impls_byte_identical`)
+    check("unpack impl equivalence", 150, |g| {
+        let w = g.vec_f32_bits(0..2000);
+        let rt = *g.pick(&RoundTo::ALL);
+        let threads = g.usize_in(1..5);
+        let mut packed = vec![0u8; packed_len(w.len(), rt)];
+        bitpack_scalar_into(&w, rt, &mut packed);
+        let mut reference = vec![0f32; w.len()];
+        bitunpack_scalar_into(&packed, rt, &mut reference);
+        let ref_bits: Vec<u32> = reference.iter().map(|x| x.to_bits()).collect();
+        for unpack_simd in [BitunpackImpl::Scalar, BitunpackImpl::Avx2] {
+            let cfg = AdtConfig { threads, unpack_simd, min_per_thread: 64, ..Default::default() };
+            let mut out = vec![0f32; w.len()];
+            bitunpack_into(&packed, rt, &cfg, &mut out);
+            let out_bits: Vec<u32> = out.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(out_bits, ref_bits, "unpack_simd={unpack_simd:?} threads={threads}");
+        }
+    });
+}
+
+#[test]
+fn unpack_avx2_matches_scalar_at_group_boundaries() {
+    // The sizes the AVX2 kernel's bulk/tail split cares about: empty, below
+    // one 8-weight group, exactly one group, one past it, a non-multiple,
+    // and a large non-multiple straddling many overlapping-load windows.
+    check("avx2 unpack boundary sizes", 40, |g| {
+        for n in [0usize, 1, 7, 8, 9, 33, 4097] {
+            let w: Vec<f32> = (0..n).map(|_| g.f32_any_bits()).collect();
+            for rt in RoundTo::ALL {
+                let mut packed = vec![0u8; packed_len(n, rt)];
+                bitpack_scalar_into(&w, rt, &mut packed);
+                let mut scalar = vec![0f32; n];
+                bitunpack_scalar_into(&packed, rt, &mut scalar);
+                let cfg = AdtConfig {
+                    threads: 1,
+                    unpack_simd: BitunpackImpl::Avx2,
+                    min_per_thread: 1,
+                    ..Default::default()
+                };
+                let mut simd = vec![1f32; n]; // poison: kernel must overwrite
+                bitunpack_into(&packed, rt, &cfg, &mut simd);
+                for (i, (a, b)) in scalar.iter().zip(&simd).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "n={n} rt={rt} i={i}");
+                }
+            }
         }
     });
 }

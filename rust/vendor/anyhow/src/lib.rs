@@ -1,0 +1,225 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements exactly the subset a2dtwp uses: [`Error`] with a context
+//! chain, the [`Result`] alias, the [`Context`] extension trait for
+//! `Result`/`Option`, and the `anyhow!` / `bail!` / `ensure!` macros.
+//! `{:#}` formatting renders the full context chain outermost-first,
+//! matching anyhow's alternate Display, so error-message assertions in the
+//! test suite behave identically.
+
+use std::fmt;
+
+/// Error with an ordered context chain. `chain[0]` is the outermost
+/// context; the last entry is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result<T>` alias with the crate error as default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from a printable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Build from a std error, capturing its `source()` chain.
+    pub fn from_std<E: std::error::Error>(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Wrap with an outer context layer.
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// The context chain, outermost first (used by `{:#}` / `{:?}`).
+    pub fn chain_strings(&self) -> &[String] {
+        &self.chain
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::from_std(e)
+    }
+}
+
+mod ext {
+    use super::Error;
+
+    /// Anything convertible into [`Error`] with context support. Mirrors
+    /// anyhow's private `ext::StdError` trick: a blanket impl over real
+    /// std errors plus a direct impl for `Error` (legal because `Error`
+    /// itself never implements `std::error::Error`).
+    pub trait IntoError {
+        fn into_err(self) -> Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn into_err(self) -> Error {
+            Error::from_std(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_err(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: ext::IntoError> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.into_err().context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into_err().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a message, format string, or error value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(::std::format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Assert a condition, early-returning an [`Error`] on failure.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn context_chain_renders_in_alternate_display() {
+        let e: Error = std::result::Result::<(), _>::Err(io_err())
+            .with_context(|| "reading manifest".to_string())
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        let full = format!("{e:#}");
+        assert!(full.contains("reading manifest") && full.contains("file missing"), "{full}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let e = None::<u32>.context("empty").unwrap_err();
+        assert_eq!(e.to_string(), "empty");
+        let n = 3;
+        let e = anyhow!("bad value {n}");
+        assert_eq!(e.to_string(), "bad value 3");
+        let e = anyhow!("bad value {}", 4);
+        assert_eq!(e.to_string(), "bad value 4");
+        let e = anyhow!(io_err());
+        assert!(e.to_string().contains("file missing"));
+    }
+
+    #[test]
+    fn bail_and_ensure_return_errors() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert!(f(12).unwrap_err().to_string().contains("too big"));
+        assert!(f(7).unwrap_err().to_string().contains("unlucky"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<String> {
+            let s = std::str::from_utf8(&[0xFF])?;
+            Ok(s.to_string())
+        }
+        assert!(f().is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Minimal offline stand-in for `crossbeam-utils`, backed by
+//! `std::thread::scope` (stable since Rust 1.63).
+//!
+//! Only the `thread::scope` / `Scope::spawn` / `ScopedJoinHandle::join`
+//! surface the crate's thread pool uses is provided. One behavioral
+//! difference: with std scoped threads, a panicking unjoined child makes
+//! `scope` itself panic (carrying the child's payload) instead of
+//! returning `Err`, so callers' `.expect("worker thread panicked")` is
+//! never reached — the process still panics, with the original payload.
+
+pub mod thread {
+    use std::any::Any;
+
+    /// Scope handle passed to `scope`'s closure and to spawned closures.
+    pub struct Scope<'scope, 'env: 'scope> {
+        inner: &'scope std::thread::Scope<'scope, 'env>,
+    }
+
+    /// Handle to a scoped thread; `join` returns the closure's result.
+    pub struct ScopedJoinHandle<'scope, T> {
+        inner: std::thread::ScopedJoinHandle<'scope, T>,
+    }
+
+    impl<'scope, T> ScopedJoinHandle<'scope, T> {
+        pub fn join(self) -> Result<T, Box<dyn Any + Send + 'static>> {
+            self.inner.join()
+        }
+    }
+
+    impl<'scope, 'env> Scope<'scope, 'env> {
+        /// Spawn a scoped thread. The closure receives a `&Scope` (crossbeam
+        /// signature); every call site in this repo ignores it (`move |_|`).
+        pub fn spawn<F, T>(&self, f: F) -> ScopedJoinHandle<'scope, T>
+        where
+            F: FnOnce(&Scope<'scope, 'env>) -> T + Send + 'scope,
+            T: Send + 'scope,
+        {
+            let inner = self.inner;
+            ScopedJoinHandle { inner: inner.spawn(move || f(&Scope { inner })) }
+        }
+    }
+
+    /// Create a scope for spawning borrowing threads; all threads are
+    /// joined before this returns.
+    pub fn scope<'env, F, R>(f: F) -> Result<R, Box<dyn Any + Send + 'static>>
+    where
+        F: for<'scope> FnOnce(&Scope<'scope, 'env>) -> R,
+    {
+        Ok(std::thread::scope(|s| f(&Scope { inner: s })))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::thread;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scoped_threads_borrow_and_join() {
+        let data = [1u64, 2, 3, 4];
+        let total = AtomicUsize::new(0);
+        thread::scope(|s| {
+            for chunk in data.chunks(2) {
+                let total = &total;
+                s.spawn(move |_| {
+                    total.fetch_add(chunk.iter().sum::<u64>() as usize, Ordering::Relaxed);
+                });
+            }
+        })
+        .unwrap();
+        assert_eq!(total.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn join_returns_value() {
+        let got = thread::scope(|s| {
+            let h = s.spawn(|_| 40 + 2);
+            h.join().unwrap()
+        })
+        .unwrap();
+        assert_eq!(got, 42);
+    }
+}
