@@ -1,0 +1,114 @@
+//! "Fig 6" — overlap speedup vs compression ratio, x86 vs POWER.
+//!
+//! The paper's loop (Fig 1) is serial; this bench asks what the same
+//! calibrated platform buys from layer-pipelined scheduling: per
+//! compression state (mean transfer bytes/weight), the event-driven
+//! timeline's critical path against the serial Fig-1 reference, on both
+//! evaluation platforms, VGG b64 (the Tables II/III calibration point).
+//!
+//!     cargo bench --bench fig6_overlap            # full sweep + CSV
+//!     cargo bench --bench fig6_overlap -- --smoke # CI: calibration point only
+//!
+//! Always writes `artifacts/bench_out/BENCH_timeline.json` with the
+//! VGG-b64 calibration-point numbers (serialized vs critical-path ms) so
+//! CI tracks the timeline's trajectory.
+
+use a2dtwp::awp::PolicyKind;
+use a2dtwp::figures::batch_time_overlap;
+use a2dtwp::models::vgg_a;
+use a2dtwp::sim::{OverlapMode, SystemProfile};
+use a2dtwp::util::benchkit::Table;
+use a2dtwp::util::json::Json;
+
+const BATCH: usize = 64;
+
+/// One (system, policy, bytes/weight) cell.
+fn cell(profile: &SystemProfile, policy: PolicyKind, bpw: f64) -> (f64, f64, f64) {
+    let desc = vgg_a(200);
+    let (crit, serial) =
+        batch_time_overlap(profile, &desc, BATCH, policy, bpw, OverlapMode::LayerPipelined);
+    (serial * 1e3, crit * 1e3, serial / crit)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    // x-axis: compression ratio 4/bpw (1× = 32-bit baseline … 4× = 8-bit)
+    let sweep: &[f64] = if smoke { &[3.0] } else { &[1.0, 4.0 / 3.0, 1.5, 2.0, 3.0, 4.0] };
+
+    let mut t = Table::new(
+        "Fig 6 — overlap speedup vs compression ratio (VGG b64)",
+        &["system", "ratio", "bytes/wt", "serial ms", "pipelined ms", "speedup"],
+    );
+    let mut csv = String::from("system,ratio,bytes_per_weight,serial_ms,pipelined_ms,speedup\n");
+    for profile in [SystemProfile::x86(), SystemProfile::power()] {
+        for &ratio in sweep {
+            let bpw = 4.0 / ratio;
+            // ratio 1 ⇒ the 32-bit baseline without ADT machinery
+            let policy =
+                if ratio == 1.0 { PolicyKind::Baseline } else { PolicyKind::Awp };
+            let (serial_ms, crit_ms, speedup) = cell(&profile, policy, bpw);
+            t.row(&[
+                profile.name.to_string(),
+                format!("{ratio:.2}x"),
+                format!("{bpw:.2}"),
+                format!("{serial_ms:.2}"),
+                format!("{crit_ms:.2}"),
+                format!("{speedup:.3}x"),
+            ]);
+            csv.push_str(&format!(
+                "{},{ratio:.3},{bpw:.3},{serial_ms:.3},{crit_ms:.3},{speedup:.4}\n",
+                profile.name
+            ));
+        }
+    }
+    t.print();
+
+    // straggler what-if at the calibration point (overlap-mode presets)
+    let mut s = Table::new(
+        "Overlap under straggler scenarios (VGG b64, A2DTWP ~3x)",
+        &["system", "scenario", "serial ms", "pipelined ms", "speedup"],
+    );
+    for base in [SystemProfile::x86(), SystemProfile::power()] {
+        for scenario in ["uniform", "straggler-mild", "straggler-severe"] {
+            let profile = base.clone().scenario(scenario).unwrap();
+            let (serial_ms, crit_ms, speedup) = cell(&profile, PolicyKind::Awp, 4.0 / 3.0);
+            s.row(&[
+                base.name.to_string(),
+                scenario.to_string(),
+                format!("{serial_ms:.2}"),
+                format!("{crit_ms:.2}"),
+                format!("{speedup:.3}x"),
+            ]);
+        }
+    }
+    s.print();
+
+    std::fs::create_dir_all("artifacts/bench_out").ok();
+    if !smoke {
+        std::fs::write("artifacts/bench_out/fig6_overlap.csv", &csv).ok();
+        println!("\n  wrote artifacts/bench_out/fig6_overlap.csv");
+    }
+
+    // BENCH_timeline.json: the VGG-b64 calibration point (paper's ≈3×
+    // converged compression), both platforms, serialized vs critical path.
+    let point = |profile: &SystemProfile| {
+        let (serial_ms, crit_ms, speedup) = cell(profile, PolicyKind::Awp, 4.0 / 3.0);
+        Json::obj(vec![
+            ("serialized_ms", Json::num(serial_ms)),
+            ("critical_path_ms", Json::num(crit_ms)),
+            ("overlap_speedup", Json::num(speedup)),
+        ])
+    };
+    let report = Json::obj(vec![
+        ("bench", Json::str("timeline")),
+        ("model", Json::str("vgg_a")),
+        ("batch", Json::num(BATCH as f64)),
+        ("bytes_per_weight", Json::num(4.0 / 3.0)),
+        ("x86", point(&SystemProfile::x86())),
+        ("power", point(&SystemProfile::power())),
+    ]);
+    let path = "artifacts/bench_out/BENCH_timeline.json";
+    std::fs::write(path, report.to_string_pretty()).expect("write BENCH_timeline.json");
+    println!("  wrote {path}");
+}

@@ -44,6 +44,31 @@ impl AwpParams {
         self.threshold = t;
         self
     }
+
+    /// Check the parameters are representable by the pack path.
+    ///
+    /// `step_bits` must be a positive multiple of 8 (≤ 32): Bitpack moves
+    /// whole bytes, so a step like 4 walks layers onto 12/20/28-bit states
+    /// that `RoundTo::from_bits` silently rounds — the layer *claims* more
+    /// precision than it transfers, and before this check a corrupt state
+    /// could even snap to full 32-bit. `interval` must be ≥ 1 (0 would
+    /// widen on every below-threshold batch regardless of history), and
+    /// `threshold` must be finite.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.step_bits == 0 || self.step_bits > 32 || self.step_bits % 8 != 0 {
+            return Err(format!(
+                "AWP step_bits must be a multiple of 8 in 8..=32 (byte-granular Bitpack), got {}",
+                self.step_bits
+            ));
+        }
+        if self.interval == 0 {
+            return Err("AWP interval must be ≥ 1".into());
+        }
+        if !self.threshold.is_finite() {
+            return Err(format!("AWP threshold must be finite, got {}", self.threshold));
+        }
+        Ok(())
+    }
 }
 
 impl Default for AwpParams {
@@ -75,6 +100,9 @@ pub struct AwpController {
 
 impl AwpController {
     pub fn new(num_layers: usize, params: AwpParams) -> Self {
+        if let Err(e) = params.validate() {
+            panic!("invalid AwpParams: {e}");
+        }
         AwpController {
             params,
             bits_per_layer: vec![params.initial.bits(); num_layers],
@@ -94,8 +122,14 @@ impl AwpController {
     }
 
     /// Current transfer format of `layer` (bits rounded up to bytes).
+    /// With validated params the per-layer bit state is always one of
+    /// 8/16/24/32, so the conversion cannot fail — the old
+    /// `unwrap_or(RoundTo::B4)` fallback masked corrupt states by
+    /// silently snapping a layer to full 32-bit precision.
     pub fn round_to(&self, layer: usize) -> RoundTo {
-        RoundTo::from_bits(self.bits_per_layer[layer].min(32)).unwrap_or(RoundTo::B4)
+        let bits = self.bits_per_layer[layer];
+        RoundTo::from_bits(bits)
+            .unwrap_or_else(|| panic!("corrupt AWP bit state: layer {layer} at {bits} bits"))
     }
 
     /// All layers' current formats.
@@ -106,6 +140,14 @@ impl AwpController {
     /// Observe one layer's post-backprop l²-norm for the current batch.
     /// Returns the widen event if this observation triggered one.
     pub fn observe_layer(&mut self, layer: usize, l2_norm: f64) -> Option<AwpEvent> {
+        // A layer saturated at 32 bits can never widen again: skip the
+        // interval bookkeeping entirely (the counter used to keep
+        // incrementing and resetting forever) but still record the norm
+        // so diagnostics stay meaningful.
+        if self.bits_per_layer[layer] >= 32 {
+            self.prev_norm[layer] = Some(l2_norm);
+            return None;
+        }
         let delta = match self.prev_norm[layer] {
             // First batch: no previous norm, no δ (loop starts at batch 1
             // in effect; Algorithm 1's batch 0 has no W_{batch-1}).
@@ -123,13 +165,11 @@ impl AwpController {
         if self.interval_counter[layer] >= self.params.interval {
             self.interval_counter[layer] = 0;
             let from = self.round_to(layer);
-            if self.bits_per_layer[layer] < 32 {
-                self.bits_per_layer[layer] =
-                    (self.bits_per_layer[layer] + self.params.step_bits).min(32);
-                let ev = AwpEvent { batch: self.batch, layer, from, to: self.round_to(layer) };
-                self.events.push(ev);
-                return Some(ev);
-            }
+            self.bits_per_layer[layer] =
+                (self.bits_per_layer[layer] + self.params.step_bits).min(32);
+            let ev = AwpEvent { batch: self.batch, layer, from, to: self.round_to(layer) };
+            self.events.push(ev);
+            return Some(ev);
         }
         None
     }
@@ -277,6 +317,52 @@ mod tests {
         assert_eq!(c.round_to(0), RoundTo::B4);
         // layer0: 3 weights @4B, layer1: 1 weight @1B → (12+1)/4
         assert!((c.mean_bytes_per_weight(&[3, 1]) - 13.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validate_rejects_non_byte_steps() {
+        // regression: step_bits = 4 used to be accepted and walked layers
+        // onto 12/20/28-bit states the byte-granular pack path rounds.
+        for bad in [0u32, 4, 12, 33] {
+            let p = AwpParams { step_bits: bad, ..AwpParams::default() };
+            let e = p.validate().unwrap_err();
+            assert!(e.contains("step_bits"), "{e}");
+        }
+        for good in [8u32, 16, 24, 32] {
+            assert!(AwpParams { step_bits: good, ..AwpParams::default() }.validate().is_ok());
+        }
+        assert!(AwpParams { interval: 0, ..AwpParams::default() }.validate().is_err());
+        assert!(AwpParams { threshold: f64::NAN, ..AwpParams::default() }.validate().is_err());
+        assert!(AwpParams::default().validate().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid AwpParams")]
+    fn controller_refuses_invalid_step() {
+        let p = AwpParams { step_bits: 4, ..AwpParams::default() };
+        let _ = AwpController::new(1, p);
+    }
+
+    #[test]
+    fn saturated_layers_stop_interval_counting() {
+        // interval 3 so a still-running counter would be visible at 1, 2
+        let mut c = AwpController::new(1, params(-0.001, 3));
+        let mut n = 1.0;
+        while c.round_to(0) < RoundTo::B4 {
+            n *= 0.5;
+            c.observe_batch(&[n]);
+        }
+        assert_eq!(c.events().len(), 3);
+        assert_eq!(c.interval_counter[0], 0);
+        // saturated: continuing decay must produce no counting, no events
+        // (the counter used to keep incrementing and resetting forever)
+        for _ in 0..10 {
+            n *= 0.5;
+            assert!(c.observe_batch(&[n]).is_empty());
+            assert_eq!(c.interval_counter[0], 0, "counter must stay idle at 32 bits");
+        }
+        // norms are still recorded for diagnostics
+        assert!((c.prev_norm[0].unwrap() - n).abs() < 1e-12);
     }
 
     #[test]

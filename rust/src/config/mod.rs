@@ -5,7 +5,7 @@
 use crate::adt::AdtConfig;
 use crate::awp::{AwpParams, PolicyKind};
 use crate::optim::SgdConfig;
-use crate::sim::SystemProfile;
+use crate::sim::{OverlapMode, SystemProfile};
 use crate::util::json::Json;
 
 /// Execution mode (see DESIGN.md §6).
@@ -28,6 +28,9 @@ pub struct ExperimentConfig {
     pub policy: PolicyKind,
     pub system: SystemProfile,
     pub mode: ExecMode,
+    /// Batch-phase scheduling: the paper's serial loop (default) or the
+    /// layer-pipelined overlap timeline.
+    pub overlap: OverlapMode,
     pub awp: AwpParams,
     pub sgd: SgdConfig,
     pub adt: AdtConfig,
@@ -90,6 +93,7 @@ impl ExperimentConfig {
             policy,
             system: SystemProfile::by_name(system).unwrap_or_else(SystemProfile::x86),
             mode: if model.ends_with("_micro") { ExecMode::Real } else { ExecMode::Simulated },
+            overlap: OverlapMode::Serialized,
             awp,
             sgd: SgdConfig::paper_defaults(initial_lr, 400),
             adt: AdtConfig::default(),
@@ -117,6 +121,7 @@ impl ExperimentConfig {
                     ExecMode::Simulated => "simulated",
                 }),
             ),
+            ("overlap", Json::str(self.overlap.name())),
             ("awp_threshold", Json::num(self.awp.threshold)),
             ("awp_interval", Json::num(self.awp.interval as f64)),
             ("lr", Json::num(self.sgd.schedule.initial as f64)),
@@ -166,6 +171,13 @@ mod tests {
         assert_eq!(j.req_str("policy").unwrap(), "awp");
         assert_eq!(j.req_usize("batch_size").unwrap(), 32);
         assert!(j.req_f64("awp_threshold").unwrap() < 0.0);
+        assert_eq!(j.req_str("overlap").unwrap(), "serialized");
+    }
+
+    #[test]
+    fn presets_default_to_the_paper_serial_loop() {
+        let c = ExperimentConfig::preset("vgg_a", 64, PolicyKind::Baseline, "x86");
+        assert_eq!(c.overlap, OverlapMode::Serialized);
     }
 
     #[test]

@@ -58,9 +58,19 @@ impl GpuPool {
     /// Simulated time for one data-parallel batch (the whole pool works in
     /// parallel; the profile's rates are aggregate). `packed_bytes` is the
     /// per-GPU packed weight payload to Bitunpack (0 ⇒ no ADT).
+    ///
+    /// Heterogeneous pools (straggler scenarios) gate the lockstep batch
+    /// on the slowest GPU: every device-side time is scaled by the
+    /// profile's `compute_wall_factor` (exactly 1.0 — a bit-exact no-op —
+    /// for the calibrated homogeneous platforms).
     pub fn batch_time(&self, batch: usize, packed_bytes: usize) -> ComputeBreakdown {
         let (conv_s, fc_s) = self.profile.compute_time(self.conv_fwd_flops, self.fc_fwd_flops, batch);
-        ComputeBreakdown { conv_s, fc_s, unpack_s: self.profile.unpack_time(packed_bytes) }
+        let wall = self.profile.compute_wall_factor();
+        ComputeBreakdown {
+            conv_s: conv_s * wall,
+            fc_s: fc_s * wall,
+            unpack_s: self.profile.unpack_time(packed_bytes) * wall,
+        }
     }
 }
 
@@ -96,6 +106,17 @@ mod tests {
         let a = GpuPool::new(x86.clone(), &alexnet(200)).batch_time(64, 0);
         let v = GpuPool::new(x86, &vgg_a(200)).batch_time(64, 0);
         assert!(a.fc_s / a.conv_s > 5.0 * (v.fc_s / v.conv_s));
+    }
+
+    #[test]
+    fn straggler_gates_the_lockstep_pool() {
+        let m = vgg_a(200);
+        let base = GpuPool::new(SystemProfile::x86(), &m).batch_time(64, 100 << 20);
+        let slow =
+            GpuPool::new(SystemProfile::x86().with_straggler(2, 2.0), &m).batch_time(64, 100 << 20);
+        assert!((slow.conv_s / base.conv_s - 2.0).abs() < 1e-9);
+        assert!((slow.fc_s / base.fc_s - 2.0).abs() < 1e-9);
+        assert!((slow.unpack_s / base.unpack_s - 2.0).abs() < 1e-9);
     }
 
     #[test]

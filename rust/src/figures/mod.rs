@@ -9,8 +9,10 @@
 //! trace serves both the x86 and POWER figures.
 
 use crate::awp::PolicyKind;
+use crate::interconnect::Interconnect;
 use crate::metrics::TrainCurve;
 use crate::models::ModelDesc;
+use crate::sim::{build_batch_timeline, layer_loads, layer_loads_mean_bytes, OverlapMode};
 use crate::sim::SystemProfile;
 
 /// Simulated duration of one batch given the policy's compression state.
@@ -42,19 +44,68 @@ pub fn batch_time(
         }
     }
     let (conv_s, fc_s) = profile.compute_time(conv_fwd, fc_fwd, batch);
+    // straggler/heterogeneity scenarios gate device-side phases on the
+    // slowest GPU, exactly as GpuPool::batch_time and the timeline do
+    // (×1.0 — a bit-exact no-op — for the calibrated uniform platforms).
+    let wall = profile.compute_wall_factor();
 
     let mut t = profile.h2d_time(payload + bias_bytes)
         + profile.d2h_time(full_bytes + bias_bytes)
-        + conv_s
-        + fc_s
+        + conv_s * wall
+        + fc_s * wall
         + profile.update_time(desc.param_count());
     if uses_adt {
-        t += profile.pack_time(full_bytes) + profile.unpack_time(payload);
+        t += profile.pack_time(full_bytes) + profile.unpack_time(payload) * wall;
     }
     if policy.needs_norms() {
         t += profile.norm_time(full_bytes);
     }
     t
+}
+
+/// Simulated duration of one batch under the event-driven overlap
+/// timeline ("Fig 6" machinery): returns `(critical_path_s, serial_s)`
+/// where `serial_s` is the Fig-1 serial reference of the same per-layer
+/// event set. With `OverlapMode::Serialized` the two are equal.
+pub fn batch_time_overlap(
+    profile: &SystemProfile,
+    desc: &ModelDesc,
+    batch: usize,
+    policy: PolicyKind,
+    bytes_per_weight: f64,
+    mode: OverlapMode,
+) -> (f64, f64) {
+    let uses_adt = policy.uses_adt();
+    let loads = if uses_adt {
+        layer_loads_mean_bytes(desc, bytes_per_weight)
+    } else {
+        layer_loads(desc, None)
+    };
+    let mut ic = Interconnect::new(profile.clone());
+    let tl = build_batch_timeline(
+        mode,
+        profile,
+        &mut ic,
+        &loads,
+        batch,
+        uses_adt,
+        policy.needs_norms(),
+    );
+    (tl.critical_path_s(), tl.serialized_sum_s())
+}
+
+/// Fig 6 y-axis: serial-loop time ÷ layer-pipelined critical path for one
+/// (platform, policy, compression) cell.
+pub fn overlap_speedup(
+    profile: &SystemProfile,
+    desc: &ModelDesc,
+    batch: usize,
+    policy: PolicyKind,
+    bytes_per_weight: f64,
+) -> f64 {
+    let (crit, serial) =
+        batch_time_overlap(profile, desc, batch, policy, bytes_per_weight, OverlapMode::LayerPipelined);
+    serial / crit
 }
 
 /// Replay a trace on `profile`, returning cumulative simulated time at
@@ -181,6 +232,52 @@ mod tests {
         // and a fixed policy is cheaper than AWP at equal compression
         let fixed = batch_time(&p, &d, 64, PolicyKind::Fixed(RoundTo::B1), 1.2);
         assert!(fixed < awp);
+    }
+
+    #[test]
+    fn overlap_speedup_behaves_like_fig6() {
+        let d = vgg_a(200);
+        for profile in [SystemProfile::x86(), SystemProfile::power()] {
+            // serialized mode: critical path == serial reference, exactly
+            let (crit, serial) = batch_time_overlap(
+                &profile, &d, 64, PolicyKind::Awp, 4.0 / 3.0, OverlapMode::Serialized,
+            );
+            assert_eq!(crit.to_bits(), serial.to_bits());
+            // pipelined mode hides transfer behind compute on both
+            // platforms, at the baseline and at ≈3× compression
+            for (policy, bpw) in [(PolicyKind::Baseline, 4.0), (PolicyKind::Awp, 4.0 / 3.0)] {
+                let s = overlap_speedup(&profile, &d, 64, policy, bpw);
+                assert!(s > 1.0, "{}: speedup={s}", profile.name);
+                assert!(s < 3.0, "{}: speedup={s} implausibly high", profile.name);
+            }
+        }
+        // compression and overlap compose on x86: the uncompressed
+        // baseline's critical path is stuck behind the 154 ms broadcast
+        // chain (fwd of layer k needs h2d of layer k), while at ≈3×
+        // compression that chain shrinks below compute and hides — so
+        // A²DTWP gains *more* from pipelining than the 32-bit baseline
+        // (≈1.81× vs ≈1.57× by the calibrated rates).
+        let x86 = SystemProfile::x86();
+        let base = overlap_speedup(&x86, &d, 64, PolicyKind::Baseline, 4.0);
+        let adt = overlap_speedup(&x86, &d, 64, PolicyKind::Awp, 4.0 / 3.0);
+        assert!(adt > base, "a2dtwp {adt} vs baseline {base}");
+        assert!((base - 1.57).abs() < 0.15, "baseline speedup drifted: {base}");
+        assert!((adt - 1.81).abs() < 0.15, "a2dtwp speedup drifted: {adt}");
+    }
+
+    #[test]
+    fn batch_time_honours_straggler_scenarios() {
+        // regression: scenario profiles must slow the replayed figures
+        // exactly as they slow GpuPool / the timeline.
+        let d = vgg_a(200);
+        let base = SystemProfile::x86();
+        let slow = SystemProfile::x86().scenario("straggler-severe").unwrap();
+        let tb = batch_time(&base, &d, 64, PolicyKind::Awp, 4.0 / 3.0);
+        let ts = batch_time(&slow, &d, 64, PolicyKind::Awp, 4.0 / 3.0);
+        assert!(ts > tb, "straggler must lengthen the replayed batch");
+        // compute+unpack doubled, transfers/CPU untouched
+        let expected = tb + (128.72 + 33.51) * 1e-3 + 4.51e-3;
+        assert!((ts / expected - 1.0).abs() < 0.05, "ts={ts} expected≈{expected}");
     }
 
     #[test]

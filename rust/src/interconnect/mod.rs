@@ -6,11 +6,20 @@
 //! [`Transfer`] computes its wall time from the system profile's effective
 //! bandwidth and is accumulated per batch by the coordinator's profiler.
 //!
+//! The interconnect is split into two independent per-direction
+//! [`Channel`]s (PCIe and NVLink are full duplex): the H2D channel carries
+//! the weight broadcast, the D2H channel the gradient gather, and each
+//! keeps its own cumulative accounting and — when driving the overlap
+//! timeline — its own resource clock, so a broadcast and a gather can be
+//! in flight simultaneously under [`crate::sim::OverlapMode::LayerPipelined`].
+//!
 //! The simulator also models the link-sharing structure that makes the
 //! paper's broadcast expensive: all `n_gpus` GPUs receive the full weight
 //! payload every batch (Fig 1), so host-to-device cost scales with
 //! `n_gpus · payload`, while gradients return at full f32 width.
 
+use crate::profiler::Phase;
+use crate::sim::timeline::{EventId, Resource, Timeline};
 use crate::sim::SystemProfile;
 
 /// Direction of a simulated transfer.
@@ -20,6 +29,16 @@ pub enum Direction {
     H2D,
     /// Device → host (f32 gradient contributions).
     D2H,
+}
+
+impl Direction {
+    /// The timeline resource this direction's channel occupies.
+    pub fn resource(self) -> Resource {
+        match self {
+            Direction::H2D => Resource::LinkH2d,
+            Direction::D2H => Resource::LinkD2h,
+        }
+    }
 }
 
 /// One accounted transfer.
@@ -32,26 +51,89 @@ pub struct Transfer {
     pub seconds: f64,
 }
 
-/// Simulated CPU↔GPU interconnect of one platform.
+/// One direction of the CPU↔GPU link: effective bandwidth, setup latency
+/// and the GPU fan-out, with cumulative accounting.
+#[derive(Clone, Debug)]
+pub struct Channel {
+    direction: Direction,
+    /// Aggregate effective bandwidth, bytes/s.
+    bps: f64,
+    /// Per-transfer setup latency, seconds.
+    latency_s: f64,
+    /// GPUs served per transfer (broadcast/gather fan-out).
+    fanout: usize,
+    total_s: f64,
+    bytes_total: u64,
+}
+
+impl Channel {
+    pub fn new(direction: Direction, bps: f64, latency_s: f64, fanout: usize) -> Channel {
+        Channel { direction, bps, latency_s, fanout, total_s: 0.0, bytes_total: 0 }
+    }
+
+    pub fn direction(&self) -> Direction {
+        self.direction
+    }
+
+    /// Wall seconds for `bytes_per_gpu` moved to/from every GPU (same
+    /// arithmetic as `SystemProfile::{h2d,d2h}_time`, bit-for-bit).
+    pub fn transfer_time(&self, bytes_per_gpu: usize) -> f64 {
+        self.latency_s + self.fanout as f64 * bytes_per_gpu as f64 / self.bps
+    }
+
+    /// Account one transfer.
+    pub fn transfer(&mut self, bytes_per_gpu: usize) -> Transfer {
+        let seconds = self.transfer_time(bytes_per_gpu);
+        self.total_s += seconds;
+        self.bytes_total += (bytes_per_gpu * self.fanout) as u64;
+        Transfer { direction: self.direction, bytes_per_gpu, seconds }
+    }
+
+    /// Account one transfer *and* enqueue it on the overlap timeline as an
+    /// event on this channel's link resource, after `deps`.
+    pub fn enqueue(
+        &mut self,
+        timeline: &mut Timeline,
+        phase: Phase,
+        bytes_per_gpu: usize,
+        deps: &[EventId],
+    ) -> EventId {
+        let t = self.transfer(bytes_per_gpu);
+        timeline.schedule(self.direction.resource(), phase, t.seconds, deps)
+    }
+
+    /// Cumulative accounted seconds.
+    pub fn total_s(&self) -> f64 {
+        self.total_s
+    }
+
+    /// Cumulative accounted bytes (across all GPUs).
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_total
+    }
+
+    pub fn reset(&mut self) {
+        self.total_s = 0.0;
+        self.bytes_total = 0;
+    }
+}
+
+/// Simulated CPU↔GPU interconnect of one platform: one channel per
+/// direction.
 #[derive(Clone, Debug)]
 pub struct Interconnect {
     profile: SystemProfile,
-    /// Cumulative accounted time per direction (seconds).
-    pub h2d_total_s: f64,
-    pub d2h_total_s: f64,
-    pub h2d_bytes_total: u64,
-    pub d2h_bytes_total: u64,
+    pub h2d: Channel,
+    pub d2h: Channel,
 }
 
 impl Interconnect {
     pub fn new(profile: SystemProfile) -> Self {
-        Interconnect {
-            profile,
-            h2d_total_s: 0.0,
-            d2h_total_s: 0.0,
-            h2d_bytes_total: 0,
-            d2h_bytes_total: 0,
-        }
+        let h2d =
+            Channel::new(Direction::H2D, profile.h2d_bps, profile.link_latency_s, profile.n_gpus);
+        let d2h =
+            Channel::new(Direction::D2H, profile.d2h_bps, profile.link_latency_s, profile.n_gpus);
+        Interconnect { profile, h2d, d2h }
     }
 
     pub fn profile(&self) -> &SystemProfile {
@@ -60,32 +142,38 @@ impl Interconnect {
 
     /// Account a host→device broadcast of `bytes_per_gpu` to every GPU.
     pub fn broadcast(&mut self, bytes_per_gpu: usize) -> Transfer {
-        let seconds = self.profile.h2d_time(bytes_per_gpu);
-        self.h2d_total_s += seconds;
-        self.h2d_bytes_total += (bytes_per_gpu * self.profile.n_gpus) as u64;
-        Transfer { direction: Direction::H2D, bytes_per_gpu, seconds }
+        self.h2d.transfer(bytes_per_gpu)
     }
 
     /// Account a device→host gather of `bytes_per_gpu` from every GPU.
     pub fn gather(&mut self, bytes_per_gpu: usize) -> Transfer {
-        let seconds = self.profile.d2h_time(bytes_per_gpu);
-        self.d2h_total_s += seconds;
-        self.d2h_bytes_total += (bytes_per_gpu * self.profile.n_gpus) as u64;
-        Transfer { direction: Direction::D2H, bytes_per_gpu, seconds }
+        self.d2h.transfer(bytes_per_gpu)
+    }
+
+    pub fn h2d_total_s(&self) -> f64 {
+        self.h2d.total_s()
+    }
+    pub fn d2h_total_s(&self) -> f64 {
+        self.d2h.total_s()
+    }
+    pub fn h2d_bytes_total(&self) -> u64 {
+        self.h2d.bytes_total()
+    }
+    pub fn d2h_bytes_total(&self) -> u64 {
+        self.d2h.bytes_total()
     }
 
     /// Reset accumulated accounting (per-experiment reuse).
     pub fn reset(&mut self) {
-        self.h2d_total_s = 0.0;
-        self.d2h_total_s = 0.0;
-        self.h2d_bytes_total = 0;
-        self.d2h_bytes_total = 0;
+        self.h2d.reset();
+        self.d2h.reset();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sim::OverlapMode;
 
     #[test]
     fn broadcast_accounts_bandwidth_and_latency() {
@@ -93,7 +181,18 @@ mod tests {
         let t = ic.broadcast(518_298_368);
         assert_eq!(t.direction, Direction::H2D);
         assert!((t.seconds - 0.15393).abs() < 0.002, "t={}", t.seconds);
-        assert_eq!(ic.h2d_bytes_total, 4 * 518_298_368);
+        assert_eq!(ic.h2d_bytes_total(), 4 * 518_298_368);
+    }
+
+    #[test]
+    fn channel_time_matches_profile_time() {
+        // the channel must preserve the calibrated arithmetic bit-for-bit
+        let p = SystemProfile::power();
+        let ic = Interconnect::new(p.clone());
+        for bytes in [0usize, 64, 1 << 20, 518_298_368] {
+            assert_eq!(ic.h2d.transfer_time(bytes).to_bits(), p.h2d_time(bytes).to_bits());
+            assert_eq!(ic.d2h.transfer_time(bytes).to_bits(), p.d2h_time(bytes).to_bits());
+        }
     }
 
     #[test]
@@ -109,7 +208,7 @@ mod tests {
         let mut ic = Interconnect::new(SystemProfile::x86());
         let t = ic.gather(518_298_368);
         assert!((t.seconds - 0.06851).abs() < 0.001, "t={}", t.seconds);
-        assert_eq!(ic.d2h_bytes_total, 4 * 518_298_368);
+        assert_eq!(ic.d2h_bytes_total(), 4 * 518_298_368);
     }
 
     #[test]
@@ -118,12 +217,12 @@ mod tests {
         ic.broadcast(1000);
         ic.broadcast(1000);
         ic.gather(500);
-        assert!(ic.h2d_total_s > 0.0);
-        assert_eq!(ic.h2d_bytes_total, 8000);
-        assert_eq!(ic.d2h_bytes_total, 2000);
+        assert!(ic.h2d_total_s() > 0.0);
+        assert_eq!(ic.h2d_bytes_total(), 8000);
+        assert_eq!(ic.d2h_bytes_total(), 2000);
         ic.reset();
-        assert_eq!(ic.h2d_total_s, 0.0);
-        assert_eq!(ic.h2d_bytes_total, 0);
+        assert_eq!(ic.h2d_total_s(), 0.0);
+        assert_eq!(ic.h2d_bytes_total(), 0);
     }
 
     #[test]
@@ -132,5 +231,20 @@ mod tests {
         let tiny = ic.broadcast(64).seconds;
         assert!(tiny >= ic.profile().link_latency_s);
         assert!(tiny < 2.0 * ic.profile().link_latency_s);
+    }
+
+    #[test]
+    fn channels_overlap_on_the_timeline() {
+        // per-direction channels are independent resources: a broadcast
+        // and a gather enqueued with no dependencies run concurrently.
+        let mut ic = Interconnect::new(SystemProfile::x86());
+        let mut tl = Timeline::new(OverlapMode::LayerPipelined);
+        let a = ic.h2d.enqueue(&mut tl, Phase::H2D, 518_298_368, &[]);
+        let b = ic.d2h.enqueue(&mut tl, Phase::D2H, 518_298_368, &[]);
+        let (fa, fb) = (tl.finish_s(a), tl.finish_s(b));
+        assert!((tl.critical_path_s() - fa.max(fb)).abs() < 1e-15);
+        assert!(tl.critical_path_s() < fa + fb, "directions must not serialize");
+        // accounting still accumulates per channel
+        assert!(ic.h2d_total_s() > 0.0 && ic.d2h_total_s() > 0.0);
     }
 }

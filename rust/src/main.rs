@@ -18,7 +18,7 @@ use a2dtwp::config::ExperimentConfig;
 use a2dtwp::coordinator::{formats_for_mean_bytes, SimRunner, Trainer};
 use a2dtwp::models::{model_by_name, MODEL_NAMES};
 use a2dtwp::profiler::Profiler;
-use a2dtwp::sim::SystemProfile;
+use a2dtwp::sim::{OverlapMode, SystemProfile, OVERLAP_NAMES, SCENARIO_NAMES};
 use a2dtwp::util::benchkit::Table;
 use a2dtwp::util::cli::{Args, Spec};
 
@@ -28,6 +28,8 @@ const USAGE: &str = "usage: a2dtwp <train|profile|models|info> [options]
     --batch-size N       global batch (split across 4 simulated GPUs)
     --policy P           baseline|awp|fixed8|fixed16|fixed24|fixed32
     --system S           x86|power
+    --scenario NAME      uniform|straggler-mild|straggler-severe|hetero-linear
+    --overlap M          serialized|pipelined (batch-phase scheduling)
     --max-batches N      training length cap
     --val-every N        validation cadence (batches)
     --target-error E     stop when top-1 val error <= E
@@ -42,6 +44,8 @@ fn main() {
             "batch-size",
             "policy",
             "system",
+            "scenario",
+            "overlap",
             "max-batches",
             "val-every",
             "target-error",
@@ -91,6 +95,16 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
         return Err(format!("unknown system '{system}' (x86|power)"));
     }
     let mut cfg = ExperimentConfig::preset(&model, batch, policy, system);
+    if let Some(scenario) = args.get("scenario") {
+        cfg.system = cfg.system.clone().scenario(scenario).ok_or_else(|| {
+            format!("unknown scenario '{scenario}' ({})", SCENARIO_NAMES.join("|"))
+        })?;
+    }
+    if let Some(overlap) = args.get("overlap") {
+        cfg.overlap = OverlapMode::parse(overlap).ok_or_else(|| {
+            format!("unknown overlap mode '{overlap}' ({})", OVERLAP_NAMES.join("|"))
+        })?;
+    }
     cfg.max_batches = args.get_u64("max-batches", cfg.max_batches)?;
     cfg.val_every = args.get_u64("val-every", cfg.val_every)?;
     cfg.target_error = args.get_f64("target-error", cfg.target_error)?;
@@ -133,6 +147,13 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     for ph in a2dtwp::profiler::Phase::ALL {
         println!("  {:<24} {:8.3}", ph.label(), report.profiler.avg_s(ph) * 1e3);
     }
+    if cfg.overlap == OverlapMode::LayerPipelined {
+        println!(
+            "overlap: pipelined — avg critical path {:.3} ms/batch ({:.2}x vs serial phases)",
+            report.profiler.avg_critical_batch_s() * 1e3,
+            report.profiler.overlap_speedup()
+        );
+    }
     if let Some(path) = args.get("csv") {
         std::fs::write(path, report.curve.to_csv())?;
         println!("wrote {path}");
@@ -146,27 +167,41 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
     let system = args.get_or("system", "x86");
     let desc = model_by_name(model)
         .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
-    let profile = SystemProfile::by_name(system)
+    let mut profile = SystemProfile::by_name(system)
         .ok_or_else(|| anyhow::anyhow!("unknown system '{system}'"))?;
+    if let Some(scenario) = args.get("scenario") {
+        profile = profile.scenario(scenario).ok_or_else(|| {
+            anyhow::anyhow!("unknown scenario '{scenario}' ({})", SCENARIO_NAMES.join("|"))
+        })?;
+    }
+    let overlap = match args.get("overlap") {
+        Some(o) => OverlapMode::parse(o).ok_or_else(|| {
+            anyhow::anyhow!("unknown overlap mode '{o}' ({})", OVERLAP_NAMES.join("|"))
+        })?,
+        None => OverlapMode::Serialized,
+    };
     let mut runner = SimRunner::new(desc, profile, Default::default(), 7);
+    runner.set_overlap(overlap);
 
     // 32-bit baseline column
+    let base = runner.batch_timed(None, batch, false);
     let mut base_prof = Profiler::new();
-    runner.batch(None, batch, false).add_to(&mut base_prof);
+    base.add_to(&mut base_prof);
     // A²DTWP column at the paper's converged ≈3× compression state
     let formats = formats_for_mean_bytes(&runner.desc, 4.0 / 3.0);
+    let adt = runner.batch_timed(Some(&formats), batch, true);
     let mut adt_prof = Profiler::new();
-    runner.batch(Some(&formats), batch, true).add_to(&mut adt_prof);
+    adt.add_to(&mut adt_prof);
 
     let mut t = Table::new(
-        format!("{model} b{batch} on {system} — per-kernel profile (ms)"),
+        format!("{model} b{batch} on {system} — per-kernel profile (ms, {})", overlap.name()),
         &["kernel", "32-bit FP", "A2DTWP"],
     );
-    for (label, base, adt) in Profiler::table_rows(&base_prof, &adt_prof) {
+    for (label, base_ms, adt_ms) in Profiler::table_rows(&base_prof, &adt_prof) {
         t.row(&[
             label,
-            base.map_or("N/A".into(), |v| format!("{v:.2}")),
-            format!("{adt:.2}"),
+            base_ms.map_or("N/A".into(), |v| format!("{v:.2}")),
+            format!("{adt_ms:.2}"),
         ]);
     }
     t.print();
@@ -175,6 +210,19 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         adt_prof.awp_share() * 100.0,
         adt_prof.adt_share() * 100.0
     );
+    println!(
+        "batch wall time ({}): 32-bit {:.2} ms  A2DTWP {:.2} ms",
+        overlap.name(),
+        base.critical_path_s * 1e3,
+        adt.critical_path_s * 1e3,
+    );
+    if overlap == OverlapMode::LayerPipelined {
+        println!(
+            "overlap speedup vs serial loop: 32-bit {:.2}x  A2DTWP {:.2}x",
+            base.overlap_speedup(),
+            adt.overlap_speedup(),
+        );
+    }
     if let Some(path) = args.get("csv") {
         t.save_csv(path)?;
         println!("wrote {path}");

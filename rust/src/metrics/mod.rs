@@ -110,7 +110,9 @@ impl TrainCurve {
                 batch: p.req_usize("batch")? as u64,
                 sim_time_s: p.req_f64("sim_time_s")?,
                 val_error: p.req_f64("val_error")?,
-                // train_loss may be null (NaN before the first batch)
+                // train_loss is NaN before the first batch; the writer
+                // encodes that as the string "NaN" (older traces: null),
+                // either of which reads back as a non-number here.
                 train_loss: p.get("train_loss").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
                 bytes_per_weight: p.req_f64("bytes_per_weight")?,
             });
@@ -181,5 +183,27 @@ mod tests {
         let csv = curve().to_csv();
         assert_eq!(csv.lines().count(), 5);
         assert!(csv.starts_with("batch,"));
+    }
+
+    #[test]
+    fn nan_train_loss_roundtrips_through_json() {
+        // the batch-0 point records train_loss = NaN; its serialized form
+        // must stay valid JSON and read back as NaN (not break the trace
+        // cache or leak a bare `NaN` token).
+        let mut c = TrainCurve::new("vgg_micro", "baseline", 64, "x86");
+        c.push(ValPoint {
+            batch: 0,
+            sim_time_s: 0.0,
+            val_error: 0.9,
+            train_loss: f64::NAN,
+            bytes_per_weight: 4.0,
+        });
+        let s = c.to_json().to_string_compact();
+        let c2 = TrainCurve::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert!(c2.points[0].train_loss.is_nan());
+        // legacy traces encoded the same point as null — still accepted
+        let legacy = s.replace("\"NaN\"", "null");
+        let c3 = TrainCurve::from_json(&Json::parse(&legacy).unwrap()).unwrap();
+        assert!(c3.points[0].train_loss.is_nan());
     }
 }

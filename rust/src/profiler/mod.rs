@@ -70,7 +70,10 @@ impl fmt::Display for Phase {
     }
 }
 
-/// Accumulates per-phase time over batches.
+/// Accumulates per-phase *busy* time over batches (the Tables II/III
+/// quantity) plus, when the overlap timeline drives the batch, the
+/// critical-path wall time of each batch. In the default serialized mode
+/// the critical path *is* the phase sum, so the two views coincide.
 #[derive(Clone, Debug, Default)]
 pub struct Profiler {
     totals_s: [f64; 8],
@@ -79,6 +82,10 @@ pub struct Profiler {
     current_batch_s: f64,
     /// Total of the most recently completed batch, recorded at `end_batch`.
     last_batch_s: f64,
+    /// Cumulative critical-path (wall) seconds over completed batches.
+    crit_total_s: f64,
+    /// Critical path of the most recently completed batch.
+    last_crit_s: f64,
 }
 
 impl Profiler {
@@ -93,9 +100,19 @@ impl Profiler {
     }
 
     /// Mark one batch complete, recording its per-phase sum for
-    /// [`last_batch_s`](Self::last_batch_s).
+    /// [`last_batch_s`](Self::last_batch_s). The batch's critical path is
+    /// the phase sum (fully serialized Fig-1 loop).
     pub fn end_batch(&mut self) {
+        let serial = self.current_batch_s;
+        self.end_batch_with_critical_path(serial);
+    }
+
+    /// Mark one batch complete whose wall time was determined by the
+    /// overlap timeline's critical path rather than the phase sum.
+    pub fn end_batch_with_critical_path(&mut self, critical_path_s: f64) {
         self.last_batch_s = self.current_batch_s;
+        self.last_crit_s = critical_path_s;
+        self.crit_total_s += critical_path_s;
         self.current_batch_s = 0.0;
         self.batches += 1;
     }
@@ -108,6 +125,32 @@ impl Profiler {
     /// batch. Zero before the first `end_batch`.
     pub fn last_batch_s(&self) -> f64 {
         self.last_batch_s
+    }
+
+    /// Critical-path wall time of the most recently completed batch
+    /// (equals [`last_batch_s`](Self::last_batch_s) in serialized mode).
+    pub fn last_critical_s(&self) -> f64 {
+        self.last_crit_s
+    }
+
+    /// Per-batch average critical-path wall time (0 before any batch).
+    pub fn avg_critical_batch_s(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.crit_total_s / self.batches as f64
+        }
+    }
+
+    /// Busy-sum ÷ critical-path speedup of the recorded schedule (1.0 in
+    /// serialized mode; > 1 when phases overlapped; 0 with no batches).
+    pub fn overlap_speedup(&self) -> f64 {
+        let crit = self.avg_critical_batch_s();
+        if crit == 0.0 {
+            0.0
+        } else {
+            self.avg_batch_s() / crit
+        }
     }
 
     /// Per-batch average seconds of `phase`.
@@ -129,13 +172,25 @@ impl Profiler {
     }
 
     /// AWP's share of batch time (paper §V-G: 1.05% x86 / 0.54% POWER).
+    /// 0 for an empty profiler (a 0/0 here used to leak NaN into reports).
     pub fn awp_share(&self) -> f64 {
-        self.avg_s(Phase::AwpNorm) / self.avg_batch_s()
+        let total = self.avg_batch_s();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.avg_s(Phase::AwpNorm) / total
+        }
     }
 
     /// ADT's share of batch time (paper §V-G: 6.60% x86 / 6.82% POWER).
+    /// 0 for an empty profiler, as with [`awp_share`](Self::awp_share).
     pub fn adt_share(&self) -> f64 {
-        (self.avg_s(Phase::Bitpack) + self.avg_s(Phase::Bitunpack)) / self.avg_batch_s()
+        let total = self.avg_batch_s();
+        if total == 0.0 {
+            0.0
+        } else {
+            (self.avg_s(Phase::Bitpack) + self.avg_s(Phase::Bitunpack)) / total
+        }
     }
 
     /// Render the paper's two-column table given a baseline profiler
@@ -234,5 +289,30 @@ mod tests {
         let p = Profiler::new();
         assert_eq!(p.avg_s(Phase::H2D), 0.0);
         assert_eq!(p.avg_batch_s(), 0.0);
+        // regression: zero-batch shares used to return NaN (0/0), which
+        // poisoned downstream comparisons and JSON output.
+        assert_eq!(p.awp_share(), 0.0);
+        assert_eq!(p.adt_share(), 0.0);
+        assert!(p.awp_share().is_finite() && p.adt_share().is_finite());
+        assert_eq!(p.avg_critical_batch_s(), 0.0);
+        assert_eq!(p.overlap_speedup(), 0.0);
+    }
+
+    #[test]
+    fn critical_path_tracks_serialized_and_overlapped_batches() {
+        let mut p = Profiler::new();
+        p.add(Phase::H2D, 0.1);
+        p.add(Phase::Conv, 0.3);
+        p.end_batch(); // serialized: critical path == phase sum
+        assert_eq!(p.last_critical_s().to_bits(), p.last_batch_s().to_bits());
+        p.add(Phase::H2D, 0.1);
+        p.add(Phase::Conv, 0.3);
+        p.end_batch_with_critical_path(0.3); // fully hidden transfer
+        assert!((p.last_critical_s() - 0.3).abs() < 1e-12);
+        assert!((p.last_batch_s() - 0.4).abs() < 1e-12);
+        // busy averages unchanged by how batches were scheduled
+        assert!((p.avg_batch_s() - 0.4).abs() < 1e-12);
+        assert!((p.avg_critical_batch_s() - 0.35).abs() < 1e-12);
+        assert!((p.overlap_speedup() - 0.4 / 0.35).abs() < 1e-12);
     }
 }

@@ -1,6 +1,13 @@
-//! Testbed simulation: profiles of the paper's two hardware platforms and
-//! the calibration constants that map model descriptors to wall-clock time.
+//! Testbed simulation: profiles of the paper's two hardware platforms,
+//! the calibration constants that map model descriptors to wall-clock
+//! time, and the event-driven overlap timeline that turns those rates
+//! into a what-if scheduling engine.
 
 mod system;
+pub mod timeline;
 
-pub use system::{SystemProfile, SYSTEM_NAMES};
+pub use system::{SystemProfile, SCENARIO_NAMES, SYSTEM_NAMES};
+pub use timeline::{
+    build_batch_timeline, layer_loads, layer_loads_mean_bytes, Event, EventId, LayerLoad,
+    OverlapMode, Resource, Timeline, OVERLAP_NAMES,
+};

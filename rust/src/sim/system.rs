@@ -48,7 +48,18 @@ pub struct SystemProfile {
     pub bytes_per_flop: f64,
     /// CPU threads available for Bitpack / l²-norm (paper: 16 / 40).
     pub cpu_threads: usize,
+    /// Per-GPU relative speed multipliers (empty ⇒ homogeneous pool at
+    /// the calibrated rates). Synchronous data parallelism splits every
+    /// batch evenly, so the pool's wall time is gated by the *slowest*
+    /// GPU — see [`compute_wall_factor`](Self::compute_wall_factor).
+    pub gpu_speed: Vec<f64>,
 }
+
+/// Scenario presets accepted by `--scenario`: named perturbations of a
+/// base platform profile for what-if exploration (heterogeneous pools,
+/// stragglers). `"uniform"` is the calibrated paper platform.
+pub const SCENARIO_NAMES: [&str; 4] =
+    ["uniform", "straggler-mild", "straggler-severe", "hetero-linear"];
 
 /// VGG-A/200 f32 payload used for calibration (Table II/III workload):
 /// 129,574,592 weights × 4 B = 518,298,368 B, broadcast to 4 GPUs.
@@ -82,6 +93,7 @@ impl SystemProfile {
             norm_bps: VGG_PAYLOAD / 0.00388,
             bytes_per_flop: 1.22,
             cpu_threads: 16,
+            gpu_speed: Vec::new(),
         }
     }
 
@@ -104,6 +116,7 @@ impl SystemProfile {
             norm_bps: VGG_PAYLOAD / 0.00093,
             bytes_per_flop: 0.86,
             cpu_threads: 40,
+            gpu_speed: Vec::new(),
         }
     }
 
@@ -112,6 +125,59 @@ impl SystemProfile {
             "x86" => Some(SystemProfile::x86()),
             "power" => Some(SystemProfile::power()),
             _ => None,
+        }
+    }
+
+    // ---- heterogeneity / scenario perturbations ---------------------------
+
+    /// Replace the per-GPU speed multipliers (one per GPU, all > 0).
+    pub fn with_gpu_speeds(mut self, speeds: Vec<f64>) -> SystemProfile {
+        assert_eq!(speeds.len(), self.n_gpus, "one speed multiplier per GPU");
+        assert!(
+            speeds.iter().all(|s| s.is_finite() && *s > 0.0),
+            "GPU speed multipliers must be finite and positive"
+        );
+        self.gpu_speed = speeds;
+        self
+    }
+
+    /// One GPU running `slowdown`× slower than the calibrated rate
+    /// (slowdown ≥ 1: thermal throttling, a failing card, PCIe
+    /// contention…).
+    pub fn with_straggler(self, gpu: usize, slowdown: f64) -> SystemProfile {
+        assert!(slowdown >= 1.0, "straggler slowdown must be ≥ 1");
+        let n = self.n_gpus;
+        assert!(gpu < n, "straggler index out of range");
+        let mut speeds = vec![1.0; n];
+        speeds[gpu] = 1.0 / slowdown;
+        self.with_gpu_speeds(speeds)
+    }
+
+    /// Apply a named scenario preset (see [`SCENARIO_NAMES`]).
+    pub fn scenario(self, name: &str) -> Option<SystemProfile> {
+        match name {
+            "uniform" => Some(self),
+            "straggler-mild" => Some(self.with_straggler(0, 1.25)),
+            "straggler-severe" => Some(self.with_straggler(0, 2.0)),
+            "hetero-linear" => {
+                let n = self.n_gpus;
+                let speeds = (0..n).map(|g| 1.0 - 0.05 * g as f64).collect();
+                Some(self.with_gpu_speeds(speeds))
+            }
+            _ => None,
+        }
+    }
+
+    /// Wall-time multiplier for device-side phases: with even batch
+    /// sharding the lockstep pool finishes when its slowest GPU does, so
+    /// the factor is `max_g 1/speed_g` — below 1.0 for a uniformly
+    /// faster-than-calibrated pool — and exactly 1.0 for an empty
+    /// (homogeneous, calibrated) speed list.
+    pub fn compute_wall_factor(&self) -> f64 {
+        if self.gpu_speed.is_empty() {
+            1.0
+        } else {
+            self.gpu_speed.iter().map(|s| 1.0 / s).fold(0.0, f64::max)
         }
     }
 
@@ -237,6 +303,26 @@ mod tests {
             let cost = s.unpack_time(payload / 3);
             assert!(cost < saved / 5.0, "{}: cost={cost} saved={saved}", s.name);
         }
+    }
+
+    #[test]
+    fn scenario_presets_and_wall_factor() {
+        assert_eq!(SystemProfile::x86().compute_wall_factor(), 1.0);
+        for n in SCENARIO_NAMES {
+            assert!(SystemProfile::x86().scenario(n).is_some(), "{n}");
+        }
+        assert!(SystemProfile::x86().scenario("bogus").is_none());
+        // straggler gates the whole lockstep pool
+        let s = SystemProfile::x86().with_straggler(1, 2.0);
+        assert!((s.compute_wall_factor() - 2.0).abs() < 1e-12);
+        let h = SystemProfile::power().scenario("hetero-linear").unwrap();
+        assert!((h.compute_wall_factor() - 1.0 / 0.85).abs() < 1e-12);
+        // the calibrated uniform profile is untouched
+        let u = SystemProfile::x86().scenario("uniform").unwrap();
+        assert!(u.gpu_speed.is_empty());
+        // a uniformly faster pool speeds up (no silent >= 1.0 clamp)
+        let fast = SystemProfile::x86().with_gpu_speeds(vec![2.0; 4]);
+        assert!((fast.compute_wall_factor() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,487 @@
+//! Event-driven overlap timeline — the what-if engine over the calibrated
+//! Table II/III rates.
+//!
+//! The paper's training loop (Fig 1) is strictly serial per batch:
+//! pack → broadcast → unpack/compute → gather → update. The calibrated
+//! simulator reproduced exactly that (`SimBatchProfile::total` sums the
+//! phases), which made it impossible to ask the questions the related work
+//! answers — Ma & Rusu overlap CPU and GPU work on exactly this class of
+//! heterogeneous platform, and HyPar shows layer-wise scheduling of tensor
+//! movement is the lever for accelerator arrays. This module turns the
+//! same per-phase rates into an event-driven schedule so those scenarios
+//! become one dependency-wiring away.
+//!
+//! **Model.** Every [`Resource`] (CPU leader, H2D link channel, D2H link
+//! channel, GPU pool / per-GPU lanes) carries a clock. An event occupies
+//! one resource for a duration and may depend on earlier events; its start
+//! is the max of its resource's clock and its dependencies' finish times.
+//! Two wirings are supported:
+//!
+//! * [`OverlapMode::Serialized`] — every event depends on the previously
+//!   scheduled one (the Fig 1 global chain). The critical path is then the
+//!   plain left-fold sum of all durations **bit-exactly** (same additions
+//!   in the same order), which is what `tests/prop_timeline.rs` pins down.
+//! * [`OverlapMode::LayerPipelined`] — only data dependencies are kept:
+//!   Bitpack of layer *k* overlaps the broadcast of layer *k−1* and device
+//!   compute; the gradient gather of layer *k* double-buffers against the
+//!   backprop of layer *k−1* (backprop emits gradients in reverse layer
+//!   order); the CPU update/norm of a gathered layer overlaps the
+//!   remaining gathers.
+//!
+//! Because both modes schedule the *identical* event set (same durations,
+//! same emission order) and only the dependency wiring differs, per-phase
+//! busy totals are identical in both modes — Tables II/III keep their
+//! meaning — while the critical path shrinks. Monotonicity of IEEE-754
+//! `max`/`+` over non-negative durations guarantees the pipelined critical
+//! path never exceeds the serialized sum, rounding included.
+//!
+//! **GPU granularity.** The batch builder schedules compute on the pooled
+//! GPU resource: the calibrated conv/fc/unpack rates are aggregate, and
+//! synchronous data-parallel GPUs run in lockstep, so the pool's wall time
+//! is the slowest shard's. Per-GPU heterogeneity therefore enters as the
+//! profile's [`SystemProfile::compute_wall_factor`] (straggler presets)
+//! scaling every device-side duration. The engine itself is granular:
+//! [`Resource::Gpu`] lanes exist and schedule concurrently (property
+//! tests exercise them), so a per-GPU builder is a drop-in extension.
+
+use crate::interconnect::Interconnect;
+use crate::models::ModelDesc;
+use crate::profiler::Phase;
+use crate::sim::SystemProfile;
+
+/// How a batch's phases are allowed to overlap.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverlapMode {
+    /// Fig 1's serial loop: each phase event waits for everything before
+    /// it. Default; reproduces the paper's Tables II/III accounting.
+    Serialized,
+    /// Layer-granular pipelining across CPU, links and GPU pool.
+    LayerPipelined,
+}
+
+/// Names accepted by `--overlap`.
+pub const OVERLAP_NAMES: [&str; 2] = ["serialized", "pipelined"];
+
+impl OverlapMode {
+    pub fn parse(s: &str) -> Option<OverlapMode> {
+        match s {
+            "serialized" => Some(OverlapMode::Serialized),
+            "pipelined" => Some(OverlapMode::LayerPipelined),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OverlapMode::Serialized => "serialized",
+            OverlapMode::LayerPipelined => "pipelined",
+        }
+    }
+}
+
+/// A clock-carrying resource of the simulated platform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Resource {
+    /// The CPU leader (Bitpack, SGD update, AWP norms).
+    Cpu,
+    /// Host→device link channel (weight broadcast).
+    LinkH2d,
+    /// Device→host link channel (gradient gather).
+    LinkD2h,
+    /// The lockstep data-parallel GPU pool (aggregate calibrated rates).
+    GpuPool,
+    /// One GPU lane (engine-level granularity for heterogeneous
+    /// schedules; the standard batch builder uses [`Resource::GpuPool`]).
+    Gpu(usize),
+}
+
+/// Handle to a scheduled event, usable as a dependency.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EventId(usize);
+
+/// One scheduled event (resolved times included).
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub resource: Resource,
+    pub phase: Phase,
+    pub duration_s: f64,
+    pub start_s: f64,
+    pub finish_s: f64,
+}
+
+/// The event-driven schedule of one simulated batch.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    mode: OverlapMode,
+    /// (resource, clock) pairs; linear scan — a batch uses ≲6 resources.
+    clocks: Vec<(Resource, f64)>,
+    events: Vec<Event>,
+}
+
+impl Timeline {
+    pub fn new(mode: OverlapMode) -> Timeline {
+        Timeline { mode, clocks: Vec::new(), events: Vec::new() }
+    }
+
+    pub fn mode(&self) -> OverlapMode {
+        self.mode
+    }
+
+    fn clock(&self, r: Resource) -> f64 {
+        self.clocks.iter().find(|(res, _)| *res == r).map_or(0.0, |(_, t)| *t)
+    }
+
+    fn advance_clock(&mut self, r: Resource, t: f64) {
+        match self.clocks.iter_mut().find(|(res, _)| *res == r) {
+            Some(slot) => slot.1 = t,
+            None => self.clocks.push((r, t)),
+        }
+    }
+
+    /// Schedule an event on `resource`. In `Serialized` mode it chains
+    /// after the previously scheduled event regardless of `deps`; in
+    /// `LayerPipelined` mode it starts at the max of its resource clock
+    /// and its dependencies' finish times. Dependencies must refer to
+    /// already-scheduled events.
+    pub fn schedule(
+        &mut self,
+        resource: Resource,
+        phase: Phase,
+        duration_s: f64,
+        deps: &[EventId],
+    ) -> EventId {
+        assert!(
+            duration_s.is_finite() && duration_s >= 0.0,
+            "event duration must be finite and non-negative, got {duration_s}"
+        );
+        let start_s = match self.mode {
+            OverlapMode::Serialized => self.events.last().map_or(0.0, |e| e.finish_s),
+            OverlapMode::LayerPipelined => {
+                let mut t = self.clock(resource);
+                for d in deps {
+                    assert!(d.0 < self.events.len(), "dependency on unscheduled event");
+                    let f = self.events[d.0].finish_s;
+                    if f > t {
+                        t = f;
+                    }
+                }
+                t
+            }
+        };
+        let finish_s = start_s + duration_s;
+        self.advance_clock(resource, finish_s);
+        self.events.push(Event { resource, phase, duration_s, start_s, finish_s });
+        EventId(self.events.len() - 1)
+    }
+
+    pub fn finish_s(&self, id: EventId) -> f64 {
+        self.events[id.0].finish_s
+    }
+
+    pub fn events(&self) -> &[Event] {
+        &self.events
+    }
+
+    /// Makespan: latest finish over all events (0 for an empty timeline).
+    pub fn critical_path_s(&self) -> f64 {
+        self.events.iter().fold(0.0, |m, e| if e.finish_s > m { e.finish_s } else { m })
+    }
+
+    /// The Fig-1 serial reference: left-fold sum of every event duration
+    /// in emission order. In `Serialized` mode this equals
+    /// [`critical_path_s`](Self::critical_path_s) bit-for-bit.
+    pub fn serialized_sum_s(&self) -> f64 {
+        self.events.iter().fold(0.0, |a, e| a + e.duration_s)
+    }
+
+    /// Per-phase busy totals in `Phase::ALL` order — the Tables II/III
+    /// quantity. Independent of the overlap mode by construction.
+    pub fn busy_s(&self) -> [f64; 8] {
+        let mut busy = [0.0f64; 8];
+        for e in &self.events {
+            busy[Phase::ALL.iter().position(|p| *p == e.phase).unwrap()] += e.duration_s;
+        }
+        busy
+    }
+
+    pub fn busy_phase_s(&self, phase: Phase) -> f64 {
+        self.events.iter().filter(|e| e.phase == phase).map(|e| e.duration_s).sum()
+    }
+
+    /// Total busy seconds of one resource (idle-gap diagnostics).
+    pub fn resource_busy_s(&self, r: Resource) -> f64 {
+        self.events.iter().filter(|e| e.resource == r).map(|e| e.duration_s).sum()
+    }
+}
+
+// ---- per-batch builder -----------------------------------------------------
+
+/// Per-weighted-layer load of one batch (transfer bytes + compute flops).
+#[derive(Clone, Copy, Debug)]
+pub struct LayerLoad {
+    /// Full f32 weight bytes of the layer (Bitpack input, norm input,
+    /// gradient-gather payload).
+    pub weight_bytes_f32: usize,
+    /// ADT-packed transfer bytes (== `weight_bytes_f32` without ADT).
+    pub packed_bytes: usize,
+    /// Raw f32 bias bytes (never packed, paper §III).
+    pub bias_bytes: usize,
+    /// Forward flops per sample.
+    pub fwd_flops: u64,
+    /// Convolution (true) vs fully-connected (false) rate pool.
+    pub is_conv: bool,
+    /// Trainable parameters (weights + biases) for the SGD-update phase.
+    pub params: usize,
+}
+
+/// Build the per-layer loads of `desc` under `formats` (`None` ⇒ 32-bit
+/// baseline, no packing). `formats` must align with
+/// `desc.weight_counts()`.
+pub fn layer_loads(desc: &ModelDesc, formats: Option<&[crate::adt::RoundTo]>) -> Vec<LayerLoad> {
+    let counts = desc.weight_counts();
+    let biases = desc.bias_counts();
+    let flops = desc.fwd_flops_by_layer();
+    assert_eq!(counts.len(), flops.len());
+    if let Some(fs) = formats {
+        assert_eq!(fs.len(), counts.len(), "one format per weighted layer");
+    }
+    (0..counts.len())
+        .map(|l| {
+            let packed = match formats {
+                Some(fs) => counts[l] * fs[l].bytes(),
+                None => counts[l] * 4,
+            };
+            LayerLoad {
+                weight_bytes_f32: counts[l] * 4,
+                packed_bytes: packed,
+                bias_bytes: biases[l] * 4,
+                fwd_flops: flops[l].1,
+                is_conv: flops[l].2,
+                params: counts[l] + biases[l],
+            }
+        })
+        .collect()
+}
+
+/// Mean transfer bytes/weight → per-layer loads with a uniform format
+/// approximation (figure replays know only the mean compression state).
+pub fn layer_loads_mean_bytes(desc: &ModelDesc, bytes_per_weight: f64) -> Vec<LayerLoad> {
+    let mut loads = layer_loads(desc, None);
+    for load in &mut loads {
+        let weights = load.weight_bytes_f32 / 4;
+        load.packed_bytes = (weights as f64 * bytes_per_weight) as usize;
+    }
+    loads
+}
+
+/// Schedule one training batch onto a fresh timeline.
+///
+/// Emission order (identical in both modes, so busy totals and the
+/// serialized reference are mode-independent): per-layer Bitpack, then
+/// per-layer broadcast, then interleaved unpack+forward in layer order,
+/// then — in reverse layer order — backprop, gradient gather and SGD
+/// update, then per-layer AWP norms. Backward compute is 2× forward
+/// (dgrad + wgrad), matching the calibrated `TRAIN_MULT = 3` split.
+///
+/// Link transfers go through the interconnect's per-direction
+/// [`crate::interconnect::Channel`]s, which account bytes/seconds exactly
+/// as the serial path does. Device-side durations are scaled by the
+/// profile's straggler wall factor.
+pub fn build_batch_timeline(
+    mode: OverlapMode,
+    profile: &SystemProfile,
+    interconnect: &mut Interconnect,
+    layers: &[LayerLoad],
+    batch_size: usize,
+    uses_adt: bool,
+    include_norms: bool,
+) -> Timeline {
+    let mut tl = Timeline::new(mode);
+    let wall = profile.compute_wall_factor();
+    let n = layers.len();
+
+    // 1-2: per-layer Bitpack on the CPU leader (rate: full f32 input bytes).
+    let packs: Vec<Option<EventId>> = layers
+        .iter()
+        .map(|l| {
+            uses_adt.then(|| {
+                tl.schedule(Resource::Cpu, Phase::Bitpack, profile.pack_time(l.weight_bytes_f32), &[])
+            })
+        })
+        .collect();
+
+    // 3: per-layer broadcast; layer k waits only for its own pack.
+    let h2ds: Vec<EventId> = layers
+        .iter()
+        .enumerate()
+        .map(|(l, load)| {
+            let bytes = if uses_adt { load.packed_bytes } else { load.weight_bytes_f32 };
+            let deps: Vec<EventId> = packs[l].into_iter().collect();
+            interconnect.h2d.enqueue(&mut tl, Phase::H2D, bytes + load.bias_bytes, &deps)
+        })
+        .collect();
+
+    // 4a: device Bitunpack + forward, interleaved per layer on the pool.
+    let mut fwds: Vec<EventId> = Vec::with_capacity(n);
+    for (l, load) in layers.iter().enumerate() {
+        let mut fwd_dep = h2ds[l];
+        if uses_adt {
+            fwd_dep = tl.schedule(
+                Resource::GpuPool,
+                Phase::Bitunpack,
+                profile.unpack_time(load.packed_bytes) * wall,
+                &[h2ds[l]],
+            );
+        }
+        let phase = if load.is_conv { Phase::Conv } else { Phase::Fc };
+        let rate = if load.is_conv { profile.conv_flops } else { profile.fc_flops };
+        let fwd_s = load.fwd_flops as f64 * batch_size as f64 / rate * wall;
+        let mut deps = vec![fwd_dep];
+        if let Some(&prev) = fwds.last() {
+            deps.push(prev); // forward order (redundant with the pool clock)
+        }
+        fwds.push(tl.schedule(Resource::GpuPool, phase, fwd_s, &deps));
+    }
+
+    // 4b-6: backprop in reverse layer order; each layer's gradient gathers
+    // and updates as soon as its backward pass finishes, double-buffering
+    // against the still-running backprop of earlier layers.
+    let mut prev_bwd: Option<EventId> = None;
+    let mut updates: Vec<Option<EventId>> = vec![None; n];
+    for (l, load) in layers.iter().enumerate().rev() {
+        let phase = if load.is_conv { Phase::Conv } else { Phase::Fc };
+        let rate = if load.is_conv { profile.conv_flops } else { profile.fc_flops };
+        let bwd_s = 2.0 * (load.fwd_flops as f64 * batch_size as f64 / rate) * wall;
+        let dep = prev_bwd.unwrap_or(*fwds.last().expect("at least one layer"));
+        let bwd = tl.schedule(Resource::GpuPool, phase, bwd_s, &[dep]);
+        prev_bwd = Some(bwd);
+        let d2h = interconnect.d2h.enqueue(
+            &mut tl,
+            Phase::D2H,
+            load.weight_bytes_f32 + load.bias_bytes,
+            &[bwd],
+        );
+        let upd =
+            tl.schedule(Resource::Cpu, Phase::GradUpdate, profile.update_time(load.params), &[d2h]);
+        updates[l] = Some(upd);
+    }
+
+    // 7: AWP l²-norms on the CPU leader, after each layer's update.
+    if include_norms {
+        for (l, load) in layers.iter().enumerate().rev() {
+            let deps: Vec<EventId> = updates[l].into_iter().collect();
+            tl.schedule(Resource::Cpu, Phase::AwpNorm, profile.norm_time(load.weight_bytes_f32), &deps);
+        }
+    }
+
+    tl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adt::RoundTo;
+    use crate::models::vgg_a;
+
+    #[test]
+    fn serialized_chain_is_a_left_fold() {
+        let mut tl = Timeline::new(OverlapMode::Serialized);
+        let a = tl.schedule(Resource::Cpu, Phase::Bitpack, 0.1, &[]);
+        let b = tl.schedule(Resource::LinkH2d, Phase::H2D, 0.2, &[a]);
+        tl.schedule(Resource::GpuPool, Phase::Conv, 0.3, &[b]);
+        assert_eq!(tl.critical_path_s().to_bits(), tl.serialized_sum_s().to_bits());
+        assert_eq!(tl.events().len(), 3);
+    }
+
+    #[test]
+    fn pipelined_respects_deps_and_resource_clocks() {
+        let mut tl = Timeline::new(OverlapMode::LayerPipelined);
+        let a = tl.schedule(Resource::Cpu, Phase::Bitpack, 1.0, &[]);
+        // independent of `a`, different resource ⇒ starts at 0
+        let b = tl.schedule(Resource::LinkH2d, Phase::H2D, 0.5, &[]);
+        assert_eq!(tl.events()[b.0].start_s, 0.0);
+        // depends on `a` ⇒ starts at 1.0 even though the link is free at 0.5
+        let c = tl.schedule(Resource::LinkH2d, Phase::H2D, 0.5, &[a]);
+        assert_eq!(tl.events()[c.0].start_s, 1.0);
+        // same resource as `a` ⇒ the CPU clock serializes without deps
+        let d = tl.schedule(Resource::Cpu, Phase::Bitpack, 1.0, &[]);
+        assert_eq!(tl.events()[d.0].start_s, 1.0);
+        assert_eq!(tl.critical_path_s(), 2.0);
+    }
+
+    #[test]
+    fn per_gpu_lanes_run_concurrently() {
+        let mut tl = Timeline::new(OverlapMode::LayerPipelined);
+        for g in 0..4 {
+            tl.schedule(Resource::Gpu(g), Phase::Conv, 0.25, &[]);
+        }
+        // four lanes in parallel: makespan is one lane, busy is all four
+        assert_eq!(tl.critical_path_s(), 0.25);
+        assert_eq!(tl.busy_phase_s(Phase::Conv), 1.0);
+    }
+
+    #[test]
+    fn layer_loads_align_with_descriptor() {
+        let desc = vgg_a(200);
+        let loads = layer_loads(&desc, None);
+        assert_eq!(loads.len(), desc.weight_counts().len());
+        let total: usize = loads.iter().map(|l| l.weight_bytes_f32).sum();
+        assert_eq!(total, desc.weight_bytes_f32());
+        // baseline: packed == full
+        assert!(loads.iter().all(|l| l.packed_bytes == l.weight_bytes_f32));
+        let formats = vec![RoundTo::B1; loads.len()];
+        let packed = layer_loads(&desc, Some(&formats));
+        assert!(packed.iter().all(|l| l.packed_bytes * 4 == l.weight_bytes_f32));
+    }
+
+    #[test]
+    fn vgg_batch_overlap_beats_serial_and_keeps_busy_totals() {
+        let profile = SystemProfile::x86();
+        let desc = vgg_a(200);
+        let formats = vec![RoundTo::B2; desc.weight_counts().len()];
+        let loads = layer_loads(&desc, Some(&formats));
+
+        let mut ic_s = Interconnect::new(profile.clone());
+        let ser = build_batch_timeline(
+            OverlapMode::Serialized, &profile, &mut ic_s, &loads, 64, true, true,
+        );
+        let mut ic_p = Interconnect::new(profile.clone());
+        let pip = build_batch_timeline(
+            OverlapMode::LayerPipelined, &profile, &mut ic_p, &loads, 64, true, true,
+        );
+
+        // identical event sets ⇒ identical per-phase busy totals
+        let (bs, bp) = (ser.busy_s(), pip.busy_s());
+        for i in 0..8 {
+            assert_eq!(bs[i].to_bits(), bp[i].to_bits(), "phase {i}");
+        }
+        // serialized critical path == serial sum, pipelined strictly better
+        assert_eq!(ser.critical_path_s().to_bits(), ser.serialized_sum_s().to_bits());
+        assert!(pip.critical_path_s() < ser.critical_path_s());
+        // both interconnects accounted the same traffic
+        assert_eq!(ic_s.h2d_bytes_total(), ic_p.h2d_bytes_total());
+        assert_eq!(ic_s.d2h_bytes_total(), ic_p.d2h_bytes_total());
+    }
+
+    #[test]
+    fn straggler_scales_device_busy_only() {
+        let desc = vgg_a(200);
+        let loads = layer_loads(&desc, None);
+        let base = SystemProfile::x86();
+        let slow = SystemProfile::x86().with_straggler(0, 2.0);
+        let mut ic_a = Interconnect::new(base.clone());
+        let a = build_batch_timeline(
+            OverlapMode::Serialized, &base, &mut ic_a, &loads, 64, false, false,
+        );
+        let mut ic_b = Interconnect::new(slow.clone());
+        let b = build_batch_timeline(
+            OverlapMode::Serialized, &slow, &mut ic_b, &loads, 64, false, false,
+        );
+        assert!((b.busy_phase_s(Phase::Conv) / a.busy_phase_s(Phase::Conv) - 2.0).abs() < 1e-9);
+        assert_eq!(
+            a.busy_phase_s(Phase::H2D).to_bits(),
+            b.busy_phase_s(Phase::H2D).to_bits(),
+            "links are unaffected by GPU stragglers"
+        );
+    }
+}

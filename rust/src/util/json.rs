@@ -323,8 +323,21 @@ fn escape_into(s: &str, out: &mut String) {
 
 fn fmt_num(x: f64, out: &mut String) {
     if !x.is_finite() {
-        // JSON has no NaN/Infinity; emit null (readers treat it as NaN).
-        out.push_str("null");
+        // JSON has no NaN/Infinity literals. Emitting them raw would
+        // produce invalid JSON, and the old `null` stand-in erased *which*
+        // non-finite value leaked (and from where). Encode legibly as a
+        // string so the output stays parseable and the sentinel is
+        // greppable; numeric readers see a non-number and fail loudly
+        // instead of silently propagating NaN.
+        out.push('"');
+        out.push_str(if x.is_nan() {
+            "NaN"
+        } else if x > 0.0 {
+            "Infinity"
+        } else {
+            "-Infinity"
+        });
+        out.push('"');
     } else if x.fract() == 0.0 && x.abs() < 1e15 {
         out.push_str(&format!("{}", x as i64));
     } else {
@@ -468,5 +481,27 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::num(4096.0).to_string_compact(), "4096");
         assert_eq!(Json::num(0.5).to_string_compact(), "0.5");
+    }
+
+    #[test]
+    fn non_finite_numbers_stay_valid_and_legible() {
+        // regression: a NaN reaching the writer must neither produce
+        // invalid JSON (bare `NaN`) nor vanish into an anonymous `null`.
+        for (x, want) in [
+            (f64::NAN, r#""NaN""#),
+            (f64::INFINITY, r#""Infinity""#),
+            (f64::NEG_INFINITY, r#""-Infinity""#),
+        ] {
+            let s = Json::num(x).to_string_compact();
+            assert_eq!(s, want);
+            // the rendering parses back cleanly (as a sentinel string)
+            let v = Json::parse(&s).unwrap();
+            assert!(v.as_f64().is_none(), "sentinel must not read as a number");
+        }
+        // embedded in a document: still one valid parseable object
+        let doc = Json::obj(vec![("share", Json::num(f64::NAN)), ("ok", Json::num(1.5))]);
+        let parsed = Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(parsed.req_str("share").unwrap(), "NaN");
+        assert_eq!(parsed.req_f64("ok").unwrap(), 1.5);
     }
 }

@@ -1,0 +1,174 @@
+//! Property-based tests over the event-driven overlap timeline.
+//!
+//! The contract pinned here (ISSUE 2 acceptance criteria):
+//!
+//! 1. With overlap disabled the timeline's critical path equals the
+//!    serialized phase sum **bit-exactly** (the schedule is the Fig-1
+//!    left-fold chain — same additions, same order).
+//! 2. With overlap enabled the critical path never exceeds the serialized
+//!    sum, rounding included (monotone IEEE-754 `max`/`+` over
+//!    non-negative durations).
+//! 3. Per-phase busy totals are bit-identical in both modes (the event
+//!    set is shared; only the dependency wiring differs).
+
+use a2dtwp::adt::RoundTo;
+use a2dtwp::interconnect::Interconnect;
+use a2dtwp::models::{alexnet, resnet34, vgg_a, ModelDesc};
+use a2dtwp::profiler::Phase;
+use a2dtwp::sim::{
+    build_batch_timeline, layer_loads, layer_loads_mean_bytes, LayerLoad, OverlapMode, Resource,
+    SystemProfile, Timeline, SCENARIO_NAMES,
+};
+use a2dtwp::util::propcheck::{check, Gen};
+
+fn any_profile(g: &mut Gen) -> SystemProfile {
+    let base = if g.bool() { SystemProfile::x86() } else { SystemProfile::power() };
+    let scenario = *g.pick(&SCENARIO_NAMES);
+    base.scenario(scenario).unwrap()
+}
+
+fn any_model(g: &mut Gen) -> ModelDesc {
+    match g.usize_in(0..3) {
+        0 => alexnet(200),
+        1 => vgg_a(200),
+        _ => resnet34(200),
+    }
+}
+
+fn any_loads(g: &mut Gen, desc: &ModelDesc, uses_adt: bool) -> Vec<LayerLoad> {
+    if !uses_adt {
+        layer_loads(desc, None)
+    } else if g.bool() {
+        let formats: Vec<RoundTo> =
+            (0..desc.weight_counts().len()).map(|_| *g.pick(&RoundTo::ALL)).collect();
+        layer_loads(desc, Some(&formats))
+    } else {
+        layer_loads_mean_bytes(desc, 1.0 + 3.0 * g.f32_in(0.0, 1.0) as f64)
+    }
+}
+
+/// Build the same batch in both modes and return the two timelines.
+fn both_modes(
+    g: &mut Gen,
+) -> (Timeline, Timeline, /* uses_adt */ bool, /* include_norms */ bool) {
+    let profile = any_profile(g);
+    let desc = any_model(g);
+    let uses_adt = g.bool();
+    let include_norms = uses_adt && g.bool();
+    let batch = *g.pick(&[16usize, 32, 64, 128]);
+    let loads = any_loads(g, &desc, uses_adt);
+    let mut ic_s = Interconnect::new(profile.clone());
+    let ser = build_batch_timeline(
+        OverlapMode::Serialized, &profile, &mut ic_s, &loads, batch, uses_adt, include_norms,
+    );
+    let mut ic_p = Interconnect::new(profile.clone());
+    let pip = build_batch_timeline(
+        OverlapMode::LayerPipelined, &profile, &mut ic_p, &loads, batch, uses_adt, include_norms,
+    );
+    (ser, pip, uses_adt, include_norms)
+}
+
+#[test]
+fn prop_serialized_critical_path_is_the_phase_sum_bit_exactly() {
+    check("serialized == left-fold sum", 120, |g| {
+        let (ser, pip, _, _) = both_modes(g);
+        // overlap disabled ⇒ critical path IS the serialized phase sum
+        assert_eq!(ser.critical_path_s().to_bits(), ser.serialized_sum_s().to_bits());
+        // both modes agree on what that serial reference is
+        assert_eq!(ser.serialized_sum_s().to_bits(), pip.serialized_sum_s().to_bits());
+    });
+}
+
+#[test]
+fn prop_pipelined_never_exceeds_the_serialized_sum() {
+    check("pipelined <= serialized", 120, |g| {
+        let (ser, pip, _, _) = both_modes(g);
+        assert!(
+            pip.critical_path_s() <= ser.critical_path_s(),
+            "pipelined {} > serialized {}",
+            pip.critical_path_s(),
+            ser.critical_path_s()
+        );
+        // and it is a real schedule: no event starts before time zero,
+        // dependencies resolved (finish >= start >= 0 for every event)
+        for e in pip.events() {
+            assert!(e.start_s >= 0.0 && e.finish_s >= e.start_s);
+        }
+    });
+}
+
+#[test]
+fn prop_busy_totals_are_mode_independent() {
+    check("busy identity", 120, |g| {
+        let (ser, pip, uses_adt, include_norms) = both_modes(g);
+        let (bs, bp) = (ser.busy_s(), pip.busy_s());
+        for (i, phase) in Phase::ALL.iter().enumerate() {
+            assert_eq!(bs[i].to_bits(), bp[i].to_bits(), "{phase} busy differs across modes");
+        }
+        // phase structure sanity: ADT-only phases appear iff ADT is on
+        assert_eq!(bs[Phase::ALL.iter().position(|p| *p == Phase::Bitpack).unwrap()] > 0.0, uses_adt);
+        assert_eq!(
+            bs[Phase::ALL.iter().position(|p| *p == Phase::AwpNorm).unwrap()] > 0.0,
+            include_norms
+        );
+    });
+}
+
+#[test]
+fn prop_pipelining_strictly_helps_multi_layer_batches() {
+    // every model in the zoo has ≥ 2 weighted layers, so some pack/h2d/
+    // compute overlap always exists: the inequality is strict.
+    check("strict win", 60, |g| {
+        let (ser, pip, _, _) = both_modes(g);
+        assert!(pip.critical_path_s() < ser.critical_path_s());
+    });
+}
+
+#[test]
+fn prop_engine_chain_equals_fold_for_arbitrary_event_soup() {
+    // engine-level: any durations on any resources, serialized mode is a
+    // global chain whose makespan folds the durations in emission order.
+    check("engine chain fold", 150, |g| {
+        let n = g.usize_in(1..40);
+        let mut tl = Timeline::new(OverlapMode::Serialized);
+        let mut prev = None;
+        for _ in 0..n {
+            let r = match g.usize_in(0..5) {
+                0 => Resource::Cpu,
+                1 => Resource::LinkH2d,
+                2 => Resource::LinkD2h,
+                3 => Resource::GpuPool,
+                _ => Resource::Gpu(g.usize_in(0..4)),
+            };
+            let phase = *g.pick(&Phase::ALL);
+            let d = g.f32_in(0.0, 0.25) as f64;
+            let deps: Vec<_> = prev.into_iter().collect();
+            prev = Some(tl.schedule(r, phase, d, &deps));
+        }
+        assert_eq!(tl.critical_path_s().to_bits(), tl.serialized_sum_s().to_bits());
+    });
+}
+
+#[test]
+fn prop_straggler_slows_compute_not_links() {
+    check("straggler scope", 60, |g| {
+        let base = if g.bool() { SystemProfile::x86() } else { SystemProfile::power() };
+        let slowdown = 1.0 + 3.0 * g.f32_in(0.0, 1.0) as f64;
+        let slow = base.clone().with_straggler(g.usize_in(0..4), slowdown);
+        let desc = any_model(g);
+        let loads = layer_loads(&desc, None);
+        let mk = |p: &SystemProfile| {
+            let mut ic = Interconnect::new(p.clone());
+            build_batch_timeline(
+                OverlapMode::LayerPipelined, p, &mut ic, &loads, 64, false, false,
+            )
+        };
+        let (a, b) = (mk(&base), mk(&slow));
+        let ratio = b.busy_phase_s(Phase::Conv) / a.busy_phase_s(Phase::Conv);
+        assert!((ratio - slowdown).abs() < 1e-6, "ratio={ratio} slowdown={slowdown}");
+        assert_eq!(a.busy_phase_s(Phase::H2D).to_bits(), b.busy_phase_s(Phase::H2D).to_bits());
+        assert_eq!(a.busy_phase_s(Phase::D2H).to_bits(), b.busy_phase_s(Phase::D2H).to_bits());
+        // a slower pool can only lengthen the critical path
+        assert!(b.critical_path_s() >= a.critical_path_s());
+    });
+}
