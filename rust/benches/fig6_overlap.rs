@@ -1,33 +1,56 @@
 //! "Fig 6" — overlap speedup vs compression ratio, x86 vs POWER.
 //!
 //! The paper's loop (Fig 1) is serial; this bench asks what the same
-//! calibrated platform buys from layer-pipelined scheduling: per
-//! compression state (mean transfer bytes/weight), the event-driven
-//! timeline's critical path against the serial Fig-1 reference, on both
-//! evaluation platforms, VGG b64 (the Tables II/III calibration point).
+//! calibrated platform buys from overlapped scheduling: per compression
+//! state (mean transfer bytes/weight), the event-driven timeline's
+//! critical path against the serial Fig-1 reference, on both evaluation
+//! platforms, VGG b64 (the Tables II/III calibration point). Two
+//! schedules are reported per cell: the lockstep `LayerPipelined`
+//! timeline and the per-GPU asynchronous `GpuPipelined` pipeline
+//! (window 4, staleness 1 — per-batch steady-state rate).
 //!
 //!     cargo bench --bench fig6_overlap            # full sweep + CSV
 //!     cargo bench --bench fig6_overlap -- --smoke # CI: calibration point only
 //!
 //! Always writes `artifacts/bench_out/BENCH_timeline.json` with the
-//! VGG-b64 calibration-point numbers (serialized vs critical-path ms) so
-//! CI tracks the timeline's trajectory.
+//! VGG-b64 calibration-point numbers; CI's `check_bench` gates every
+//! field against `ci/bench_baseline.json` (speedups may not regress
+//! more than 5%, times may not grow more than 5%, nothing may go
+//! missing or non-finite).
 
 use a2dtwp::awp::PolicyKind;
-use a2dtwp::figures::batch_time_overlap;
+use a2dtwp::figures::{batch_time_overlap, batch_time_overlap_windowed};
 use a2dtwp::models::vgg_a;
-use a2dtwp::sim::{OverlapMode, SystemProfile};
+use a2dtwp::sim::{OverlapMode, PipelineWindow, SystemProfile};
 use a2dtwp::util::benchkit::Table;
 use a2dtwp::util::json::Json;
 
 const BATCH: usize = 64;
+const WINDOW: usize = 4;
+const STALENESS: usize = 1;
 
-/// One (system, policy, bytes/weight) cell.
+/// One lockstep (system, policy, bytes/weight) cell.
 fn cell(profile: &SystemProfile, policy: PolicyKind, bpw: f64) -> (f64, f64, f64) {
     let desc = vgg_a(200);
     let (crit, serial) =
         batch_time_overlap(profile, &desc, BATCH, policy, bpw, OverlapMode::LayerPipelined);
     (serial * 1e3, crit * 1e3, serial / crit)
+}
+
+/// The per-GPU async cell: per-batch critical path of a WINDOW-batch
+/// schedule and its speedup vs the Fig-1 serial reference.
+fn gpu_cell(profile: &SystemProfile, policy: PolicyKind, bpw: f64) -> (f64, f64) {
+    let desc = vgg_a(200);
+    let (crit, serial) = batch_time_overlap_windowed(
+        profile,
+        &desc,
+        BATCH,
+        policy,
+        bpw,
+        OverlapMode::GpuPipelined,
+        PipelineWindow::new(WINDOW, STALENESS),
+    );
+    (crit * 1e3, serial / crit)
 }
 
 fn main() {
@@ -38,9 +61,14 @@ fn main() {
 
     let mut t = Table::new(
         "Fig 6 — overlap speedup vs compression ratio (VGG b64)",
-        &["system", "ratio", "bytes/wt", "serial ms", "pipelined ms", "speedup"],
+        &[
+            "system", "ratio", "bytes/wt", "serial ms", "pipelined ms", "speedup", "gpu-pipe ms",
+            "gpu speedup",
+        ],
     );
-    let mut csv = String::from("system,ratio,bytes_per_weight,serial_ms,pipelined_ms,speedup\n");
+    let mut csv = String::from(
+        "system,ratio,bytes_per_weight,serial_ms,pipelined_ms,speedup,gpu_pipelined_ms,gpu_speedup\n",
+    );
     for profile in [SystemProfile::x86(), SystemProfile::power()] {
         for &ratio in sweep {
             let bpw = 4.0 / ratio;
@@ -48,6 +76,7 @@ fn main() {
             let policy =
                 if ratio == 1.0 { PolicyKind::Baseline } else { PolicyKind::Awp };
             let (serial_ms, crit_ms, speedup) = cell(&profile, policy, bpw);
+            let (gpu_ms, gpu_speedup) = gpu_cell(&profile, policy, bpw);
             t.row(&[
                 profile.name.to_string(),
                 format!("{ratio:.2}x"),
@@ -55,30 +84,50 @@ fn main() {
                 format!("{serial_ms:.2}"),
                 format!("{crit_ms:.2}"),
                 format!("{speedup:.3}x"),
+                format!("{gpu_ms:.2}"),
+                format!("{gpu_speedup:.3}x"),
             ]);
             csv.push_str(&format!(
-                "{},{ratio:.3},{bpw:.3},{serial_ms:.3},{crit_ms:.3},{speedup:.4}\n",
+                "{},{ratio:.3},{bpw:.3},{serial_ms:.3},{crit_ms:.3},{speedup:.4},\
+                 {gpu_ms:.3},{gpu_speedup:.4}\n",
                 profile.name
             ));
         }
     }
     t.print();
 
-    // straggler what-if at the calibration point (overlap-mode presets)
+    // scenario what-ifs at the calibration point: GPU-side stragglers,
+    // link-side contention/degradation, CPU-side pack starvation.
+    let scenarios: &[&str] = if smoke {
+        &["uniform", "straggler-severe"]
+    } else {
+        &[
+            "uniform",
+            "straggler-mild",
+            "straggler-severe",
+            "hetero-linear",
+            "pcie-contended",
+            "nvlink-degraded",
+            "pack-starved",
+        ]
+    };
     let mut s = Table::new(
-        "Overlap under straggler scenarios (VGG b64, A2DTWP ~3x)",
-        &["system", "scenario", "serial ms", "pipelined ms", "speedup"],
+        "Overlap under scenarios (VGG b64, A2DTWP ~3x)",
+        &["system", "scenario", "serial ms", "pipelined ms", "speedup", "gpu-pipe ms", "gpu speedup"],
     );
     for base in [SystemProfile::x86(), SystemProfile::power()] {
-        for scenario in ["uniform", "straggler-mild", "straggler-severe"] {
+        for scenario in scenarios {
             let profile = base.clone().scenario(scenario).unwrap();
             let (serial_ms, crit_ms, speedup) = cell(&profile, PolicyKind::Awp, 4.0 / 3.0);
+            let (gpu_ms, gpu_speedup) = gpu_cell(&profile, PolicyKind::Awp, 4.0 / 3.0);
             s.row(&[
                 base.name.to_string(),
                 scenario.to_string(),
                 format!("{serial_ms:.2}"),
                 format!("{crit_ms:.2}"),
                 format!("{speedup:.3}x"),
+                format!("{gpu_ms:.2}"),
+                format!("{gpu_speedup:.3}x"),
             ]);
         }
     }
@@ -91,13 +140,23 @@ fn main() {
     }
 
     // BENCH_timeline.json: the VGG-b64 calibration point (paper's ≈3×
-    // converged compression), both platforms, serialized vs critical path.
+    // converged compression), both platforms, serialized vs critical
+    // path for the lockstep and per-GPU schedules, plus the
+    // straggler-severe speedups the async pipeline must defend.
     let point = |profile: &SystemProfile| {
         let (serial_ms, crit_ms, speedup) = cell(profile, PolicyKind::Awp, 4.0 / 3.0);
+        let (gpu_ms, gpu_speedup) = gpu_cell(profile, PolicyKind::Awp, 4.0 / 3.0);
+        let straggler = profile.clone().scenario("straggler-severe").unwrap();
+        let (_, _, straggler_speedup) = cell(&straggler, PolicyKind::Awp, 4.0 / 3.0);
+        let (_, straggler_gpu_speedup) = gpu_cell(&straggler, PolicyKind::Awp, 4.0 / 3.0);
         Json::obj(vec![
             ("serialized_ms", Json::num(serial_ms)),
             ("critical_path_ms", Json::num(crit_ms)),
             ("overlap_speedup", Json::num(speedup)),
+            ("gpu_critical_path_ms", Json::num(gpu_ms)),
+            ("gpu_overlap_speedup", Json::num(gpu_speedup)),
+            ("straggler_layer_speedup", Json::num(straggler_speedup)),
+            ("straggler_gpu_speedup", Json::num(straggler_gpu_speedup)),
         ])
     };
     let report = Json::obj(vec![
@@ -105,6 +164,8 @@ fn main() {
         ("model", Json::str("vgg_a")),
         ("batch", Json::num(BATCH as f64)),
         ("bytes_per_weight", Json::num(4.0 / 3.0)),
+        ("pipeline_window", Json::num(WINDOW as f64)),
+        ("staleness", Json::num(STALENESS as f64)),
         ("x86", point(&SystemProfile::x86())),
         ("power", point(&SystemProfile::power())),
     ]);

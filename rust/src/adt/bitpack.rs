@@ -32,8 +32,18 @@ pub enum BitpackImpl {
 }
 
 impl BitpackImpl {
-    /// Pick the fastest implementation supported by this CPU.
+    /// Pick the fastest implementation supported by this CPU, unless
+    /// `A2DTWP_FORCE_SCALAR=1` pins the portable loop (how CI exercises
+    /// the scalar path on AVX2 runners — runtime dispatch ignores
+    /// `RUSTFLAGS`, so an env override is the only honest lever).
     pub fn detect() -> BitpackImpl {
+        Self::detect_with(super::force_scalar())
+    }
+
+    pub(crate) fn detect_with(force_scalar: bool) -> BitpackImpl {
+        if force_scalar {
+            return BitpackImpl::Scalar;
+        }
         #[cfg(target_arch = "x86_64")]
         {
             if std::arch::is_x86_feature_detected!("avx2") {

@@ -53,8 +53,18 @@ pub enum BitunpackImpl {
 }
 
 impl BitunpackImpl {
-    /// Pick the fastest implementation supported by this CPU.
+    /// Pick the fastest implementation supported by this CPU, unless
+    /// `A2DTWP_FORCE_SCALAR=1` pins the portable loops (see
+    /// [`super::BitpackImpl::detect`] — both kernels honour the same
+    /// override so the dispatch stays consistent).
     pub fn detect() -> BitunpackImpl {
+        Self::detect_with(super::force_scalar())
+    }
+
+    pub(crate) fn detect_with(force_scalar: bool) -> BitunpackImpl {
+        if force_scalar {
+            return BitunpackImpl::Scalar;
+        }
         #[cfg(target_arch = "x86_64")]
         {
             if std::arch::is_x86_feature_detected!("avx2") {
@@ -318,6 +328,22 @@ mod tests {
         let pack = BitpackImpl::detect();
         let unpack = BitunpackImpl::detect();
         assert_eq!(pack == BitpackImpl::Avx2, unpack == BitunpackImpl::Avx2);
+    }
+
+    #[test]
+    fn force_scalar_override_pins_the_portable_loop() {
+        // the CI scalar leg relies on this: with the override set, detect
+        // returns Scalar even on AVX2 hosts; without it, the platform
+        // decides. (Tested through the inner fn — mutating the process
+        // env would race parallel tests.)
+        assert_eq!(BitunpackImpl::detect_with(true), BitunpackImpl::Scalar);
+        use crate::adt::BitpackImpl;
+        assert_eq!(BitpackImpl::detect_with(true), BitpackImpl::Scalar);
+        // without the override, both kernels agree on the platform pick
+        assert_eq!(
+            BitpackImpl::detect_with(false) == BitpackImpl::Avx2,
+            BitunpackImpl::detect_with(false) == BitunpackImpl::Avx2
+        );
     }
 
     #[test]

@@ -100,6 +100,14 @@ impl std::fmt::Display for RoundTo {
     }
 }
 
+/// `A2DTWP_FORCE_SCALAR=1` pins both kernels' `detect()` to the
+/// portable loops. CI's scalar matrix leg sets it: SIMD dispatch is a
+/// *runtime* `is_x86_feature_detected!` decision, so building with
+/// different `RUSTFLAGS` alone would still run AVX2 on capable runners.
+pub(crate) fn force_scalar() -> bool {
+    std::env::var_os("A2DTWP_FORCE_SCALAR").is_some_and(|v| v == "1")
+}
+
 /// How many threads / which instruction set to use for Bitpack/Bitunpack.
 #[derive(Clone, Copy, Debug)]
 pub struct AdtConfig {

@@ -1,0 +1,174 @@
+//! `check_bench` — the CI bench-regression gate.
+//!
+//! Two modes:
+//!
+//! ```text
+//! check_bench <baseline.json> <current.json>   # compare against baseline
+//! check_bench --validate <metrics.json>        # structural/finite check
+//! ```
+//!
+//! The comparator walks every leaf of the checked-in baseline
+//! (`ci/bench_baseline.json`) and requires the current report
+//! (`artifacts/bench_out/BENCH_timeline.json`) to carry the same field
+//! with a sane value:
+//!
+//! * keys containing `speedup` may not regress below 95% of baseline;
+//! * keys ending in `_ms` may not regress above 105% of baseline;
+//! * every other number must match the baseline (config drift — a
+//!   silently changed batch size or window would invalidate the gate);
+//! * strings must match exactly, which also rejects the `util::json`
+//!   non-finite sentinels (`"NaN"`, `"±Infinity"`) anywhere a number
+//!   was expected;
+//! * missing fields fail.
+//!
+//! The simulator is pure arithmetic, so a clean run sits within rounding
+//! of the baseline; the 5% window only absorbs deliberate recalibration
+//! dust, never a lost overlap win.
+
+use a2dtwp::util::json::Json;
+
+const SPEEDUP_FLOOR: f64 = 0.95;
+const TIME_CEILING: f64 = 1.05;
+
+/// Recursively reject non-finite sentinels and count numeric leaves.
+fn validate(path: &str, v: &Json, errs: &mut Vec<String>) -> usize {
+    match v {
+        Json::Num(x) => {
+            if !x.is_finite() {
+                errs.push(format!("{path}: non-finite number"));
+            }
+            1
+        }
+        Json::Str(s) => {
+            if Json::is_non_finite_sentinel(s) {
+                errs.push(format!("{path}: non-finite sentinel \"{s}\""));
+            }
+            0
+        }
+        Json::Arr(items) => items
+            .iter()
+            .enumerate()
+            .map(|(i, item)| validate(&format!("{path}[{i}]"), item, errs))
+            .sum(),
+        Json::Obj(map) => {
+            map.iter().map(|(k, val)| validate(&format!("{path}.{k}"), val, errs)).sum()
+        }
+        _ => 0,
+    }
+}
+
+/// Walk the baseline structure alongside the current report.
+fn compare(path: &str, base: &Json, cur: &Json, errs: &mut Vec<String>) -> usize {
+    match base {
+        Json::Obj(map) => {
+            let mut n = 0;
+            for (k, bval) in map {
+                let child = format!("{path}.{k}");
+                match cur.get(k) {
+                    Some(cval) => n += compare(&child, bval, cval, errs),
+                    None => errs.push(format!("{child}: missing from current report")),
+                }
+            }
+            n
+        }
+        Json::Arr(bitems) => match cur.as_arr() {
+            Some(citems) if citems.len() == bitems.len() => bitems
+                .iter()
+                .zip(citems)
+                .enumerate()
+                .map(|(i, (b, c))| compare(&format!("{path}[{i}]"), b, c, errs))
+                .sum(),
+            _ => {
+                errs.push(format!("{path}: array shape changed"));
+                0
+            }
+        },
+        Json::Num(b) => {
+            match cur.as_f64() {
+                Some(c) if c.is_finite() => {
+                    if path.contains("speedup") {
+                        if c < b * SPEEDUP_FLOOR {
+                            errs.push(format!(
+                                "{path}: speedup regressed {c:.4} < {:.4} (95% of baseline {b:.4})",
+                                b * SPEEDUP_FLOOR
+                            ));
+                        }
+                    } else if path.ends_with("_ms") {
+                        if c > b * TIME_CEILING {
+                            errs.push(format!(
+                                "{path}: time regressed {c:.3} > {:.3} (105% of baseline {b:.3})",
+                                b * TIME_CEILING
+                            ));
+                        }
+                    } else if (c - b).abs() > 1e-9 * b.abs().max(1.0) {
+                        errs.push(format!("{path}: config drifted ({c} != baseline {b})"));
+                    }
+                }
+                _ => errs.push(format!("{path}: expected a finite number, got {cur}")),
+            }
+            1
+        }
+        Json::Str(b) => {
+            if cur.as_str() != Some(b.as_str()) {
+                errs.push(format!("{path}: expected \"{b}\", got {cur}"));
+            }
+            0
+        }
+        _ => 0,
+    }
+}
+
+fn load(path: &str) -> Result<Json, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("cannot read {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("cannot parse {path}: {e}"))
+}
+
+fn run() -> Result<String, Vec<String>> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.as_slice() {
+        [flag, path] if flag == "--validate" => {
+            let doc = load(path).map_err(|e| vec![e])?;
+            let mut errs = Vec::new();
+            let nums = validate("$", &doc, &mut errs);
+            if nums == 0 {
+                errs.push(format!("{path}: no numeric metrics found"));
+            }
+            if errs.is_empty() {
+                Ok(format!("{path}: valid metrics JSON ({nums} finite numbers)"))
+            } else {
+                Err(errs)
+            }
+        }
+        [baseline_path, current_path] => {
+            let baseline = load(baseline_path).map_err(|e| vec![e])?;
+            let current = load(current_path).map_err(|e| vec![e])?;
+            let mut errs = Vec::new();
+            // the current report must be sane on its own…
+            validate("$", &current, &mut errs);
+            // …and must not regress against the checked-in baseline.
+            let nums = compare("$", &baseline, &current, &mut errs);
+            if errs.is_empty() {
+                Ok(format!("bench gate OK: {nums} numeric fields within bounds of {baseline_path}"))
+            } else {
+                Err(errs)
+            }
+        }
+        _ => Err(vec![
+            "usage: check_bench <baseline.json> <current.json> | check_bench --validate <file.json>"
+                .to_string(),
+        ]),
+    }
+}
+
+fn main() {
+    match run() {
+        Ok(msg) => println!("{msg}"),
+        Err(errs) => {
+            for e in &errs {
+                eprintln!("check_bench: {e}");
+            }
+            std::process::exit(1);
+        }
+    }
+}

@@ -28,9 +28,16 @@ pub struct ExperimentConfig {
     pub policy: PolicyKind,
     pub system: SystemProfile,
     pub mode: ExecMode,
-    /// Batch-phase scheduling: the paper's serial loop (default) or the
-    /// layer-pipelined overlap timeline.
+    /// Batch-phase scheduling: the paper's serial loop (default), the
+    /// layer-pipelined overlap timeline, or the per-GPU asynchronous
+    /// schedule.
     pub overlap: OverlapMode,
+    /// Bounded staleness K for `gpu-pipelined` overlap: weights packed
+    /// for batch *n* may miss the gradients of the last K batches
+    /// (0 = synchronous gather barrier ≡ `pipelined`).
+    pub staleness: usize,
+    /// Batches scheduled per cross-batch window in `gpu-pipelined` mode.
+    pub pipeline_window: usize,
     pub awp: AwpParams,
     pub sgd: SgdConfig,
     pub adt: AdtConfig,
@@ -94,6 +101,8 @@ impl ExperimentConfig {
             system: SystemProfile::by_name(system).unwrap_or_else(SystemProfile::x86),
             mode: if model.ends_with("_micro") { ExecMode::Real } else { ExecMode::Simulated },
             overlap: OverlapMode::Serialized,
+            staleness: crate::sim::DEFAULT_STALENESS,
+            pipeline_window: crate::sim::DEFAULT_PIPELINE_WINDOW,
             awp,
             sgd: SgdConfig::paper_defaults(initial_lr, 400),
             adt: AdtConfig::default(),
@@ -122,6 +131,8 @@ impl ExperimentConfig {
                 }),
             ),
             ("overlap", Json::str(self.overlap.name())),
+            ("staleness", Json::num(self.staleness as f64)),
+            ("pipeline_window", Json::num(self.pipeline_window as f64)),
             ("awp_threshold", Json::num(self.awp.threshold)),
             ("awp_interval", Json::num(self.awp.interval as f64)),
             ("lr", Json::num(self.sgd.schedule.initial as f64)),
@@ -178,6 +189,11 @@ mod tests {
     fn presets_default_to_the_paper_serial_loop() {
         let c = ExperimentConfig::preset("vgg_a", 64, PolicyKind::Baseline, "x86");
         assert_eq!(c.overlap, OverlapMode::Serialized);
+        assert_eq!(c.staleness, 1);
+        assert_eq!(c.pipeline_window, 4);
+        let j = c.to_json();
+        assert_eq!(j.req_usize("staleness").unwrap(), 1);
+        assert_eq!(j.req_usize("pipeline_window").unwrap(), 4);
     }
 
     #[test]

@@ -13,7 +13,10 @@ use crate::device::GpuPool;
 use crate::interconnect::Interconnect;
 use crate::models::ModelDesc;
 use crate::profiler::{Phase, Profiler};
-use crate::sim::{build_batch_timeline, layer_loads, OverlapMode, SystemProfile};
+use crate::sim::{
+    build_batch_timeline, build_training_timeline, layer_loads, BatchSpec, OverlapMode,
+    PipelineWindow, SystemProfile, DEFAULT_PIPELINE_WINDOW, DEFAULT_STALENESS,
+};
 use crate::util::prng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -142,6 +145,10 @@ pub struct SimRunner {
     /// How [`batch_timed`](Self::batch_timed) schedules the batch's
     /// phases. Serialized (the default) reproduces the paper's loop.
     overlap: OverlapMode,
+    /// Bounded staleness K for `GpuPipelined` (0 = synchronous barrier).
+    staleness: usize,
+    /// Batches scheduled per cross-batch window in `GpuPipelined` mode.
+    pipeline_window: usize,
     /// Real full-size weights (measured Bitpack / l²-norm targets).
     weights: Vec<Vec<f32>>,
     /// Per-layer pack buffers, allocated once (same arena the Trainer's
@@ -167,6 +174,8 @@ impl SimRunner {
             profile,
             adt,
             overlap: OverlapMode::Serialized,
+            staleness: DEFAULT_STALENESS,
+            pipeline_window: DEFAULT_PIPELINE_WINDOW,
             weights,
             pack: PackArena::new(&counts),
             desc,
@@ -189,6 +198,21 @@ impl SimRunner {
     pub fn with_overlap(mut self, mode: OverlapMode) -> SimRunner {
         self.overlap = mode;
         self
+    }
+
+    pub fn staleness(&self) -> usize {
+        self.staleness
+    }
+
+    pub fn pipeline_window(&self) -> usize {
+        self.pipeline_window
+    }
+
+    /// Configure the `GpuPipelined` schedule: bounded staleness K and
+    /// the cross-batch window length (clamped to >= 1).
+    pub fn set_async(&mut self, staleness: usize, pipeline_window: usize) {
+        self.staleness = staleness;
+        self.pipeline_window = pipeline_window.max(1);
     }
 
     /// Measure Bitpack of the real full-size weights at `formats` through
@@ -265,6 +289,10 @@ impl SimRunner {
     ///   and scheduled on the event-driven timeline; per-phase busy
     ///   totals keep their Table II/III meaning while the critical path
     ///   reflects the overlapped schedule.
+    /// * `GpuPipelined` — a [`pipeline_window`](Self::pipeline_window)-
+    ///   batch window is scheduled per-GPU with bounded staleness and
+    ///   every reported quantity is the per-batch average over the
+    ///   window (steady-state pipeline amortizing its fill/drain).
     pub fn batch_timed(
         &mut self,
         formats: Option<&[RoundTo]>,
@@ -289,22 +317,48 @@ impl SimRunner {
                     uses_adt,
                     include_norms && uses_adt,
                 );
-                let phases = SimBatchProfile {
-                    bitpack_s: tl.busy_phase_s(Phase::Bitpack),
-                    h2d_s: tl.busy_phase_s(Phase::H2D),
-                    unpack_s: tl.busy_phase_s(Phase::Bitunpack),
-                    conv_s: tl.busy_phase_s(Phase::Conv),
-                    fc_s: tl.busy_phase_s(Phase::Fc),
-                    d2h_s: tl.busy_phase_s(Phase::D2H),
-                    update_s: tl.busy_phase_s(Phase::GradUpdate),
-                    awp_norm_s: tl.busy_phase_s(Phase::AwpNorm),
-                };
-                SimBatchOutcome {
-                    phases,
-                    critical_path_s: tl.critical_path_s(),
-                    serialized_s: tl.serialized_sum_s(),
-                }
+                Self::outcome_from_timeline(&tl, 1)
             }
+            OverlapMode::GpuPipelined => {
+                let loads = layer_loads(&self.desc, formats);
+                let uses_adt = formats.is_some();
+                let spec = BatchSpec {
+                    batch_size,
+                    uses_adt,
+                    include_norms: include_norms && uses_adt,
+                };
+                let window = PipelineWindow::new(self.pipeline_window, self.staleness);
+                let tl = build_training_timeline(
+                    OverlapMode::GpuPipelined,
+                    &self.profile,
+                    &mut self.interconnect,
+                    &loads,
+                    spec,
+                    window,
+                );
+                Self::outcome_from_timeline(&tl, window.n_batches)
+            }
+        }
+    }
+
+    /// Per-batch outcome of a scheduled window (`n_batches == 1` keeps
+    /// every quantity bit-identical — `* 1.0` is an IEEE no-op).
+    fn outcome_from_timeline(tl: &crate::sim::Timeline, n_batches: usize) -> SimBatchOutcome {
+        let inv = 1.0 / n_batches as f64;
+        let phases = SimBatchProfile {
+            bitpack_s: tl.busy_phase_s(Phase::Bitpack) * inv,
+            h2d_s: tl.busy_phase_s(Phase::H2D) * inv,
+            unpack_s: tl.busy_phase_s(Phase::Bitunpack) * inv,
+            conv_s: tl.busy_phase_s(Phase::Conv) * inv,
+            fc_s: tl.busy_phase_s(Phase::Fc) * inv,
+            d2h_s: tl.busy_phase_s(Phase::D2H) * inv,
+            update_s: tl.busy_phase_s(Phase::GradUpdate) * inv,
+            awp_norm_s: tl.busy_phase_s(Phase::AwpNorm) * inv,
+        };
+        SimBatchOutcome {
+            phases,
+            critical_path_s: tl.critical_path_s() * inv,
+            serialized_s: tl.serialized_sum_s() * inv,
         }
     }
 }
@@ -406,6 +460,39 @@ mod tests {
         let mut s = runner();
         let serial = s.batch(Some(&formats), 64, true).total();
         assert!((out.serialized_s / serial - 1.0).abs() < 0.01, "{} vs {serial}", out.serialized_s);
+    }
+
+    #[test]
+    fn gpu_pipelined_staleness_zero_matches_layer_pipelined_bit_exactly() {
+        let formats = formats_for_mean_bytes(&vgg_a(200), 4.0 / 3.0);
+        let mut pip = runner().with_overlap(OverlapMode::LayerPipelined);
+        let mut gpu = runner().with_overlap(OverlapMode::GpuPipelined);
+        gpu.set_async(0, 1);
+        let a = pip.batch_timed(Some(&formats), 64, true);
+        let b = gpu.batch_timed(Some(&formats), 64, true);
+        assert_eq!(a.critical_path_s.to_bits(), b.critical_path_s.to_bits());
+        assert_eq!(a.serialized_s.to_bits(), b.serialized_s.to_bits());
+        assert_eq!(a.phases.total().to_bits(), b.phases.total().to_bits());
+    }
+
+    #[test]
+    fn gpu_pipelined_window_beats_layer_pipelined_per_batch() {
+        let formats = formats_for_mean_bytes(&vgg_a(200), 4.0 / 3.0);
+        let mut pip = runner().with_overlap(OverlapMode::LayerPipelined);
+        let mut gpu = runner().with_overlap(OverlapMode::GpuPipelined);
+        assert_eq!(gpu.staleness(), 1);
+        assert_eq!(gpu.pipeline_window(), 4);
+        let a = pip.batch_timed(Some(&formats), 64, true);
+        let b = gpu.batch_timed(Some(&formats), 64, true);
+        let (bc, ac) = (b.critical_path_s, a.critical_path_s);
+        assert!(bc < ac, "{bc} vs {ac}");
+        assert!(b.overlap_speedup() > a.overlap_speedup());
+        // per-batch busy averages keep the Table II semantics (window
+        // averaging adds only rounding dust)
+        assert!((b.phases.bitpack_s / a.phases.bitpack_s - 1.0).abs() < 1e-12);
+        assert!((b.phases.h2d_s / a.phases.h2d_s - 1.0).abs() < 1e-12);
+        assert!((b.phases.conv_s / a.phases.conv_s - 1.0).abs() < 1e-12);
+        assert!((b.phases.update_s / a.phases.update_s - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -12,8 +12,11 @@ use crate::awp::PolicyKind;
 use crate::interconnect::Interconnect;
 use crate::metrics::TrainCurve;
 use crate::models::ModelDesc;
-use crate::sim::{build_batch_timeline, layer_loads, layer_loads_mean_bytes, OverlapMode};
 use crate::sim::SystemProfile;
+use crate::sim::{
+    build_training_timeline, layer_loads, layer_loads_mean_bytes, BatchSpec, OverlapMode,
+    PipelineWindow,
+};
 
 /// Simulated duration of one batch given the policy's compression state.
 ///
@@ -66,7 +69,9 @@ pub fn batch_time(
 /// Simulated duration of one batch under the event-driven overlap
 /// timeline ("Fig 6" machinery): returns `(critical_path_s, serial_s)`
 /// where `serial_s` is the Fig-1 serial reference of the same per-layer
-/// event set. With `OverlapMode::Serialized` the two are equal.
+/// event set. With `OverlapMode::Serialized` the two are equal. One
+/// batch is scheduled; for the cross-batch `GpuPipelined` pipeline use
+/// [`batch_time_overlap_windowed`].
 pub fn batch_time_overlap(
     profile: &SystemProfile,
     desc: &ModelDesc,
@@ -75,6 +80,32 @@ pub fn batch_time_overlap(
     bytes_per_weight: f64,
     mode: OverlapMode,
 ) -> (f64, f64) {
+    batch_time_overlap_windowed(
+        profile,
+        desc,
+        batch,
+        policy,
+        bytes_per_weight,
+        mode,
+        PipelineWindow::single(),
+    )
+}
+
+/// Per-batch `(critical_path_s, serial_s)` of a `window.n_batches`-batch
+/// schedule (totals divided by the window length — the steady-state
+/// pipeline rate with fill/drain amortized). `window.staleness` is the
+/// bounded-staleness K of `GpuPipelined`; the synchronous modes ignore
+/// it. With `n_batches == 1` this is bit-identical to
+/// [`batch_time_overlap`].
+pub fn batch_time_overlap_windowed(
+    profile: &SystemProfile,
+    desc: &ModelDesc,
+    batch: usize,
+    policy: PolicyKind,
+    bytes_per_weight: f64,
+    mode: OverlapMode,
+    window: PipelineWindow,
+) -> (f64, f64) {
     let uses_adt = policy.uses_adt();
     let loads = if uses_adt {
         layer_loads_mean_bytes(desc, bytes_per_weight)
@@ -82,16 +113,10 @@ pub fn batch_time_overlap(
         layer_loads(desc, None)
     };
     let mut ic = Interconnect::new(profile.clone());
-    let tl = build_batch_timeline(
-        mode,
-        profile,
-        &mut ic,
-        &loads,
-        batch,
-        uses_adt,
-        policy.needs_norms(),
-    );
-    (tl.critical_path_s(), tl.serialized_sum_s())
+    let spec = BatchSpec { batch_size: batch, uses_adt, include_norms: policy.needs_norms() };
+    let tl = build_training_timeline(mode, profile, &mut ic, &loads, spec, window);
+    let inv = 1.0 / window.n_batches as f64;
+    (tl.critical_path_s() * inv, tl.serialized_sum_s() * inv)
 }
 
 /// Fig 6 y-axis: serial-loop time ÷ layer-pipelined critical path for one
@@ -108,14 +133,13 @@ pub fn overlap_speedup(
     serial / crit
 }
 
-/// Replay a trace on `profile`, returning cumulative simulated time at
-/// each validation point: `(batch, cum_time_s, val_error, bytes/weight)`.
-pub fn replay(
+/// Shared trace integrator: walk a convergence trace and accumulate
+/// simulated time, with each span's per-batch duration supplied by
+/// `span_time(mean bytes/weight)` — the only thing that differs between
+/// the serial replay and the overlap-aware one.
+fn integrate_trace(
     curve: &TrainCurve,
-    profile: &SystemProfile,
-    desc: &ModelDesc,
-    batch: usize,
-    policy: PolicyKind,
+    mut span_time: impl FnMut(f64) -> f64,
 ) -> Vec<(u64, f64, f64, f64)> {
     let mut out = Vec::with_capacity(curve.points.len());
     let mut cum = 0.0;
@@ -125,7 +149,7 @@ pub fn replay(
         let span = p.batch.saturating_sub(prev_batch);
         if span > 0 {
             let mean_bpw = 0.5 * (prev_bpw + p.bytes_per_weight);
-            cum += span as f64 * batch_time(profile, desc, batch, policy, mean_bpw);
+            cum += span as f64 * span_time(mean_bpw);
         }
         out.push((p.batch, cum, p.val_error, p.bytes_per_weight));
         prev_batch = p.batch;
@@ -134,19 +158,50 @@ pub fn replay(
     out
 }
 
-/// Simulated time to reach `threshold` validation error (linear
-/// interpolation between validation points); None if never reached.
-pub fn time_to_error(
+/// Replay a trace on `profile`, returning cumulative simulated time at
+/// each validation point: `(batch, cum_time_s, val_error, bytes/weight)`.
+pub fn replay(
     curve: &TrainCurve,
     profile: &SystemProfile,
     desc: &ModelDesc,
     batch: usize,
     policy: PolicyKind,
-    threshold: f64,
-) -> Option<f64> {
-    let series = replay(curve, profile, desc, batch, policy);
+) -> Vec<(u64, f64, f64, f64)> {
+    integrate_trace(curve, |mean_bpw| batch_time(profile, desc, batch, policy, mean_bpw))
+}
+
+/// Overlap-aware replay: like [`replay`], but each span integrates the
+/// event-driven timeline's per-batch *critical path* under `mode`
+/// instead of the serial phase sum — the time-to-accuracy restatement of
+/// Figs 3/4/5 with data motion hidden behind compute. Pass the run's
+/// configured [`PipelineWindow`] so the figure matches the train-time
+/// report ([`PipelineWindow::default_async`] for `GpuPipelined`,
+/// [`PipelineWindow::single`] for the synchronous modes, which ignore
+/// the staleness field).
+pub fn replay_overlap(
+    curve: &TrainCurve,
+    profile: &SystemProfile,
+    desc: &ModelDesc,
+    batch: usize,
+    policy: PolicyKind,
+    mode: OverlapMode,
+    window: PipelineWindow,
+) -> Vec<(u64, f64, f64, f64)> {
+    integrate_trace(curve, |mean_bpw| {
+        let (crit, _serial) =
+            batch_time_overlap_windowed(profile, desc, batch, policy, mean_bpw, mode, window);
+        crit
+    })
+}
+
+/// Simulated time at which a replayed series first reaches `threshold`
+/// validation error (linear interpolation between validation points);
+/// None if never reached. Series entries are
+/// `(batch, cum_time_s, val_error, bytes/weight)` as produced by
+/// [`replay`] / [`replay_overlap`].
+pub fn time_to_error_in(series: &[(u64, f64, f64, f64)], threshold: f64) -> Option<f64> {
     let mut prev: Option<&(u64, f64, f64, f64)> = None;
-    for p in &series {
+    for p in series {
         if p.2 <= threshold {
             return Some(match prev {
                 None => p.1,
@@ -163,6 +218,20 @@ pub fn time_to_error(
         prev = Some(p);
     }
     None
+}
+
+/// Simulated time to reach `threshold` validation error under the
+/// paper's serial loop; None if never reached.
+pub fn time_to_error(
+    curve: &TrainCurve,
+    profile: &SystemProfile,
+    desc: &ModelDesc,
+    batch: usize,
+    policy: PolicyKind,
+    threshold: f64,
+) -> Option<f64> {
+    let series = replay(curve, profile, desc, batch, policy);
+    time_to_error_in(&series, threshold)
 }
 
 /// The oracle policy for one configuration: the fixed format whose
@@ -305,6 +374,82 @@ mod tests {
         assert!((t_half - series[1].1).abs() < 1e-9);
         assert!(t_half < t_30 && t_30 < series[2].1);
         assert!(time_to_error(&c, &profile, &d, 64, PolicyKind::Baseline, 0.05).is_none());
+    }
+
+    #[test]
+    fn replay_overlap_orders_modes_and_reaches_threshold_sooner() {
+        let c = curve(&[(0, 0.9, 4.0), (40, 0.5, 2.0), (80, 0.2, 4.0 / 3.0)]);
+        let profile = SystemProfile::x86();
+        let d = vgg_a(200);
+        let one = PipelineWindow::single();
+        let ser =
+            replay_overlap(&c, &profile, &d, 64, PolicyKind::Awp, OverlapMode::Serialized, one);
+        let pip =
+            replay_overlap(&c, &profile, &d, 64, PolicyKind::Awp, OverlapMode::LayerPipelined, one);
+        let gpu = replay_overlap(
+            &c,
+            &profile,
+            &d,
+            64,
+            PolicyKind::Awp,
+            OverlapMode::GpuPipelined,
+            PipelineWindow::default_async(),
+        );
+        assert_eq!(ser.len(), 3);
+        // same convergence trace, faster clock under deeper overlap
+        for i in 1..3 {
+            assert!(pip[i].1 < ser[i].1, "point {i}: pipelined not faster");
+            assert!(gpu[i].1 < pip[i].1, "point {i}: gpu-pipelined not faster");
+            assert_eq!(ser[i].2, pip[i].2);
+            assert_eq!(ser[i].2, gpu[i].2);
+        }
+        // …so every accuracy threshold is reached sooner
+        let t_ser = time_to_error_in(&ser, 0.5).unwrap();
+        let t_pip = time_to_error_in(&pip, 0.5).unwrap();
+        let t_gpu = time_to_error_in(&gpu, 0.5).unwrap();
+        assert!(t_gpu < t_pip && t_pip < t_ser, "{t_gpu} < {t_pip} < {t_ser} violated");
+        assert!(time_to_error_in(&gpu, 0.05).is_none());
+    }
+
+    #[test]
+    fn windowed_batch_time_matches_single_batch_when_window_is_one() {
+        let d = vgg_a(200);
+        let p = SystemProfile::power();
+        let (c1, s1) =
+            batch_time_overlap(&p, &d, 64, PolicyKind::Awp, 4.0 / 3.0, OverlapMode::LayerPipelined);
+        let (c2, s2) = batch_time_overlap_windowed(
+            &p,
+            &d,
+            64,
+            PolicyKind::Awp,
+            4.0 / 3.0,
+            OverlapMode::LayerPipelined,
+            crate::sim::PipelineWindow::new(1, 1),
+        );
+        assert_eq!(c1.to_bits(), c2.to_bits());
+        assert_eq!(s1.to_bits(), s2.to_bits());
+        // a longer gpu-pipelined window amortizes fill/drain: per-batch
+        // critical path shrinks monotonically toward steady state
+        let (g1, _) = batch_time_overlap_windowed(
+            &p,
+            &d,
+            64,
+            PolicyKind::Awp,
+            4.0 / 3.0,
+            OverlapMode::GpuPipelined,
+            crate::sim::PipelineWindow::new(1, 1),
+        );
+        let (g4, _) = batch_time_overlap_windowed(
+            &p,
+            &d,
+            64,
+            PolicyKind::Awp,
+            4.0 / 3.0,
+            OverlapMode::GpuPipelined,
+            crate::sim::PipelineWindow::new(4, 1),
+        );
+        assert!(g4 < g1, "window 4 per-batch {g4} should beat window 1 {g1}");
+        assert!(g4 < c1, "gpu-pipelined {g4} should beat layer-pipelined {c1}");
     }
 
     #[test]

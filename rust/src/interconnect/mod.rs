@@ -102,6 +102,34 @@ impl Channel {
         timeline.schedule(self.direction.resource(), phase, t.seconds, deps)
     }
 
+    /// Wall seconds of one per-GPU *leg* of an interleaved transfer:
+    /// `bytes` moved to/from a single GPU at the aggregate channel rate,
+    /// with the setup latency amortized across the fanout (the legs are
+    /// segments of one pipelined gather/broadcast, not independent
+    /// transfers).
+    pub fn leg_time(&self, bytes: usize) -> f64 {
+        self.latency_s / self.fanout as f64 + bytes as f64 / self.bps
+    }
+
+    /// Account and enqueue one per-GPU leg after `deps`. `busy_s` is the
+    /// Tables II/III charge the caller attributes to this leg — the
+    /// fused transfer's [`transfer_time`](Self::transfer_time) on its
+    /// first leg and 0 on the rest, keeping per-phase busy totals
+    /// mode-independent while the schedule interleaves per GPU.
+    pub fn enqueue_leg(
+        &mut self,
+        timeline: &mut Timeline,
+        phase: Phase,
+        bytes: usize,
+        busy_s: f64,
+        deps: &[EventId],
+    ) -> EventId {
+        let seconds = self.leg_time(bytes);
+        self.total_s += seconds;
+        self.bytes_total += bytes as u64;
+        timeline.schedule_weighted(self.direction.resource(), phase, seconds, busy_s, deps)
+    }
+
     /// Cumulative accounted seconds.
     pub fn total_s(&self) -> f64 {
         self.total_s
@@ -231,6 +259,28 @@ mod tests {
         let tiny = ic.broadcast(64).seconds;
         assert!(tiny >= ic.profile().link_latency_s);
         assert!(tiny < 2.0 * ic.profile().link_latency_s);
+    }
+
+    #[test]
+    fn interleaved_legs_preserve_fused_accounting() {
+        // n per-GPU legs carry the same bytes as one fused gather and
+        // occupy the channel for (almost exactly) the same wall time —
+        // the latency is amortized across the fanout, not re-paid.
+        let mut fused = Interconnect::new(SystemProfile::x86());
+        let mut split = Interconnect::new(SystemProfile::x86());
+        let mut tl = Timeline::new(OverlapMode::GpuPipelined);
+        let bytes = 518_298_368usize;
+        let whole = fused.gather(bytes).seconds;
+        let n = split.profile().n_gpus;
+        let mut leg_sum = 0.0;
+        for _ in 0..n {
+            leg_sum += split.d2h.leg_time(bytes);
+            split.d2h.enqueue_leg(&mut tl, Phase::D2H, bytes, 0.0, &[]);
+        }
+        assert_eq!(split.d2h_bytes_total(), fused.d2h_bytes_total());
+        assert!((leg_sum / whole - 1.0).abs() < 1e-12, "legs {leg_sum} vs fused {whole}");
+        // legs serialize on the channel clock
+        assert!((tl.critical_path_s() / whole - 1.0).abs() < 1e-12);
     }
 
     #[test]

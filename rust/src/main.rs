@@ -28,14 +28,18 @@ const USAGE: &str = "usage: a2dtwp <train|profile|models|info> [options]
     --batch-size N       global batch (split across 4 simulated GPUs)
     --policy P           baseline|awp|fixed8|fixed16|fixed24|fixed32
     --system S           x86|power
-    --scenario NAME      uniform|straggler-mild|straggler-severe|hetero-linear
-    --overlap M          serialized|pipelined (batch-phase scheduling)
+    --scenario NAME      uniform|straggler-mild|straggler-severe|hetero-linear|
+                         pcie-contended|nvlink-degraded|pack-starved
+    --overlap M          serialized|pipelined|gpu-pipelined (batch scheduling)
+    --staleness K        gpu-pipelined bounded staleness (0 = sync barrier)
+    --pipeline-window N  gpu-pipelined cross-batch window (default 4)
     --max-batches N      training length cap
     --val-every N        validation cadence (batches)
     --target-error E     stop when top-1 val error <= E
     --seed N             PRNG seed
     --artifacts DIR      AOT artifacts directory (default: artifacts)
-    --csv PATH           also write the result table as CSV";
+    --csv PATH           also write the result table as CSV
+    --json PATH          (profile) write machine-readable metrics JSON";
 
 fn main() {
     let spec = Spec {
@@ -46,6 +50,8 @@ fn main() {
             "system",
             "scenario",
             "overlap",
+            "staleness",
+            "pipeline-window",
             "max-batches",
             "val-every",
             "target-error",
@@ -53,6 +59,7 @@ fn main() {
             "lr",
             "artifacts",
             "csv",
+            "json",
         ],
         flags: &["verbose", "help"],
     };
@@ -105,6 +112,11 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
             format!("unknown overlap mode '{overlap}' ({})", OVERLAP_NAMES.join("|"))
         })?;
     }
+    cfg.staleness = args.get_usize("staleness", cfg.staleness)?;
+    cfg.pipeline_window = args.get_usize("pipeline-window", cfg.pipeline_window)?;
+    if cfg.pipeline_window == 0 {
+        return Err("--pipeline-window must be >= 1".into());
+    }
     cfg.max_batches = args.get_u64("max-batches", cfg.max_batches)?;
     cfg.val_every = args.get_u64("val-every", cfg.val_every)?;
     cfg.target_error = args.get_f64("target-error", cfg.target_error)?;
@@ -147,9 +159,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     for ph in a2dtwp::profiler::Phase::ALL {
         println!("  {:<24} {:8.3}", ph.label(), report.profiler.avg_s(ph) * 1e3);
     }
-    if cfg.overlap == OverlapMode::LayerPipelined {
+    if cfg.overlap != OverlapMode::Serialized {
         println!(
-            "overlap: pipelined — avg critical path {:.3} ms/batch ({:.2}x vs serial phases)",
+            "overlap: {} — avg critical path {:.3} ms/batch ({:.2}x vs serial phases)",
+            cfg.overlap.name(),
             report.profiler.avg_critical_batch_s() * 1e3,
             report.profiler.overlap_speedup()
         );
@@ -180,8 +193,17 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         })?,
         None => OverlapMode::Serialized,
     };
+    let staleness =
+        args.get_usize("staleness", a2dtwp::sim::DEFAULT_STALENESS).map_err(|e| anyhow::anyhow!(e))?;
+    let window = args
+        .get_usize("pipeline-window", a2dtwp::sim::DEFAULT_PIPELINE_WINDOW)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    if window == 0 {
+        anyhow::bail!("--pipeline-window must be >= 1");
+    }
     let mut runner = SimRunner::new(desc, profile, Default::default(), 7);
     runner.set_overlap(overlap);
+    runner.set_async(staleness, window);
 
     // 32-bit baseline column
     let base = runner.batch_timed(None, batch, false);
@@ -216,7 +238,7 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         base.critical_path_s * 1e3,
         adt.critical_path_s * 1e3,
     );
-    if overlap == OverlapMode::LayerPipelined {
+    if overlap != OverlapMode::Serialized {
         println!(
             "overlap speedup vs serial loop: 32-bit {:.2}x  A2DTWP {:.2}x",
             base.overlap_speedup(),
@@ -225,6 +247,33 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(path) = args.get("csv") {
         t.save_csv(path)?;
+        println!("wrote {path}");
+    }
+    if let Some(path) = args.get("json") {
+        use a2dtwp::util::json::Json;
+        let metrics = Json::obj(vec![
+            ("model", Json::str(model)),
+            ("system", Json::str(system)),
+            ("scenario", Json::str(args.get("scenario").unwrap_or("uniform"))),
+            ("overlap", Json::str(overlap.name())),
+            ("batch", Json::num(batch as f64)),
+            ("staleness", Json::num(staleness as f64)),
+            ("pipeline_window", Json::num(window as f64)),
+            ("baseline_critical_path_ms", Json::num(base.critical_path_s * 1e3)),
+            ("baseline_serialized_ms", Json::num(base.serialized_s * 1e3)),
+            ("baseline_overlap_speedup", Json::num(base.overlap_speedup())),
+            ("a2dtwp_critical_path_ms", Json::num(adt.critical_path_s * 1e3)),
+            ("a2dtwp_serialized_ms", Json::num(adt.serialized_s * 1e3)),
+            ("a2dtwp_overlap_speedup", Json::num(adt.overlap_speedup())),
+            ("awp_share", Json::num(adt_prof.awp_share())),
+            ("adt_share", Json::num(adt_prof.adt_share())),
+        ]);
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, metrics.to_string_pretty())?;
         println!("wrote {path}");
     }
     Ok(())

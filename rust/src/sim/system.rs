@@ -56,10 +56,20 @@ pub struct SystemProfile {
 }
 
 /// Scenario presets accepted by `--scenario`: named perturbations of a
-/// base platform profile for what-if exploration (heterogeneous pools,
-/// stragglers). `"uniform"` is the calibrated paper platform.
-pub const SCENARIO_NAMES: [&str; 4] =
-    ["uniform", "straggler-mild", "straggler-severe", "hetero-linear"];
+/// base platform profile for what-if exploration. `"uniform"` is the
+/// calibrated paper platform; the `straggler-*`/`hetero-linear` presets
+/// perturb the GPU pool, `pcie-contended`/`nvlink-degraded` the link,
+/// and `pack-starved` the CPU side — all just rate edits feeding the
+/// same timeline.
+pub const SCENARIO_NAMES: [&str; 7] = [
+    "uniform",
+    "straggler-mild",
+    "straggler-severe",
+    "hetero-linear",
+    "pcie-contended",
+    "nvlink-degraded",
+    "pack-starved",
+];
 
 /// VGG-A/200 f32 payload used for calibration (Table II/III workload):
 /// 129,574,592 weights × 4 B = 518,298,368 B, broadcast to 4 GPUs.
@@ -153,6 +163,42 @@ impl SystemProfile {
         self.with_gpu_speeds(speeds)
     }
 
+    /// Scale both link directions' effective bandwidth and the setup
+    /// latency (contention / degraded link width). Scales must be
+    /// finite and positive; `latency_mult >= 1` (perturbations model
+    /// loss, not free upgrades).
+    pub fn with_link_perturbation(
+        mut self,
+        h2d_scale: f64,
+        d2h_scale: f64,
+        latency_mult: f64,
+    ) -> SystemProfile {
+        assert!(
+            h2d_scale.is_finite() && h2d_scale > 0.0 && d2h_scale.is_finite() && d2h_scale > 0.0,
+            "link bandwidth scales must be finite and positive"
+        );
+        assert!(
+            latency_mult.is_finite() && latency_mult >= 1.0,
+            "link latency multiplier must be finite and >= 1"
+        );
+        self.h2d_bps *= h2d_scale;
+        self.d2h_bps *= d2h_scale;
+        self.link_latency_s *= latency_mult;
+        self
+    }
+
+    /// Scale the CPU-side streaming kernels (Bitpack + l²-norm) by
+    /// `scale` ∈ (0, 1]: pack-thread starvation from co-located load.
+    pub fn with_cpu_starvation(mut self, scale: f64) -> SystemProfile {
+        assert!(
+            scale.is_finite() && scale > 0.0 && scale <= 1.0,
+            "CPU starvation scale must be in (0, 1]"
+        );
+        self.pack_bps *= scale;
+        self.norm_bps *= scale;
+        self
+    }
+
     /// Apply a named scenario preset (see [`SCENARIO_NAMES`]).
     pub fn scenario(self, name: &str) -> Option<SystemProfile> {
         match name {
@@ -164,6 +210,15 @@ impl SystemProfile {
                 let speeds = (0..n).map(|g| 1.0 - 0.05 * g as f64).collect();
                 Some(self.with_gpu_speeds(speeds))
             }
+            // co-located traffic on the shared bus: 60% of the effective
+            // bandwidth survives in each direction, setup latency 4×.
+            "pcie-contended" => Some(self.with_link_perturbation(0.6, 0.6, 4.0)),
+            // half the link width down (NVLink bricks fail in pairs);
+            // per-transfer latency is unaffected.
+            "nvlink-degraded" => Some(self.with_link_perturbation(0.5, 0.5, 1.0)),
+            // the pack/norm thread pool starved to a quarter of its
+            // calibrated throughput by co-scheduled CPU work.
+            "pack-starved" => Some(self.with_cpu_starvation(0.25)),
             _ => None,
         }
     }
@@ -323,6 +378,31 @@ mod tests {
         // a uniformly faster pool speeds up (no silent >= 1.0 clamp)
         let fast = SystemProfile::x86().with_gpu_speeds(vec![2.0; 4]);
         assert!((fast.compute_wall_factor() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn link_and_cpu_scenarios_perturb_the_right_rates() {
+        let base = SystemProfile::x86();
+        let pcie = SystemProfile::x86().scenario("pcie-contended").unwrap();
+        assert!((pcie.h2d_bps / base.h2d_bps - 0.6).abs() < 1e-12);
+        assert!((pcie.d2h_bps / base.d2h_bps - 0.6).abs() < 1e-12);
+        assert!((pcie.link_latency_s / base.link_latency_s - 4.0).abs() < 1e-12);
+        assert_eq!(pcie.compute_wall_factor(), 1.0, "links only — GPUs untouched");
+        assert_eq!(pcie.pack_bps.to_bits(), base.pack_bps.to_bits());
+
+        let nvlink = SystemProfile::power().scenario("nvlink-degraded").unwrap();
+        let pbase = SystemProfile::power();
+        assert!((nvlink.h2d_bps / pbase.h2d_bps - 0.5).abs() < 1e-12);
+        assert_eq!(nvlink.link_latency_s.to_bits(), pbase.link_latency_s.to_bits());
+        // degraded link lengthens transfers proportionally
+        let payload = vgg_a(200).weight_bytes_f32();
+        assert!(nvlink.h2d_time(payload) > pbase.h2d_time(payload));
+
+        let starved = SystemProfile::x86().scenario("pack-starved").unwrap();
+        assert!((starved.pack_bps / base.pack_bps - 0.25).abs() < 1e-12);
+        assert!((starved.norm_bps / base.norm_bps - 0.25).abs() < 1e-12);
+        assert_eq!(starved.h2d_bps.to_bits(), base.h2d_bps.to_bits(), "CPU only — links untouched");
+        assert!((starved.pack_time(payload) / base.pack_time(payload) - 4.0).abs() < 1e-9);
     }
 
     #[test]

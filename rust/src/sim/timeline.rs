@@ -15,7 +15,7 @@
 //! channel, GPU pool / per-GPU lanes) carries a clock. An event occupies
 //! one resource for a duration and may depend on earlier events; its start
 //! is the max of its resource's clock and its dependencies' finish times.
-//! Two wirings are supported:
+//! Three wirings are supported:
 //!
 //! * [`OverlapMode::Serialized`] — every event depends on the previously
 //!   scheduled one (the Fig 1 global chain). The critical path is then the
@@ -26,23 +26,25 @@
 //!   compute; the gradient gather of layer *k* double-buffers against the
 //!   backprop of layer *k−1* (backprop emits gradients in reverse layer
 //!   order); the CPU update/norm of a gathered layer overlaps the
-//!   remaining gathers.
+//!   remaining gathers. GPUs stay lockstep on the pooled resource.
+//! * [`OverlapMode::GpuPipelined`] — per-GPU asynchronous schedules on
+//!   the [`Resource::Gpu`] lanes with bounded staleness (Ma & Rusu's
+//!   asynchronous CPU+GPU SGD, arXiv:2004.08771): fast GPUs start batch
+//!   *n*+1 while a straggler finishes batch *n*, backward is split into
+//!   dgrad/wgrad so the gather of layer *k* starts after wgrad(*k*),
+//!   gathers interleave per GPU on the D2H channel, and pack(*n*+1)
+//!   overlaps the update tail of batch *n*. See
+//!   [`build_training_timeline`].
 //!
-//! Because both modes schedule the *identical* event set (same durations,
-//! same emission order) and only the dependency wiring differs, per-phase
-//! busy totals are identical in both modes — Tables II/III keep their
-//! meaning — while the critical path shrinks. Monotonicity of IEEE-754
-//! `max`/`+` over non-negative durations guarantees the pipelined critical
-//! path never exceeds the serialized sum, rounding included.
-//!
-//! **GPU granularity.** The batch builder schedules compute on the pooled
-//! GPU resource: the calibrated conv/fc/unpack rates are aggregate, and
-//! synchronous data-parallel GPUs run in lockstep, so the pool's wall time
-//! is the slowest shard's. Per-GPU heterogeneity therefore enters as the
-//! profile's [`SystemProfile::compute_wall_factor`] (straggler presets)
-//! scaling every device-side duration. The engine itself is granular:
-//! [`Resource::Gpu`] lanes exist and schedule concurrently (property
-//! tests exercise them), so a per-GPU builder is a drop-in extension.
+//! The synchronous modes schedule the *identical* event set (same
+//! durations, same emission order) and only the dependency wiring
+//! differs; the per-GPU mode schedules physical per-lane durations but
+//! charges each logical phase's Tables II/III cost ([`Event::busy_s`])
+//! exactly once with the synchronous builder's arithmetic. Per-phase busy
+//! totals are therefore identical in every mode — Tables II/III keep
+//! their meaning — while the critical path shrinks. Monotonicity of
+//! IEEE-754 `max`/`+` over non-negative durations guarantees a pipelined
+//! critical path never exceeds the serialized sum, rounding included.
 
 use crate::interconnect::Interconnect;
 use crate::models::ModelDesc;
@@ -55,18 +57,38 @@ pub enum OverlapMode {
     /// Fig 1's serial loop: each phase event waits for everything before
     /// it. Default; reproduces the paper's Tables II/III accounting.
     Serialized,
-    /// Layer-granular pipelining across CPU, links and GPU pool.
+    /// Layer-granular pipelining across CPU, links and GPU pool. GPUs
+    /// stay lockstep: every batch ends at the fused gather barrier.
     LayerPipelined,
+    /// Per-GPU asynchronous schedules with bounded staleness: each GPU
+    /// lane runs its own shard, backward is split into dgrad/wgrad so
+    /// the gather of layer *k* waits only on wgrad(*k*), gathers are
+    /// interleaved per GPU on the D2H channel, and pack(batch *n*+1)
+    /// overlaps the update tail of batch *n*. With staleness 0 the
+    /// gather barrier is total and the schedule collapses to
+    /// [`OverlapMode::LayerPipelined`] bit-exactly (by construction:
+    /// the synchronous wiring *is* the K=0 schedule).
+    GpuPipelined,
 }
 
 /// Names accepted by `--overlap`.
-pub const OVERLAP_NAMES: [&str; 2] = ["serialized", "pipelined"];
+pub const OVERLAP_NAMES: [&str; 3] = ["serialized", "pipelined", "gpu-pipelined"];
+
+/// Default bounded staleness for [`OverlapMode::GpuPipelined`]: one
+/// batch of slack between the slowest GPU's gradients and the weights
+/// being packed.
+pub const DEFAULT_STALENESS: usize = 1;
+
+/// Default cross-batch window scheduled per `GpuPipelined` step: long
+/// enough for the steady-state pipeline to amortize its fill/drain.
+pub const DEFAULT_PIPELINE_WINDOW: usize = 4;
 
 impl OverlapMode {
     pub fn parse(s: &str) -> Option<OverlapMode> {
         match s {
             "serialized" => Some(OverlapMode::Serialized),
             "pipelined" => Some(OverlapMode::LayerPipelined),
+            "gpu-pipelined" => Some(OverlapMode::GpuPipelined),
             _ => None,
         }
     }
@@ -75,6 +97,7 @@ impl OverlapMode {
         match self {
             OverlapMode::Serialized => "serialized",
             OverlapMode::LayerPipelined => "pipelined",
+            OverlapMode::GpuPipelined => "gpu-pipelined",
         }
     }
 }
@@ -90,8 +113,9 @@ pub enum Resource {
     LinkD2h,
     /// The lockstep data-parallel GPU pool (aggregate calibrated rates).
     GpuPool,
-    /// One GPU lane (engine-level granularity for heterogeneous
-    /// schedules; the standard batch builder uses [`Resource::GpuPool`]).
+    /// One GPU lane: the synchronous builders use the lockstep
+    /// [`Resource::GpuPool`]; [`OverlapMode::GpuPipelined`] schedules
+    /// every lane independently.
     Gpu(usize),
 }
 
@@ -105,6 +129,12 @@ pub struct Event {
     pub resource: Resource,
     pub phase: Phase,
     pub duration_s: f64,
+    /// Tables II/III busy charge. Equal to `duration_s` for the
+    /// synchronous builders; the per-GPU builder splits one logical
+    /// phase across lanes/legs and charges the pool-equivalent cost on
+    /// exactly one of them (0 on the rest), so per-phase busy totals
+    /// stay mode-independent bit-for-bit.
+    pub busy_s: f64,
     pub start_s: f64,
     pub finish_s: f64,
 }
@@ -116,11 +146,13 @@ pub struct Timeline {
     /// (resource, clock) pairs; linear scan — a batch uses ≲6 resources.
     clocks: Vec<(Resource, f64)>,
     events: Vec<Event>,
+    /// Data-dependency edges as (from, to) indices into `events`.
+    edges: Vec<(usize, usize)>,
 }
 
 impl Timeline {
     pub fn new(mode: OverlapMode) -> Timeline {
-        Timeline { mode, clocks: Vec::new(), events: Vec::new() }
+        Timeline { mode, clocks: Vec::new(), events: Vec::new(), edges: Vec::new() }
     }
 
     pub fn mode(&self) -> OverlapMode {
@@ -139,10 +171,11 @@ impl Timeline {
     }
 
     /// Schedule an event on `resource`. In `Serialized` mode it chains
-    /// after the previously scheduled event regardless of `deps`; in
-    /// `LayerPipelined` mode it starts at the max of its resource clock
-    /// and its dependencies' finish times. Dependencies must refer to
-    /// already-scheduled events.
+    /// after the previously scheduled event regardless of `deps`; in the
+    /// pipelined modes it starts at the max of its resource clock and
+    /// its dependencies' finish times (resources are non-preemptive
+    /// in-order queues: emission order is execution order per resource).
+    /// Dependencies must refer to already-scheduled events.
     pub fn schedule(
         &mut self,
         resource: Resource,
@@ -150,16 +183,32 @@ impl Timeline {
         duration_s: f64,
         deps: &[EventId],
     ) -> EventId {
+        self.schedule_weighted(resource, phase, duration_s, duration_s, deps)
+    }
+
+    /// [`schedule`](Self::schedule) with an explicit Tables II/III busy
+    /// charge distinct from the scheduled duration (see [`Event::busy_s`]).
+    pub fn schedule_weighted(
+        &mut self,
+        resource: Resource,
+        phase: Phase,
+        duration_s: f64,
+        busy_s: f64,
+        deps: &[EventId],
+    ) -> EventId {
         assert!(
             duration_s.is_finite() && duration_s >= 0.0,
             "event duration must be finite and non-negative, got {duration_s}"
         );
+        assert!(
+            busy_s.is_finite() && busy_s >= 0.0,
+            "event busy charge must be finite and non-negative, got {busy_s}"
+        );
         let start_s = match self.mode {
             OverlapMode::Serialized => self.events.last().map_or(0.0, |e| e.finish_s),
-            OverlapMode::LayerPipelined => {
+            OverlapMode::LayerPipelined | OverlapMode::GpuPipelined => {
                 let mut t = self.clock(resource);
                 for d in deps {
-                    assert!(d.0 < self.events.len(), "dependency on unscheduled event");
                     let f = self.events[d.0].finish_s;
                     if f > t {
                         t = f;
@@ -170,8 +219,13 @@ impl Timeline {
         };
         let finish_s = start_s + duration_s;
         self.advance_clock(resource, finish_s);
-        self.events.push(Event { resource, phase, duration_s, start_s, finish_s });
-        EventId(self.events.len() - 1)
+        let id = self.events.len();
+        for d in deps {
+            assert!(d.0 < id, "dependency on unscheduled event");
+            self.edges.push((d.0, id));
+        }
+        self.events.push(Event { resource, phase, duration_s, busy_s, start_s, finish_s });
+        EventId(id)
     }
 
     pub fn finish_s(&self, id: EventId) -> f64 {
@@ -182,16 +236,26 @@ impl Timeline {
         &self.events
     }
 
+    /// Data-dependency edges as (from, to) indices into
+    /// [`events`](Self::events). In the pipelined modes every edge is
+    /// honoured: `events[to].start_s >= events[from].finish_s`.
+    pub fn dep_edges(&self) -> &[(usize, usize)] {
+        &self.edges
+    }
+
     /// Makespan: latest finish over all events (0 for an empty timeline).
     pub fn critical_path_s(&self) -> f64 {
         self.events.iter().fold(0.0, |m, e| if e.finish_s > m { e.finish_s } else { m })
     }
 
-    /// The Fig-1 serial reference: left-fold sum of every event duration
-    /// in emission order. In `Serialized` mode this equals
-    /// [`critical_path_s`](Self::critical_path_s) bit-for-bit.
+    /// The Fig-1 serial reference: left-fold sum of every event's busy
+    /// charge in emission order. The synchronous builders charge busy ==
+    /// duration, so in `Serialized` mode this equals
+    /// [`critical_path_s`](Self::critical_path_s) bit-for-bit; the
+    /// per-GPU builder charges the pool-equivalent cost once per logical
+    /// phase, so the reference stays the lockstep Fig-1 loop.
     pub fn serialized_sum_s(&self) -> f64 {
-        self.events.iter().fold(0.0, |a, e| a + e.duration_s)
+        self.events.iter().fold(0.0, |a, e| a + e.busy_s)
     }
 
     /// Per-phase busy totals in `Phase::ALL` order — the Tables II/III
@@ -199,16 +263,17 @@ impl Timeline {
     pub fn busy_s(&self) -> [f64; 8] {
         let mut busy = [0.0f64; 8];
         for e in &self.events {
-            busy[Phase::ALL.iter().position(|p| *p == e.phase).unwrap()] += e.duration_s;
+            busy[Phase::ALL.iter().position(|p| *p == e.phase).unwrap()] += e.busy_s;
         }
         busy
     }
 
     pub fn busy_phase_s(&self, phase: Phase) -> f64 {
-        self.events.iter().filter(|e| e.phase == phase).map(|e| e.duration_s).sum()
+        self.events.iter().filter(|e| e.phase == phase).map(|e| e.busy_s).sum()
     }
 
-    /// Total busy seconds of one resource (idle-gap diagnostics).
+    /// Total *occupancy* seconds of one resource (idle-gap diagnostics):
+    /// physical durations, not the Tables II/III busy charges.
     pub fn resource_busy_s(&self, r: Resource) -> f64 {
         self.events.iter().filter(|e| e.resource == r).map(|e| e.duration_s).sum()
     }
@@ -274,19 +339,45 @@ pub fn layer_loads_mean_bytes(desc: &ModelDesc, bytes_per_weight: f64) -> Vec<La
     loads
 }
 
-/// Schedule one training batch onto a fresh timeline.
-///
-/// Emission order (identical in both modes, so busy totals and the
-/// serialized reference are mode-independent): per-layer Bitpack, then
-/// per-layer broadcast, then interleaved unpack+forward in layer order,
-/// then — in reverse layer order — backprop, gradient gather and SGD
-/// update, then per-layer AWP norms. Backward compute is 2× forward
-/// (dgrad + wgrad), matching the calibrated `TRAIN_MULT = 3` split.
-///
-/// Link transfers go through the interconnect's per-direction
-/// [`crate::interconnect::Channel`]s, which account bytes/seconds exactly
-/// as the serial path does. Device-side durations are scaled by the
-/// profile's straggler wall factor.
+/// One batch's workload parameters for the timeline builders.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchSpec {
+    pub batch_size: usize,
+    pub uses_adt: bool,
+    pub include_norms: bool,
+}
+
+/// Cross-batch scheduling window: how many consecutive batches to
+/// schedule together and the bounded staleness K for
+/// [`OverlapMode::GpuPipelined`] (weights packed for batch *n* may miss
+/// the gradients of the last K batches; 0 = fully synchronous).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PipelineWindow {
+    pub n_batches: usize,
+    pub staleness: usize,
+}
+
+impl PipelineWindow {
+    pub fn new(n_batches: usize, staleness: usize) -> PipelineWindow {
+        assert!(n_batches >= 1, "pipeline window must cover at least one batch");
+        PipelineWindow { n_batches, staleness }
+    }
+
+    /// One batch, default staleness — what the legacy single-batch
+    /// builder schedules.
+    pub fn single() -> PipelineWindow {
+        PipelineWindow::new(1, DEFAULT_STALENESS)
+    }
+
+    /// The default async window (see [`DEFAULT_PIPELINE_WINDOW`]).
+    pub fn default_async() -> PipelineWindow {
+        PipelineWindow::new(DEFAULT_PIPELINE_WINDOW, DEFAULT_STALENESS)
+    }
+}
+
+/// Schedule one training batch onto a fresh timeline (the historic
+/// single-batch entry point; see [`build_training_timeline`] for
+/// multi-batch windows).
 pub fn build_batch_timeline(
     mode: OverlapMode,
     profile: &SystemProfile,
@@ -296,28 +387,110 @@ pub fn build_batch_timeline(
     uses_adt: bool,
     include_norms: bool,
 ) -> Timeline {
+    let spec = BatchSpec { batch_size, uses_adt, include_norms };
+    build_training_timeline(mode, profile, interconnect, layers, spec, PipelineWindow::single())
+}
+
+/// Schedule `window.n_batches` consecutive training batches onto a fresh
+/// timeline.
+///
+/// * `Serialized` / `LayerPipelined` — each batch is the synchronous
+///   per-layer schedule ([`schedule_sync_batch`]); batch *n*+1's pack of
+///   layer *k* depends on batch *n*'s update of layer *k*.
+/// * `GpuPipelined` with `window.staleness == 0` — the gather barrier is
+///   total, so the schedule **is** the synchronous wiring: critical
+///   paths reproduce `LayerPipelined` bit-exactly by construction.
+/// * `GpuPipelined` with `staleness >= 1` — the per-GPU asynchronous
+///   schedule ([`schedule_async_training`]).
+///
+/// In every mode the per-phase busy totals are the Tables II/III
+/// quantities, bit-identical across modes (verified by
+/// `tests/prop_timeline.rs`).
+pub fn build_training_timeline(
+    mode: OverlapMode,
+    profile: &SystemProfile,
+    interconnect: &mut Interconnect,
+    layers: &[LayerLoad],
+    spec: BatchSpec,
+    window: PipelineWindow,
+) -> Timeline {
+    assert!(window.n_batches >= 1, "pipeline window must cover at least one batch");
     let mut tl = Timeline::new(mode);
+    let asynchronous = mode == OverlapMode::GpuPipelined && window.staleness >= 1;
+    if asynchronous {
+        schedule_async_training(&mut tl, profile, interconnect, layers, spec, window);
+    } else {
+        let mut prev: Option<Vec<EventId>> = None;
+        for _ in 0..window.n_batches {
+            prev = Some(schedule_sync_batch(
+                &mut tl,
+                profile,
+                interconnect,
+                layers,
+                spec,
+                prev.as_deref(),
+            ));
+        }
+    }
+    tl
+}
+
+/// Append one synchronous training batch to `tl`, returning the
+/// per-layer SGD-update events (the next batch's pack dependencies).
+///
+/// Emission order (identical in every synchronous mode, so busy totals
+/// and the serialized reference are mode-independent): per-layer
+/// Bitpack, then per-layer broadcast, then interleaved unpack+forward in
+/// layer order, then — in reverse layer order — backprop, gradient
+/// gather and SGD update, then per-layer AWP norms. Backward compute is
+/// 2× forward (dgrad + wgrad), matching the calibrated `TRAIN_MULT = 3`
+/// split.
+///
+/// Link transfers go through the interconnect's per-direction
+/// [`crate::interconnect::Channel`]s, which account bytes/seconds exactly
+/// as the serial path does. Device-side durations are scaled by the
+/// profile's straggler wall factor.
+fn schedule_sync_batch(
+    tl: &mut Timeline,
+    profile: &SystemProfile,
+    interconnect: &mut Interconnect,
+    layers: &[LayerLoad],
+    spec: BatchSpec,
+    prev_updates: Option<&[EventId]>,
+) -> Vec<EventId> {
+    let BatchSpec { batch_size, uses_adt, include_norms } = spec;
     let wall = profile.compute_wall_factor();
     let n = layers.len();
 
-    // 1-2: per-layer Bitpack on the CPU leader (rate: full f32 input bytes).
+    // 1-2: per-layer Bitpack on the CPU leader (rate: full f32 input
+    // bytes); layer k repacks once the previous batch updated layer k.
     let packs: Vec<Option<EventId>> = layers
         .iter()
-        .map(|l| {
+        .enumerate()
+        .map(|(l, load)| {
             uses_adt.then(|| {
-                tl.schedule(Resource::Cpu, Phase::Bitpack, profile.pack_time(l.weight_bytes_f32), &[])
+                let deps: Vec<EventId> = match prev_updates {
+                    Some(u) => vec![u[l]],
+                    None => Vec::new(),
+                };
+                tl.schedule(Resource::Cpu, Phase::Bitpack, profile.pack_time(load.weight_bytes_f32), &deps)
             })
         })
         .collect();
 
-    // 3: per-layer broadcast; layer k waits only for its own pack.
+    // 3: per-layer broadcast; layer k waits only for its own pack (or,
+    // without ADT, for the previous batch's update of layer k).
     let h2ds: Vec<EventId> = layers
         .iter()
         .enumerate()
         .map(|(l, load)| {
             let bytes = if uses_adt { load.packed_bytes } else { load.weight_bytes_f32 };
-            let deps: Vec<EventId> = packs[l].into_iter().collect();
-            interconnect.h2d.enqueue(&mut tl, Phase::H2D, bytes + load.bias_bytes, &deps)
+            let deps: Vec<EventId> = match (packs[l], prev_updates) {
+                (Some(p), _) => vec![p],
+                (None, Some(u)) => vec![u[l]],
+                (None, None) => Vec::new(),
+            };
+            interconnect.h2d.enqueue(tl, Phase::H2D, bytes + load.bias_bytes, &deps)
         })
         .collect();
 
@@ -356,7 +529,7 @@ pub fn build_batch_timeline(
         let bwd = tl.schedule(Resource::GpuPool, phase, bwd_s, &[dep]);
         prev_bwd = Some(bwd);
         let d2h = interconnect.d2h.enqueue(
-            &mut tl,
+            tl,
             Phase::D2H,
             load.weight_bytes_f32 + load.bias_bytes,
             &[bwd],
@@ -374,7 +547,185 @@ pub fn build_batch_timeline(
         }
     }
 
-    tl
+    updates.into_iter().map(|u| u.expect("every layer updated")).collect()
+}
+
+/// Append the asynchronous per-GPU schedule of `window.n_batches`
+/// batches to `tl` (bounded staleness K = `window.staleness >= 1`).
+///
+/// Wiring, per batch *n*:
+///
+/// * the CPU first applies the per-GPU gradient contributions of batch
+///   *n*−1−K (the staleness bound), then packs batch *n*'s weights —
+///   so pack(*n*) overlaps the still-arriving update tail of batches
+///   *n*−K‥*n*−1;
+/// * each GPU lane `Resource::Gpu(g)` runs its own shard: unpack and
+///   forward in layer order, then — in reverse layer order — **wgrad
+///   before dgrad**, so the gather of layer *k* waits only on
+///   wgrad(*k*) while the dgrad chain keeps descending;
+/// * gathers are per-GPU legs interleaved on the D2H channel (lanes
+///   ordered by wgrad readiness, the fused transfer's setup latency
+///   amortized across legs), so a fast GPU's gradients land while a
+///   straggler is still computing;
+/// * updates are per-contribution (1/`n_gpus` of the fused update
+///   each), applied in gather-arrival order.
+///
+/// Durations are physical per-lane times (`pool time / gpu_speed[g]`);
+/// the Tables II/III busy charge of each logical phase is attributed to
+/// exactly one of its events using the *same* arithmetic expression as
+/// the synchronous builder, so per-phase busy totals stay bit-identical
+/// across modes.
+fn schedule_async_training(
+    tl: &mut Timeline,
+    profile: &SystemProfile,
+    interconnect: &mut Interconnect,
+    layers: &[LayerLoad],
+    spec: BatchSpec,
+    window: PipelineWindow,
+) {
+    let BatchSpec { batch_size, uses_adt, include_norms } = spec;
+    let PipelineWindow { n_batches, staleness } = window;
+    assert!(staleness >= 1, "synchronous windows use schedule_sync_batch");
+    let wall = profile.compute_wall_factor();
+    let n_gpus = profile.n_gpus;
+    let uniform = vec![1.0; n_gpus];
+    let speeds: &[f64] =
+        if profile.gpu_speed.is_empty() { &uniform } else { &profile.gpu_speed };
+    let n = layers.len();
+
+    // Per-batch gather legs ([batch][layer][leg]) and applied updates.
+    let mut legs: Vec<Vec<Vec<EventId>>> = Vec::with_capacity(n_batches);
+    let mut updates: Vec<Option<Vec<Vec<EventId>>>> = vec![None; n_batches];
+
+    for nb in 0..n_batches {
+        // Apply the gradients the staleness bound requires before this
+        // batch's weights may be packed.
+        if let Some(m) = nb.checked_sub(staleness + 1) {
+            if updates[m].is_none() {
+                updates[m] =
+                    Some(emit_async_updates(tl, profile, layers, &legs[m], include_norms, n_gpus));
+            }
+        }
+        let stale = nb.checked_sub(staleness + 1).and_then(|m| updates[m].as_deref());
+
+        // Pack + broadcast (fused: every GPU receives the full payload).
+        let packs: Vec<Option<EventId>> = (0..n)
+            .map(|l| {
+                uses_adt.then(|| {
+                    let deps: Vec<EventId> = match stale {
+                        Some(u) => u[l].clone(),
+                        None => Vec::new(),
+                    };
+                    tl.schedule(
+                        Resource::Cpu,
+                        Phase::Bitpack,
+                        profile.pack_time(layers[l].weight_bytes_f32),
+                        &deps,
+                    )
+                })
+            })
+            .collect();
+        let h2ds: Vec<EventId> = (0..n)
+            .map(|l| {
+                let load = &layers[l];
+                let bytes = if uses_adt { load.packed_bytes } else { load.weight_bytes_f32 };
+                let deps: Vec<EventId> = match (packs[l], stale) {
+                    (Some(p), _) => vec![p],
+                    (None, Some(u)) => u[l].clone(),
+                    (None, None) => Vec::new(),
+                };
+                interconnect.h2d.enqueue(tl, Phase::H2D, bytes + load.bias_bytes, &deps)
+            })
+            .collect();
+
+        // Per-lane compute with the dgrad/wgrad backward split.
+        let mut wgrads: Vec<Vec<EventId>> = vec![Vec::new(); n];
+        for (g, &speed) in speeds.iter().enumerate() {
+            let lane = Resource::Gpu(g);
+            let mut prev_fwd: Option<EventId> = None;
+            for (l, load) in layers.iter().enumerate() {
+                let mut dep = h2ds[l];
+                if uses_adt {
+                    let unpack = profile.unpack_time(load.packed_bytes);
+                    let busy = if g == 0 { unpack * wall } else { 0.0 };
+                    dep = tl.schedule_weighted(lane, Phase::Bitunpack, unpack / speed, busy, &[dep]);
+                }
+                let phase = if load.is_conv { Phase::Conv } else { Phase::Fc };
+                let rate = if load.is_conv { profile.conv_flops } else { profile.fc_flops };
+                let base = load.fwd_flops as f64 * batch_size as f64 / rate;
+                let busy = if g == 0 { base * wall } else { 0.0 };
+                prev_fwd = Some(tl.schedule_weighted(lane, phase, base / speed, busy, &[dep]));
+            }
+            let mut chain = prev_fwd.expect("at least one layer");
+            for (l, load) in layers.iter().enumerate().rev() {
+                let phase = if load.is_conv { Phase::Conv } else { Phase::Fc };
+                let rate = if load.is_conv { profile.conv_flops } else { profile.fc_flops };
+                let base = load.fwd_flops as f64 * batch_size as f64 / rate;
+                let busy = if g == 0 { 2.0 * base * wall } else { 0.0 };
+                let wgrad = tl.schedule_weighted(lane, phase, base / speed, busy, &[chain]);
+                chain = tl.schedule_weighted(lane, phase, base / speed, 0.0, &[chain]);
+                wgrads[l].push(wgrad);
+            }
+        }
+
+        // Per-GPU gather legs, interleaved by wgrad readiness per layer.
+        let mut batch_legs: Vec<Vec<EventId>> = vec![Vec::new(); n];
+        for l in (0..n).rev() {
+            let bytes = layers[l].weight_bytes_f32 + layers[l].bias_bytes;
+            let mut order: Vec<usize> = (0..n_gpus).collect();
+            order.sort_by(|&a, &b| {
+                tl.finish_s(wgrads[l][a])
+                    .partial_cmp(&tl.finish_s(wgrads[l][b]))
+                    .unwrap()
+                    .then(a.cmp(&b))
+            });
+            for (i, &g) in order.iter().enumerate() {
+                let busy = if i == 0 { interconnect.d2h.transfer_time(bytes) } else { 0.0 };
+                let leg =
+                    interconnect.d2h.enqueue_leg(tl, Phase::D2H, bytes, busy, &[wgrads[l][g]]);
+                batch_legs[l].push(leg);
+            }
+        }
+        legs.push(batch_legs);
+    }
+
+    // Drain: apply every gradient still in flight past the last batch.
+    for m in 0..n_batches {
+        if updates[m].is_none() {
+            updates[m] =
+                Some(emit_async_updates(tl, profile, layers, &legs[m], include_norms, n_gpus));
+        }
+    }
+}
+
+/// Apply one batch's per-GPU gradient contributions on the CPU leader
+/// (1/`n_gpus` of the fused update per leg, in arrival order), then the
+/// per-layer AWP norms. Returns the per-layer update events.
+fn emit_async_updates(
+    tl: &mut Timeline,
+    profile: &SystemProfile,
+    layers: &[LayerLoad],
+    batch_legs: &[Vec<EventId>],
+    include_norms: bool,
+    n_gpus: usize,
+) -> Vec<Vec<EventId>> {
+    let n = layers.len();
+    let mut ups: Vec<Vec<EventId>> = vec![Vec::new(); n];
+    for l in (0..n).rev() {
+        let full = profile.update_time(layers[l].params);
+        let split = full / n_gpus as f64;
+        for (i, leg) in batch_legs[l].iter().enumerate() {
+            let busy = if i == 0 { full } else { 0.0 };
+            ups[l].push(tl.schedule_weighted(Resource::Cpu, Phase::GradUpdate, split, busy, &[*leg]));
+        }
+    }
+    if include_norms {
+        for l in (0..n).rev() {
+            let norm_s = profile.norm_time(layers[l].weight_bytes_f32);
+            tl.schedule(Resource::Cpu, Phase::AwpNorm, norm_s, &ups[l]);
+        }
+    }
+    ups
 }
 
 #[cfg(test)]
@@ -461,6 +812,126 @@ mod tests {
         // both interconnects accounted the same traffic
         assert_eq!(ic_s.h2d_bytes_total(), ic_p.h2d_bytes_total());
         assert_eq!(ic_s.d2h_bytes_total(), ic_p.d2h_bytes_total());
+    }
+
+    fn window_timeline(
+        mode: OverlapMode,
+        profile: &SystemProfile,
+        n_batches: usize,
+        staleness: usize,
+    ) -> Timeline {
+        let desc = vgg_a(200);
+        let formats = vec![RoundTo::B2; desc.weight_counts().len()];
+        let loads = layer_loads(&desc, Some(&formats));
+        let mut ic = Interconnect::new(profile.clone());
+        let spec = BatchSpec { batch_size: 64, uses_adt: true, include_norms: true };
+        build_training_timeline(
+            mode, profile, &mut ic, &loads, spec, PipelineWindow::new(n_batches, staleness),
+        )
+    }
+
+    #[test]
+    fn staleness_zero_reproduces_layer_pipelined_bit_exactly() {
+        let straggler = SystemProfile::power().scenario("straggler-severe").unwrap();
+        for profile in [SystemProfile::x86(), straggler] {
+            for n_batches in [1, 3] {
+                let pip = window_timeline(OverlapMode::LayerPipelined, &profile, n_batches, 0);
+                let gpu = window_timeline(OverlapMode::GpuPipelined, &profile, n_batches, 0);
+                assert_eq!(pip.critical_path_s().to_bits(), gpu.critical_path_s().to_bits());
+                assert_eq!(pip.serialized_sum_s().to_bits(), gpu.serialized_sum_s().to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn async_schedule_beats_lockstep_and_keeps_busy_totals() {
+        let straggler = SystemProfile::x86().scenario("straggler-severe").unwrap();
+        for profile in [SystemProfile::x86(), straggler] {
+            for n_batches in [1, 4] {
+                let pip = window_timeline(OverlapMode::LayerPipelined, &profile, n_batches, 1);
+                let gpu = window_timeline(OverlapMode::GpuPipelined, &profile, n_batches, 1);
+                // per-GPU async strictly improves the lockstep schedule
+                assert!(
+                    gpu.critical_path_s() < pip.critical_path_s(),
+                    "async {} >= lockstep {} ({} batches)",
+                    gpu.critical_path_s(),
+                    pip.critical_path_s(),
+                    n_batches
+                );
+                // Tables II/III busy totals are bit-identical across modes
+                let (bp, bg) = (pip.busy_s(), gpu.busy_s());
+                for i in 0..8 {
+                    assert_eq!(bp[i].to_bits(), bg[i].to_bits(), "phase {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cross_batch_pack_overlaps_previous_update_tail() {
+        // with staleness 1 over a 2-batch window, batch 1's Bitpack must
+        // start before *batch 0's* last CPU update finishes — the
+        // synchronous wiring (pack(1) after update(0)) would fail this.
+        let profile = SystemProfile::x86();
+        let gpu = window_timeline(OverlapMode::GpuPipelined, &profile, 2, 1);
+        let n_layers = vgg_a(200).weight_counts().len();
+        let packs: Vec<(usize, &Event)> = gpu
+            .events()
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.phase == Phase::Bitpack)
+            .collect();
+        assert_eq!(packs.len(), 2 * n_layers);
+        let batch1_first_pack_start = packs[n_layers].1.start_s;
+        // updates are emitted per batch in order: batch 0's are the
+        // first n_layers * n_gpus GradUpdate events.
+        let updates: Vec<&Event> =
+            gpu.events().iter().filter(|e| e.phase == Phase::GradUpdate).collect();
+        assert_eq!(updates.len(), 2 * n_layers * profile.n_gpus);
+        let batch0_last_update_finish = updates[..n_layers * profile.n_gpus]
+            .iter()
+            .fold(0.0, |m, e| if e.finish_s > m { e.finish_s } else { m });
+        assert!(
+            batch1_first_pack_start < batch0_last_update_finish,
+            "pack(1) at {batch1_first_pack_start} does not overlap batch 0's update tail ending \
+             at {batch0_last_update_finish}"
+        );
+        // and the staleness bound demanded no update dependency at all
+        // here (batch 1 - 1 - K < 0): every pack is dependency-free.
+        for (i, _) in &packs {
+            assert!(
+                gpu.dep_edges().iter().all(|&(_, to)| to != *i),
+                "pack event {i} has a dependency inside the staleness window"
+            );
+        }
+        // the synchronous schedule forbids exactly this overlap
+        let pip = window_timeline(OverlapMode::LayerPipelined, &profile, 2, 1);
+        assert!(pip.critical_path_s() > gpu.critical_path_s());
+    }
+
+    #[test]
+    fn gather_legs_wait_for_wgrad_and_split_the_fused_transfer() {
+        let profile = SystemProfile::power();
+        let gpu = window_timeline(OverlapMode::GpuPipelined, &profile, 1, 1);
+        let n_layers = vgg_a(200).weight_counts().len();
+        let legs: Vec<usize> = gpu
+            .events()
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.phase == Phase::D2H)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(legs.len(), n_layers * profile.n_gpus, "one leg per layer per GPU");
+        for &leg in &legs {
+            // every leg depends on a GPU-lane event (its wgrad) that
+            // finished before the leg started
+            let has_wgrad_dep = gpu.dep_edges().iter().any(|&(from, to)| {
+                to == leg
+                    && matches!(gpu.events()[from].resource, Resource::Gpu(_))
+                    && gpu.events()[from].finish_s <= gpu.events()[leg].start_s
+            });
+            assert!(has_wgrad_dep, "gather leg {leg} does not wait for a wgrad");
+        }
     }
 
     #[test]

@@ -116,6 +116,14 @@ impl Json {
     pub fn str(s: impl Into<String>) -> Json {
         Json::Str(s.into())
     }
+
+    /// True iff `s` is one of the string sentinels this writer emits for
+    /// non-finite numbers (see `fmt_num`). Readers that must reject NaN
+    /// leakage (e.g. the CI bench gate) check through this helper so the
+    /// spelling lives in one place.
+    pub fn is_non_finite_sentinel(s: &str) -> bool {
+        matches!(s, "NaN" | "Infinity" | "-Infinity")
+    }
 }
 
 /// Parse / schema error.

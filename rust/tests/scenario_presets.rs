@@ -1,0 +1,88 @@
+//! Table-driven guard over the `--scenario` surface: every name in
+//! `SCENARIO_NAMES` must round-trip through the CLI argument parser and
+//! produce a profile whose perturbed rates actually differ from the
+//! calibrated baseline — a preset that parses but edits nothing would
+//! silently report uniform-platform numbers under a scenario label.
+
+use a2dtwp::adt::RoundTo;
+use a2dtwp::interconnect::Interconnect;
+use a2dtwp::models::vgg_a;
+use a2dtwp::sim::{build_batch_timeline, layer_loads, OverlapMode, SystemProfile, SCENARIO_NAMES};
+use a2dtwp::util::cli::{Args, Spec};
+
+/// The observable rate surface of a profile (f64 bits: exact compare).
+fn fingerprint(p: &SystemProfile) -> [u64; 6] {
+    [
+        p.h2d_bps.to_bits(),
+        p.d2h_bps.to_bits(),
+        p.link_latency_s.to_bits(),
+        p.pack_bps.to_bits(),
+        p.norm_bps.to_bits(),
+        p.compute_wall_factor().to_bits(),
+    ]
+}
+
+#[test]
+fn every_scenario_round_trips_the_cli_and_perturbs_the_profile() {
+    let spec = Spec { options: &["scenario"], flags: &[] };
+    for name in SCENARIO_NAMES {
+        // CLI round-trip: the exact string a user passes comes back out
+        let argv = vec!["profile".to_string(), format!("--scenario={name}")];
+        let args = Args::parse(argv, &spec).unwrap_or_else(|e| panic!("--scenario {name}: {e}"));
+        let parsed = args.get("scenario").expect("scenario option parsed");
+        assert_eq!(parsed, name);
+
+        for base in [SystemProfile::x86(), SystemProfile::power()] {
+            let scenario = base
+                .clone()
+                .scenario(parsed)
+                .unwrap_or_else(|| panic!("scenario '{name}' not accepted by SystemProfile"));
+            if name == "uniform" {
+                assert_eq!(
+                    fingerprint(&scenario),
+                    fingerprint(&base),
+                    "uniform must be the calibrated platform"
+                );
+            } else {
+                assert_ne!(
+                    fingerprint(&scenario),
+                    fingerprint(&base),
+                    "scenario '{name}' is a silent no-op on {}",
+                    base.name
+                );
+            }
+        }
+    }
+    assert!(SystemProfile::x86().scenario("bogus").is_none());
+    assert!(SystemProfile::x86().scenario("").is_none());
+}
+
+#[test]
+fn every_non_uniform_scenario_changes_the_simulated_batch_time() {
+    // end-to-end: the perturbation must reach the timeline, not just the
+    // profile struct (guards the rate plumbing through Interconnect /
+    // GpuPool / the builders).
+    let desc = vgg_a(200);
+    let formats = vec![RoundTo::B2; desc.weight_counts().len()];
+    let loads = layer_loads(&desc, Some(&formats));
+    let batch_time = |p: &SystemProfile| {
+        let mut ic = Interconnect::new(p.clone());
+        build_batch_timeline(OverlapMode::Serialized, p, &mut ic, &loads, 64, true, true)
+            .critical_path_s()
+    };
+    for base in [SystemProfile::x86(), SystemProfile::power()] {
+        let uniform_time = batch_time(&base.clone().scenario("uniform").unwrap());
+        assert_eq!(uniform_time.to_bits(), batch_time(&base).to_bits());
+        for name in SCENARIO_NAMES {
+            if name == "uniform" {
+                continue;
+            }
+            let t = batch_time(&base.clone().scenario(name).unwrap());
+            assert!(
+                t > uniform_time,
+                "scenario '{name}' on {}: {t} not slower than uniform {uniform_time}",
+                base.name
+            );
+        }
+    }
+}
