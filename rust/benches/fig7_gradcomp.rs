@@ -1,0 +1,203 @@
+//! "Fig 7" — gather-side compression tradeoff: per-batch time vs gather
+//! format, VGG b64 at the paper's converged ≈3× broadcast compression.
+//!
+//! The paper's gather moves full f32 (§VI calls gradient compression an
+//! orthogonal opportunity). The grad-ADT path packs the D2H legs and pays
+//! a CPU-side restore of every GPU's contribution instead, so the win is
+//! a *trade*: it pays where the link is the bottleneck (pcie-contended,
+//! nvlink-degraded, plain x86 PCIe at 8-bit) and loses where the CPU is
+//! (pack-starved), with a crossover near
+//! `(4 − g)/d2h_bps = g/grad_unpack_bps` mean gather bytes `g`. This
+//! bench charts exactly that boundary across the scenario presets, under
+//! the serial loop and both overlap schedules.
+//!
+//!     cargo bench --bench fig7_gradcomp            # full sweep + CSV
+//!     cargo bench --bench fig7_gradcomp -- --smoke # CI: calibration cells
+//!
+//! Always writes `artifacts/bench_out/BENCH_gradcomp.json`; CI gates its
+//! serial-mode cells against `ci/bench_baseline_gradcomp.json` via
+//! `check_bench`. When AOT artifacts are present, a Real-mode convergence
+//! section compares time-to-error with and without error feedback (the
+//! EXPERIMENTS §Gradient compression table); without artifacts it skips
+//! legibly.
+
+use a2dtwp::awp::PolicyKind;
+use a2dtwp::config::ExperimentConfig;
+use a2dtwp::coordinator::Trainer;
+use a2dtwp::figures::{batch_time_grad, grad_compression_tradeoff};
+use a2dtwp::grad::GradPolicyKind;
+use a2dtwp::models::vgg_a;
+use a2dtwp::runtime::Manifest;
+use a2dtwp::sim::{PipelineWindow, SystemProfile};
+use a2dtwp::util::benchkit::Table;
+use a2dtwp::util::json::Json;
+
+const BATCH: usize = 64;
+/// Weight-side broadcast state: the paper's converged ≈3× compression.
+const BPW: f64 = 4.0 / 3.0;
+/// Scenarios the JSON report pins (the acceptance surface).
+const GATED_SCENARIOS: [&str; 4] =
+    ["uniform", "pcie-contended", "pack-starved", "straggler-severe"];
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+
+    // x-axis: mean gather bytes/weight (4.0 = the paper's f32 gather).
+    let sweep: &[f64] = if smoke { &[4.0, 1.0] } else { &[4.0, 3.0, 2.0, 4.0 / 3.0, 1.0] };
+    let scenarios: &[&str] = if smoke {
+        &GATED_SCENARIOS
+    } else {
+        &[
+            "uniform",
+            "straggler-mild",
+            "straggler-severe",
+            "hetero-linear",
+            "pcie-contended",
+            "nvlink-degraded",
+            "pack-starved",
+        ]
+    };
+
+    let desc = vgg_a(200);
+    let window = PipelineWindow::default_async();
+    let mut t = Table::new(
+        "Fig 7 — gather compression tradeoff (VGG b64, A2DTWP ~3x broadcast)",
+        &[
+            "system",
+            "scenario",
+            "grad B/wt",
+            "serial ms",
+            "vs f32",
+            "pipelined ms",
+            "gpu-pipe ms",
+        ],
+    );
+    let mut csv = String::from(
+        "system,scenario,grad_bytes_per_weight,serial_ms,serial_vs_f32,pipelined_ms,\
+         gpu_pipelined_ms\n",
+    );
+    for base in [SystemProfile::x86(), SystemProfile::power()] {
+        for scenario in scenarios {
+            let profile = base.clone().scenario(scenario).unwrap();
+            let cells = grad_compression_tradeoff(
+                &profile,
+                &desc,
+                BATCH,
+                PolicyKind::Awp,
+                BPW,
+                window,
+                sweep,
+            );
+            let off_serial = cells[0].serial_s;
+            for c in &cells {
+                let delta = off_serial / c.serial_s;
+                t.row(&[
+                    base.name.to_string(),
+                    scenario.to_string(),
+                    format!("{:.2}", c.grad_bytes_per_weight),
+                    format!("{:.2}", c.serial_s * 1e3),
+                    format!("{delta:.3}x"),
+                    format!("{:.2}", c.pipelined_s * 1e3),
+                    format!("{:.2}", c.gpu_pipelined_s * 1e3),
+                ]);
+                csv.push_str(&format!(
+                    "{},{scenario},{:.4},{:.3},{delta:.4},{:.3},{:.3}\n",
+                    base.name,
+                    c.grad_bytes_per_weight,
+                    c.serial_s * 1e3,
+                    c.pipelined_s * 1e3,
+                    c.gpu_pipelined_s * 1e3,
+                ));
+            }
+        }
+    }
+    t.print();
+
+    std::fs::create_dir_all("artifacts/bench_out").ok();
+    if !smoke {
+        std::fs::write("artifacts/bench_out/fig7_gradcomp.csv", &csv).ok();
+        println!("\n  wrote artifacts/bench_out/fig7_gradcomp.csv");
+    }
+
+    // BENCH_gradcomp.json: serial-mode calibration cells (closed-form
+    // arithmetic, deterministic) per platform × gated scenario, f32
+    // gather vs the 8-bit packed gather, plus the gain as a speedup key.
+    let point = |base: &SystemProfile| {
+        let mut fields: Vec<(String, Json)> = Vec::new();
+        for scenario in GATED_SCENARIOS {
+            let profile = base.clone().scenario(scenario).unwrap();
+            let off = batch_time_grad(&profile, &desc, BATCH, PolicyKind::Awp, BPW, None);
+            let g8 = batch_time_grad(&profile, &desc, BATCH, PolicyKind::Awp, BPW, Some(1.0));
+            fields.push((format!("{scenario}_off_serial_ms"), Json::num(off * 1e3)));
+            fields.push((format!("{scenario}_g8_serial_ms"), Json::num(g8 * 1e3)));
+            fields.push((format!("{scenario}_serial_gain_speedup"), Json::num(off / g8)));
+        }
+        let pairs: Vec<(&str, Json)> =
+            fields.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        Json::obj(pairs)
+    };
+    let report = Json::obj(vec![
+        ("bench", Json::str("gradcomp")),
+        ("model", Json::str("vgg_a")),
+        ("batch", Json::num(BATCH as f64)),
+        ("bytes_per_weight", Json::num(BPW)),
+        ("grad_bytes_per_weight", Json::num(1.0)),
+        ("x86", point(&SystemProfile::x86())),
+        ("power", point(&SystemProfile::power())),
+    ]);
+    let path = "artifacts/bench_out/BENCH_gradcomp.json";
+    std::fs::write(path, report.to_string_pretty()).expect("write BENCH_gradcomp.json");
+    println!("  wrote {path}");
+
+    // ---- Real-mode convergence: error feedback vs open loop ------------
+    if Manifest::load("artifacts").is_err() {
+        println!(
+            "\n  Real-mode convergence section skipped (no AOT artifacts; run `make \
+             artifacts`)"
+        );
+        return;
+    }
+    let max_batches = if smoke { 40 } else { 150 };
+    let mut conv = Table::new(
+        "Gradient compression — Real-mode convergence (vgg_micro b32, x86 clock)",
+        &["gather", "feedback", "batches", "final val err", "sim time s", "grad events"],
+    );
+    let runs: [(&str, GradPolicyKind, bool); 4] = [
+        ("f32", GradPolicyKind::Off, true),
+        ("fixed16", GradPolicyKind::Fixed(a2dtwp::adt::RoundTo::B2), true),
+        ("fixed16", GradPolicyKind::Fixed(a2dtwp::adt::RoundTo::B2), false),
+        ("adaptive", GradPolicyKind::Adaptive, true),
+    ];
+    for (label, kind, feedback) in runs {
+        let mut cfg = ExperimentConfig::preset("vgg_micro", 32, PolicyKind::Awp, "x86");
+        cfg.grad = kind;
+        cfg.grad_feedback = feedback;
+        cfg.max_batches = max_batches;
+        cfg.val_every = 10;
+        cfg.target_error = 0.0; // run the full span; compare errors
+        match Trainer::new(cfg).and_then(|mut tr| tr.run()) {
+            Ok(report) => {
+                let last = report.curve.points.last().cloned();
+                conv.row(&[
+                    label.to_string(),
+                    if feedback { "on" } else { "off" }.to_string(),
+                    report.batches_run.to_string(),
+                    last.as_ref().map_or("n/a".into(), |p| format!("{:.4}", p.val_error)),
+                    last.as_ref().map_or("n/a".into(), |p| format!("{:.3}", p.sim_time_s)),
+                    report.grad_events.to_string(),
+                ]);
+            }
+            Err(e) => {
+                conv.row(&[
+                    label.to_string(),
+                    if feedback { "on" } else { "off" }.to_string(),
+                    "error".into(),
+                    format!("{e:#}"),
+                    String::new(),
+                    String::new(),
+                ]);
+            }
+        }
+    }
+    conv.print();
+}

@@ -6,5 +6,10 @@
 mod table_profile;
 
 fn main() {
-    table_profile::run("x86", &table_profile::TABLE2_X86, "artifacts/bench_out/table2_x86.csv");
+    table_profile::run(
+        "x86",
+        &table_profile::TABLE2_X86,
+        "artifacts/bench_out/table2_x86.csv",
+        "artifacts/bench_out/BENCH_table2_x86.json",
+    );
 }

@@ -10,5 +10,6 @@ fn main() {
         "power",
         &table_profile::TABLE3_POWER,
         "artifacts/bench_out/table3_power.csv",
+        "artifacts/bench_out/BENCH_table3_power.json",
     );
 }

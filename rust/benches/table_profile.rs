@@ -1,17 +1,26 @@
 //! Shared implementation of the Table II / Table III benches: per-kernel
 //! per-batch profile of VGG b64 under 32-bit FP vs A²DTWP on one platform,
 //! with the paper's measured milliseconds alongside for comparison.
+//!
+//! Besides the table/CSV, each run emits a machine-readable
+//! `BENCH_table{2,3}_*.json` with every "ours" column value; CI gates
+//! those against `ci/bench_baseline_table{2,3}.json` via `check_bench`,
+//! locking the whole Table II/III accounting surface (every `_ms` leaf
+//! may grow at most 5%).
 
 use a2dtwp::coordinator::{formats_for_mean_bytes, SimRunner};
 use a2dtwp::models::vgg_a;
 use a2dtwp::profiler::{Phase, Profiler};
 use a2dtwp::sim::SystemProfile;
 use a2dtwp::util::benchkit::Table;
+use a2dtwp::util::json::Json;
 
 /// Paper values, ms: (32-bit column, A²DTWP column) in Phase::ALL order.
+/// The paper has no grad-ADT row (its gather is always f32), so the
+/// trailing `GradUnpack` slot is (None, 0.0).
 pub struct PaperColumn {
     pub table_name: &'static str,
-    pub rows: [(Option<f64>, f64); 8],
+    pub rows: [(Option<f64>, f64); 9],
 }
 
 pub const TABLE2_X86: PaperColumn = PaperColumn {
@@ -25,6 +34,7 @@ pub const TABLE2_X86: PaperColumn = PaperColumn {
         (None, 3.88),
         (None, 19.71),
         (None, 4.51),
+        (None, 0.0),
     ],
 };
 
@@ -39,10 +49,15 @@ pub const TABLE3_POWER: PaperColumn = PaperColumn {
         (None, 0.93),
         (None, 10.51),
         (None, 1.11),
+        (None, 0.0),
     ],
 };
 
-pub fn run(system: &str, paper: &PaperColumn, csv_path: &str) {
+/// Short JSON key per phase (Phase::ALL order).
+const PHASE_KEYS: [&str; 9] =
+    ["h2d", "d2h", "conv", "fc", "update", "norm", "bitpack", "bitunpack", "gradunpack"];
+
+pub fn run(system: &str, paper: &PaperColumn, csv_path: &str, json_path: &str) {
     let profile = SystemProfile::by_name(system).unwrap();
     let mut runner = SimRunner::new(vgg_a(200), profile, Default::default(), 7);
 
@@ -58,6 +73,7 @@ pub fn run(system: &str, paper: &PaperColumn, csv_path: &str) {
         &["kernel", "32-bit (ours)", "32-bit (paper)", "A2DTWP (ours)", "A2DTWP (paper)"],
     );
     let mut csv = String::from("kernel,base_ours_ms,base_paper_ms,adt_ours_ms,adt_paper_ms\n");
+    let mut json_fields: Vec<(String, Json)> = Vec::new();
     for (i, ph) in Phase::ALL.iter().enumerate() {
         let (pb, pa) = paper.rows[i];
         let ours_b = if ph.adt_only() { None } else { Some(base_prof.avg_s(*ph) * 1e3) };
@@ -75,6 +91,10 @@ pub fn run(system: &str, paper: &PaperColumn, csv_path: &str) {
             ours_b.map_or(String::from(""), |v| format!("{v:.3}")),
             pb.map_or(String::from(""), |v| format!("{v}")),
         ));
+        if let Some(v) = ours_b {
+            json_fields.push((format!("base_{}_ms", PHASE_KEYS[i]), Json::num(v)));
+        }
+        json_fields.push((format!("adt_{}_ms", PHASE_KEYS[i]), Json::num(ours_a)));
     }
     t.print();
 
@@ -94,4 +114,20 @@ pub fn run(system: &str, paper: &PaperColumn, csv_path: &str) {
     std::fs::create_dir_all("artifacts/bench_out").ok();
     std::fs::write(csv_path, csv).ok();
     println!("  wrote {csv_path}");
+
+    // machine-readable column for the CI bench gate
+    let mut fields: Vec<(&str, Json)> = vec![
+        ("bench", Json::str("table_profile")),
+        ("system", Json::str(system)),
+        ("model", Json::str("vgg_a")),
+        ("batch", Json::num(64.0)),
+        ("bytes_per_weight", Json::num(4.0 / 3.0)),
+        ("h2d_reduction_speedup", Json::num(reduction)),
+    ];
+    for (k, v) in &json_fields {
+        fields.push((k.as_str(), v.clone()));
+    }
+    let report = Json::obj(fields);
+    std::fs::write(json_path, report.to_string_pretty()).expect("write table bench JSON");
+    println!("  wrote {json_path}");
 }

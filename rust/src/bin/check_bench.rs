@@ -7,10 +7,14 @@
 //! check_bench --validate <metrics.json>        # structural/finite check
 //! ```
 //!
-//! The comparator walks every leaf of the checked-in baseline
-//! (`ci/bench_baseline.json`) and requires the current report
-//! (`artifacts/bench_out/BENCH_timeline.json`) to carry the same field
-//! with a sane value:
+//! The comparator walks every leaf of a checked-in baseline and requires
+//! the current report to carry the same field with a sane value. CI runs
+//! it over the whole accounting surface: the overlap-timeline bench
+//! (`ci/bench_baseline.json` vs `BENCH_timeline.json`), the Table II/III
+//! calibration benches (`ci/bench_baseline_table{2,3}.json` vs
+//! `BENCH_table2_x86.json` / `BENCH_table3_power.json`) and the
+//! gather-compression bench (`ci/bench_baseline_gradcomp.json` vs
+//! `BENCH_gradcomp.json`). Rules:
 //!
 //! * keys containing `speedup` may not regress below 95% of baseline;
 //! * keys ending in `_ms` may not regress above 105% of baseline;

@@ -4,6 +4,7 @@
 
 use crate::adt::AdtConfig;
 use crate::awp::{AwpParams, PolicyKind};
+use crate::grad::{GradParams, GradPolicyKind};
 use crate::optim::SgdConfig;
 use crate::sim::{OverlapMode, SystemProfile};
 use crate::util::json::Json;
@@ -39,6 +40,15 @@ pub struct ExperimentConfig {
     /// Batches scheduled per cross-batch window in `gpu-pipelined` mode.
     pub pipeline_window: usize,
     pub awp: AwpParams,
+    /// Gather-side compression policy (`--grad-adt` / `--grad-policy`):
+    /// off (the paper's full-f32 gather, bit-identical to the historical
+    /// loop), a fixed ADT format, or the adaptive controller.
+    pub grad: GradPolicyKind,
+    pub grad_params: GradParams,
+    /// Carry quantization residuals into the next batch (error
+    /// feedback). On by default; off exists for the convergence ablation
+    /// (`fig7_gradcomp`).
+    pub grad_feedback: bool,
     pub sgd: SgdConfig,
     pub adt: AdtConfig,
     /// Batches to train (Real mode) or simulate.
@@ -104,6 +114,9 @@ impl ExperimentConfig {
             staleness: crate::sim::DEFAULT_STALENESS,
             pipeline_window: crate::sim::DEFAULT_PIPELINE_WINDOW,
             awp,
+            grad: GradPolicyKind::Off,
+            grad_params: GradParams::default(),
+            grad_feedback: true,
             sgd: SgdConfig::paper_defaults(initial_lr, 400),
             adt: AdtConfig::default(),
             max_batches: 600,
@@ -135,6 +148,8 @@ impl ExperimentConfig {
             ("pipeline_window", Json::num(self.pipeline_window as f64)),
             ("awp_threshold", Json::num(self.awp.threshold)),
             ("awp_interval", Json::num(self.awp.interval as f64)),
+            ("grad_policy", Json::str(self.grad.name())),
+            ("grad_feedback", Json::num(if self.grad_feedback { 1.0 } else { 0.0 })),
             ("lr", Json::num(self.sgd.schedule.initial as f64)),
             ("momentum", Json::num(self.sgd.momentum as f64)),
             ("weight_decay", Json::num(self.sgd.weight_decay as f64)),
@@ -194,6 +209,18 @@ mod tests {
         let j = c.to_json();
         assert_eq!(j.req_usize("staleness").unwrap(), 1);
         assert_eq!(j.req_usize("pipeline_window").unwrap(), 4);
+    }
+
+    #[test]
+    fn grad_gather_defaults_off() {
+        // the gather stays the paper's full-f32 loop unless asked
+        let c = ExperimentConfig::preset("vgg_micro", 64, PolicyKind::Awp, "x86");
+        assert_eq!(c.grad, GradPolicyKind::Off);
+        assert!(c.grad_feedback);
+        assert!(c.grad_params.validate().is_ok());
+        let j = c.to_json();
+        assert_eq!(j.req_str("grad_policy").unwrap(), "off");
+        assert_eq!(j.req_f64("grad_feedback").unwrap(), 1.0);
     }
 
     #[test]

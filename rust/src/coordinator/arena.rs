@@ -171,6 +171,20 @@ pub struct StepArena {
     pub sum_gb: Vec<Vec<f32>>,
     /// AWP norm scratch (one slot per layer).
     pub norms: Vec<f64>,
+    /// Grad-policy norm scratch: per-layer gradient l²-norms (observed on
+    /// the raw reduced gradients) and pre-update weight l²-norms.
+    pub grad_norms: Vec<f64>,
+    pub grad_wnorms: Vec<f64>,
+    /// Quantized gradients actually applied by the SGD update when the
+    /// grad-ADT gather is on (`q = unpack(pack(g + r))`).
+    pub grad_q: Vec<Vec<f32>>,
+    /// Per-layer Bitpack buffers for the gather direction (the packed
+    /// bytes the simulated D2H wire carries).
+    pub grad_pack: PackArena,
+    /// Error-feedback residuals `r ← (g + r) − q`, carried across batches.
+    grad_residual: Vec<Vec<f32>>,
+    /// Compensated-gradient scratch `c = g + r` (the Bitpack input).
+    grad_comp: Vec<Vec<f32>>,
     formats: Vec<RoundTo>,
     masks: Vec<u32>,
     /// SGD decay mask over [weights…, biases…]: weights decay, biases don't.
@@ -179,6 +193,8 @@ pub struct StepArena {
     total_weights: usize,
     mean_bytes_per_weight: f64,
     packed_bytes_total: usize,
+    grad_packed_bytes_total: usize,
+    grad_mean_bytes_per_weight: f64,
     formats_changed: bool,
 }
 
@@ -193,6 +209,12 @@ impl StepArena {
             sum_gw: weight_counts.iter().map(|&c| vec![0f32; c]).collect(),
             sum_gb: bias_counts.iter().map(|&c| vec![0f32; c]).collect(),
             norms: vec![0f64; n],
+            grad_norms: vec![0f64; n],
+            grad_wnorms: vec![0f64; n],
+            grad_q: weight_counts.iter().map(|&c| vec![0f32; c]).collect(),
+            grad_pack: PackArena::new(weight_counts),
+            grad_residual: weight_counts.iter().map(|&c| vec![0f32; c]).collect(),
+            grad_comp: weight_counts.iter().map(|&c| vec![0f32; c]).collect(),
             formats: vec![RoundTo::B4; n],
             masks: vec![u32::MAX; n],
             decay,
@@ -200,6 +222,8 @@ impl StepArena {
             total_weights: weight_counts.iter().sum(),
             mean_bytes_per_weight: 4.0,
             packed_bytes_total: n * 4, // placeholder; begin_step overwrites
+            grad_packed_bytes_total: 0,
+            grad_mean_bytes_per_weight: 4.0,
             formats_changed: false,
         }
     }
@@ -261,6 +285,86 @@ impl StepArena {
     /// Pack all layers into the arena buffers (see [`PackArena::pack_layers`]).
     pub fn pack_layers(&mut self, ws: &[Vec<f32>], cfg: &AdtConfig) -> usize {
         self.pack.pack_layers(ws, &self.formats, cfg)
+    }
+
+    /// Σ over layers of `adt::packed_len` under the gather `formats` —
+    /// computed independently of the grad pack loop, so the coordinator
+    /// can cross-check the bytes the loop reports (the D2H mirror of
+    /// [`packed_bytes_total`](Self::packed_bytes_total)).
+    pub fn expected_grad_packed_bytes(&self, formats: &[RoundTo]) -> usize {
+        crate::grad::packed_grad_bytes(&self.weight_counts, formats)
+    }
+
+    /// Packed gather bytes of the most recent
+    /// [`quantize_grads_with_feedback`](Self::quantize_grads_with_feedback).
+    pub fn grad_packed_bytes_total(&self) -> usize {
+        self.grad_packed_bytes_total
+    }
+
+    /// Weighted mean gather bytes/weight of the most recent quantize pass
+    /// (4.0 before the first — the uncompressed state).
+    pub fn grad_mean_bytes_per_weight(&self) -> f64 {
+        self.grad_mean_bytes_per_weight
+    }
+
+    /// Quantize the reduced weight-gradients (`sum_gw`) through the real
+    /// ADT kernels at per-layer gather `formats`, with error feedback:
+    ///
+    /// * `c = g + r` (compensated gradient; plain `g` when `feedback` is
+    ///   off),
+    /// * `q = Bitunpack(Bitpack(c))` — the value the wire delivers, into
+    ///   [`grad_q`](Self::grad_q) via the reused [`grad_pack`](Self::grad_pack)
+    ///   buffers (scalar/AVX2 dispatch exactly as the weight side),
+    /// * `r ← c − q` (the truncated mass, carried into the next batch).
+    ///
+    /// Biases are never packed (mirroring the weight side, paper §III):
+    /// `sum_gb` is applied raw. At the 32-bit format the round-trip is
+    /// lossless, so `q == c`, the residual stays identically zero and the
+    /// applied gradient equals the raw gradient. Returns the total packed
+    /// bytes put on the simulated wire. Steady-state allocation-free at
+    /// unchanged formats (grad pack buffers grow only on widening, and
+    /// never shrink when the policy narrows).
+    pub fn quantize_grads_with_feedback(
+        &mut self,
+        formats: &[RoundTo],
+        feedback: bool,
+        cfg: &AdtConfig,
+    ) -> usize {
+        let n = self.sum_gw.len();
+        assert_eq!(formats.len(), n, "one gather format per layer");
+        for l in 0..n {
+            let g = &self.sum_gw[l];
+            let comp = &mut self.grad_comp[l];
+            if feedback {
+                let r = &self.grad_residual[l];
+                for ((c, &gv), &rv) in comp.iter_mut().zip(g).zip(r) {
+                    *c = gv + rv;
+                }
+            } else {
+                comp.copy_from_slice(g);
+            }
+        }
+        let packed = self.grad_pack.pack_layers(&self.grad_comp, formats, cfg);
+        for l in 0..n {
+            adt::bitunpack_into(self.grad_pack.layer(l), formats[l], cfg, &mut self.grad_q[l]);
+        }
+        if feedback {
+            for l in 0..n {
+                let comp = &self.grad_comp[l];
+                let q = &self.grad_q[l];
+                let r = &mut self.grad_residual[l];
+                for ((slot, &cv), &qv) in r.iter_mut().zip(comp).zip(q) {
+                    *slot = cv - qv;
+                }
+            }
+        }
+        self.grad_packed_bytes_total = packed;
+        self.grad_mean_bytes_per_weight = if self.total_weights == 0 {
+            4.0
+        } else {
+            packed as f64 / self.total_weights as f64
+        };
+        packed
     }
 
     /// Fused threaded reduce of per-shard gradients into `sum_gw`/`sum_gb`,
@@ -437,6 +541,101 @@ mod tests {
                 assert_eq!(arena.layer(l), &r[..], "layer {l} threads {threads}");
             }
         }
+    }
+
+    #[test]
+    fn grad_quantize_is_exact_at_32_bit() {
+        let counts = [65usize, 9];
+        let mut arena = StepArena::new(&counts, &[4, 2]);
+        let gw = random_weights(&counts, 11);
+        for (dst, src) in arena.sum_gw.iter_mut().zip(&gw) {
+            dst.copy_from_slice(src);
+        }
+        let cfg = scalar_cfg(1);
+        let formats = [RoundTo::B4, RoundTo::B4];
+        let bytes = arena.quantize_grads_with_feedback(&formats, true, &cfg);
+        assert_eq!(bytes, arena.expected_grad_packed_bytes(&formats));
+        assert_eq!(bytes, arena.grad_packed_bytes_total());
+        assert_eq!(arena.grad_mean_bytes_per_weight(), 4.0);
+        for l in 0..counts.len() {
+            for i in 0..counts[l] {
+                assert_eq!(arena.grad_q[l][i].to_bits(), gw[l][i].to_bits(), "layer {l} [{i}]");
+            }
+        }
+        // a second pass stays exact: the residual is identically zero
+        arena.quantize_grads_with_feedback(&formats, true, &cfg);
+        for l in 0..counts.len() {
+            for i in 0..counts[l] {
+                assert_eq!(arena.grad_q[l][i].to_bits(), gw[l][i].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn grad_error_feedback_carries_truncated_mass() {
+        // constant gradient quantized at 16-bit over K batches: with
+        // feedback the cumulative applied mass tracks the true mass to a
+        // single step's truncation error; without it the bias grows ≈K×.
+        let counts = [257usize];
+        let mut fb = StepArena::new(&counts, &[1]);
+        let mut nofb = StepArena::new(&counts, &[1]);
+        let g = random_weights(&counts, 5);
+        let cfg = scalar_cfg(1);
+        let formats = [RoundTo::B2];
+        let k = 40usize;
+        let mut sum_fb = vec![0f64; counts[0]];
+        let mut sum_nofb = vec![0f64; counts[0]];
+        for _ in 0..k {
+            fb.sum_gw[0].copy_from_slice(&g[0]);
+            fb.quantize_grads_with_feedback(&formats, true, &cfg);
+            for (s, &q) in sum_fb.iter_mut().zip(&fb.grad_q[0]) {
+                *s += q as f64;
+            }
+            nofb.sum_gw[0].copy_from_slice(&g[0]);
+            nofb.quantize_grads_with_feedback(&formats, false, &cfg);
+            for (s, &q) in sum_nofb.iter_mut().zip(&nofb.grad_q[0]) {
+                *s += q as f64;
+            }
+        }
+        let mut err_fb = 0f64;
+        let mut err_nofb = 0f64;
+        for i in 0..counts[0] {
+            let true_sum = k as f64 * g[0][i] as f64;
+            err_fb = err_fb.max((sum_fb[i] - true_sum).abs());
+            err_nofb = err_nofb.max((sum_nofb[i] - true_sum).abs());
+        }
+        assert!(err_nofb > 0.0, "16-bit truncation of random normals must lose mass");
+        assert!(
+            err_fb * 8.0 < err_nofb,
+            "feedback error {err_fb} not ≪ open-loop error {err_nofb}"
+        );
+    }
+
+    #[test]
+    fn grad_quantize_is_steady_state_alloc_free() {
+        let counts = [513usize, 64];
+        let mut arena = StepArena::new(&counts, &[8, 8]);
+        let gw = random_weights(&counts, 17);
+        for (dst, src) in arena.sum_gw.iter_mut().zip(&gw) {
+            dst.copy_from_slice(src);
+        }
+        let cfg = scalar_cfg(1);
+        let formats = [RoundTo::B2, RoundTo::B3];
+        // warmup fills the lazy grad pack buffers
+        arena.quantize_grads_with_feedback(&formats, true, &cfg);
+        assert!(arena.grad_pack.grew_last_pack());
+        let check = AllocCheck::begin();
+        let bytes = arena.quantize_grads_with_feedback(&formats, true, &cfg);
+        assert_eq!(check.count(), 0, "steady-state grad quantize allocated");
+        assert!(!arena.grad_pack.grew_last_pack());
+        assert_eq!(bytes, 513 * 2 + 64 * 3);
+        // narrowing never grows (buffers keep their widest size)
+        let narrower = [RoundTo::B1, RoundTo::B1];
+        let check = AllocCheck::begin();
+        arena.quantize_grads_with_feedback(&narrower, true, &cfg);
+        assert_eq!(check.count(), 0, "narrowing grad quantize allocated");
+        assert!(!arena.grad_pack.grew_last_pack());
+        assert!((arena.grad_mean_bytes_per_weight() - 1.0).abs() < 1e-12);
     }
 
     #[test]

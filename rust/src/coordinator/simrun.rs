@@ -10,12 +10,13 @@ use super::arena::PackArena;
 use crate::adt::{AdtConfig, RoundTo};
 use crate::awp::l2_norm_fast;
 use crate::device::GpuPool;
+use crate::grad::GatherPayload;
 use crate::interconnect::Interconnect;
 use crate::models::ModelDesc;
 use crate::profiler::{Phase, Profiler};
 use crate::sim::{
-    build_batch_timeline, build_training_timeline, layer_loads, BatchSpec, OverlapMode,
-    PipelineWindow, SystemProfile, DEFAULT_PIPELINE_WINDOW, DEFAULT_STALENESS,
+    build_training_timeline, layer_loads, BatchSpec, OverlapMode, PipelineWindow, SystemProfile,
+    DEFAULT_PIPELINE_WINDOW, DEFAULT_STALENESS,
 };
 use crate::util::prng::Rng;
 use crate::util::timer::Stopwatch;
@@ -31,6 +32,10 @@ pub struct SimBatchProfile {
     pub d2h_s: f64,
     pub update_s: f64,
     pub awp_norm_s: f64,
+    /// CPU-side Bitunpack of ADT-packed gradient contributions (0 when
+    /// the gather moves full f32). Appended last so every pre-grad-ADT
+    /// partial sum keeps its bit pattern.
+    pub grad_unpack_s: f64,
 }
 
 impl SimBatchProfile {
@@ -43,6 +48,7 @@ impl SimBatchProfile {
             + self.d2h_s
             + self.update_s
             + self.awp_norm_s
+            + self.grad_unpack_s
     }
 
     pub fn add_to(&self, p: &mut Profiler) {
@@ -61,6 +67,7 @@ impl SimBatchProfile {
         p.add(Phase::D2H, self.d2h_s);
         p.add(Phase::GradUpdate, self.update_s);
         p.add(Phase::AwpNorm, self.awp_norm_s);
+        p.add(Phase::GradUnpack, self.grad_unpack_s);
     }
 }
 
@@ -149,6 +156,10 @@ pub struct SimRunner {
     staleness: usize,
     /// Batches scheduled per cross-batch window in `GpuPipelined` mode.
     pipeline_window: usize,
+    /// Uniform ADT gather format for the D2H legs (None ⇒ the paper's
+    /// full-f32 gather; simulated mode has no real gradients, so the
+    /// grad policy reduces to a fixed wire format).
+    grad_format: Option<RoundTo>,
     /// Real full-size weights (measured Bitpack / l²-norm targets).
     weights: Vec<Vec<f32>>,
     /// Per-layer pack buffers, allocated once (same arena the Trainer's
@@ -176,6 +187,7 @@ impl SimRunner {
             overlap: OverlapMode::Serialized,
             staleness: DEFAULT_STALENESS,
             pipeline_window: DEFAULT_PIPELINE_WINDOW,
+            grad_format: None,
             weights,
             pack: PackArena::new(&counts),
             desc,
@@ -213,6 +225,35 @@ impl SimRunner {
     pub fn set_async(&mut self, staleness: usize, pipeline_window: usize) {
         self.staleness = staleness;
         self.pipeline_window = pipeline_window.max(1);
+    }
+
+    /// Select the gather wire format (None ⇒ full-f32 gather, the
+    /// paper's loop — bit-identical accounting to the pre-grad-ADT
+    /// runner).
+    pub fn set_grad_adt(&mut self, format: Option<RoundTo>) {
+        self.grad_format = format;
+    }
+
+    pub fn grad_format(&self) -> Option<RoundTo> {
+        self.grad_format
+    }
+
+    /// Cumulative D2H wire bytes accounted so far (across all GPUs) —
+    /// packed bytes when the gather is compressed, so sweeps can report
+    /// the compression ratio actually achieved on the wire.
+    pub fn d2h_bytes_total(&self) -> u64 {
+        self.interconnect.d2h_bytes_total()
+    }
+
+    /// Cumulative H2D wire bytes accounted so far (across all GPUs).
+    pub fn h2d_bytes_total(&self) -> u64 {
+        self.interconnect.h2d_bytes_total()
+    }
+
+    /// Reset the interconnect byte/second accounting (per-column reuse in
+    /// the profile CLI and benches).
+    pub fn reset_accounting(&mut self) {
+        self.interconnect.reset();
     }
 
     /// Measure Bitpack of the real full-size weights at `formats` through
@@ -275,7 +316,27 @@ impl SimRunner {
         prof.unpack_s = b.unpack_s;
         prof.conv_s = b.conv_s;
         prof.fc_s = b.fc_s;
-        prof.d2h_s = self.interconnect.gather(full_bytes + bias_bytes).seconds;
+        // D2H gather through the shared payload descriptor: full f32, or
+        // ADT-packed at the runner's uniform gather format, in which
+        // case the CPU leader also pays the per-contribution restore.
+        let gather = match self.grad_format {
+            Some(rt) => {
+                let packed_grad: usize = self
+                    .desc
+                    .weight_counts()
+                    .iter()
+                    .map(|&n| crate::adt::packed_len(n, rt))
+                    .sum();
+                GatherPayload::packed(full_bytes, bias_bytes, packed_grad)
+            }
+            None => GatherPayload::f32_only(full_bytes, bias_bytes),
+        };
+        prof.d2h_s = self.interconnect.gather(gather.wire_bytes()).seconds;
+        if self.grad_format.is_some() {
+            prof.grad_unpack_s = self
+                .profile
+                .grad_unpack_time(gather.packed_weight_grad_bytes * self.profile.n_gpus);
+        }
         prof.update_s = self.profile.update_time(self.desc.param_count());
         prof
     }
@@ -306,26 +367,32 @@ impl SimRunner {
                 SimBatchOutcome { phases, critical_path_s: total, serialized_s: total }
             }
             OverlapMode::LayerPipelined => {
-                let loads = layer_loads(&self.desc, formats);
-                let uses_adt = formats.is_some();
-                let tl = build_batch_timeline(
-                    OverlapMode::LayerPipelined,
-                    &self.profile,
-                    &mut self.interconnect,
-                    &loads,
-                    batch_size,
-                    uses_adt,
-                    include_norms && uses_adt,
-                );
-                Self::outcome_from_timeline(&tl, 1)
-            }
-            OverlapMode::GpuPipelined => {
-                let loads = layer_loads(&self.desc, formats);
+                let loads = self.timeline_loads(formats);
                 let uses_adt = formats.is_some();
                 let spec = BatchSpec {
                     batch_size,
                     uses_adt,
                     include_norms: include_norms && uses_adt,
+                    grad_adt: self.grad_format.is_some(),
+                };
+                let tl = build_training_timeline(
+                    OverlapMode::LayerPipelined,
+                    &self.profile,
+                    &mut self.interconnect,
+                    &loads,
+                    spec,
+                    PipelineWindow::single(),
+                );
+                Self::outcome_from_timeline(&tl, 1)
+            }
+            OverlapMode::GpuPipelined => {
+                let loads = self.timeline_loads(formats);
+                let uses_adt = formats.is_some();
+                let spec = BatchSpec {
+                    batch_size,
+                    uses_adt,
+                    include_norms: include_norms && uses_adt,
+                    grad_adt: self.grad_format.is_some(),
                 };
                 let window = PipelineWindow::new(self.pipeline_window, self.staleness);
                 let tl = build_training_timeline(
@@ -341,6 +408,17 @@ impl SimRunner {
         }
     }
 
+    /// Per-layer loads under the broadcast `formats` with the runner's
+    /// gather format applied (the grad mirror of the H2D packing).
+    fn timeline_loads(&self, formats: Option<&[RoundTo]>) -> Vec<crate::sim::LayerLoad> {
+        let mut loads = layer_loads(&self.desc, formats);
+        if let Some(rt) = self.grad_format {
+            let gf = vec![rt; loads.len()];
+            crate::sim::apply_grad_formats(&mut loads, &gf);
+        }
+        loads
+    }
+
     /// Per-batch outcome of a scheduled window (`n_batches == 1` keeps
     /// every quantity bit-identical — `* 1.0` is an IEEE no-op).
     fn outcome_from_timeline(tl: &crate::sim::Timeline, n_batches: usize) -> SimBatchOutcome {
@@ -354,6 +432,7 @@ impl SimRunner {
             d2h_s: tl.busy_phase_s(Phase::D2H) * inv,
             update_s: tl.busy_phase_s(Phase::GradUpdate) * inv,
             awp_norm_s: tl.busy_phase_s(Phase::AwpNorm) * inv,
+            grad_unpack_s: tl.busy_phase_s(Phase::GradUnpack) * inv,
         };
         SimBatchOutcome {
             phases,
@@ -493,6 +572,55 @@ mod tests {
         assert!((b.phases.h2d_s / a.phases.h2d_s - 1.0).abs() < 1e-12);
         assert!((b.phases.conv_s / a.phases.conv_s - 1.0).abs() < 1e-12);
         assert!((b.phases.update_s / a.phases.update_s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grad_adt_gather_trades_link_for_cpu() {
+        let mut r = runner();
+        let formats = formats_for_mean_bytes(&r.desc, 4.0 / 3.0);
+        let off = r.batch(Some(&formats), 64, true);
+        let off_bytes = r.d2h_bytes_total();
+        assert_eq!(off.grad_unpack_s, 0.0);
+        r.reset_accounting();
+        assert_eq!(r.d2h_bytes_total(), 0);
+        r.set_grad_adt(Some(RoundTo::B1));
+        let on = r.batch(Some(&formats), 64, true);
+        let on_bytes = r.d2h_bytes_total();
+        // packed wire: ≈¼ the bytes and ≈¼ the d2h time (biases stay raw)
+        assert!(on.grad_unpack_s > 0.0);
+        assert!(on.d2h_s < off.d2h_s / 3.0, "d2h {} vs {}", on.d2h_s, off.d2h_s);
+        assert!(on_bytes * 3 < off_bytes, "{on_bytes} vs {off_bytes}");
+        // x86 PCIe: the link saving beats the CPU restore cost
+        assert!(on.total() < off.total(), "on {} off {}", on.total(), off.total());
+        // …but a pack-starved CPU flips the sign: the restore outweighs
+        // the link saving, which is exactly the tradeoff fig7 quantifies
+        let starved = SystemProfile::x86().scenario("pack-starved").unwrap();
+        let mut s = SimRunner::new(vgg_a(200), starved, AdtConfig::default(), 3);
+        let s_off = s.batch(Some(&formats), 64, true);
+        s.set_grad_adt(Some(RoundTo::B1));
+        let s_on = s.batch(Some(&formats), 64, true);
+        assert!(
+            s_on.total() > s_off.total(),
+            "pack-starved: packed gather should hurt ({} vs {})",
+            s_on.total(),
+            s_off.total()
+        );
+    }
+
+    #[test]
+    fn grad_adt_off_is_bit_identical_to_the_historical_gather() {
+        // two fresh runners, one never touching the grad knob, one
+        // toggling it off again: identical accounting bit-for-bit
+        let mut a = runner();
+        let mut b = runner();
+        b.set_grad_adt(Some(RoundTo::B2));
+        b.set_grad_adt(None);
+        let formats = formats_for_mean_bytes(&a.desc, 4.0 / 3.0);
+        let pa = a.batch(Some(&formats), 64, true);
+        let pb = b.batch(Some(&formats), 64, true);
+        assert_eq!(pa.total().to_bits(), pb.total().to_bits());
+        assert_eq!(pa.d2h_s.to_bits(), pb.d2h_s.to_bits());
+        assert_eq!(a.d2h_bytes_total(), b.d2h_bytes_total());
     }
 
     #[test]

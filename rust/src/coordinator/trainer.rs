@@ -15,6 +15,7 @@ use crate::awp::{l2_norm_fast, Policy, PrecisionPolicy};
 use crate::config::ExperimentConfig;
 use crate::data::{Loader, SynthDataset};
 use crate::device::GpuPool;
+use crate::grad::{GatherPayload, GradPolicy};
 use crate::interconnect::Interconnect;
 use crate::metrics::{TrainCurve, ValPoint};
 use crate::models::{model_by_name, ModelDesc};
@@ -36,6 +37,9 @@ pub struct TrainReport {
     pub reached_target: bool,
     pub final_loss: f64,
     pub awp_events: usize,
+    /// Gather-format changes decided by the adaptive grad policy (0 for
+    /// static gather policies).
+    pub grad_events: usize,
 }
 
 /// The Real-mode coordinator (leader + simulated GPU workers).
@@ -46,6 +50,8 @@ pub struct Trainer {
     full_desc: ModelDesc,
     exec: Executor,
     policy: Policy,
+    /// Gather-format policy (the grad-ADT mirror of `policy`).
+    grad: GradPolicy,
     ws: Vec<Vec<f32>>,
     bs: Vec<Vec<f32>>,
     opt: MomentumSgd,
@@ -58,12 +64,13 @@ pub struct Trainer {
     /// Reusable per-step buffers (pack outputs, gradient accumulators,
     /// format/mask caches, decay mask, AWP norm scratch).
     arena: StepArena,
-    /// Cached overlap-timeline critical path keyed on the mean
-    /// bytes/weight bits: the schedule only changes when AWP widens a
+    /// Cached overlap-timeline critical path keyed on the (weight, grad)
+    /// mean bytes/weight bit patterns: the schedule only changes when AWP
+    /// widens a broadcast format or the grad policy moves a gather
     /// format, so rebuilding the event timeline every batch (a
     /// window × n_gpus × layers event set in gpu-pipelined mode) would
     /// be repeated identical work.
-    overlap_crit_cache: Option<(u64, f64)>,
+    overlap_crit_cache: Option<(u64, u64, f64)>,
     smoothed_loss: f64,
     train_path: std::path::PathBuf,
     infer_path: std::path::PathBuf,
@@ -86,6 +93,10 @@ impl Trainer {
             bail!("Real-mode training requires a *_micro model, got '{}'", cfg.model);
         }
         cfg.awp.validate().map_err(|e| anyhow::anyhow!(e)).context("invalid AWP parameters")?;
+        cfg.grad_params
+            .validate()
+            .map_err(|e| anyhow::anyhow!(e))
+            .context("invalid grad-policy parameters")?;
         let manifest_set = Manifest::load(&cfg.artifacts_dir)?;
         let manifest = manifest_set.model(&cfg.model)?.clone();
         let micro_desc = model_by_name(&cfg.model)
@@ -157,6 +168,7 @@ impl Trainer {
             None
         };
         let policy = Policy::new(cfg.policy, manifest.num_layers(), cfg.awp, block_groups);
+        let grad = GradPolicy::new(cfg.grad, manifest.num_layers(), cfg.grad_params);
 
         let dataset = SynthDataset::default_micro(cfg.seed);
         let loader =
@@ -172,6 +184,7 @@ impl Trainer {
             manifest,
             full_desc,
             policy,
+            grad,
             ws,
             bs,
             opt,
@@ -198,6 +211,9 @@ impl Trainer {
     }
     pub fn policy(&self) -> &Policy {
         &self.policy
+    }
+    pub fn grad_policy(&self) -> &GradPolicy {
+        &self.grad
     }
     pub fn config(&self) -> &ExperimentConfig {
         &self.cfg
@@ -324,18 +340,69 @@ impl Trainer {
         self.arena.reduce_shards(&shard_outs, cfg_threads, &mut src_scratch);
         self.assert_steady_no_alloc(&section, "gradient reduce");
 
-        // ---- 5: gather gradients (always f32, accounted at full size) -----
-        let d2h = self
-            .interconnect
-            .gather(self.full_desc.weight_bytes_f32() + self.full_desc.total_biases() * 4);
+        // ---- 5: gather gradients — full f32, or ADT-packed with error
+        // feedback when the grad policy compresses the gather. The packed
+        // numerics are real: the reduced gradients round-trip through the
+        // scalar/AVX2 Bitpack/Bitunpack kernels (arena buffers, reused),
+        // and the truncated mass is carried into the next batch's
+        // compensated gradient. Time is accounted at full size via the
+        // shared GatherPayload descriptor, so the wire bytes here, in the
+        // overlap timeline and in the profiler can never diverge.
+        let grad_on = self.cfg.grad.uses_adt();
+        let gather = if grad_on {
+            let section = AllocCheck::begin();
+            let packed_micro = self.arena.quantize_grads_with_feedback(
+                self.grad.formats(),
+                self.cfg.grad_feedback,
+                &self.cfg.adt,
+            );
+            if !self.arena.grad_pack.grew_last_pack() {
+                self.assert_steady_no_alloc(&section, "grad quantize");
+            }
+            // The D2H mirror of the H2D packed-byte cross-check: what the
+            // quantize pass reports must equal Σ adt::packed_len over
+            // layers under the current gather formats.
+            debug_assert_eq!(
+                packed_micro,
+                self.arena.expected_grad_packed_bytes(self.grad.formats()),
+                "gather packed-byte accounting drifted from Σ packed_len"
+            );
+            GatherPayload::packed(
+                self.full_desc.weight_bytes_f32(),
+                self.full_desc.total_biases() * 4,
+                self.full_packed_bytes(self.arena.grad_mean_bytes_per_weight()),
+            )
+        } else {
+            GatherPayload::f32_only(
+                self.full_desc.weight_bytes_f32(),
+                self.full_desc.total_biases() * 4,
+            )
+        };
+        let d2h = self.interconnect.gather(gather.wire_bytes());
         self.profiler.add(Phase::D2H, d2h.seconds);
+        if grad_on {
+            // CPU-side restore of every GPU's packed contribution — the
+            // leader unpacks all n_gpus gathers serially (unlike the
+            // weight side, where the GPUs unpack their broadcast copies
+            // in parallel).
+            self.profiler.add(
+                Phase::GradUnpack,
+                self.cfg.system.grad_unpack_time(
+                    gather.packed_weight_grad_bytes * self.cfg.system.n_gpus,
+                ),
+            );
+        }
 
-        // ---- 6: SGD update on the CPU leader -------------------------------
+        // ---- 6: SGD update on the CPU leader — on the quantized view of
+        // the gradients when the gather is compressed (exactly what the
+        // simulated wire delivered; bias gradients are never packed).
         let section = AllocCheck::begin();
+        let grads_w: &[Vec<f32>] =
+            if grad_on { &self.arena.grad_q } else { &self.arena.sum_gw };
         self.opt.step_split(
             &mut self.ws,
             &mut self.bs,
-            &self.arena.sum_gw,
+            grads_w,
             &self.arena.sum_gb,
             self.arena.decay(),
             cfg_threads,
@@ -355,6 +422,29 @@ impl Trainer {
             self.profiler
                 .add(Phase::AwpNorm, self.cfg.system.norm_time(self.full_desc.weight_bytes_f32()));
             self.policy.observe_batch(&self.arena.norms);
+        }
+
+        // ---- 7b: adaptive gather-format observation — the grad
+        // controller watches the raw (pre-quantization) gradient l²-norms
+        // and the post-update weight norms through the same AWP norm
+        // kernel. Two full weight-size passes stream here (gradients +
+        // weights), so two norm-pass charges land on the AwpNorm row; the
+        // overlap timeline does not model them (the serial charge is an
+        // upper bound — documented limit in `grad` module docs).
+        if self.grad.needs_norms() {
+            let section = AllocCheck::begin();
+            for (slot, g) in self.arena.grad_norms.iter_mut().zip(&self.arena.sum_gw) {
+                *slot = l2_norm_fast(g, cfg_threads);
+            }
+            for (slot, w) in self.arena.grad_wnorms.iter_mut().zip(&self.ws) {
+                *slot = l2_norm_fast(w, cfg_threads);
+            }
+            self.assert_steady_no_alloc(&section, "grad norms");
+            self.profiler.add(
+                Phase::AwpNorm,
+                2.0 * self.cfg.system.norm_time(self.full_desc.weight_bytes_f32()),
+            );
+            self.grad.observe_batch(&self.arena.grad_norms, &self.arena.grad_wnorms);
         }
 
         // ---- 8: close the batch under the configured overlap schedule.
@@ -384,8 +474,14 @@ impl Trainer {
                 // schedule into a steady-state per-batch rate; the real
                 // numerics above stay synchronous (the bounded-staleness
                 // gradient semantics are a timing what-if, DESIGN §6).
+                let gmbpw =
+                    if grad_on { self.arena.grad_mean_bytes_per_weight() } else { 4.0 };
                 let crit = match self.overlap_crit_cache {
-                    Some((bits, crit)) if bits == mbpw.to_bits() => crit,
+                    Some((bits, gbits, crit))
+                        if bits == mbpw.to_bits() && gbits == gmbpw.to_bits() =>
+                    {
+                        crit
+                    }
                     _ => {
                         let window = match mode {
                             OverlapMode::GpuPipelined => crate::sim::PipelineWindow::new(
@@ -394,16 +490,17 @@ impl Trainer {
                             ),
                             _ => crate::sim::PipelineWindow::new(1, self.cfg.staleness),
                         };
-                        let (crit, _serial) = crate::figures::batch_time_overlap_windowed(
+                        let (crit, _serial) = crate::figures::batch_time_overlap_windowed_grad(
                             &self.cfg.system,
                             &self.full_desc,
                             self.cfg.batch_size,
                             self.cfg.policy,
                             mbpw,
+                            grad_on.then_some(gmbpw),
                             mode,
                             window,
                         );
-                        self.overlap_crit_cache = Some((mbpw.to_bits(), crit));
+                        self.overlap_crit_cache = Some((mbpw.to_bits(), gmbpw.to_bits(), crit));
                         crit
                     }
                 };
@@ -500,6 +597,7 @@ impl Trainer {
             reached_target: reached,
             final_loss,
             awp_events: self.policy.controller().map_or(0, |c| c.events().len()),
+            grad_events: self.grad.controller().map_or(0, |c| c.events().len()),
         })
     }
 }
@@ -539,6 +637,15 @@ mod tests {
         cfg.awp.step_bits = 4;
         let err = Trainer::new(cfg).unwrap_err();
         assert!(format!("{err:#}").contains("step_bits"), "{err:#}");
+    }
+
+    #[test]
+    fn rejects_invalid_grad_params_before_artifacts() {
+        let mut cfg = ExperimentConfig::preset("vgg_micro", 64, PolicyKind::Awp, "x86");
+        cfg.grad = crate::grad::GradPolicyKind::Adaptive;
+        cfg.grad_params.interval = 0;
+        let err = Trainer::new(cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("interval"), "{err:#}");
     }
 
     #[test]

@@ -9,13 +9,14 @@
 //! trace serves both the x86 and POWER figures.
 
 use crate::awp::PolicyKind;
+use crate::grad::GatherPayload;
 use crate::interconnect::Interconnect;
 use crate::metrics::TrainCurve;
 use crate::models::ModelDesc;
 use crate::sim::SystemProfile;
 use crate::sim::{
-    build_training_timeline, layer_loads, layer_loads_mean_bytes, BatchSpec, OverlapMode,
-    PipelineWindow,
+    apply_grad_mean_bytes, build_training_timeline, layer_loads, layer_loads_mean_bytes,
+    BatchSpec, OverlapMode, PipelineWindow,
 };
 
 /// Simulated duration of one batch given the policy's compression state.
@@ -30,12 +31,39 @@ pub fn batch_time(
     policy: PolicyKind,
     bytes_per_weight: f64,
 ) -> f64 {
+    batch_time_grad(profile, desc, batch, policy, bytes_per_weight, None)
+}
+
+/// [`batch_time`] with an optional ADT-packed gather:
+/// `grad_bytes_per_weight = Some(g)` moves `g` mean bytes/weight on the
+/// D2H wire (biases stay raw) and adds the CPU-side restore of every
+/// GPU's packed contribution (`grad_unpack_time` over `n_gpus ×` packed
+/// bytes). `None` is the paper's full-f32 gather, bit-identical to
+/// [`batch_time`]: the gather payload flows through the shared
+/// [`GatherPayload`] descriptor in both cases and the grad term is
+/// appended last, so every pre-existing partial sum keeps its bits.
+pub fn batch_time_grad(
+    profile: &SystemProfile,
+    desc: &ModelDesc,
+    batch: usize,
+    policy: PolicyKind,
+    bytes_per_weight: f64,
+    grad_bytes_per_weight: Option<f64>,
+) -> f64 {
     let weights = desc.total_weights();
     let full_bytes = desc.weight_bytes_f32();
     let bias_bytes = desc.total_biases() * 4;
     let uses_adt = policy.uses_adt();
     let payload =
         if uses_adt { (weights as f64 * bytes_per_weight) as usize } else { full_bytes };
+    let gather = match grad_bytes_per_weight {
+        Some(g) => GatherPayload::packed(
+            full_bytes,
+            bias_bytes,
+            (weights as f64 * g) as usize,
+        ),
+        None => GatherPayload::f32_only(full_bytes, bias_bytes),
+    };
 
     let mut conv_fwd = 0u64;
     let mut fc_fwd = 0u64;
@@ -53,7 +81,7 @@ pub fn batch_time(
     let wall = profile.compute_wall_factor();
 
     let mut t = profile.h2d_time(payload + bias_bytes)
-        + profile.d2h_time(full_bytes + bias_bytes)
+        + profile.d2h_time(gather.wire_bytes())
         + conv_s * wall
         + fc_s * wall
         + profile.update_time(desc.param_count());
@@ -62,6 +90,9 @@ pub fn batch_time(
     }
     if policy.needs_norms() {
         t += profile.norm_time(full_bytes);
+    }
+    if grad_bytes_per_weight.is_some() {
+        t += profile.grad_unpack_time(gather.packed_weight_grad_bytes * profile.n_gpus);
     }
     t
 }
@@ -106,17 +137,118 @@ pub fn batch_time_overlap_windowed(
     mode: OverlapMode,
     window: PipelineWindow,
 ) -> (f64, f64) {
+    batch_time_overlap_windowed_grad(
+        profile,
+        desc,
+        batch,
+        policy,
+        bytes_per_weight,
+        None,
+        mode,
+        window,
+    )
+}
+
+/// [`batch_time_overlap_windowed`] with an optional ADT-packed gather:
+/// the per-layer D2H legs carry `grad_bytes_per_weight` mean bytes per
+/// weight and a CPU-side `Phase::GradUnpack` event precedes each layer's
+/// update (all three overlap modes; busy totals stay mode-independent).
+/// `None` reproduces the full-f32 gather bit-exactly.
+#[allow(clippy::too_many_arguments)]
+pub fn batch_time_overlap_windowed_grad(
+    profile: &SystemProfile,
+    desc: &ModelDesc,
+    batch: usize,
+    policy: PolicyKind,
+    bytes_per_weight: f64,
+    grad_bytes_per_weight: Option<f64>,
+    mode: OverlapMode,
+    window: PipelineWindow,
+) -> (f64, f64) {
     let uses_adt = policy.uses_adt();
-    let loads = if uses_adt {
+    let mut loads = if uses_adt {
         layer_loads_mean_bytes(desc, bytes_per_weight)
     } else {
         layer_loads(desc, None)
     };
+    if let Some(g) = grad_bytes_per_weight {
+        apply_grad_mean_bytes(&mut loads, g);
+    }
     let mut ic = Interconnect::new(profile.clone());
-    let spec = BatchSpec { batch_size: batch, uses_adt, include_norms: policy.needs_norms() };
+    let spec = BatchSpec {
+        batch_size: batch,
+        uses_adt,
+        include_norms: policy.needs_norms(),
+        grad_adt: grad_bytes_per_weight.is_some(),
+    };
     let tl = build_training_timeline(mode, profile, &mut ic, &loads, spec, window);
     let inv = 1.0 / window.n_batches as f64;
     (tl.critical_path_s() * inv, tl.serialized_sum_s() * inv)
+}
+
+/// One cell of the Fig-7 gather-compression sweep (seconds per batch
+/// under each schedule at one mean gather width).
+#[derive(Clone, Copy, Debug)]
+pub struct GradTradeoffCell {
+    /// Mean gather bytes/weight of this cell (4.0 ⇒ the uncompressed
+    /// full-f32 gather, no grad-ADT machinery at all).
+    pub grad_bytes_per_weight: f64,
+    pub serial_s: f64,
+    pub pipelined_s: f64,
+    pub gpu_pipelined_s: f64,
+}
+
+/// "Fig 7": per-batch time vs gather compression, one cell per entry of
+/// `grad_bytes_per_weight` (values ≥ 4.0 mean the uncompressed gather),
+/// under the serial loop, the layer-pipelined timeline and the per-GPU
+/// `window` pipeline. The weight-side broadcast stays at
+/// `bytes_per_weight` throughout, so the sweep isolates the gather-side
+/// trade: packed legs shrink the D2H wire while the CPU pays
+/// `grad_unpack_time` per contribution — `benches/fig7_gradcomp.rs`
+/// tabulates where that pays (link-bound scenarios) and where it does
+/// not (`pack-starved`).
+pub fn grad_compression_tradeoff(
+    profile: &SystemProfile,
+    desc: &ModelDesc,
+    batch: usize,
+    policy: PolicyKind,
+    bytes_per_weight: f64,
+    window: PipelineWindow,
+    grad_bytes_per_weight: &[f64],
+) -> Vec<GradTradeoffCell> {
+    grad_bytes_per_weight
+        .iter()
+        .map(|&g| {
+            let grad = if g < 4.0 { Some(g) } else { None };
+            let serial = batch_time_grad(profile, desc, batch, policy, bytes_per_weight, grad);
+            let (pipelined, _) = batch_time_overlap_windowed_grad(
+                profile,
+                desc,
+                batch,
+                policy,
+                bytes_per_weight,
+                grad,
+                OverlapMode::LayerPipelined,
+                PipelineWindow::single(),
+            );
+            let (gpu, _) = batch_time_overlap_windowed_grad(
+                profile,
+                desc,
+                batch,
+                policy,
+                bytes_per_weight,
+                grad,
+                OverlapMode::GpuPipelined,
+                window,
+            );
+            GradTradeoffCell {
+                grad_bytes_per_weight: g,
+                serial_s: serial,
+                pipelined_s: pipelined,
+                gpu_pipelined_s: gpu,
+            }
+        })
+        .collect()
 }
 
 /// Fig 6 y-axis: serial-loop time ÷ layer-pipelined critical path for one
@@ -347,6 +479,102 @@ mod tests {
         // compute+unpack doubled, transfers/CPU untouched
         let expected = tb + (128.72 + 33.51) * 1e-3 + 4.51e-3;
         assert!((ts / expected - 1.0).abs() < 0.05, "ts={ts} expected≈{expected}");
+    }
+
+    #[test]
+    fn grad_none_is_bit_identical_to_the_legacy_batch_time() {
+        let d = vgg_a(200);
+        for profile in [SystemProfile::x86(), SystemProfile::power()] {
+            for (policy, bpw) in [(PolicyKind::Baseline, 4.0), (PolicyKind::Awp, 4.0 / 3.0)] {
+                let legacy = batch_time(&profile, &d, 64, policy, bpw);
+                let grad = batch_time_grad(&profile, &d, 64, policy, bpw, None);
+                assert_eq!(legacy.to_bits(), grad.to_bits());
+                let (c1, s1) = batch_time_overlap(
+                    &profile, &d, 64, policy, bpw, OverlapMode::LayerPipelined,
+                );
+                let (c2, s2) = batch_time_overlap_windowed_grad(
+                    &profile,
+                    &d,
+                    64,
+                    policy,
+                    bpw,
+                    None,
+                    OverlapMode::LayerPipelined,
+                    PipelineWindow::single(),
+                );
+                assert_eq!(c1.to_bits(), c2.to_bits());
+                assert_eq!(s1.to_bits(), s2.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn packed_gather_pays_under_contended_links_and_stragglers() {
+        // the ISSUE-4 acceptance pin: at the VGG-b64 calibration point
+        // (AWP ≈3× broadcast compression), the packed gather must improve
+        // simulated batch time under pcie-contended and straggler-severe
+        // on x86, in the serial loop and the layer-pipelined schedule.
+        let d = vgg_a(200);
+        for scenario in ["uniform", "pcie-contended", "straggler-severe"] {
+            let p = SystemProfile::x86().scenario(scenario).unwrap();
+            let off = batch_time_grad(&p, &d, 64, PolicyKind::Awp, 4.0 / 3.0, None);
+            let on = batch_time_grad(&p, &d, 64, PolicyKind::Awp, 4.0 / 3.0, Some(1.0));
+            assert!(on < off, "{scenario}: serial {on} !< {off}");
+            let one = PipelineWindow::single();
+            let pipelined = |grad| {
+                batch_time_overlap_windowed_grad(
+                    &p,
+                    &d,
+                    64,
+                    PolicyKind::Awp,
+                    4.0 / 3.0,
+                    grad,
+                    OverlapMode::LayerPipelined,
+                    one,
+                )
+                .0
+            };
+            let pip_off = pipelined(None);
+            let pip_on = pipelined(Some(1.0));
+            assert!(pip_on < pip_off, "{scenario}: pipelined {pip_on} !< {pip_off}");
+        }
+        // pack-starved flips the serial sign: the CPU restore outweighs
+        // the link saving — the boundary fig7 exists to chart.
+        let starved = SystemProfile::x86().scenario("pack-starved").unwrap();
+        let off = batch_time_grad(&starved, &d, 64, PolicyKind::Awp, 4.0 / 3.0, None);
+        let on = batch_time_grad(&starved, &d, 64, PolicyKind::Awp, 4.0 / 3.0, Some(1.0));
+        assert!(on > off, "pack-starved: packed gather should hurt ({on} vs {off})");
+    }
+
+    #[test]
+    fn grad_tradeoff_sweep_is_consistent() {
+        let d = vgg_a(200);
+        let p = SystemProfile::x86();
+        let cells = grad_compression_tradeoff(
+            &p,
+            &d,
+            64,
+            PolicyKind::Awp,
+            4.0 / 3.0,
+            PipelineWindow::default_async(),
+            &[4.0, 2.0, 1.0],
+        );
+        assert_eq!(cells.len(), 3);
+        // the ≥4.0 cell is exactly the no-grad-ADT batch time
+        let off = batch_time_grad(&p, &d, 64, PolicyKind::Awp, 4.0 / 3.0, None);
+        assert_eq!(cells[0].serial_s.to_bits(), off.to_bits());
+        for c in &cells {
+            assert!(c.pipelined_s < c.serial_s, "overlap must help at g={}", c.grad_bytes_per_weight);
+            assert!(c.gpu_pipelined_s < c.pipelined_s);
+        }
+        // the trade is not monotone in compression: on the uniform x86
+        // link the crossover sits near 1.9 B/weight — win iff
+        // (4−g)/d2h_bps > g/grad_unpack_bps — so the 16-bit gather LOSES
+        // (cost 39.4 ms > saving 34.3 ms) while the 8-bit gather wins
+        // (19.7 ms < 51.4 ms). This boundary is what fig7 charts.
+        assert!(cells[1].serial_s > cells[0].serial_s, "16-bit gather should lose on uniform x86");
+        assert!(cells[2].serial_s < cells[0].serial_s, "8-bit gather should win on uniform x86");
+        assert!(cells[2].serial_s < cells[1].serial_s);
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Gradient-side compression — the ADT-packed D2H gather path.
+//!
+//! The paper compresses only the CPU→GPU weight broadcast and calls
+//! gradient compression an orthogonal opportunity (§VI); the gather legs
+//! of Fig 1 move full f32. This subsystem closes that gap symmetrically
+//! to the weight-side AWP/ADT machinery:
+//!
+//! * [`policy`] — a [`GradPolicy`] controller in the AWP mould
+//!   (`awp::controller` mirrored): per layer it watches the relative
+//!   change rate of the gradient l²-norm and the relative update
+//!   magnitude `‖g‖/‖w‖` (both via `awp::norm::l2_norm_fast`) and
+//!   *narrows* the gather format as training stabilises — the opposite
+//!   walk from AWP, because gradients shrink as weights converge (DPRed,
+//!   arXiv 1804.06732: observed gradient dynamic range needs far fewer
+//!   bits than f32). A norm spike widens the format back immediately.
+//! * **Error feedback** — quantization residuals are carried into the
+//!   next batch (`coordinator::arena::StepArena::quantize_grads_with_feedback`):
+//!   the applied gradient is `q = unpack(pack(g + r))` through the real
+//!   scalar/AVX2 ADT kernels and `r ← (g + r) − q`, so the truncated
+//!   mass is never lost, only delayed — the standard EF-SGD construction
+//!   that keeps Real-mode training convergent. At the 32-bit format the
+//!   round-trip is lossless, the residual stays identically zero, and
+//!   the applied gradient equals the raw gradient exactly.
+//! * [`GatherPayload`] — the single D2H byte descriptor shared by the
+//!   trainer, the overlap timeline and the profiler, so packed and
+//!   unpacked gather accounting can never diverge (the H2D side's
+//!   packed-byte `debug_assert` has a D2H mirror in `Trainer::step`).
+//!
+//! Timing: the gather legs carry [`GatherPayload::wire_bytes`] on the
+//! D2H channel and the CPU pays a [`crate::profiler::Phase::GradUnpack`]
+//! cost to restore every GPU's contribution
+//! (`SystemProfile::grad_unpack_time` over `n_gpus ×` packed bytes) —
+//! unlike the weight side, where the four GPUs unpack in parallel, the
+//! leader unpacks all contributions itself, so gradient compression
+//! trades link time for CPU time. `figures::grad_compression_tradeoff`
+//! and `benches/fig7_gradcomp.rs` quantify when that trade pays
+//! (link-bound scenarios) and when it does not (`pack-starved` CPUs).
+//!
+//! Known limit: the *adaptive* controller's norm pass (gradient +
+//! post-update weight l²-norms) is charged serially to the `AwpNorm`
+//! row in Real mode but is not modelled by the overlap timeline — the
+//! serial charge is an upper bound, and static gather policies (the
+//! benchmarked configurations) are unaffected.
+
+mod policy;
+
+pub use policy::{GradController, GradEvent, GradParams, GradPolicy, GradPolicyKind};
+
+use crate::adt::RoundTo;
+
+/// One batch's D2H gather payload, per GPU: full-f32 weight-gradient
+/// bytes, raw bias-gradient bytes (biases are never packed, mirroring
+/// the weight side, paper §III), and the ADT-packed weight-gradient
+/// bytes actually put on the wire (== `weight_grad_bytes_f32` when the
+/// gather is uncompressed).
+///
+/// Every consumer of gather bytes — `Trainer::step`, `SimRunner::batch`,
+/// `figures::batch_time_grad`, the per-layer `LayerLoad`s feeding the
+/// overlap timeline — derives its numbers from this descriptor (or its
+/// per-layer decomposition), so the packed and unpacked accounting share
+/// one definition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GatherPayload {
+    /// Full f32 weight-gradient bytes (the historical gather payload).
+    pub weight_grad_bytes_f32: usize,
+    /// Raw f32 bias-gradient bytes (always uncompressed).
+    pub bias_bytes: usize,
+    /// ADT-packed weight-gradient bytes on the wire.
+    pub packed_weight_grad_bytes: usize,
+}
+
+impl GatherPayload {
+    /// The uncompressed gather: packed == full f32.
+    pub fn f32_only(weight_grad_bytes_f32: usize, bias_bytes: usize) -> GatherPayload {
+        GatherPayload {
+            weight_grad_bytes_f32,
+            bias_bytes,
+            packed_weight_grad_bytes: weight_grad_bytes_f32,
+        }
+    }
+
+    /// A packed gather carrying `packed_weight_grad_bytes` on the wire.
+    pub fn packed(
+        weight_grad_bytes_f32: usize,
+        bias_bytes: usize,
+        packed_weight_grad_bytes: usize,
+    ) -> GatherPayload {
+        debug_assert!(
+            packed_weight_grad_bytes <= weight_grad_bytes_f32,
+            "packed gather larger than f32 ({packed_weight_grad_bytes} > {weight_grad_bytes_f32})"
+        );
+        GatherPayload { weight_grad_bytes_f32, bias_bytes, packed_weight_grad_bytes }
+    }
+
+    /// Bytes each GPU puts on the D2H wire (packed weights + raw biases).
+    pub fn wire_bytes(&self) -> usize {
+        self.packed_weight_grad_bytes + self.bias_bytes
+    }
+
+    /// The same wire bytes without compression — the byte count every
+    /// pre-grad-ADT call site used (`weight_bytes_f32 + biases * 4`).
+    pub fn f32_wire_bytes(&self) -> usize {
+        self.weight_grad_bytes_f32 + self.bias_bytes
+    }
+
+    /// Is any weight-gradient byte actually compressed away?
+    pub fn is_packed(&self) -> bool {
+        self.packed_weight_grad_bytes != self.weight_grad_bytes_f32
+    }
+
+    /// Achieved wire compression (full f32 wire ÷ packed wire), 1.0 for
+    /// an empty payload.
+    pub fn compression_ratio(&self) -> f64 {
+        let wire = self.wire_bytes();
+        if wire == 0 {
+            1.0
+        } else {
+            self.f32_wire_bytes() as f64 / wire as f64
+        }
+    }
+}
+
+/// Σ over layers of the packed gradient bytes under `formats` — the
+/// per-layer decomposition [`GatherPayload`] aggregates (the grad mirror
+/// of `StepArena::packed_bytes_total`).
+pub fn packed_grad_bytes(weight_counts: &[usize], formats: &[RoundTo]) -> usize {
+    assert_eq!(weight_counts.len(), formats.len(), "one gather format per layer");
+    weight_counts.iter().zip(formats).map(|(&n, &rt)| crate::adt::packed_len(n, rt)).sum()
+}
+
+/// Weighted mean gather bytes/weight under `formats` (4.0 for an empty
+/// model) — the full-size crossover quantity, exactly like the weight
+/// side's `StepArena::mean_bytes_per_weight`.
+pub fn mean_grad_bytes_per_weight(weight_counts: &[usize], formats: &[RoundTo]) -> f64 {
+    let total: usize = weight_counts.iter().sum();
+    if total == 0 {
+        4.0
+    } else {
+        packed_grad_bytes(weight_counts, formats) as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_payload_is_identity() {
+        let p = GatherPayload::f32_only(400, 40);
+        assert_eq!(p.wire_bytes(), 440);
+        assert_eq!(p.f32_wire_bytes(), 440);
+        assert!(!p.is_packed());
+        assert_eq!(p.compression_ratio(), 1.0);
+    }
+
+    #[test]
+    fn packed_payload_compresses_weights_only() {
+        let p = GatherPayload::packed(400, 40, 100);
+        assert_eq!(p.wire_bytes(), 140);
+        assert_eq!(p.f32_wire_bytes(), 440);
+        assert!(p.is_packed());
+        assert!((p.compression_ratio() - 440.0 / 140.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_payload_is_safe() {
+        let p = GatherPayload::f32_only(0, 0);
+        assert_eq!(p.wire_bytes(), 0);
+        assert_eq!(p.compression_ratio(), 1.0);
+    }
+
+    #[test]
+    fn per_layer_bytes_aggregate() {
+        let counts = [100usize, 300];
+        let formats = [RoundTo::B1, RoundTo::B3];
+        assert_eq!(packed_grad_bytes(&counts, &formats), 100 + 900);
+        assert!((mean_grad_bytes_per_weight(&counts, &formats) - 2.5).abs() < 1e-12);
+        assert_eq!(mean_grad_bytes_per_weight(&[], &[]), 4.0);
+    }
+}

@@ -1,0 +1,504 @@
+//! The gather-format controller — AWP's Algorithm 1 mirrored for the
+//! gradient direction.
+//!
+//! AWP *widens* weight precision as layers converge (a converged layer's
+//! weights carry information in ever-finer bits). Gradients walk the
+//! other way: as a layer stabilises its gradients shrink and their
+//! useful dynamic range collapses (DPRed, arXiv 1804.06732), so the
+//! gather format can *narrow* — provided the truncated mass is preserved
+//! by error feedback (`StepArena::quantize_grads_with_feedback`). The
+//! controller therefore starts every layer at the lossless 32-bit
+//! format and narrows one byte at a time once the layer's gradient
+//! l²-norm change rate has stayed inside `±threshold` for `interval`
+//! consecutive batches *and* the relative update `‖g‖/‖w‖` is below
+//! `max_rel_update`; a norm spike (`|δ| > spike`) widens one step back
+//! immediately and resets the counter.
+
+use crate::adt::RoundTo;
+use crate::util::stats::rel_change;
+
+/// Gather-format controller hyper-parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct GradParams {
+    /// Stability band: `|δ| < threshold` counts toward a narrow step.
+    pub threshold: f64,
+    /// Spike guard: `|δ| > spike` widens one step immediately.
+    pub spike: f64,
+    /// Consecutive stable batches before narrowing (AWP's `INTERVAL`).
+    pub interval: u32,
+    /// Narrowest gather format the controller may reach.
+    pub min: RoundTo,
+    /// Format every layer starts at (lossless by default).
+    pub initial: RoundTo,
+    /// Never narrow while `‖g‖/‖w‖` exceeds this (large relative updates
+    /// mean the layer is still moving and every gradient bit matters).
+    pub max_rel_update: f64,
+}
+
+impl GradParams {
+    /// Check the parameters are representable and internally consistent.
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.threshold.is_finite() && self.threshold >= 0.0) {
+            return Err(format!("grad threshold must be finite and >= 0, got {}", self.threshold));
+        }
+        if !(self.spike.is_finite() && self.spike > self.threshold) {
+            return Err(format!(
+                "grad spike must be finite and > threshold ({}), got {}",
+                self.threshold, self.spike
+            ));
+        }
+        if self.interval == 0 {
+            return Err("grad interval must be >= 1".into());
+        }
+        if self.min > self.initial {
+            return Err(format!(
+                "grad min format {} is wider than the initial {}",
+                self.min, self.initial
+            ));
+        }
+        if !(self.max_rel_update.is_finite() && self.max_rel_update > 0.0) {
+            return Err(format!(
+                "grad max_rel_update must be finite and > 0, got {}",
+                self.max_rel_update
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Default for GradParams {
+    fn default() -> Self {
+        GradParams {
+            threshold: 0.05,
+            spike: 0.5,
+            interval: 8,
+            min: RoundTo::B2,
+            initial: RoundTo::B4,
+            max_rel_update: 0.1,
+        }
+    }
+}
+
+/// A gather-format change decided by the controller (logging/ablation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GradEvent {
+    pub batch: u64,
+    pub layer: usize,
+    pub from: RoundTo,
+    pub to: RoundTo,
+}
+
+/// Which gather policy to run (CLI / config selectable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GradPolicyKind {
+    /// Full-f32 gather — the paper's loop, bit-identical to the
+    /// pre-grad-ADT coordinator.
+    Off,
+    /// One fixed gather format for the whole run.
+    Fixed(RoundTo),
+    /// The adaptive controller above.
+    Adaptive,
+}
+
+impl GradPolicyKind {
+    pub fn parse(s: &str) -> Option<GradPolicyKind> {
+        match s {
+            "off" => Some(GradPolicyKind::Off),
+            "fixed8" | "8" => Some(GradPolicyKind::Fixed(RoundTo::B1)),
+            "fixed16" | "16" => Some(GradPolicyKind::Fixed(RoundTo::B2)),
+            "fixed24" | "24" => Some(GradPolicyKind::Fixed(RoundTo::B3)),
+            "fixed32" | "32" => Some(GradPolicyKind::Fixed(RoundTo::B4)),
+            "adaptive" => Some(GradPolicyKind::Adaptive),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            GradPolicyKind::Off => "off".into(),
+            GradPolicyKind::Fixed(rt) => format!("fixed{}", rt.bits()),
+            GradPolicyKind::Adaptive => "adaptive".into(),
+        }
+    }
+
+    /// Does this policy route gradients through the ADT gather path?
+    pub fn uses_adt(&self) -> bool {
+        !matches!(self, GradPolicyKind::Off)
+    }
+
+    /// Does this policy need per-batch gradient/weight l²-norms?
+    pub fn needs_norms(&self) -> bool {
+        matches!(self, GradPolicyKind::Adaptive)
+    }
+}
+
+/// Per-layer controller state (the grad mirror of `AwpController`).
+#[derive(Clone, Debug)]
+pub struct GradController {
+    params: GradParams,
+    bytes_per_layer: Vec<u8>,
+    stable_counter: Vec<u32>,
+    prev_norm: Vec<Option<f64>>,
+    batch: u64,
+    events: Vec<GradEvent>,
+}
+
+impl GradController {
+    pub fn new(num_layers: usize, params: GradParams) -> GradController {
+        if let Err(e) = params.validate() {
+            panic!("invalid GradParams: {e}");
+        }
+        GradController {
+            params,
+            bytes_per_layer: vec![params.initial.bytes() as u8; num_layers],
+            stable_counter: vec![0; num_layers],
+            prev_norm: vec![None; num_layers],
+            batch: 0,
+            events: Vec::new(),
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.bytes_per_layer.len()
+    }
+
+    pub fn params(&self) -> &GradParams {
+        &self.params
+    }
+
+    /// Current gather format of `layer`.
+    pub fn round_to(&self, layer: usize) -> RoundTo {
+        RoundTo::from_bytes(self.bytes_per_layer[layer]).unwrap_or_else(|| {
+            panic!("corrupt grad byte state: layer {layer} at {} bytes", self.bytes_per_layer[layer])
+        })
+    }
+
+    /// Observe one layer's gradient l²-norm and weight l²-norm for the
+    /// current batch; returns the format change if one triggered.
+    pub fn observe_layer(
+        &mut self,
+        layer: usize,
+        grad_norm: f64,
+        weight_norm: f64,
+    ) -> Option<GradEvent> {
+        let delta = match self.prev_norm[layer] {
+            None => {
+                self.prev_norm[layer] = Some(grad_norm);
+                return None;
+            }
+            Some(prev) => rel_change(grad_norm, prev),
+        };
+        self.prev_norm[layer] = Some(grad_norm);
+        let bytes = self.bytes_per_layer[layer];
+
+        if delta.abs() > self.params.spike {
+            // gradient regime changed: retreat toward full precision
+            self.stable_counter[layer] = 0;
+            if bytes < self.params.initial.bytes() as u8 {
+                let from = self.round_to(layer);
+                self.bytes_per_layer[layer] = bytes + 1;
+                let ev = GradEvent { batch: self.batch, layer, from, to: self.round_to(layer) };
+                self.events.push(ev);
+                return Some(ev);
+            }
+            return None;
+        }
+
+        // relative update ‖g‖/‖w‖; a zero-weight layer counts as unstable
+        let rel_update =
+            if weight_norm > 0.0 { grad_norm / weight_norm } else { f64::INFINITY };
+        if delta.abs() < self.params.threshold && rel_update <= self.params.max_rel_update {
+            self.stable_counter[layer] += 1;
+        } else {
+            // `interval` means *consecutive* stable batches: any
+            // non-qualifying observation (noisy-but-sub-spike δ, or a
+            // too-large relative update) restarts the count, so sustained
+            // oscillation never narrows the format.
+            self.stable_counter[layer] = 0;
+        }
+        if self.stable_counter[layer] >= self.params.interval
+            && bytes > self.params.min.bytes() as u8
+        {
+            self.stable_counter[layer] = 0;
+            let from = self.round_to(layer);
+            self.bytes_per_layer[layer] = bytes - 1;
+            let ev = GradEvent { batch: self.batch, layer, from, to: self.round_to(layer) };
+            self.events.push(ev);
+            return Some(ev);
+        }
+        None
+    }
+
+    /// Observe all layers at once and advance the batch counter.
+    pub fn observe_batch(&mut self, grad_norms: &[f64], weight_norms: &[f64]) -> Vec<GradEvent> {
+        assert_eq!(grad_norms.len(), self.num_layers(), "one grad norm per layer");
+        assert_eq!(weight_norms.len(), self.num_layers(), "one weight norm per layer");
+        let evs: Vec<GradEvent> = (0..self.num_layers())
+            .filter_map(|l| self.observe_layer(l, grad_norms[l], weight_norms[l]))
+            .collect();
+        self.batch += 1;
+        evs
+    }
+
+    /// Every format change so far (chronological).
+    pub fn events(&self) -> &[GradEvent] {
+        &self.events
+    }
+
+    pub fn batches_seen(&self) -> u64 {
+        self.batch
+    }
+}
+
+/// Runtime gather policy: decides each layer's format every batch.
+#[derive(Clone, Debug)]
+pub enum GradPolicy {
+    Static { formats: Vec<RoundTo>, kind: GradPolicyKind },
+    Adaptive { ctl: GradController, formats: Vec<RoundTo> },
+}
+
+impl GradPolicy {
+    pub fn new(kind: GradPolicyKind, num_layers: usize, params: GradParams) -> GradPolicy {
+        match kind {
+            GradPolicyKind::Off => {
+                GradPolicy::Static { formats: vec![RoundTo::B4; num_layers], kind }
+            }
+            GradPolicyKind::Fixed(rt) => GradPolicy::Static { formats: vec![rt; num_layers], kind },
+            GradPolicyKind::Adaptive => {
+                let ctl = GradController::new(num_layers, params);
+                let formats = vec![params.initial; num_layers];
+                GradPolicy::Adaptive { ctl, formats }
+            }
+        }
+    }
+
+    /// Per-layer gather formats for the upcoming batch.
+    pub fn formats(&self) -> &[RoundTo] {
+        match self {
+            GradPolicy::Static { formats, .. } => formats,
+            GradPolicy::Adaptive { formats, .. } => formats,
+        }
+    }
+
+    /// Feed post-reduce per-layer gradient and weight l²-norms; returns
+    /// format-change events. Static policies ignore the observation.
+    pub fn observe_batch(&mut self, grad_norms: &[f64], weight_norms: &[f64]) -> Vec<GradEvent> {
+        match self {
+            GradPolicy::Static { .. } => Vec::new(),
+            GradPolicy::Adaptive { ctl, formats } => {
+                let events = ctl.observe_batch(grad_norms, weight_norms);
+                if !events.is_empty() {
+                    for (l, slot) in formats.iter_mut().enumerate() {
+                        *slot = ctl.round_to(l);
+                    }
+                }
+                events
+            }
+        }
+    }
+
+    pub fn needs_norms(&self) -> bool {
+        matches!(self, GradPolicy::Adaptive { .. })
+    }
+
+    pub fn kind(&self) -> GradPolicyKind {
+        match self {
+            GradPolicy::Static { kind, .. } => *kind,
+            GradPolicy::Adaptive { .. } => GradPolicyKind::Adaptive,
+        }
+    }
+
+    /// Access the adaptive controller (None for static policies).
+    pub fn controller(&self) -> Option<&GradController> {
+        match self {
+            GradPolicy::Adaptive { ctl, .. } => Some(ctl),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(threshold: f64, interval: u32) -> GradParams {
+        GradParams {
+            threshold,
+            spike: 0.5,
+            interval,
+            min: RoundTo::B1,
+            initial: RoundTo::B4,
+            max_rel_update: 0.1,
+        }
+    }
+
+    #[test]
+    fn starts_lossless() {
+        let c = GradController::new(3, params(0.05, 4));
+        for l in 0..3 {
+            assert_eq!(c.round_to(l), RoundTo::B4);
+        }
+    }
+
+    #[test]
+    fn stable_small_gradients_narrow_after_interval() {
+        let mut c = GradController::new(1, params(0.05, 3));
+        // stable gradient norm, tiny relative update (w-norm 100×)
+        let mut narrowed_at = None;
+        for batch in 0..10 {
+            let evs = c.observe_batch(&[1.0], &[100.0]);
+            if !evs.is_empty() && narrowed_at.is_none() {
+                narrowed_at = Some(batch);
+                assert_eq!(evs[0].from, RoundTo::B4);
+                assert_eq!(evs[0].to, RoundTo::B3);
+            }
+        }
+        // batch 0 establishes prev; batches 1,2,3 count → narrow at 3
+        assert_eq!(narrowed_at, Some(3));
+    }
+
+    #[test]
+    fn narrows_to_the_floor_and_stops() {
+        let mut c = GradController::new(1, params(0.05, 1));
+        for _ in 0..20 {
+            c.observe_batch(&[1.0], &[100.0]);
+        }
+        assert_eq!(c.round_to(0), RoundTo::B1);
+        // exactly 3 narrow events: 32 → 24 → 16 → 8
+        assert_eq!(c.events().len(), 3);
+    }
+
+    #[test]
+    fn floor_is_respected() {
+        let p = GradParams { min: RoundTo::B3, ..params(0.05, 1) };
+        let mut c = GradController::new(1, p);
+        for _ in 0..20 {
+            c.observe_batch(&[1.0], &[100.0]);
+        }
+        assert_eq!(c.round_to(0), RoundTo::B3);
+    }
+
+    #[test]
+    fn spike_widens_back_immediately() {
+        let mut c = GradController::new(1, params(0.05, 1));
+        for _ in 0..5 {
+            c.observe_batch(&[1.0], &[100.0]);
+        }
+        assert_eq!(c.round_to(0), RoundTo::B1);
+        // 10× norm jump: |δ| = 9 > spike
+        let evs = c.observe_batch(&[10.0], &[100.0]);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].from, RoundTo::B1);
+        assert_eq!(evs[0].to, RoundTo::B2);
+    }
+
+    #[test]
+    fn large_relative_updates_block_narrowing() {
+        let mut c = GradController::new(1, params(0.05, 2));
+        // stable δ but ‖g‖/‖w‖ = 1 ≫ max_rel_update
+        for _ in 0..20 {
+            c.observe_batch(&[1.0], &[1.0]);
+        }
+        assert_eq!(c.round_to(0), RoundTo::B4);
+        assert!(c.events().is_empty());
+    }
+
+    #[test]
+    fn noisy_gradients_never_narrow() {
+        let mut c = GradController::new(1, params(0.01, 2));
+        let mut n = 1.0;
+        for _ in 0..40 {
+            n *= 1.05; // |δ| = 5% > 1% threshold, < spike
+            c.observe_batch(&[n], &[1000.0]);
+        }
+        assert_eq!(c.round_to(0), RoundTo::B4);
+    }
+
+    #[test]
+    fn interval_counts_consecutive_stable_batches_only() {
+        // alternate stable / mildly-unstable (threshold < |δ| < spike):
+        // cumulative counting would reach interval=3 after 6 pairs, but
+        // a non-qualifying batch must restart the consecutive count.
+        let mut c = GradController::new(1, params(0.01, 3));
+        let mut n = 1.0;
+        for _ in 0..20 {
+            c.observe_batch(&[n], &[1000.0]); // δ ≈ 0: stable
+            n *= 1.1; // |δ| = 10%: unstable, sub-spike
+            c.observe_batch(&[n], &[1000.0]);
+        }
+        assert_eq!(c.round_to(0), RoundTo::B4);
+        assert!(c.events().is_empty());
+    }
+
+    #[test]
+    fn layers_progress_independently() {
+        let mut c = GradController::new(2, params(0.05, 2));
+        let mut noisy = 1.0;
+        for _ in 0..10 {
+            noisy *= 1.2;
+            c.observe_batch(&[1.0, noisy], &[100.0, 100.0]);
+        }
+        assert!(c.round_to(0) < RoundTo::B4);
+        assert_eq!(c.round_to(1), RoundTo::B4);
+    }
+
+    #[test]
+    fn validate_rejects_inconsistent_params() {
+        assert!(GradParams::default().validate().is_ok());
+        let bad = GradParams { threshold: -0.1, ..GradParams::default() };
+        assert!(bad.validate().unwrap_err().contains("threshold"));
+        let bad = GradParams { spike: 0.01, ..GradParams::default() };
+        assert!(bad.validate().unwrap_err().contains("spike"));
+        let bad = GradParams { interval: 0, ..GradParams::default() };
+        assert!(bad.validate().unwrap_err().contains("interval"));
+        let bad =
+            GradParams { min: RoundTo::B4, initial: RoundTo::B2, ..GradParams::default() };
+        assert!(bad.validate().unwrap_err().contains("min"));
+        let bad = GradParams { max_rel_update: 0.0, ..GradParams::default() };
+        assert!(bad.validate().unwrap_err().contains("max_rel_update"));
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid GradParams")]
+    fn controller_refuses_invalid_params() {
+        let p = GradParams { interval: 0, ..GradParams::default() };
+        let _ = GradController::new(1, p);
+    }
+
+    #[test]
+    fn kind_parse_roundtrip_and_flags() {
+        for s in ["off", "fixed8", "fixed16", "fixed24", "fixed32", "adaptive"] {
+            let k = GradPolicyKind::parse(s).unwrap();
+            assert_eq!(k.name(), s);
+        }
+        // byte shorthands map onto the fixed formats
+        assert_eq!(GradPolicyKind::parse("16"), Some(GradPolicyKind::Fixed(RoundTo::B2)));
+        assert!(GradPolicyKind::parse("bogus").is_none());
+        assert!(!GradPolicyKind::Off.uses_adt());
+        assert!(GradPolicyKind::Fixed(RoundTo::B2).uses_adt());
+        assert!(GradPolicyKind::Adaptive.needs_norms());
+        assert!(!GradPolicyKind::Fixed(RoundTo::B2).needs_norms());
+    }
+
+    #[test]
+    fn policy_off_is_all_32_and_inert() {
+        let mut p = GradPolicy::new(GradPolicyKind::Off, 3, GradParams::default());
+        assert_eq!(p.formats(), vec![RoundTo::B4; 3]);
+        assert!(p.observe_batch(&[1.0, 1.0, 1.0], &[1.0, 1.0, 1.0]).is_empty());
+        assert!(!p.needs_norms());
+        assert!(p.controller().is_none());
+    }
+
+    #[test]
+    fn adaptive_policy_tracks_controller() {
+        let mut p = GradPolicy::new(GradPolicyKind::Adaptive, 2, params(0.05, 2));
+        assert!(p.needs_norms());
+        for _ in 0..10 {
+            p.observe_batch(&[1.0, 1.0], &[100.0, 0.0]);
+        }
+        // layer 0 narrows; layer 1 (zero weight norm ⇒ unstable) holds
+        assert!(p.formats()[0] < RoundTo::B4);
+        assert_eq!(p.formats()[1], RoundTo::B4);
+        assert!(!p.controller().unwrap().events().is_empty());
+    }
+}

@@ -16,7 +16,12 @@
 //! The simulator also models the link-sharing structure that makes the
 //! paper's broadcast expensive: all `n_gpus` GPUs receive the full weight
 //! payload every batch (Fig 1), so host-to-device cost scales with
-//! `n_gpus · payload`, while gradients return at full f32 width.
+//! `n_gpus · payload`. Gradients historically returned at full f32 width
+//! (the paper's loop); with the [`crate::grad`] gather path enabled the
+//! D2H legs instead carry ADT-packed bytes — the channel is payload-
+//! agnostic, and [`Channel::bytes_total`] reports the wire bytes actually
+//! moved, so compression ratios achieved on the wire are observable per
+//! direction.
 
 use crate::profiler::Phase;
 use crate::sim::timeline::{EventId, Resource, Timeline};

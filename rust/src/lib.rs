@@ -16,6 +16,10 @@
 //!   CPU (scalar / multi-threaded / AVX2 paths, mirroring the paper's
 //!   OpenMP + `_mm256_shuffle_epi8` implementation), `Bitunpack` restores
 //!   32-bit layout on the device side.
+//! * [`grad`] — the gradient-side mirror (ROADMAP item, paper §VI's
+//!   "orthogonal" direction): an ADT-packed D2H gather with an AWP-style
+//!   per-layer format controller and error-feedback residuals that keep
+//!   Real-mode training convergent.
 //! * [`coordinator`] — the Layer-3 training orchestrator: CPU leader owns
 //!   master weights + momentum SGD, per-GPU workers compute gradient shards
 //!   through AOT-compiled JAX/Pallas executables loaded via PJRT
@@ -39,6 +43,7 @@ pub mod coordinator;
 pub mod data;
 pub mod device;
 pub mod figures;
+pub mod grad;
 pub mod interconnect;
 pub mod metrics;
 pub mod models;

@@ -16,6 +16,7 @@
 use a2dtwp::awp::PolicyKind;
 use a2dtwp::config::ExperimentConfig;
 use a2dtwp::coordinator::{formats_for_mean_bytes, SimRunner, Trainer};
+use a2dtwp::grad::GradPolicyKind;
 use a2dtwp::models::{model_by_name, MODEL_NAMES};
 use a2dtwp::profiler::Profiler;
 use a2dtwp::sim::{OverlapMode, SystemProfile, OVERLAP_NAMES, SCENARIO_NAMES};
@@ -33,6 +34,12 @@ const USAGE: &str = "usage: a2dtwp <train|profile|models|info> [options]
     --overlap M          serialized|pipelined|gpu-pipelined (batch scheduling)
     --staleness K        gpu-pipelined bounded staleness (0 = sync barrier)
     --pipeline-window N  gpu-pipelined cross-batch window (default 4)
+    --grad-adt F         ADT-packed gradient gather: off|8|16|24|32
+                         (profile: applies to the A2DTWP column)
+    --grad-policy P      gather-format policy: off|fixed8|fixed16|fixed24|
+                         fixed32|adaptive (train only; overrides --grad-adt)
+    --grad-feedback B    carry quantization residuals across batches:
+                         on (default) | off (convergence ablation)
     --max-batches N      training length cap
     --val-every N        validation cadence (batches)
     --target-error E     stop when top-1 val error <= E
@@ -52,6 +59,9 @@ fn main() {
             "overlap",
             "staleness",
             "pipeline-window",
+            "grad-adt",
+            "grad-policy",
+            "grad-feedback",
             "max-batches",
             "val-every",
             "target-error",
@@ -117,6 +127,22 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
     if cfg.pipeline_window == 0 {
         return Err("--pipeline-window must be >= 1".into());
     }
+    if let Some(g) = args.get("grad-adt") {
+        cfg.grad = GradPolicyKind::parse(g)
+            .ok_or_else(|| format!("unknown --grad-adt '{g}' (off|8|16|24|32)"))?;
+    }
+    if let Some(g) = args.get("grad-policy") {
+        cfg.grad = GradPolicyKind::parse(g).ok_or_else(|| {
+            format!("unknown --grad-policy '{g}' (off|fixed8|fixed16|fixed24|fixed32|adaptive)")
+        })?;
+    }
+    if let Some(fb) = args.get("grad-feedback") {
+        cfg.grad_feedback = match fb {
+            "on" => true,
+            "off" => false,
+            other => return Err(format!("--grad-feedback must be on|off, got '{other}'")),
+        };
+    }
     cfg.max_batches = args.get_u64("max-batches", cfg.max_batches)?;
     cfg.val_every = args.get_u64("val-every", cfg.val_every)?;
     cfg.target_error = args.get_f64("target-error", cfg.target_error)?;
@@ -155,6 +181,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         "\nbatches={} reached_target={} final_loss={:.4} awp_events={}",
         report.batches_run, report.reached_target, report.final_loss, report.awp_events
     );
+    if cfg.grad.uses_adt() {
+        println!(
+            "grad gather: {} (feedback {}), format events {}",
+            cfg.grad.name(),
+            if cfg.grad_feedback { "on" } else { "off" },
+            report.grad_events
+        );
+    }
     println!("\nper-batch profile (avg ms):");
     for ph in a2dtwp::profiler::Phase::ALL {
         println!("  {:<24} {:8.3}", ph.label(), report.profiler.avg_s(ph) * 1e3);
@@ -201,19 +235,41 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
     if window == 0 {
         anyhow::bail!("--pipeline-window must be >= 1");
     }
+    let grad_format = match args.get("grad-adt") {
+        None => None,
+        Some(g) => match GradPolicyKind::parse(g) {
+            Some(GradPolicyKind::Off) => None,
+            Some(GradPolicyKind::Fixed(rt)) => Some(rt),
+            Some(GradPolicyKind::Adaptive) => {
+                anyhow::bail!("--grad-adt adaptive needs Real-mode training; use `train`")
+            }
+            None => anyhow::bail!("unknown --grad-adt '{g}' (off|8|16|24|32)"),
+        },
+    };
     let mut runner = SimRunner::new(desc, profile, Default::default(), 7);
     runner.set_overlap(overlap);
     runner.set_async(staleness, window);
 
-    // 32-bit baseline column
+    // gpu-pipelined schedules a whole window per batch_timed call; wire
+    // bytes are normalized to per-batch so they sit on the same axis as
+    // the per-batch *_ms metrics (window divides the totals exactly —
+    // every scheduled batch carries identical loads).
+    let batches_per_call =
+        if overlap == OverlapMode::GpuPipelined { window as u64 } else { 1 };
+    // 32-bit baseline column (always the paper's full-f32 gather)
     let base = runner.batch_timed(None, batch, false);
     let mut base_prof = Profiler::new();
     base.add_to(&mut base_prof);
-    // A²DTWP column at the paper's converged ≈3× compression state
+    let base_d2h_bytes = runner.d2h_bytes_total() / batches_per_call;
+    // A²DTWP column at the paper's converged ≈3× compression state,
+    // with the requested gather format applied on top
+    runner.reset_accounting();
+    runner.set_grad_adt(grad_format);
     let formats = formats_for_mean_bytes(&runner.desc, 4.0 / 3.0);
     let adt = runner.batch_timed(Some(&formats), batch, true);
     let mut adt_prof = Profiler::new();
     adt.add_to(&mut adt_prof);
+    let adt_d2h_bytes = runner.d2h_bytes_total() / batches_per_call;
 
     let mut t = Table::new(
         format!("{model} b{batch} on {system} — per-kernel profile (ms, {})", overlap.name()),
@@ -232,6 +288,16 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         adt_prof.awp_share() * 100.0,
         adt_prof.adt_share() * 100.0
     );
+    if let Some(rt) = grad_format {
+        println!(
+            "grad gather: {rt} packed — D2H wire {:.1} MB vs {:.1} MB f32 \
+             ({:.2}x on the wire), grad-ADT share {:.2}%",
+            adt_d2h_bytes as f64 / 1e6,
+            base_d2h_bytes as f64 / 1e6,
+            base_d2h_bytes as f64 / adt_d2h_bytes as f64,
+            adt_prof.grad_adt_share() * 100.0,
+        );
+    }
     println!(
         "batch wall time ({}): 32-bit {:.2} ms  A2DTWP {:.2} ms",
         overlap.name(),
@@ -267,6 +333,24 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
             ("a2dtwp_overlap_speedup", Json::num(adt.overlap_speedup())),
             ("awp_share", Json::num(adt_prof.awp_share())),
             ("adt_share", Json::num(adt_prof.adt_share())),
+            (
+                "grad_adt",
+                Json::str(grad_format.map_or("off".to_string(), |rt| rt.bits().to_string())),
+            ),
+            ("grad_adt_share", Json::num(adt_prof.grad_adt_share())),
+            // D2H wire bytes actually accounted per column (packed when
+            // the gather is compressed) — Channel::bytes_total surfaced,
+            // so sweeps can report achieved wire compression.
+            ("baseline_d2h_bytes", Json::num(base_d2h_bytes as f64)),
+            ("a2dtwp_d2h_bytes", Json::num(adt_d2h_bytes as f64)),
+            (
+                "d2h_wire_compression",
+                Json::num(if adt_d2h_bytes == 0 {
+                    1.0
+                } else {
+                    base_d2h_bytes as f64 / adt_d2h_bytes as f64
+                }),
+            ),
         ]);
         if let Some(dir) = std::path::Path::new(path).parent() {
             if !dir.as_os_str().is_empty() {

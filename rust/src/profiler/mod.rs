@@ -26,10 +26,13 @@ pub enum Phase {
     Bitpack,
     /// ADT Bitunpack (device).
     Bitunpack,
+    /// CPU-side Bitunpack of ADT-packed gradient contributions (the
+    /// grad-ADT gather path; absent when the gather moves full f32).
+    GradUnpack,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 8] = [
+    pub const ALL: [Phase; 9] = [
         Phase::H2D,
         Phase::D2H,
         Phase::Conv,
@@ -38,6 +41,7 @@ impl Phase {
         Phase::AwpNorm,
         Phase::Bitpack,
         Phase::Bitunpack,
+        Phase::GradUnpack,
     ];
 
     /// The paper's row label.
@@ -51,12 +55,17 @@ impl Phase {
             Phase::AwpNorm => "AWP (l2-norm)",
             Phase::Bitpack => "ADT (Bitpack)",
             Phase::Bitunpack => "ADT (Bitunpack)",
+            Phase::GradUnpack => "Grad ADT (Bitunpack, CPU)",
         }
     }
 
-    /// Rows that only exist under A²DTWP (N/A in the 32-bit FP column).
+    /// Rows that only exist under A²DTWP / grad-ADT (N/A in the 32-bit
+    /// FP column).
     pub fn adt_only(&self) -> bool {
-        matches!(self, Phase::AwpNorm | Phase::Bitpack | Phase::Bitunpack)
+        matches!(
+            self,
+            Phase::AwpNorm | Phase::Bitpack | Phase::Bitunpack | Phase::GradUnpack
+        )
     }
 
     fn idx(&self) -> usize {
@@ -76,7 +85,7 @@ impl fmt::Display for Phase {
 /// the critical path *is* the phase sum, so the two views coincide.
 #[derive(Clone, Debug, Default)]
 pub struct Profiler {
-    totals_s: [f64; 8],
+    totals_s: [f64; 9],
     batches: u64,
     /// Seconds added since the last `end_batch` (the in-flight batch).
     current_batch_s: f64,
@@ -183,13 +192,27 @@ impl Profiler {
     }
 
     /// ADT's share of batch time (paper §V-G: 6.60% x86 / 6.82% POWER).
-    /// 0 for an empty profiler, as with [`awp_share`](Self::awp_share).
+    /// Weight-side only (Bitpack + device Bitunpack), matching the
+    /// paper's quoted quantity; the gather path has its own
+    /// [`grad_adt_share`](Self::grad_adt_share). 0 for an empty
+    /// profiler, as with [`awp_share`](Self::awp_share).
     pub fn adt_share(&self) -> f64 {
         let total = self.avg_batch_s();
         if total == 0.0 {
             0.0
         } else {
             (self.avg_s(Phase::Bitpack) + self.avg_s(Phase::Bitunpack)) / total
+        }
+    }
+
+    /// Grad-ADT's share of batch time (the CPU-side gradient Bitunpack;
+    /// 0 when the gather moves full f32 or the profiler is empty).
+    pub fn grad_adt_share(&self) -> f64 {
+        let total = self.avg_batch_s();
+        if total == 0.0 {
+            0.0
+        } else {
+            self.avg_s(Phase::GradUnpack) / total
         }
     }
 
@@ -296,6 +319,23 @@ mod tests {
         assert!(p.awp_share().is_finite() && p.adt_share().is_finite());
         assert_eq!(p.avg_critical_batch_s(), 0.0);
         assert_eq!(p.overlap_speedup(), 0.0);
+    }
+
+    #[test]
+    fn grad_unpack_phase_is_adt_only_and_accounted() {
+        let mut p = Profiler::new();
+        p.add(Phase::GradUpdate, 0.05);
+        p.add(Phase::GradUnpack, 0.01);
+        p.end_batch();
+        assert_eq!(Phase::ALL.len(), 9);
+        assert!(Phase::GradUnpack.adt_only());
+        assert!((p.grad_adt_share() - 0.01 / 0.06).abs() < 1e-12);
+        // weight-side shares unaffected by the gather path
+        assert_eq!(p.adt_share(), 0.0);
+        let rows = Profiler::table_rows(&Profiler::new(), &p);
+        assert_eq!(rows.len(), 9);
+        assert_eq!(rows.last().unwrap().0, Phase::GradUnpack.label());
+        assert!(rows.last().unwrap().1.is_none(), "no 32-bit baseline column");
     }
 
     #[test]

@@ -43,6 +43,16 @@ pub struct SystemProfile {
     pub pack_bps: f64,
     /// Effective CPU l²-norm throughput, bytes/s (same calibration note).
     pub norm_bps: f64,
+    /// Effective CPU Bitunpack throughput for ADT-packed *gradient*
+    /// contributions, packed bytes/s. Unlike the weight side — where
+    /// every GPU unpacks its own broadcast copy in parallel — the CPU
+    /// leader restores all `n_gpus` gathered contributions itself, so
+    /// the grad-ADT path trades link time for CPU time. Calibrated to
+    /// the platform's Bitpack streaming rate (same memory-bound CPU
+    /// kernel family, byte-shuffle in the other direction); scaled down
+    /// by [`with_cpu_starvation`](Self::with_cpu_starvation) together
+    /// with the pack/norm kernels it shares cores with.
+    pub grad_unpack_bps: f64,
     /// Byte-per-flop ratio of the platform (paper §V-B: x86 1.22, POWER
     /// 0.86 — smaller ratio ⇒ transfers hurt more ⇒ larger A²DTWP gains).
     pub bytes_per_flop: f64,
@@ -101,6 +111,7 @@ impl SystemProfile {
             // f32 weight array.
             pack_bps: VGG_PAYLOAD / 0.01971,
             norm_bps: VGG_PAYLOAD / 0.00388,
+            grad_unpack_bps: VGG_PAYLOAD / 0.01971,
             bytes_per_flop: 1.22,
             cpu_threads: 16,
             gpu_speed: Vec::new(),
@@ -124,6 +135,7 @@ impl SystemProfile {
             // Table III: Bitpack 10.51 ms, l²-norm 0.93 ms.
             pack_bps: VGG_PAYLOAD / 0.01051,
             norm_bps: VGG_PAYLOAD / 0.00093,
+            grad_unpack_bps: VGG_PAYLOAD / 0.01051,
             bytes_per_flop: 0.86,
             cpu_threads: 40,
             gpu_speed: Vec::new(),
@@ -196,6 +208,7 @@ impl SystemProfile {
         );
         self.pack_bps *= scale;
         self.norm_bps *= scale;
+        self.grad_unpack_bps *= scale;
         self
     }
 
@@ -282,6 +295,19 @@ impl SystemProfile {
     /// CPU l²-norm time for `input_bytes` of f32 weights.
     pub fn norm_time(&self, input_bytes: usize) -> f64 {
         input_bytes as f64 / self.norm_bps
+    }
+
+    /// CPU-side Bitunpack time for `packed_bytes` of ADT-packed gradient
+    /// contributions. Callers pass the *total* packed bytes the leader
+    /// restores — `n_gpus ×` the per-GPU payload, because every gathered
+    /// contribution is unpacked serially on the leader (zero when the
+    /// gather is uncompressed).
+    pub fn grad_unpack_time(&self, packed_bytes: usize) -> f64 {
+        if packed_bytes == 0 {
+            0.0
+        } else {
+            packed_bytes as f64 / self.grad_unpack_bps
+        }
     }
 }
 
@@ -401,8 +427,31 @@ mod tests {
         let starved = SystemProfile::x86().scenario("pack-starved").unwrap();
         assert!((starved.pack_bps / base.pack_bps - 0.25).abs() < 1e-12);
         assert!((starved.norm_bps / base.norm_bps - 0.25).abs() < 1e-12);
+        assert!(
+            (starved.grad_unpack_bps / base.grad_unpack_bps - 0.25).abs() < 1e-12,
+            "grad unpack shares the starved CPU streaming cores"
+        );
         assert_eq!(starved.h2d_bps.to_bits(), base.h2d_bps.to_bits(), "CPU only — links untouched");
         assert!((starved.pack_time(payload) / base.pack_time(payload) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grad_unpack_time_is_a_cpu_streaming_cost() {
+        for s in [SystemProfile::x86(), SystemProfile::power()] {
+            assert_eq!(s.grad_unpack_time(0), 0.0);
+            // calibrated to the Bitpack streaming family: restoring the
+            // whole gathered payload (4 GPUs × packed third) costs the
+            // same order as packing the f32 weights once
+            let packed = vgg_a(200).weight_bytes_f32() / 3;
+            let t = s.grad_unpack_time(4 * packed);
+            assert!(t > 0.0 && t < 0.1, "{}: t={t}", s.name);
+            // and it must stay well below the d2h time it saves under a
+            // contended link at ≈3× compression
+            let contended = s.clone().scenario("pcie-contended").unwrap();
+            let full = vgg_a(200).weight_bytes_f32();
+            let saved = contended.d2h_time(full) - contended.d2h_time(full / 3);
+            assert!(t < saved, "{}: cost {t} >= saved {saved}", s.name);
+        }
     }
 
     #[test]

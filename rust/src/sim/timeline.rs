@@ -259,9 +259,10 @@ impl Timeline {
     }
 
     /// Per-phase busy totals in `Phase::ALL` order — the Tables II/III
-    /// quantity. Independent of the overlap mode by construction.
-    pub fn busy_s(&self) -> [f64; 8] {
-        let mut busy = [0.0f64; 8];
+    /// quantity (plus the grad-ADT gather row). Independent of the
+    /// overlap mode by construction.
+    pub fn busy_s(&self) -> [f64; 9] {
+        let mut busy = [0.0f64; 9];
         for e in &self.events {
             busy[Phase::ALL.iter().position(|p| *p == e.phase).unwrap()] += e.busy_s;
         }
@@ -285,10 +286,15 @@ impl Timeline {
 #[derive(Clone, Copy, Debug)]
 pub struct LayerLoad {
     /// Full f32 weight bytes of the layer (Bitpack input, norm input,
-    /// gradient-gather payload).
+    /// uncompressed gradient-gather payload).
     pub weight_bytes_f32: usize,
-    /// ADT-packed transfer bytes (== `weight_bytes_f32` without ADT).
+    /// ADT-packed H2D transfer bytes (== `weight_bytes_f32` without ADT).
     pub packed_bytes: usize,
+    /// ADT-packed D2H gather bytes per GPU (== `weight_bytes_f32` when
+    /// the gather moves full f32 — the default; see
+    /// [`apply_grad_formats`] / [`apply_grad_mean_bytes`] and
+    /// `grad::GatherPayload` for the shared byte definition).
+    pub grad_packed_bytes: usize,
     /// Raw f32 bias bytes (never packed, paper §III).
     pub bias_bytes: usize,
     /// Forward flops per sample.
@@ -319,6 +325,7 @@ pub fn layer_loads(desc: &ModelDesc, formats: Option<&[crate::adt::RoundTo]>) ->
             LayerLoad {
                 weight_bytes_f32: counts[l] * 4,
                 packed_bytes: packed,
+                grad_packed_bytes: counts[l] * 4,
                 bias_bytes: biases[l] * 4,
                 fwd_flops: flops[l].1,
                 is_conv: flops[l].2,
@@ -339,12 +346,36 @@ pub fn layer_loads_mean_bytes(desc: &ModelDesc, bytes_per_weight: f64) -> Vec<La
     loads
 }
 
+/// Set each layer's D2H gather payload from exact per-layer gather
+/// formats (`grad::GradPolicy::formats` order).
+pub fn apply_grad_formats(loads: &mut [LayerLoad], formats: &[crate::adt::RoundTo]) {
+    assert_eq!(loads.len(), formats.len(), "one gather format per weighted layer");
+    for (load, rt) in loads.iter_mut().zip(formats) {
+        load.grad_packed_bytes = crate::adt::packed_len(load.weight_bytes_f32 / 4, *rt);
+    }
+}
+
+/// Set each layer's D2H gather payload from a mean gather bytes/weight
+/// (the grad mirror of [`layer_loads_mean_bytes`]'s uniform
+/// approximation).
+pub fn apply_grad_mean_bytes(loads: &mut [LayerLoad], grad_bytes_per_weight: f64) {
+    for load in loads.iter_mut() {
+        let weights = load.weight_bytes_f32 / 4;
+        load.grad_packed_bytes = (weights as f64 * grad_bytes_per_weight) as usize;
+    }
+}
+
 /// One batch's workload parameters for the timeline builders.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchSpec {
     pub batch_size: usize,
     pub uses_adt: bool,
     pub include_norms: bool,
+    /// ADT-packed gather: D2H legs carry each layer's
+    /// [`LayerLoad::grad_packed_bytes`] and the CPU pays a
+    /// [`Phase::GradUnpack`] event per layer (all `n_gpus` contributions
+    /// restored on the leader) before that layer's SGD update.
+    pub grad_adt: bool,
 }
 
 /// Cross-batch scheduling window: how many consecutive batches to
@@ -387,7 +418,7 @@ pub fn build_batch_timeline(
     uses_adt: bool,
     include_norms: bool,
 ) -> Timeline {
-    let spec = BatchSpec { batch_size, uses_adt, include_norms };
+    let spec = BatchSpec { batch_size, uses_adt, include_norms, grad_adt: false };
     build_training_timeline(mode, profile, interconnect, layers, spec, PipelineWindow::single())
 }
 
@@ -458,7 +489,7 @@ fn schedule_sync_batch(
     spec: BatchSpec,
     prev_updates: Option<&[EventId]>,
 ) -> Vec<EventId> {
-    let BatchSpec { batch_size, uses_adt, include_norms } = spec;
+    let BatchSpec { batch_size, uses_adt, include_norms, grad_adt } = spec;
     let wall = profile.compute_wall_factor();
     let n = layers.len();
 
@@ -531,11 +562,27 @@ fn schedule_sync_batch(
         let d2h = interconnect.d2h.enqueue(
             tl,
             Phase::D2H,
-            load.weight_bytes_f32 + load.bias_bytes,
+            load.grad_packed_bytes + load.bias_bytes,
             &[bwd],
         );
-        let upd =
-            tl.schedule(Resource::Cpu, Phase::GradUpdate, profile.update_time(load.params), &[d2h]);
+        // grad-ADT: the leader restores every GPU's packed contribution
+        // before it can apply the layer's update.
+        let upd_dep = if grad_adt {
+            tl.schedule(
+                Resource::Cpu,
+                Phase::GradUnpack,
+                profile.grad_unpack_time(load.grad_packed_bytes * profile.n_gpus),
+                &[d2h],
+            )
+        } else {
+            d2h
+        };
+        let upd = tl.schedule(
+            Resource::Cpu,
+            Phase::GradUpdate,
+            profile.update_time(load.params),
+            &[upd_dep],
+        );
         updates[l] = Some(upd);
     }
 
@@ -583,7 +630,7 @@ fn schedule_async_training(
     spec: BatchSpec,
     window: PipelineWindow,
 ) {
-    let BatchSpec { batch_size, uses_adt, include_norms } = spec;
+    let BatchSpec { batch_size, uses_adt, include_norms, grad_adt } = spec;
     let PipelineWindow { n_batches, staleness } = window;
     assert!(staleness >= 1, "synchronous windows use schedule_sync_batch");
     let wall = profile.compute_wall_factor();
@@ -602,8 +649,15 @@ fn schedule_async_training(
         // batch's weights may be packed.
         if let Some(m) = nb.checked_sub(staleness + 1) {
             if updates[m].is_none() {
-                updates[m] =
-                    Some(emit_async_updates(tl, profile, layers, &legs[m], include_norms, n_gpus));
+                updates[m] = Some(emit_async_updates(
+                    tl,
+                    profile,
+                    layers,
+                    &legs[m],
+                    include_norms,
+                    grad_adt,
+                    n_gpus,
+                ));
             }
         }
         let stale = nb.checked_sub(staleness + 1).and_then(|m| updates[m].as_deref());
@@ -671,7 +725,7 @@ fn schedule_async_training(
         // Per-GPU gather legs, interleaved by wgrad readiness per layer.
         let mut batch_legs: Vec<Vec<EventId>> = vec![Vec::new(); n];
         for l in (0..n).rev() {
-            let bytes = layers[l].weight_bytes_f32 + layers[l].bias_bytes;
+            let bytes = layers[l].grad_packed_bytes + layers[l].bias_bytes;
             let mut order: Vec<usize> = (0..n_gpus).collect();
             order.sort_by(|&a, &b| {
                 tl.finish_s(wgrads[l][a])
@@ -692,21 +746,36 @@ fn schedule_async_training(
     // Drain: apply every gradient still in flight past the last batch.
     for m in 0..n_batches {
         if updates[m].is_none() {
-            updates[m] =
-                Some(emit_async_updates(tl, profile, layers, &legs[m], include_norms, n_gpus));
+            updates[m] = Some(emit_async_updates(
+                tl,
+                profile,
+                layers,
+                &legs[m],
+                include_norms,
+                grad_adt,
+                n_gpus,
+            ));
         }
     }
 }
 
 /// Apply one batch's per-GPU gradient contributions on the CPU leader
-/// (1/`n_gpus` of the fused update per leg, in arrival order), then the
+/// (grad-ADT Bitunpack of each packed leg first where enabled, then
+/// 1/`n_gpus` of the fused update per leg, in arrival order), then the
 /// per-layer AWP norms. Returns the per-layer update events.
+///
+/// Busy charging mirrors the other split phases: the sync builder's
+/// whole-layer expression (`grad_unpack_time(grad_packed_bytes * n_gpus)`)
+/// lands on the first leg and 0 on the rest, so per-phase busy totals
+/// stay bit-identical across modes while each leg's physical duration is
+/// one contribution's restore time.
 fn emit_async_updates(
     tl: &mut Timeline,
     profile: &SystemProfile,
     layers: &[LayerLoad],
     batch_legs: &[Vec<EventId>],
     include_norms: bool,
+    grad_adt: bool,
     n_gpus: usize,
 ) -> Vec<Vec<EventId>> {
     let n = layers.len();
@@ -715,8 +784,24 @@ fn emit_async_updates(
         let full = profile.update_time(layers[l].params);
         let split = full / n_gpus as f64;
         for (i, leg) in batch_legs[l].iter().enumerate() {
+            let dep = if grad_adt {
+                let unpack_busy = if i == 0 {
+                    profile.grad_unpack_time(layers[l].grad_packed_bytes * profile.n_gpus)
+                } else {
+                    0.0
+                };
+                tl.schedule_weighted(
+                    Resource::Cpu,
+                    Phase::GradUnpack,
+                    profile.grad_unpack_time(layers[l].grad_packed_bytes),
+                    unpack_busy,
+                    &[*leg],
+                )
+            } else {
+                *leg
+            };
             let busy = if i == 0 { full } else { 0.0 };
-            ups[l].push(tl.schedule_weighted(Resource::Cpu, Phase::GradUpdate, split, busy, &[*leg]));
+            ups[l].push(tl.schedule_weighted(Resource::Cpu, Phase::GradUpdate, split, busy, &[dep]));
         }
     }
     if include_norms {
@@ -803,7 +888,7 @@ mod tests {
 
         // identical event sets ⇒ identical per-phase busy totals
         let (bs, bp) = (ser.busy_s(), pip.busy_s());
-        for i in 0..8 {
+        for i in 0..Phase::ALL.len() {
             assert_eq!(bs[i].to_bits(), bp[i].to_bits(), "phase {i}");
         }
         // serialized critical path == serial sum, pipelined strictly better
@@ -824,7 +909,8 @@ mod tests {
         let formats = vec![RoundTo::B2; desc.weight_counts().len()];
         let loads = layer_loads(&desc, Some(&formats));
         let mut ic = Interconnect::new(profile.clone());
-        let spec = BatchSpec { batch_size: 64, uses_adt: true, include_norms: true };
+        let spec =
+            BatchSpec { batch_size: 64, uses_adt: true, include_norms: true, grad_adt: false };
         build_training_timeline(
             mode, profile, &mut ic, &loads, spec, PipelineWindow::new(n_batches, staleness),
         )
@@ -860,7 +946,7 @@ mod tests {
                 );
                 // Tables II/III busy totals are bit-identical across modes
                 let (bp, bg) = (pip.busy_s(), gpu.busy_s());
-                for i in 0..8 {
+                for i in 0..Phase::ALL.len() {
                     assert_eq!(bp[i].to_bits(), bg[i].to_bits(), "phase {i}");
                 }
             }
@@ -932,6 +1018,55 @@ mod tests {
             });
             assert!(has_wgrad_dep, "gather leg {leg} does not wait for a wgrad");
         }
+    }
+
+    #[test]
+    fn grad_adt_packs_the_gather_and_keeps_busy_totals_mode_independent() {
+        let profile = SystemProfile::x86();
+        let desc = vgg_a(200);
+        let formats = vec![RoundTo::B2; desc.weight_counts().len()];
+        let mut loads = layer_loads(&desc, Some(&formats));
+        let gformats = vec![RoundTo::B1; loads.len()];
+        apply_grad_formats(&mut loads, &gformats);
+        assert!(loads.iter().all(|l| l.grad_packed_bytes * 4 == l.weight_bytes_f32));
+        let spec =
+            BatchSpec { batch_size: 64, uses_adt: true, include_norms: true, grad_adt: true };
+        let window = PipelineWindow::new(2, 1);
+        let build = |mode| {
+            let mut ic = Interconnect::new(profile.clone());
+            let tl = build_training_timeline(mode, &profile, &mut ic, &loads, spec, window);
+            (tl, ic.d2h_bytes_total())
+        };
+        let (ser, ser_bytes) = build(OverlapMode::Serialized);
+        let (pip, pip_bytes) = build(OverlapMode::LayerPipelined);
+        let (gpu, gpu_bytes) = build(OverlapMode::GpuPipelined);
+        // the GradUnpack busy total is charged identically in all modes
+        let (bs, bp, bg) = (ser.busy_s(), pip.busy_s(), gpu.busy_s());
+        for i in 0..Phase::ALL.len() {
+            assert_eq!(bs[i].to_bits(), bp[i].to_bits(), "phase {i} ser vs pip");
+            assert_eq!(bs[i].to_bits(), bg[i].to_bits(), "phase {i} ser vs gpu");
+        }
+        let gi = Phase::ALL.iter().position(|p| *p == Phase::GradUnpack).unwrap();
+        assert!(bs[gi] > 0.0, "grad-ADT must charge a CPU unpack cost");
+        // every mode puts the same packed byte count on the D2H wire
+        assert_eq!(ser_bytes, pip_bytes);
+        assert_eq!(ser_bytes, gpu_bytes);
+        // …which is ≈¼ of the f32 gather (biases stay raw)
+        let mut full_loads = layer_loads(&desc, Some(&formats));
+        let b4 = vec![RoundTo::B4; loads.len()];
+        apply_grad_formats(&mut full_loads, &b4);
+        let spec_off = BatchSpec { grad_adt: false, ..spec };
+        let mut ic_off = Interconnect::new(profile.clone());
+        let off = build_training_timeline(
+            OverlapMode::Serialized, &profile, &mut ic_off, &full_loads, spec_off, window,
+        );
+        assert!(ser_bytes * 3 < ic_off.d2h_bytes_total(), "packed gather must shrink the wire");
+        // with grad-ADT off no GradUnpack event exists
+        assert_eq!(off.busy_s()[gi], 0.0);
+        // and the packed serial loop is strictly faster than the f32 one
+        // on this link-bound platform (the CPU unpack costs less than
+        // the transfer it saves)
+        assert!(ser.serialized_sum_s() < off.serialized_sum_s());
     }
 
     #[test]

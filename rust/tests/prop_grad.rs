@@ -1,0 +1,269 @@
+//! Property-based tests over the gradient-side compression subsystem
+//! (ISSUE 4): the ADT-packed D2H gather with error feedback.
+//!
+//! The contract pinned here:
+//!
+//! 1. **Gather round-trip == mask law at group-boundary sizes** — the
+//!    grad quantize path (`StepArena::quantize_grads_with_feedback`
+//!    without feedback) is the pack→unpack round-trip of the ADT
+//!    kernels: every restored gradient equals the raw gradient with the
+//!    low `32 − 8r` bits zeroed, at exactly the sizes the AVX2 bulk/tail
+//!    split cares about (mirroring `prop_adt`).
+//! 2. **Error-feedback carry** — quantize-with-feedback over K batches
+//!    applies a cumulative gradient mass within one step's truncation
+//!    error of the true mass (the residual telescopes:
+//!    `Σq = Σg − r_K`), and is **exact at the 32-bit format** (residual
+//!    identically zero, `q == g` bit-for-bit modulo `-0.0 + 0.0`).
+//! 3. **Busy-total invariance of the GradUnpack events** — with grad-ADT
+//!    on, per-phase busy totals (including the new CPU unpack phase) are
+//!    bit-identical across Serialized / LayerPipelined / GpuPipelined,
+//!    and the packed D2H wire bytes agree in every mode.
+//! 4. **Off is off** — `grad_adt: false` timelines schedule no
+//!    GradUnpack event and move full-f32 gather bytes, regardless of the
+//!    other knobs.
+
+use a2dtwp::adt::{masked_value, packed_len, AdtConfig, BitpackImpl, BitunpackImpl, RoundTo};
+use a2dtwp::coordinator::StepArena;
+use a2dtwp::interconnect::Interconnect;
+use a2dtwp::models::{alexnet, resnet34, vgg_a, ModelDesc};
+use a2dtwp::profiler::Phase;
+use a2dtwp::sim::{
+    apply_grad_formats, build_training_timeline, layer_loads, BatchSpec, OverlapMode,
+    PipelineWindow, SystemProfile, Timeline, SCENARIO_NAMES,
+};
+use a2dtwp::util::propcheck::{check, Gen};
+
+fn scalar_cfg(threads: usize) -> AdtConfig {
+    AdtConfig {
+        threads,
+        simd: BitpackImpl::Scalar,
+        unpack_simd: BitunpackImpl::Scalar,
+        min_per_thread: 16,
+    }
+}
+
+fn arena_with_grads(grads: &[Vec<f32>]) -> StepArena {
+    let counts: Vec<usize> = grads.iter().map(|g| g.len()).collect();
+    let biases: Vec<usize> = vec![1; counts.len()];
+    let mut arena = StepArena::new(&counts, &biases);
+    for (dst, src) in arena.sum_gw.iter_mut().zip(grads) {
+        dst.copy_from_slice(src);
+    }
+    arena
+}
+
+#[test]
+fn prop_gather_roundtrip_equals_mask_law_at_group_boundaries() {
+    // The sizes the AVX2 bulk/tail split cares about: empty, below one
+    // 8-weight group, exactly one group, one past it, a non-multiple,
+    // and a large non-multiple straddling many overlapping-load windows.
+    check("grad roundtrip == mask law", 40, |g| {
+        for n in [0usize, 1, 7, 8, 9, 33, 4097] {
+            let grads: Vec<f32> = (0..n).map(|_| g.f32_any_bits()).collect();
+            let rt = *g.pick(&RoundTo::ALL);
+            let mut arena = arena_with_grads(&[grads.clone()]);
+            let threads = g.usize_in(1..4);
+            let bytes =
+                arena.quantize_grads_with_feedback(&[rt], false, &scalar_cfg(threads));
+            assert_eq!(bytes, packed_len(n, rt));
+            for (i, (&q, &raw)) in arena.grad_q[0].iter().zip(&grads).enumerate() {
+                assert_eq!(
+                    q.to_bits(),
+                    masked_value(raw, rt).to_bits(),
+                    "n={n} rt={rt} [{i}]"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_error_feedback_telescopes_and_is_exact_at_32_bit() {
+    check("feedback telescope", 60, |g| {
+        let n = g.usize_in(1..200);
+        let rt = *g.pick(&RoundTo::ALL);
+        let k = g.usize_in(2..12);
+        let cfg = scalar_cfg(1);
+        // finite gradients away from the extremes so sums stay finite
+        let grads: Vec<f32> = (0..n).map(|_| g.f32_in(-3.0, 3.0)).collect();
+        let mut arena = arena_with_grads(&[grads.clone()]);
+        let mut applied = vec![0f64; n];
+        let mut max_comp = 0f32;
+        for _ in 0..k {
+            arena.sum_gw[0].copy_from_slice(&grads);
+            arena.quantize_grads_with_feedback(&[rt], true, &cfg);
+            for (a, &q) in applied.iter_mut().zip(&arena.grad_q[0]) {
+                *a += q as f64;
+                max_comp = max_comp.max(q.abs());
+            }
+        }
+        // Σq = Σg − r_K: the cumulative error is one residual, which the
+        // mask law bounds by the largest quantization step encountered —
+        // conservatively |comp| · 2^{9−8r} (sign+exponent survive, 8r−9
+        // mantissa bits kept).
+        let bound = if rt == RoundTo::B4 {
+            0.0
+        } else {
+            // The residual recursion r' = (g + r) − mask(g + r) is
+            // bounded because masking keeps at least a quarter of any
+            // magnitude (≤1 exponent step + full mantissa loss), so
+            // |r| ≤ 3·max|g| ≤ 9 at the 8-bit format; the scale floor of
+            // 12 covers it, and the 2^{9−8r} factor tightens the wider
+            // formats where sign+exponent survive and only mantissa
+            // truncates.
+            let scale = (2.0 * max_comp as f64).max(12.0);
+            scale * (2f64).powi(9 - 8 * rt.bytes() as i32)
+        };
+        for (i, (&a, &raw)) in applied.iter().zip(&grads).enumerate() {
+            let true_sum = k as f64 * raw as f64;
+            let err = (a - true_sum).abs();
+            if rt == RoundTo::B4 {
+                assert!(err == 0.0, "32-bit must be exact: [{i}] err={err}");
+            } else {
+                assert!(
+                    err <= bound,
+                    "[{i}] cumulative err {err} exceeds single-step bound {bound} (rt={rt}, k={k})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_feedback_beats_open_loop_on_constant_gradients() {
+    check("feedback beats open loop", 30, |g| {
+        let n = g.usize_in(64..256);
+        let rt = if g.bool() { RoundTo::B1 } else { RoundTo::B2 };
+        let k = 32usize;
+        let cfg = scalar_cfg(1);
+        let grads: Vec<f32> = (0..n).map(|_| g.f32_in(0.1, 2.0)).collect();
+        let mut fb = arena_with_grads(&[grads.clone()]);
+        let mut open = arena_with_grads(&[grads.clone()]);
+        let mut sum_fb = vec![0f64; n];
+        let mut sum_open = vec![0f64; n];
+        for _ in 0..k {
+            fb.sum_gw[0].copy_from_slice(&grads);
+            fb.quantize_grads_with_feedback(&[rt], true, &cfg);
+            open.sum_gw[0].copy_from_slice(&grads);
+            open.quantize_grads_with_feedback(&[rt], false, &cfg);
+            for i in 0..n {
+                sum_fb[i] += fb.grad_q[0][i] as f64;
+                sum_open[i] += open.grad_q[0][i] as f64;
+            }
+        }
+        let mut err_fb = 0f64;
+        let mut err_open = 0f64;
+        for i in 0..n {
+            let true_sum = k as f64 * grads[i] as f64;
+            err_fb = err_fb.max((sum_fb[i] - true_sum).abs());
+            err_open = err_open.max((sum_open[i] - true_sum).abs());
+        }
+        // positive gradients in [0.1, 2.0] always truncate at ≤16 bits
+        assert!(err_open > 0.0, "open loop lost no mass at {rt}?");
+        assert!(
+            err_fb * 4.0 < err_open,
+            "feedback err {err_fb} not ≪ open-loop err {err_open} (rt={rt})"
+        );
+    });
+}
+
+fn any_profile(g: &mut Gen) -> SystemProfile {
+    let base = if g.bool() { SystemProfile::x86() } else { SystemProfile::power() };
+    let scenario = *g.pick(&SCENARIO_NAMES);
+    base.scenario(scenario).unwrap()
+}
+
+fn any_model(g: &mut Gen) -> ModelDesc {
+    match g.usize_in(0..3) {
+        0 => alexnet(200),
+        1 => vgg_a(200),
+        _ => resnet34(200),
+    }
+}
+
+/// Build the same grad-ADT window in all three modes; returns the
+/// timelines and the per-mode D2H wire bytes.
+fn grad_modes(g: &mut Gen) -> ([Timeline; 3], [u64; 3]) {
+    let profile = any_profile(g);
+    let desc = any_model(g);
+    let uses_adt = g.bool();
+    let mut loads = layer_loads(&desc, None);
+    let gformats: Vec<RoundTo> =
+        (0..loads.len()).map(|_| *g.pick(&RoundTo::ALL)).collect();
+    apply_grad_formats(&mut loads, &gformats);
+    let spec = BatchSpec {
+        batch_size: *g.pick(&[16usize, 64]),
+        uses_adt,
+        include_norms: uses_adt,
+        grad_adt: true,
+    };
+    let window = PipelineWindow::new(g.usize_in(1..4), g.usize_in(1..3));
+    let mut tls: Vec<Timeline> = Vec::new();
+    let mut bytes = [0u64; 3];
+    for (i, mode) in
+        [OverlapMode::Serialized, OverlapMode::LayerPipelined, OverlapMode::GpuPipelined]
+            .into_iter()
+            .enumerate()
+    {
+        let mut ic = Interconnect::new(profile.clone());
+        tls.push(build_training_timeline(mode, &profile, &mut ic, &loads, spec, window));
+        bytes[i] = ic.d2h_bytes_total();
+    }
+    let mut it = tls.into_iter();
+    (
+        [it.next().unwrap(), it.next().unwrap(), it.next().unwrap()],
+        bytes,
+    )
+}
+
+#[test]
+fn prop_grad_unpack_busy_totals_are_mode_independent() {
+    check("grad busy identity", 60, |g| {
+        let ([ser, pip, gpu], bytes) = grad_modes(g);
+        let (bs, bp, bg) = (ser.busy_s(), pip.busy_s(), gpu.busy_s());
+        for (i, phase) in Phase::ALL.iter().enumerate() {
+            assert_eq!(bs[i].to_bits(), bp[i].to_bits(), "{phase} ser vs pip");
+            assert_eq!(bs[i].to_bits(), bg[i].to_bits(), "{phase} ser vs gpu");
+        }
+        let gi = Phase::ALL.iter().position(|p| *p == Phase::GradUnpack).unwrap();
+        assert!(bs[gi] > 0.0, "grad-ADT must charge a CPU unpack cost");
+        // the packed wire is the same in every mode
+        assert_eq!(bytes[0], bytes[1]);
+        assert_eq!(bytes[0], bytes[2]);
+        // and the overlap orderings survive the new CPU events
+        assert!(pip.critical_path_s() <= ser.critical_path_s());
+        assert!(gpu.critical_path_s() <= pip.critical_path_s());
+    });
+}
+
+#[test]
+fn prop_grad_off_schedules_no_unpack_and_full_wire() {
+    check("grad off is off", 60, |g| {
+        let profile = any_profile(g);
+        let desc = any_model(g);
+        let uses_adt = g.bool();
+        let loads = layer_loads(&desc, None);
+        let spec = BatchSpec {
+            batch_size: 64,
+            uses_adt,
+            include_norms: uses_adt && g.bool(),
+            grad_adt: false,
+        };
+        let window = PipelineWindow::new(g.usize_in(1..3), g.usize_in(1..3));
+        let mode = *g.pick(&[
+            OverlapMode::Serialized,
+            OverlapMode::LayerPipelined,
+            OverlapMode::GpuPipelined,
+        ]);
+        let mut ic = Interconnect::new(profile.clone());
+        let tl = build_training_timeline(mode, &profile, &mut ic, &loads, spec, window);
+        assert!(tl.events().iter().all(|e| e.phase != Phase::GradUnpack));
+        // full f32 gather bytes: weights + biases, per GPU, per batch
+        let per_batch: u64 = loads
+            .iter()
+            .map(|l| (l.weight_bytes_f32 + l.bias_bytes) as u64)
+            .sum::<u64>()
+            * profile.n_gpus as u64;
+        assert_eq!(ic.d2h_bytes_total(), per_batch * window.n_batches as u64);
+    });
+}

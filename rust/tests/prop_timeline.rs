@@ -170,7 +170,7 @@ fn all_modes(g: &mut Gen) -> (Timeline, Timeline, Timeline, usize) {
     let n_batches = g.usize_in(1..5);
     let staleness = g.usize_in(1..4);
     let loads = any_loads(g, &desc, uses_adt);
-    let spec = BatchSpec { batch_size: batch, uses_adt, include_norms };
+    let spec = BatchSpec { batch_size: batch, uses_adt, include_norms, grad_adt: false };
     let window = PipelineWindow::new(n_batches, staleness);
     let build = |mode| {
         let mut ic = Interconnect::new(profile.clone());
@@ -191,7 +191,8 @@ fn prop_gpu_pipelined_staleness_zero_is_layer_pipelined_bit_exactly() {
         let batch = *g.pick(&[32usize, 64]);
         let n_batches = g.usize_in(1..4);
         let loads = any_loads(g, &desc, uses_adt);
-        let spec = BatchSpec { batch_size: batch, uses_adt, include_norms: uses_adt };
+        let spec =
+            BatchSpec { batch_size: batch, uses_adt, include_norms: uses_adt, grad_adt: false };
         let window = PipelineWindow::new(n_batches, 0);
         let mut ic_p = Interconnect::new(profile.clone());
         let pip = build_training_timeline(
@@ -272,7 +273,8 @@ fn prop_async_strictly_beats_lockstep_under_stragglers() {
         let desc = any_model(g);
         let uses_adt = g.bool();
         let loads = any_loads(g, &desc, uses_adt);
-        let spec = BatchSpec { batch_size: 64, uses_adt, include_norms: uses_adt };
+        let spec =
+            BatchSpec { batch_size: 64, uses_adt, include_norms: uses_adt, grad_adt: false };
         let window = PipelineWindow::new(g.usize_in(1..5), g.usize_in(1..3));
         let mut ic_p = Interconnect::new(profile.clone());
         let pip = build_training_timeline(

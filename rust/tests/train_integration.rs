@@ -101,6 +101,71 @@ fn fixed8_changes_numerics_vs_baseline() {
 }
 
 #[test]
+fn grad_fixed32_gather_is_bit_identical_to_off() {
+    if !have_artifacts() {
+        return;
+    }
+    // the ISSUE-4 acceptance pin, numerics side: the lossless 32-bit
+    // gather format (feedback on, residual identically zero) must train
+    // to bit-identical weights versus the grad-ADT-off path.
+    let run = |grad: a2dtwp::grad::GradPolicyKind| {
+        let mut cfg = short_cfg("vgg_micro", PolicyKind::Awp, 5);
+        cfg.grad = grad;
+        let mut t = Trainer::new(cfg).unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..5 {
+            losses.push(t.step().unwrap());
+        }
+        let bits: Vec<Vec<u32>> = t
+            .weights()
+            .iter()
+            .map(|w| w.iter().map(|x| x.to_bits()).collect())
+            .collect();
+        (losses, bits)
+    };
+    let (loss_off, w_off) = run(a2dtwp::grad::GradPolicyKind::Off);
+    let (loss_32, w_32) =
+        run(a2dtwp::grad::GradPolicyKind::Fixed(a2dtwp::adt::RoundTo::B4));
+    assert_eq!(loss_off, loss_32, "losses must match at the lossless gather format");
+    assert_eq!(w_off, w_32, "trained weights must be bit-identical");
+}
+
+#[test]
+fn grad_packed_gather_shrinks_d2h_and_stays_trainable() {
+    if !have_artifacts() {
+        return;
+    }
+    let batches = 30u64;
+    let run = |grad, feedback| {
+        let mut cfg = short_cfg("alexnet_micro", PolicyKind::Baseline, batches);
+        cfg.grad = grad;
+        cfg.grad_feedback = feedback;
+        let mut t = Trainer::new(cfg).unwrap();
+        let mut last = f64::NAN;
+        for _ in 0..batches {
+            last = t.step().unwrap();
+        }
+        let d2h = t.profiler().avg_s(a2dtwp::profiler::Phase::D2H);
+        let gu = t.profiler().avg_s(a2dtwp::profiler::Phase::GradUnpack);
+        (last, d2h, gu)
+    };
+    let (loss_off, d2h_off, gu_off) = run(a2dtwp::grad::GradPolicyKind::Off, true);
+    let (loss_16, d2h_16, gu_16) =
+        run(a2dtwp::grad::GradPolicyKind::Fixed(a2dtwp::adt::RoundTo::B2), true);
+    assert_eq!(gu_off, 0.0, "no grad-ADT phase when the gather is off");
+    assert!(gu_16 > 0.0, "packed gather must charge the CPU restore");
+    // 16-bit gather halves the weight-gradient wire (biases stay raw)
+    assert!(d2h_16 < d2h_off * 0.6, "d2h {d2h_16} not ≈half of {d2h_off}");
+    // and error feedback keeps the training productive: the compressed
+    // run still reduces loss to the same neighbourhood as f32
+    assert!(loss_16.is_finite());
+    assert!(
+        loss_16 < loss_off * 1.5,
+        "16-bit + feedback diverged: {loss_16} vs f32 {loss_off}"
+    );
+}
+
+#[test]
 fn validation_runs_and_is_bounded() {
     if !have_artifacts() {
         return;
