@@ -11,6 +11,8 @@
 //!
 //!     cargo bench --bench fig6_overlap            # full sweep + CSV
 //!     cargo bench --bench fig6_overlap -- --smoke # CI: calibration point only
+//!     cargo bench --bench fig6_overlap -- --d2h-queues 4   # DMA queues for the
+//!                                          # multi-queue D2H cells (default 4)
 //!
 //! Always writes `artifacts/bench_out/BENCH_timeline.json` with the
 //! VGG-b64 calibration-point numbers; CI's `check_bench` gates every
@@ -19,7 +21,7 @@
 //! missing or non-finite).
 
 use a2dtwp::awp::PolicyKind;
-use a2dtwp::figures::{batch_time_overlap, batch_time_overlap_windowed};
+use a2dtwp::figures::{batch_time_overlap, batch_time_overlap_windowed, d2h_queue_comparison};
 use a2dtwp::models::vgg_a;
 use a2dtwp::sim::{OverlapMode, PipelineWindow, SystemProfile};
 use a2dtwp::util::benchkit::Table;
@@ -54,7 +56,16 @@ fn gpu_cell(profile: &SystemProfile, policy: PolicyKind, bpw: f64) -> (f64, f64)
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    // D2H DMA queues for the multi-queue cells (1 = the paper's FIFO)
+    let d2h_queues = args
+        .iter()
+        .position(|a| a == "--d2h-queues")
+        .and_then(|i| args.get(i + 1))
+        .map(|v| v.parse::<usize>().expect("--d2h-queues needs an integer"))
+        .unwrap_or(4);
+    assert!(d2h_queues >= 1, "--d2h-queues must be >= 1");
 
     // x-axis: compression ratio 4/bpw (1× = 32-bit baseline … 4× = 8-bit)
     let sweep: &[f64] = if smoke { &[3.0] } else { &[1.0, 4.0 / 3.0, 1.5, 2.0, 3.0, 4.0] };
@@ -133,6 +144,55 @@ fn main() {
     }
     s.print();
 
+    // FIFO vs multi-queue D2H on the straggler scale-out cells. At the
+    // 4-GPU calibration size the straggler lane's own compute chain is
+    // the critical path, so queue count is a bit-stability invariant
+    // there; at node scale the FIFO gather channel leaves the link idle
+    // between the slow lane's late legs and gap-fill wins ≥5%. One
+    // transition cell per platform — POWER's faster link stays
+    // compute-bound longer, so its cell sits at 32 lanes, x86's at 16.
+    let desc = vgg_a(200);
+    let scale_window = PipelineWindow::new(2, STALENESS);
+    let mut q = Table::new(
+        format!(
+            "FIFO vs {d2h_queues}-queue D2H (VGG b64, straggler-severe, gpu-pipelined, window 2)"
+        ),
+        &["system", "lanes", "fifo ms", "multi-queue ms", "speedup"],
+    );
+    for (base, lanes) in [(SystemProfile::x86(), 16usize), (SystemProfile::power(), 32)] {
+        let profile = base.clone().with_n_gpus(lanes).scenario("straggler-severe").unwrap();
+        let (fifo, mq) = d2h_queue_comparison(
+            &profile,
+            &desc,
+            BATCH,
+            PolicyKind::Awp,
+            4.0 / 3.0,
+            None,
+            OverlapMode::GpuPipelined,
+            scale_window,
+            d2h_queues,
+        );
+        if d2h_queues >= 2 {
+            assert!(
+                mq <= fifo * 0.95,
+                "{} {} lanes: multi-queue D2H lost its straggler win \
+                 ({:.3} ms vs fifo {:.3} ms)",
+                base.name,
+                lanes,
+                mq * 1e3,
+                fifo * 1e3,
+            );
+        }
+        q.row(&[
+            base.name.to_string(),
+            lanes.to_string(),
+            format!("{:.2}", fifo * 1e3),
+            format!("{:.2}", mq * 1e3),
+            format!("{:.3}x", fifo / mq),
+        ]);
+    }
+    q.print();
+
     std::fs::create_dir_all("artifacts/bench_out").ok();
     if !smoke {
         std::fs::write("artifacts/bench_out/fig6_overlap.csv", &csv).ok();
@@ -143,12 +203,33 @@ fn main() {
     // converged compression), both platforms, serialized vs critical
     // path for the lockstep and per-GPU schedules, plus the
     // straggler-severe speedups the async pipeline must defend.
-    let point = |profile: &SystemProfile| {
+    let point = |profile: &SystemProfile, scaleout_lanes: usize| {
         let (serial_ms, crit_ms, speedup) = cell(profile, PolicyKind::Awp, 4.0 / 3.0);
         let (gpu_ms, gpu_speedup) = gpu_cell(profile, PolicyKind::Awp, 4.0 / 3.0);
         let straggler = profile.clone().scenario("straggler-severe").unwrap();
         let (_, _, straggler_speedup) = cell(&straggler, PolicyKind::Awp, 4.0 / 3.0);
         let (_, straggler_gpu_speedup) = gpu_cell(&straggler, PolicyKind::Awp, 4.0 / 3.0);
+        // compute-bound 4-GPU straggler cell under the multi-queue
+        // channel: a bit-stability gate — must match the FIFO number
+        let (straggler_mq_gpu_ms, _) = gpu_cell(
+            &straggler.clone().with_d2h_queues(d2h_queues),
+            PolicyKind::Awp,
+            4.0 / 3.0,
+        );
+        // the platform's scale-out transition cell where gap-fill pays
+        let scaled =
+            profile.clone().with_n_gpus(scaleout_lanes).scenario("straggler-severe").unwrap();
+        let (scale_fifo, scale_mq) = d2h_queue_comparison(
+            &scaled,
+            &vgg_a(200),
+            BATCH,
+            PolicyKind::Awp,
+            4.0 / 3.0,
+            None,
+            OverlapMode::GpuPipelined,
+            PipelineWindow::new(2, STALENESS),
+            d2h_queues,
+        );
         Json::obj(vec![
             ("serialized_ms", Json::num(serial_ms)),
             ("critical_path_ms", Json::num(crit_ms)),
@@ -157,6 +238,10 @@ fn main() {
             ("gpu_overlap_speedup", Json::num(gpu_speedup)),
             ("straggler_layer_speedup", Json::num(straggler_speedup)),
             ("straggler_gpu_speedup", Json::num(straggler_gpu_speedup)),
+            ("straggler_mq4_gpu_ms", Json::num(straggler_mq_gpu_ms)),
+            ("straggler_scaleout_fifo_ms", Json::num(scale_fifo * 1e3)),
+            ("straggler_scaleout_mq_ms", Json::num(scale_mq * 1e3)),
+            ("straggler_scaleout_mq_speedup", Json::num(scale_fifo / scale_mq)),
         ])
     };
     let report = Json::obj(vec![
@@ -166,8 +251,9 @@ fn main() {
         ("bytes_per_weight", Json::num(4.0 / 3.0)),
         ("pipeline_window", Json::num(WINDOW as f64)),
         ("staleness", Json::num(STALENESS as f64)),
-        ("x86", point(&SystemProfile::x86())),
-        ("power", point(&SystemProfile::power())),
+        ("d2h_queues", Json::num(d2h_queues as f64)),
+        ("x86", point(&SystemProfile::x86(), 16)),
+        ("power", point(&SystemProfile::power(), 32)),
     ]);
     let path = "artifacts/bench_out/BENCH_timeline.json";
     std::fs::write(path, report.to_string_pretty()).expect("write BENCH_timeline.json");

@@ -146,6 +146,7 @@ impl ExperimentConfig {
             ("overlap", Json::str(self.overlap.name())),
             ("staleness", Json::num(self.staleness as f64)),
             ("pipeline_window", Json::num(self.pipeline_window as f64)),
+            ("d2h_queues", Json::num(self.system.d2h_queues as f64)),
             ("awp_threshold", Json::num(self.awp.threshold)),
             ("awp_interval", Json::num(self.awp.interval as f64)),
             ("grad_policy", Json::str(self.grad.name())),
@@ -209,6 +210,8 @@ mod tests {
         let j = c.to_json();
         assert_eq!(j.req_usize("staleness").unwrap(), 1);
         assert_eq!(j.req_usize("pipeline_window").unwrap(), 4);
+        // the D2H channel defaults to a single FIFO queue
+        assert_eq!(j.req_usize("d2h_queues").unwrap(), 1);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::awp::{l2_norm_fast, Policy, PrecisionPolicy};
 use crate::config::ExperimentConfig;
 use crate::data::{Loader, SynthDataset};
 use crate::device::GpuPool;
-use crate::grad::{GatherPayload, GradPolicy};
+use crate::grad::{GatherPayload, GradCost, GradPolicy};
 use crate::interconnect::Interconnect;
 use crate::metrics::{TrainCurve, ValPoint};
 use crate::models::{model_by_name, ModelDesc};
@@ -168,7 +168,19 @@ impl Trainer {
             None
         };
         let policy = Policy::new(cfg.policy, manifest.num_layers(), cfg.awp, block_groups);
-        let grad = GradPolicy::new(cfg.grad, manifest.num_layers(), cfg.grad_params);
+        let mut grad = GradPolicy::new(cfg.grad, manifest.num_layers(), cfg.grad_params);
+        // Arm the adaptive controller's cost guard with the platform's
+        // calibrated rates: stability says a layer *can* narrow, the
+        // restore/link balance decides whether the narrower wire format
+        // actually pays (a no-op for the static policies).
+        grad.set_cost_model(
+            ws.iter().map(|w| w.len()).collect(),
+            GradCost {
+                grad_unpack_bps: cfg.system.grad_unpack_bps,
+                d2h_bps: cfg.system.d2h_bps,
+                n_gpus: cfg.system.n_gpus,
+            },
+        );
 
         let dataset = SynthDataset::default_micro(cfg.seed);
         let loader =

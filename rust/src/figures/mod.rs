@@ -186,6 +186,48 @@ pub fn batch_time_overlap_windowed_grad(
     (tl.critical_path_s() * inv, tl.serialized_sum_s() * inv)
 }
 
+/// FIFO-vs-multi-queue D2H comparison for one cell: per-batch critical
+/// path with the gather channel at one queue (the paper's FIFO) versus
+/// `queues` DMA queues, same schedule otherwise. Returns
+/// `(fifo_s, mq_s)`. Reordering legs never changes what is accounted —
+/// busy totals, serial references and `Channel::bytes_total` are
+/// queue-count invariant — only when the link carries it, so any gap
+/// between the two numbers is pure schedule.
+#[allow(clippy::too_many_arguments)]
+pub fn d2h_queue_comparison(
+    profile: &SystemProfile,
+    desc: &ModelDesc,
+    batch: usize,
+    policy: PolicyKind,
+    bytes_per_weight: f64,
+    grad_bytes_per_weight: Option<f64>,
+    mode: OverlapMode,
+    window: PipelineWindow,
+    queues: usize,
+) -> (f64, f64) {
+    let (fifo, _) = batch_time_overlap_windowed_grad(
+        &profile.clone().with_d2h_queues(1),
+        desc,
+        batch,
+        policy,
+        bytes_per_weight,
+        grad_bytes_per_weight,
+        mode,
+        window,
+    );
+    let (mq, _) = batch_time_overlap_windowed_grad(
+        &profile.clone().with_d2h_queues(queues),
+        desc,
+        batch,
+        policy,
+        bytes_per_weight,
+        grad_bytes_per_weight,
+        mode,
+        window,
+    );
+    (fifo, mq)
+}
+
 /// One cell of the Fig-7 gather-compression sweep (seconds per batch
 /// under each schedule at one mean gather width).
 #[derive(Clone, Copy, Debug)]
@@ -678,6 +720,52 @@ mod tests {
         );
         assert!(g4 < g1, "window 4 per-batch {g4} should beat window 1 {g1}");
         assert!(g4 < c1, "gpu-pipelined {g4} should beat layer-pipelined {c1}");
+    }
+
+    #[test]
+    fn multi_queue_d2h_gap_fills_the_straggler_scale_out_cell() {
+        let d = vgg_a(200);
+        let w = PipelineWindow::new(2, 1);
+        let p16 = SystemProfile::x86().with_n_gpus(16).scenario("straggler-severe").unwrap();
+        // 16 lanes, one of them 2× slow: the FIFO channel leaves the
+        // link idle between the straggler's late legs (409.48 ms); four
+        // DMA queues gap-fill it with ready legs (387.62 ms, ≥5%)
+        let (fifo, mq) = d2h_queue_comparison(
+            &p16, &d, 64, PolicyKind::Awp, 4.0 / 3.0, None, OverlapMode::GpuPipelined, w, 4,
+        );
+        assert!(mq < fifo * 0.95, "mq={mq} fifo={fifo}");
+        // the single-queue leg is the unmodified channel, bit for bit
+        let (direct, s1) = batch_time_overlap_windowed_grad(
+            &p16, &d, 64, PolicyKind::Awp, 4.0 / 3.0, None, OverlapMode::GpuPipelined, w,
+        );
+        assert_eq!(fifo.to_bits(), direct.to_bits());
+        // the serial reference is queue-count invariant, bit for bit
+        let (_, s4) = batch_time_overlap_windowed_grad(
+            &p16.clone().with_d2h_queues(4),
+            &d,
+            64,
+            PolicyKind::Awp,
+            4.0 / 3.0,
+            None,
+            OverlapMode::GpuPipelined,
+            w,
+        );
+        assert_eq!(s1.to_bits(), s4.to_bits());
+        // the 4-GPU cell is compute-bound (the straggler lane's own
+        // chain is the critical path): queues cannot improve it
+        let p4 = SystemProfile::x86().scenario("straggler-severe").unwrap();
+        let (f4, m4) = d2h_queue_comparison(
+            &p4,
+            &d,
+            64,
+            PolicyKind::Awp,
+            4.0 / 3.0,
+            None,
+            OverlapMode::GpuPipelined,
+            PipelineWindow::new(4, 1),
+            4,
+        );
+        assert!((m4 / f4 - 1.0).abs() < 1e-9, "4-GPU cell drifted: {m4} vs {f4}");
     }
 
     #[test]

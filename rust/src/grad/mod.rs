@@ -44,7 +44,7 @@
 
 mod policy;
 
-pub use policy::{GradController, GradEvent, GradParams, GradPolicy, GradPolicyKind};
+pub use policy::{GradController, GradCost, GradEvent, GradParams, GradPolicy, GradPolicyKind};
 
 use crate::adt::RoundTo;
 

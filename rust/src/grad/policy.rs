@@ -79,6 +79,63 @@ impl Default for GradParams {
     }
 }
 
+/// Calibrated rates for the cost-aware narrow guard: the controller's
+/// stability rule says a layer's gradients *can* be narrowed; these
+/// rates decide whether the narrow step actually *pays*. Gathering a
+/// layer of `w` weights at `b` bytes/weight costs the CPU leader
+/// `n_gpus·w·b / grad_unpack_bps` seconds of Bitunpack per batch and
+/// saves `n_gpus·w·(4−b) / d2h_bps` seconds of D2H versus the f32
+/// gather, so the step is refused whenever the projected restore time
+/// exceeds the projected link saving — i.e. whenever
+/// `b > 4·grad_unpack_bps / (grad_unpack_bps + d2h_bps)`, the same
+/// crossover the fig7 ablation derives.
+#[derive(Clone, Copy, Debug)]
+pub struct GradCost {
+    /// CPU Bitunpack rate for packed gradient contributions (bytes/s).
+    pub grad_unpack_bps: f64,
+    /// Aggregate D2H link rate across the node's GPUs (bytes/s).
+    pub d2h_bps: f64,
+    /// Gradient contributions gathered per batch (one per GPU).
+    pub n_gpus: usize,
+}
+
+impl GradCost {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.grad_unpack_bps.is_finite() && self.grad_unpack_bps > 0.0) {
+            return Err(format!(
+                "grad_unpack_bps must be finite and > 0, got {}",
+                self.grad_unpack_bps
+            ));
+        }
+        if !(self.d2h_bps.is_finite() && self.d2h_bps > 0.0) {
+            return Err(format!("d2h_bps must be finite and > 0, got {}", self.d2h_bps));
+        }
+        if self.n_gpus == 0 {
+            return Err("n_gpus must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Projected per-batch CPU restore seconds for one layer of
+    /// `weights` gathered at `bytes` per weight.
+    pub fn unpack_s(&self, weights: usize, bytes: u8) -> f64 {
+        (self.n_gpus * weights * bytes as usize) as f64 / self.grad_unpack_bps
+    }
+
+    /// Projected per-batch D2H seconds saved versus the f32 gather for
+    /// one layer of `weights` gathered at `bytes` per weight.
+    pub fn d2h_saved_s(&self, weights: usize, bytes: u8) -> f64 {
+        (self.n_gpus * weights * (4usize.saturating_sub(bytes as usize))) as f64 / self.d2h_bps
+    }
+
+    /// Does gathering this layer at `bytes`/weight save more link time
+    /// than its restore costs? (Equality counts as a win: the bytes
+    /// come off the contended link either way.)
+    pub fn narrow_pays(&self, weights: usize, bytes: u8) -> bool {
+        self.unpack_s(weights, bytes) <= self.d2h_saved_s(weights, bytes)
+    }
+}
+
 /// A gather-format change decided by the controller (logging/ablation).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct GradEvent {
@@ -141,6 +198,10 @@ pub struct GradController {
     prev_norm: Vec<Option<f64>>,
     batch: u64,
     events: Vec<GradEvent>,
+    /// Cost-aware narrow guard: per-layer weight counts plus calibrated
+    /// rates. None (the default) keeps the historical stability-only
+    /// behaviour — every existing trajectory is unchanged.
+    cost: Option<(Vec<usize>, GradCost)>,
 }
 
 impl GradController {
@@ -155,6 +216,37 @@ impl GradController {
             prev_norm: vec![None; num_layers],
             batch: 0,
             events: Vec::new(),
+            cost: None,
+        }
+    }
+
+    /// Arm the cost-aware narrow guard: the controller refuses narrow
+    /// steps whose projected CPU restore time exceeds the projected D2H
+    /// saving for the layer. `weights_per_layer` sizes each layer's
+    /// packed payload.
+    pub fn set_cost_model(&mut self, weights_per_layer: Vec<usize>, cost: GradCost) {
+        if let Err(e) = cost.validate() {
+            panic!("invalid GradCost: {e}");
+        }
+        assert_eq!(
+            weights_per_layer.len(),
+            self.num_layers(),
+            "one weight count per layer"
+        );
+        self.cost = Some((weights_per_layer, cost));
+    }
+
+    /// The armed cost model, if any.
+    pub fn cost_model(&self) -> Option<&GradCost> {
+        self.cost.as_ref().map(|(_, c)| c)
+    }
+
+    /// Would narrowing `layer` to `bytes`/weight pay under the armed
+    /// cost model? Unarmed controllers always narrow (stability only).
+    fn narrow_is_profitable(&self, layer: usize, bytes: u8) -> bool {
+        match &self.cost {
+            None => true,
+            Some((weights, cost)) => cost.narrow_pays(weights[layer], bytes),
         }
     }
 
@@ -218,6 +310,7 @@ impl GradController {
         }
         if self.stable_counter[layer] >= self.params.interval
             && bytes > self.params.min.bytes() as u8
+            && self.narrow_is_profitable(layer, bytes - 1)
         {
             self.stable_counter[layer] = 0;
             let from = self.round_to(layer);
@@ -313,6 +406,14 @@ impl GradPolicy {
         match self {
             GradPolicy::Adaptive { ctl, .. } => Some(ctl),
             _ => None,
+        }
+    }
+
+    /// Arm the adaptive controller's cost-aware narrow guard. Static
+    /// policies have no narrow decisions to guard — a no-op.
+    pub fn set_cost_model(&mut self, weights_per_layer: Vec<usize>, cost: GradCost) {
+        if let GradPolicy::Adaptive { ctl, .. } = self {
+            ctl.set_cost_model(weights_per_layer, cost);
         }
     }
 }
@@ -463,6 +564,72 @@ mod tests {
     fn controller_refuses_invalid_params() {
         let p = GradParams { interval: 0, ..GradParams::default() };
         let _ = GradController::new(1, p);
+    }
+
+    #[test]
+    fn cost_model_threshold_matches_the_fig7_crossover() {
+        // b ≤ 4·gu/(gu+d2h): with equal rates the crossover is 16 bits
+        let c = GradCost { grad_unpack_bps: 1e9, d2h_bps: 1e9, n_gpus: 4 };
+        assert!(c.narrow_pays(1 << 20, 1));
+        assert!(c.narrow_pays(1 << 20, 2)); // equality counts as a win
+        assert!(!c.narrow_pays(1 << 20, 3)); // restore 3 B vs saving 1 B
+        assert!(c.unpack_s(1 << 20, 2) > 0.0);
+        assert!(c.d2h_saved_s(1 << 20, 4) == 0.0);
+        assert!(GradCost { grad_unpack_bps: 0.0, ..c }.validate().is_err());
+        assert!(GradCost { d2h_bps: f64::NAN, ..c }.validate().is_err());
+        assert!(GradCost { n_gpus: 0, ..c }.validate().is_err());
+    }
+
+    #[test]
+    fn cost_guard_blocks_unprofitable_narrowing() {
+        // equal restore and link rates: the 32→24 step restores 3 bytes
+        // per weight to save 1 on the wire, so the armed controller
+        // refuses the step the unarmed one takes.
+        let mut c = GradController::new(1, params(0.05, 3));
+        c.set_cost_model(
+            vec![1 << 20],
+            GradCost { grad_unpack_bps: 1e9, d2h_bps: 1e9, n_gpus: 4 },
+        );
+        for _ in 0..20 {
+            c.observe_batch(&[1.0], &[100.0]);
+        }
+        assert_eq!(c.round_to(0), RoundTo::B4);
+        assert!(c.events().is_empty());
+        assert!(c.cost_model().is_some());
+    }
+
+    #[test]
+    fn cost_guard_passes_profitable_narrowing() {
+        // a CPU that restores 1000× faster than the link moves bytes:
+        // every narrow step pays and the trajectory matches the
+        // unarmed controller's (32 → 24 → 16 → 8).
+        let mut c = GradController::new(1, params(0.05, 1));
+        c.set_cost_model(
+            vec![1 << 20],
+            GradCost { grad_unpack_bps: 1e12, d2h_bps: 1e9, n_gpus: 4 },
+        );
+        for _ in 0..20 {
+            c.observe_batch(&[1.0], &[100.0]);
+        }
+        assert_eq!(c.round_to(0), RoundTo::B1);
+        assert_eq!(c.events().len(), 3);
+    }
+
+    #[test]
+    fn cost_guard_leaves_spike_widening_alone() {
+        // the guard gates narrow steps only — a spike still widens
+        let mut c = GradController::new(1, params(0.05, 1));
+        c.set_cost_model(
+            vec![1 << 20],
+            GradCost { grad_unpack_bps: 1e12, d2h_bps: 1e9, n_gpus: 4 },
+        );
+        for _ in 0..5 {
+            c.observe_batch(&[1.0], &[100.0]);
+        }
+        assert_eq!(c.round_to(0), RoundTo::B1);
+        let evs = c.observe_batch(&[10.0], &[100.0]);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].to, RoundTo::B2);
     }
 
     #[test]

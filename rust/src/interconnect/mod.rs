@@ -22,9 +22,20 @@
 //! agnostic, and [`Channel::bytes_total`] reports the wire bytes actually
 //! moved, so compression ratios achieved on the wire are observable per
 //! direction.
+//!
+//! A channel is a FIFO by default: legs execute in emission order on the
+//! link resource's clock. Real NICs and GPU DMA engines expose multiple
+//! hardware queues precisely so one stalled stream cannot
+//! head-of-line-block the others; [`Channel::with_queues`] models that —
+//! the D2H gather channel takes its queue count from
+//! `SystemProfile::d2h_queues` (`--d2h-queues N`), and with ≥ 2 queues
+//! each leg is placed by *readiness* through the
+//! [`crate::sim::timeline::ReadyQueue`] gap-fill scheduler instead of
+//! emission order. One queue remains bit-exact with the historic FIFO
+//! (`tests/prop_channel.rs`).
 
 use crate::profiler::Phase;
-use crate::sim::timeline::{EventId, Resource, Timeline};
+use crate::sim::timeline::{EventId, ReadyQueue, Resource, Timeline};
 use crate::sim::SystemProfile;
 
 /// Direction of a simulated transfer.
@@ -67,13 +78,57 @@ pub struct Channel {
     latency_s: f64,
     /// GPUs served per transfer (broadcast/gather fan-out).
     fanout: usize,
+    /// Multi-queue reorderable placement state. `None` ⇒ a single FIFO
+    /// queue: legs execute in emission order on the resource clock, the
+    /// historic channel bit-for-bit (see [`with_queues`](Self::with_queues)).
+    mq: Option<ReadyQueue>,
     total_s: f64,
     bytes_total: u64,
 }
 
 impl Channel {
     pub fn new(direction: Direction, bps: f64, latency_s: f64, fanout: usize) -> Channel {
-        Channel { direction, bps, latency_s, fanout, total_s: 0.0, bytes_total: 0 }
+        Channel { direction, bps, latency_s, fanout, mq: None, total_s: 0.0, bytes_total: 0 }
+    }
+
+    /// Give the channel `queues` DMA-style hardware queues (≥ 1). With
+    /// one queue the channel keeps the historic FIFO behaviour — legs
+    /// serialize on the link resource's clock in emission order — by
+    /// construction (the reorderable state is not even instantiated).
+    /// With ≥ 2 queues, [`enqueue_leg`](Self::enqueue_leg) places each
+    /// leg by *readiness* through a [`ReadyQueue`]: a ready leg from a
+    /// fast lane gap-fills idle link time between a straggler's legs
+    /// instead of head-of-line-blocking behind them. The link stays
+    /// physically serial, and byte/second accounting — hence Tables
+    /// II/III busy totals — is placement-independent.
+    pub fn with_queues(mut self, queues: usize) -> Channel {
+        assert!(queues >= 1, "a channel needs at least one DMA queue");
+        self.mq = (queues > 1).then(|| ReadyQueue::new(queues));
+        self
+    }
+
+    /// DMA queue count (1 for the historic FIFO channel).
+    pub fn queues(&self) -> usize {
+        self.mq.as_ref().map_or(1, |mq| mq.queues())
+    }
+
+    /// Per-queue occupancy seconds of the last-scheduled timeline
+    /// (single-queue channels report their cumulative total as queue 0).
+    pub fn queue_busy_s(&self) -> Vec<f64> {
+        match &self.mq {
+            Some(mq) => mq.queue_busy_s().to_vec(),
+            None => vec![self.total_s],
+        }
+    }
+
+    /// Forget placement state tied to the previous timeline's time axis
+    /// (queue tails, idle gaps, per-queue occupancy) while keeping the
+    /// cumulative byte/second accounting. The timeline builders call
+    /// this whenever they start scheduling onto a fresh timeline.
+    pub fn begin_timeline(&mut self) {
+        if let Some(mq) = self.mq.as_mut() {
+            mq.reset();
+        }
     }
 
     pub fn direction(&self) -> Direction {
@@ -121,6 +176,14 @@ impl Channel {
     /// fused transfer's [`transfer_time`](Self::transfer_time) on its
     /// first leg and 0 on the rest, keeping per-phase busy totals
     /// mode-independent while the schedule interleaves per GPU.
+    ///
+    /// On a single-queue channel the leg joins the link resource's FIFO
+    /// clock (execution order == emission order). On a multi-queue
+    /// channel ([`with_queues`](Self::with_queues)) the leg's priority
+    /// is its readiness — the latest dependency finish — and the
+    /// [`ReadyQueue`] places it into the earliest feasible idle slot on
+    /// the link, possibly *before* legs emitted earlier. Accounting
+    /// (`total_s`, `bytes_total`) is identical on both paths.
     pub fn enqueue_leg(
         &mut self,
         timeline: &mut Timeline,
@@ -132,7 +195,22 @@ impl Channel {
         let seconds = self.leg_time(bytes);
         self.total_s += seconds;
         self.bytes_total += bytes as u64;
-        timeline.schedule_weighted(self.direction.resource(), phase, seconds, busy_s, deps)
+        match self.mq.as_mut() {
+            None => {
+                timeline.schedule_weighted(self.direction.resource(), phase, seconds, busy_s, deps)
+            }
+            Some(mq) => {
+                let (start_s, _queue) = mq.place(timeline.ready_s(deps), seconds);
+                timeline.schedule_placed(
+                    self.direction.resource(),
+                    phase,
+                    seconds,
+                    busy_s,
+                    start_s,
+                    deps,
+                )
+            }
+        }
     }
 
     /// Cumulative accounted seconds.
@@ -148,6 +226,7 @@ impl Channel {
     pub fn reset(&mut self) {
         self.total_s = 0.0;
         self.bytes_total = 0;
+        self.begin_timeline();
     }
 }
 
@@ -165,7 +244,8 @@ impl Interconnect {
         let h2d =
             Channel::new(Direction::H2D, profile.h2d_bps, profile.link_latency_s, profile.n_gpus);
         let d2h =
-            Channel::new(Direction::D2H, profile.d2h_bps, profile.link_latency_s, profile.n_gpus);
+            Channel::new(Direction::D2H, profile.d2h_bps, profile.link_latency_s, profile.n_gpus)
+                .with_queues(profile.d2h_queues);
         Interconnect { profile, h2d, d2h }
     }
 
@@ -286,6 +366,77 @@ mod tests {
         assert!((leg_sum / whole - 1.0).abs() < 1e-12, "legs {leg_sum} vs fused {whole}");
         // legs serialize on the channel clock
         assert!((tl.critical_path_s() / whole - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_queue_leg_overtakes_a_stragglers_leg() {
+        // Two legs: the first emitted becomes ready late (dep on a slow
+        // wgrad), the second is ready at t=0. FIFO queues the ready leg
+        // behind the straggler's; a 2-queue channel gap-fills the idle
+        // link ahead of it.
+        let p = SystemProfile::x86();
+        let bytes = 1 << 26;
+        let run = |queues: usize| {
+            let mut ch = Channel::new(Direction::D2H, p.d2h_bps, p.link_latency_s, p.n_gpus)
+                .with_queues(queues);
+            let mut tl = Timeline::new(OverlapMode::GpuPipelined);
+            let slow = tl.schedule(Resource::Gpu(0), Phase::Conv, 1.0, &[]);
+            let fast = tl.schedule(Resource::Gpu(1), Phase::Conv, 1e-6, &[]);
+            let a = ch.enqueue_leg(&mut tl, Phase::D2H, bytes, 0.0, &[slow]);
+            let b = ch.enqueue_leg(&mut tl, Phase::D2H, bytes, 0.0, &[fast]);
+            (tl.events()[a.0].start_s, tl.events()[b.0].start_s, ch)
+        };
+        let (fifo_a, fifo_b, fifo_ch) = run(1);
+        assert!(fifo_b > fifo_a, "FIFO: emission order is execution order");
+        let (mq_a, mq_b, mq_ch) = run(2);
+        assert!(mq_b < mq_a, "multi-queue: the ready leg takes the idle link");
+        // accounting is placement-independent
+        assert_eq!(fifo_ch.bytes_total(), mq_ch.bytes_total());
+        assert_eq!(fifo_ch.total_s().to_bits(), mq_ch.total_s().to_bits());
+        assert_eq!(mq_ch.queues(), 2);
+        assert_eq!(fifo_ch.queues(), 1);
+    }
+
+    #[test]
+    fn queue_occupancy_sums_to_the_scheduled_leg_time() {
+        let p = SystemProfile::x86();
+        let mut ch = Channel::new(Direction::D2H, p.d2h_bps, p.link_latency_s, p.n_gpus)
+            .with_queues(4);
+        let mut tl = Timeline::new(OverlapMode::GpuPipelined);
+        let mut expected = 0.0;
+        for g in 0..8 {
+            let dep = tl.schedule(Resource::Gpu(g), Phase::Conv, 0.01 * g as f64, &[]);
+            expected += ch.leg_time(1 << 20);
+            ch.enqueue_leg(&mut tl, Phase::D2H, 1 << 20, 0.0, &[dep]);
+        }
+        let busy = ch.queue_busy_s();
+        assert_eq!(busy.len(), 4);
+        let sum: f64 = busy.iter().sum();
+        assert!((sum / expected - 1.0).abs() < 1e-12, "sum={sum} expected={expected}");
+        // a fresh timeline forgets per-queue occupancy but not bytes
+        let bytes = ch.bytes_total();
+        ch.begin_timeline();
+        assert_eq!(ch.queue_busy_s().iter().sum::<f64>(), 0.0);
+        assert_eq!(ch.bytes_total(), bytes);
+    }
+
+    #[test]
+    fn single_queue_enqueue_leg_is_bit_exact_with_schedule_weighted() {
+        // the q=1 path must be *literally* the historic code path
+        let p = SystemProfile::power();
+        let mut ch = Channel::new(Direction::D2H, p.d2h_bps, p.link_latency_s, p.n_gpus);
+        let mut tl = Timeline::new(OverlapMode::GpuPipelined);
+        let mut reference = Timeline::new(OverlapMode::GpuPipelined);
+        for (i, bytes) in [0usize, 64, 1 << 20, 1 << 27].into_iter().enumerate() {
+            let busy = if i == 0 { ch.transfer_time(bytes) } else { 0.0 };
+            ch.enqueue_leg(&mut tl, Phase::D2H, bytes, busy, &[]);
+            reference.schedule_weighted(Resource::LinkD2h, Phase::D2H, ch.leg_time(bytes), busy, &[]);
+        }
+        for (a, b) in tl.events().iter().zip(reference.events()) {
+            assert_eq!(a.start_s.to_bits(), b.start_s.to_bits());
+            assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
+            assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
+        }
     }
 
     #[test]

@@ -34,6 +34,8 @@ const USAGE: &str = "usage: a2dtwp <train|profile|models|info> [options]
     --overlap M          serialized|pipelined|gpu-pipelined (batch scheduling)
     --staleness K        gpu-pipelined bounded staleness (0 = sync barrier)
     --pipeline-window N  gpu-pipelined cross-batch window (default 4)
+    --d2h-queues N       D2H DMA queues (default 1 = the FIFO channel;
+                         >1 gap-fills idle gather-link time by priority)
     --grad-adt F         ADT-packed gradient gather: off|8|16|24|32
                          (profile: applies to the A2DTWP column)
     --grad-policy P      gather-format policy: off|fixed8|fixed16|fixed24|
@@ -59,6 +61,7 @@ fn main() {
             "overlap",
             "staleness",
             "pipeline-window",
+            "d2h-queues",
             "grad-adt",
             "grad-policy",
             "grad-feedback",
@@ -127,6 +130,11 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
     if cfg.pipeline_window == 0 {
         return Err("--pipeline-window must be >= 1".into());
     }
+    let d2h_queues = args.get_usize("d2h-queues", cfg.system.d2h_queues)?;
+    if d2h_queues == 0 {
+        return Err("--d2h-queues must be >= 1".into());
+    }
+    cfg.system = cfg.system.clone().with_d2h_queues(d2h_queues);
     if let Some(g) = args.get("grad-adt") {
         cfg.grad = GradPolicyKind::parse(g)
             .ok_or_else(|| format!("unknown --grad-adt '{g}' (off|8|16|24|32)"))?;
@@ -235,6 +243,12 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
     if window == 0 {
         anyhow::bail!("--pipeline-window must be >= 1");
     }
+    let d2h_queues =
+        args.get_usize("d2h-queues", profile.d2h_queues).map_err(|e| anyhow::anyhow!(e))?;
+    if d2h_queues == 0 {
+        anyhow::bail!("--d2h-queues must be >= 1");
+    }
+    profile = profile.with_d2h_queues(d2h_queues);
     let grad_format = match args.get("grad-adt") {
         None => None,
         Some(g) => match GradPolicyKind::parse(g) {
@@ -325,6 +339,7 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
             ("batch", Json::num(batch as f64)),
             ("staleness", Json::num(staleness as f64)),
             ("pipeline_window", Json::num(window as f64)),
+            ("d2h_queues", Json::num(d2h_queues as f64)),
             ("baseline_critical_path_ms", Json::num(base.critical_path_s * 1e3)),
             ("baseline_serialized_ms", Json::num(base.serialized_s * 1e3)),
             ("baseline_overlap_speedup", Json::num(base.overlap_speedup())),
@@ -351,6 +366,17 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
                     base_d2h_bytes as f64 / adt_d2h_bytes as f64
                 }),
             ),
+            // Per-queue share of the D2H leg time scheduled for the
+            // A²DTWP column (an idle channel has no shares: 0/0 → 0;
+            // any other non-finite value is encoded legibly by the
+            // writer's sentinel strings rather than as invalid JSON).
+            ("d2h_queue_occupancy", {
+                let occ = runner.d2h_queue_busy_s();
+                let total: f64 = occ.iter().sum();
+                Json::arr(occ.iter().map(|&s| {
+                    Json::num(if total > 0.0 { s / total } else { 0.0 })
+                }))
+            }),
         ]);
         if let Some(dir) = std::path::Path::new(path).parent() {
             if !dir.as_os_str().is_empty() {

@@ -10,5 +10,6 @@ pub use system::{SystemProfile, SCENARIO_NAMES, SYSTEM_NAMES};
 pub use timeline::{
     apply_grad_formats, apply_grad_mean_bytes, build_batch_timeline, build_training_timeline,
     layer_loads, layer_loads_mean_bytes, BatchSpec, Event, EventId, LayerLoad, OverlapMode,
-    PipelineWindow, Resource, Timeline, DEFAULT_PIPELINE_WINDOW, DEFAULT_STALENESS, OVERLAP_NAMES,
+    PipelineWindow, ReadyQueue, Resource, Timeline, DEFAULT_PIPELINE_WINDOW, DEFAULT_STALENESS,
+    OVERLAP_NAMES,
 };

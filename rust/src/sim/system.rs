@@ -63,6 +63,11 @@ pub struct SystemProfile {
     /// batch evenly, so the pool's wall time is gated by the *slowest*
     /// GPU — see [`compute_wall_factor`](Self::compute_wall_factor).
     pub gpu_speed: Vec<f64>,
+    /// DMA-style queue count of the D2H gather channel (≥ 1). 1 ⇒ the
+    /// historic in-order FIFO channel; ≥ 2 enables the reorderable
+    /// gap-fill scheduler (`--d2h-queues`, see
+    /// `interconnect::Channel::with_queues`).
+    pub d2h_queues: usize,
 }
 
 /// Scenario presets accepted by `--scenario`: named perturbations of a
@@ -115,6 +120,7 @@ impl SystemProfile {
             bytes_per_flop: 1.22,
             cpu_threads: 16,
             gpu_speed: Vec::new(),
+            d2h_queues: 1,
         }
     }
 
@@ -139,6 +145,7 @@ impl SystemProfile {
             bytes_per_flop: 0.86,
             cpu_threads: 40,
             gpu_speed: Vec::new(),
+            d2h_queues: 1,
         }
     }
 
@@ -151,6 +158,27 @@ impl SystemProfile {
     }
 
     // ---- heterogeneity / scenario perturbations ---------------------------
+
+    /// Scale the node out to `n` GPU lanes sharing the same aggregate
+    /// link budget (fat-node what-ifs: more lanes contend for the same
+    /// links, so the per-lane share shrinks as 1/n while per-lane
+    /// compute durations stay calibrated). Resets any per-GPU speed
+    /// multipliers — apply [`scenario`](Self::scenario) presets *after*
+    /// scaling so stragglers index into the scaled pool.
+    pub fn with_n_gpus(mut self, n: usize) -> SystemProfile {
+        assert!(n >= 1, "a node needs at least one GPU");
+        self.n_gpus = n;
+        self.gpu_speed = Vec::new();
+        self
+    }
+
+    /// Set the D2H gather channel's DMA queue count (≥ 1; see
+    /// [`d2h_queues`](Self::d2h_queues)).
+    pub fn with_d2h_queues(mut self, queues: usize) -> SystemProfile {
+        assert!(queues >= 1, "the D2H channel needs at least one queue");
+        self.d2h_queues = queues;
+        self
+    }
 
     /// Replace the per-GPU speed multipliers (one per GPU, all > 0).
     pub fn with_gpu_speeds(mut self, speeds: Vec<f64>) -> SystemProfile {
@@ -452,6 +480,23 @@ mod tests {
             let saved = contended.d2h_time(full) - contended.d2h_time(full / 3);
             assert!(t < saved, "{}: cost {t} >= saved {saved}", s.name);
         }
+    }
+
+    #[test]
+    fn scale_out_and_queue_builders() {
+        let p = SystemProfile::x86();
+        assert_eq!(p.d2h_queues, 1, "default is the historic FIFO channel");
+        let wide = SystemProfile::x86().with_n_gpus(16).scenario("straggler-severe").unwrap();
+        assert_eq!(wide.n_gpus, 16);
+        assert_eq!(wide.gpu_speed.len(), 16, "straggler applies to the scaled pool");
+        assert!((wide.compute_wall_factor() - 2.0).abs() < 1e-12);
+        // aggregate link budget is shared, not multiplied
+        assert_eq!(wide.d2h_bps.to_bits(), p.d2h_bps.to_bits());
+        // scaling resets speed multipliers (scenario-after-scale order)
+        let reset = SystemProfile::x86().with_straggler(0, 2.0).with_n_gpus(8);
+        assert!(reset.gpu_speed.is_empty());
+        let mq = SystemProfile::power().with_d2h_queues(4);
+        assert_eq!(mq.d2h_queues, 4);
     }
 
     #[test]

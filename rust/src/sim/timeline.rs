@@ -119,6 +119,23 @@ pub enum Resource {
     Gpu(usize),
 }
 
+impl Resource {
+    /// Dense clock-table index. The timeline keeps per-resource clocks
+    /// in a flat vector indexed by this, so a clock lookup is O(1) at
+    /// any lane count — the old association-list scan was O(lanes) per
+    /// event and dominated `schedule_async_training` beyond a few dozen
+    /// GPUs (see `benches/timeline_micro.rs`).
+    fn index(self) -> usize {
+        match self {
+            Resource::Cpu => 0,
+            Resource::LinkH2d => 1,
+            Resource::LinkD2h => 2,
+            Resource::GpuPool => 3,
+            Resource::Gpu(g) => 4 + g,
+        }
+    }
+}
+
 /// Handle to a scheduled event, usable as a dependency.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct EventId(usize);
@@ -143,8 +160,9 @@ pub struct Event {
 #[derive(Clone, Debug)]
 pub struct Timeline {
     mode: OverlapMode,
-    /// (resource, clock) pairs; linear scan — a batch uses ≲6 resources.
-    clocks: Vec<(Resource, f64)>,
+    /// Per-resource clocks, indexed by [`Resource::index`] (unused slots
+    /// stay 0.0): O(1) lookup and advance per event.
+    clocks: Vec<f64>,
     events: Vec<Event>,
     /// Data-dependency edges as (from, to) indices into `events`.
     edges: Vec<(usize, usize)>,
@@ -159,15 +177,27 @@ impl Timeline {
         self.mode
     }
 
+    /// Clear the schedule for reuse under `mode`, retaining every
+    /// buffer's capacity: a warm replay of a same-shaped event stream is
+    /// steady-state allocation-free (`benches/timeline_micro.rs` pins
+    /// this with the counting allocator).
+    pub fn reset(&mut self, mode: OverlapMode) {
+        self.mode = mode;
+        self.clocks.clear();
+        self.events.clear();
+        self.edges.clear();
+    }
+
     fn clock(&self, r: Resource) -> f64 {
-        self.clocks.iter().find(|(res, _)| *res == r).map_or(0.0, |(_, t)| *t)
+        self.clocks.get(r.index()).copied().unwrap_or(0.0)
     }
 
     fn advance_clock(&mut self, r: Resource, t: f64) {
-        match self.clocks.iter_mut().find(|(res, _)| *res == r) {
-            Some(slot) => slot.1 = t,
-            None => self.clocks.push((r, t)),
+        let i = r.index();
+        if i >= self.clocks.len() {
+            self.clocks.resize(i + 1, 0.0);
         }
+        self.clocks[i] = t;
     }
 
     /// Schedule an event on `resource`. In `Serialized` mode it chains
@@ -228,6 +258,66 @@ impl Timeline {
         EventId(id)
     }
 
+    /// Latest dependency finish time (0 with no deps): the earliest
+    /// start a reorderable placement may choose for an event after
+    /// `deps`. Same fold (comparison, not `f64::max`) as
+    /// [`schedule_weighted`](Self::schedule_weighted), so readiness is
+    /// bit-identical to what the in-order path would compute.
+    pub fn ready_s(&self, deps: &[EventId]) -> f64 {
+        let mut t = 0.0;
+        for d in deps {
+            let f = self.events[d.0].finish_s;
+            if f > t {
+                t = f;
+            }
+        }
+        t
+    }
+
+    /// Record an event at an explicit `start_s` chosen by a reorderable
+    /// resource scheduler (see [`ReadyQueue`]), bypassing the in-order
+    /// resource clock. The caller guarantees `start_s >= ready_s(deps)`
+    /// and that its placements on the resource never overlap; the
+    /// resource clock only ratchets forward to the latest finish so the
+    /// makespan stays consistent.
+    pub fn schedule_placed(
+        &mut self,
+        resource: Resource,
+        phase: Phase,
+        duration_s: f64,
+        busy_s: f64,
+        start_s: f64,
+        deps: &[EventId],
+    ) -> EventId {
+        assert!(
+            duration_s.is_finite() && duration_s >= 0.0,
+            "event duration must be finite and non-negative, got {duration_s}"
+        );
+        assert!(
+            busy_s.is_finite() && busy_s >= 0.0,
+            "event busy charge must be finite and non-negative, got {busy_s}"
+        );
+        assert!(
+            start_s.is_finite() && start_s >= self.ready_s(deps),
+            "placed start {start_s} precedes a dependency"
+        );
+        debug_assert!(
+            self.mode != OverlapMode::Serialized,
+            "reorderable placement is a pipelined-mode construct"
+        );
+        let finish_s = start_s + duration_s;
+        if self.clock(resource) < finish_s {
+            self.advance_clock(resource, finish_s);
+        }
+        let id = self.events.len();
+        for d in deps {
+            assert!(d.0 < id, "dependency on unscheduled event");
+            self.edges.push((d.0, id));
+        }
+        self.events.push(Event { resource, phase, duration_s, busy_s, start_s, finish_s });
+        EventId(id)
+    }
+
     pub fn finish_s(&self, id: EventId) -> f64 {
         self.events[id.0].finish_s
     }
@@ -277,6 +367,164 @@ impl Timeline {
     /// physical durations, not the Tables II/III busy charges.
     pub fn resource_busy_s(&self, r: Resource) -> f64 {
         self.events.iter().filter(|e| e.resource == r).map(|e| e.duration_s).sum()
+    }
+}
+
+// ---- reorderable placement -------------------------------------------------
+
+/// One idle interval of a reorderable resource. Heap-ordered by
+/// *earliest* start (`BinaryHeap` is a max-heap, so the `Ord` is
+/// reversed); live gaps are disjoint, so the start orders them totally.
+#[derive(Clone, Copy, Debug)]
+struct Gap {
+    start_s: f64,
+    end_s: f64,
+}
+
+impl PartialEq for Gap {
+    fn eq(&self, other: &Gap) -> bool {
+        self.start_s.total_cmp(&other.start_s) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Gap {}
+impl PartialOrd for Gap {
+    fn partial_cmp(&self, other: &Gap) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Gap {
+    fn cmp(&self, other: &Gap) -> std::cmp::Ordering {
+        other.start_s.total_cmp(&self.start_s)
+    }
+}
+
+/// Indexed ready-queue for one *reorderable* resource — the placement
+/// engine behind the multi-queue D2H channel
+/// (`interconnect::Channel::with_queues`).
+///
+/// The resource stays physically serial (no two placements overlap —
+/// it models one link), but emission order is no longer execution
+/// order: the state tracks N DMA-style queue tails plus the idle gaps
+/// the schedule has left on the link, binary-heap-keyed on earliest
+/// start. A leg's priority is its *readiness* (latest dependency
+/// finish, [`Timeline::ready_s`]): a ready leg from a fast lane is
+/// placed into an idle gap between a straggler's legs instead of
+/// queueing behind them, which is exactly how hardware DMA engines
+/// avoid head-of-line blocking. With one queue the state degenerates to
+/// the FIFO channel clock (callers skip it entirely — see
+/// `Channel::enqueue_leg` — so `--d2h-queues 1` is bit-exact with the
+/// historic path by construction, property-tested in
+/// `tests/prop_channel.rs`).
+#[derive(Clone, Debug)]
+pub struct ReadyQueue {
+    /// Per-queue tails: the earliest time each DMA queue can issue.
+    tails: Vec<f64>,
+    /// Idle link intervals, heap-keyed on earliest start.
+    gaps: std::collections::BinaryHeap<Gap>,
+    /// Per-queue accounted occupancy seconds (`profile --json` shares).
+    queue_busy: Vec<f64>,
+    /// Finish of the last placement appended past every known gap.
+    link_tail: f64,
+    /// Reused pop buffer for the in-order gap scan (allocation-free
+    /// once warm).
+    scratch: Vec<Gap>,
+}
+
+impl ReadyQueue {
+    pub fn new(queues: usize) -> ReadyQueue {
+        assert!(queues >= 1, "a reorderable resource needs at least one queue");
+        ReadyQueue {
+            tails: vec![0.0; queues],
+            gaps: std::collections::BinaryHeap::new(),
+            queue_busy: vec![0.0; queues],
+            link_tail: 0.0,
+            scratch: Vec::new(),
+        }
+    }
+
+    pub fn queues(&self) -> usize {
+        self.tails.len()
+    }
+
+    /// Per-queue accounted occupancy seconds since the last reset.
+    pub fn queue_busy_s(&self) -> &[f64] {
+        &self.queue_busy
+    }
+
+    /// Forget all placement state (a fresh timeline has a fresh time
+    /// axis), retaining buffer capacity.
+    pub fn reset(&mut self) {
+        for t in &mut self.tails {
+            *t = 0.0;
+        }
+        for b in &mut self.queue_busy {
+            *b = 0.0;
+        }
+        self.gaps.clear();
+        self.link_tail = 0.0;
+    }
+
+    /// Place a leg of `dur_s` that becomes ready at `ready_s`. Queue
+    /// choice: earliest feasible issue time `e = max(ready, tail[q])`,
+    /// ties to the lowest index. Link placement: the earliest idle gap
+    /// that fits the whole leg at/after `e` (splitting the gap's
+    /// remainders back into the heap), else appended at the link tail —
+    /// recording any `[tail, start)` idle skipped over as a new gap for
+    /// later legs to fill. Gaps no queue can reach anymore
+    /// (`end <= min(tails)`) are pruned. Returns `(start_s, queue)`.
+    pub fn place(&mut self, ready_s: f64, dur_s: f64) -> (f64, usize) {
+        let mut q = 0;
+        let mut e = f64::INFINITY;
+        for (i, &t) in self.tails.iter().enumerate() {
+            let ei = if t > ready_s { t } else { ready_s };
+            if ei < e {
+                q = i;
+                e = ei;
+            }
+        }
+        self.scratch.clear();
+        let mut placed: Option<f64> = None;
+        while let Some(gap) = self.gaps.pop() {
+            if placed.is_none() {
+                let s = if gap.start_s > e { gap.start_s } else { e };
+                if s + dur_s <= gap.end_s {
+                    placed = Some(s);
+                    if s > gap.start_s {
+                        self.scratch.push(Gap { start_s: gap.start_s, end_s: s });
+                    }
+                    if s + dur_s < gap.end_s {
+                        self.scratch.push(Gap { start_s: s + dur_s, end_s: gap.end_s });
+                    }
+                    continue;
+                }
+            }
+            self.scratch.push(gap);
+        }
+        let start = match placed {
+            Some(s) => s,
+            None => {
+                let s = if self.link_tail > e { self.link_tail } else { e };
+                if s > self.link_tail {
+                    self.scratch.push(Gap { start_s: self.link_tail, end_s: s });
+                }
+                self.link_tail = s + dur_s;
+                s
+            }
+        };
+        self.tails[q] = start + dur_s;
+        self.queue_busy[q] += dur_s;
+        let mut min_tail = f64::INFINITY;
+        for &t in &self.tails {
+            if t < min_tail {
+                min_tail = t;
+            }
+        }
+        for gap in self.scratch.drain(..) {
+            if gap.end_s > min_tail {
+                self.gaps.push(gap);
+            }
+        }
+        (start, q)
     }
 }
 
@@ -446,6 +694,10 @@ pub fn build_training_timeline(
     window: PipelineWindow,
 ) -> Timeline {
     assert!(window.n_batches >= 1, "pipeline window must cover at least one batch");
+    // Placement state (queue tails, idle gaps) is tied to a timeline's
+    // time axis; cumulative byte/second accounting is not.
+    interconnect.h2d.begin_timeline();
+    interconnect.d2h.begin_timeline();
     let mut tl = Timeline::new(mode);
     let asynchronous = mode == OverlapMode::GpuPipelined && window.staleness >= 1;
     if asynchronous {
@@ -1067,6 +1319,83 @@ mod tests {
         // on this link-bound platform (the CPU unpack costs less than
         // the transfer it saves)
         assert!(ser.serialized_sum_s() < off.serialized_sum_s());
+    }
+
+    #[test]
+    fn reset_retains_capacity_and_clears_schedule() {
+        let mut tl = Timeline::new(OverlapMode::LayerPipelined);
+        let a = tl.schedule(Resource::Gpu(7), Phase::Conv, 0.5, &[]);
+        tl.schedule(Resource::Cpu, Phase::GradUpdate, 0.25, &[a]);
+        assert!(tl.critical_path_s() > 0.0);
+        tl.reset(OverlapMode::LayerPipelined);
+        assert_eq!(tl.events().len(), 0);
+        assert_eq!(tl.dep_edges().len(), 0);
+        assert_eq!(tl.critical_path_s(), 0.0);
+        // clocks really cleared: the lane starts at 0 again
+        let b = tl.schedule(Resource::Gpu(7), Phase::Conv, 0.5, &[]);
+        assert_eq!(tl.events()[b.0].start_s, 0.0);
+    }
+
+    #[test]
+    fn schedule_placed_bypasses_the_clock_but_ratchets_the_makespan() {
+        let mut tl = Timeline::new(OverlapMode::GpuPipelined);
+        let a = tl.schedule(Resource::LinkD2h, Phase::D2H, 1.0, &[]);
+        // an explicit placement *before* the channel clock (a gap fill)
+        let b = tl.schedule_placed(Resource::LinkD2h, Phase::D2H, 0.25, 0.0, 2.0, &[a]);
+        assert_eq!(tl.events()[b.0].start_s, 2.0);
+        assert_eq!(tl.events()[b.0].finish_s, 2.25);
+        assert_eq!(tl.critical_path_s(), 2.25);
+        let c = tl.schedule_placed(Resource::LinkD2h, Phase::D2H, 0.5, 0.0, 1.0, &[]);
+        assert_eq!(tl.events()[c.0].start_s, 1.0);
+        // the makespan never moves backwards
+        assert_eq!(tl.critical_path_s(), 2.25);
+    }
+
+    #[test]
+    #[should_panic(expected = "precedes a dependency")]
+    fn schedule_placed_rejects_starts_before_readiness() {
+        let mut tl = Timeline::new(OverlapMode::GpuPipelined);
+        let a = tl.schedule(Resource::Gpu(0), Phase::Conv, 1.0, &[]);
+        tl.schedule_placed(Resource::LinkD2h, Phase::D2H, 0.1, 0.0, 0.5, &[a]);
+    }
+
+    #[test]
+    fn ready_queue_single_queue_appends_like_a_fifo() {
+        let mut rq = ReadyQueue::new(1);
+        assert_eq!(rq.place(0.0, 1.0), (0.0, 0));
+        assert_eq!(rq.place(0.0, 1.0), (1.0, 0));
+        // readiness past the tail leaves a gap, but one queue can never
+        // go back to fill it (its tail is already past)
+        assert_eq!(rq.place(5.0, 1.0), (5.0, 0));
+        assert_eq!(rq.place(0.0, 0.5), (6.0, 0));
+        assert_eq!(rq.queue_busy_s(), &[3.5]);
+    }
+
+    #[test]
+    fn ready_queue_gap_fills_between_a_stragglers_legs() {
+        let mut rq = ReadyQueue::new(2);
+        // a straggler's leg becomes ready late: [10, 11) on queue 0
+        assert_eq!(rq.place(10.0, 1.0), (10.0, 0));
+        // a ready leg from a fast lane fills the idle [0, 10) gap on the
+        // other queue instead of queueing behind the straggler
+        assert_eq!(rq.place(0.0, 2.0), (0.0, 1));
+        // and the remainder of the gap keeps filling, exactly to the brim
+        assert_eq!(rq.place(3.0, 4.0), (3.0, 1));
+        assert_eq!(rq.place(7.0, 3.0), (7.0, 1));
+        // nothing left to fill: append past the straggler's leg
+        assert_eq!(rq.place(0.0, 5.0), (11.0, 1));
+        let busy: f64 = rq.queue_busy_s().iter().sum();
+        assert_eq!(busy, 15.0);
+    }
+
+    #[test]
+    fn ready_queue_reset_forgets_the_time_axis() {
+        let mut rq = ReadyQueue::new(4);
+        rq.place(3.0, 1.0);
+        rq.place(0.0, 1.0);
+        rq.reset();
+        assert_eq!(rq.place(0.0, 1.0), (0.0, 0));
+        assert_eq!(rq.queue_busy_s().iter().sum::<f64>(), 1.0);
     }
 
     #[test]
