@@ -8,6 +8,10 @@
 //!
 //!     cargo bench --bench bitpack_micro
 
+// The memcpy roofline uses raw-slice reinterpretation — bench targets
+// inherit the crate-wide `unsafe_code = "deny"` (Cargo.toml [lints]).
+#![allow(unsafe_code)]
+
 use a2dtwp::adt::{
     bitpack_into, bitunpack_into, packed_len, AdtConfig, BitpackImpl, BitunpackImpl, RoundTo,
 };
@@ -35,6 +39,8 @@ fn main() {
     let bytes = n * 4;
     let mut dst = vec![0u8; bytes];
     Bench::new("memcpy 518MB (roofline ref)").warmup(2).iters(5).run_bytes(bytes, || {
+        // SAFETY: reinterpreting the live f32 buffer as bytes; `bytes`
+        // is exactly `weights.len() * 4` and f32 has no padding.
         let src =
             unsafe { std::slice::from_raw_parts(weights.as_ptr() as *const u8, bytes) };
         dst.copy_from_slice(src);

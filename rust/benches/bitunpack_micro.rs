@@ -10,6 +10,10 @@
 //!
 //!     cargo bench --bench bitunpack_micro
 
+// The memcpy roofline uses raw-slice reinterpretation — bench targets
+// inherit the crate-wide `unsafe_code = "deny"` (Cargo.toml [lints]).
+#![allow(unsafe_code)]
+
 use a2dtwp::adt::{
     bitpack_into, bitunpack_into, packed_len, AdtConfig, BitunpackImpl, RoundTo,
 };
@@ -32,8 +36,11 @@ fn main() {
 
     // memcpy roofline reference on the restored payload
     Bench::new("memcpy 518MB (roofline ref)").warmup(2).iters(5).run_bytes(full_bytes, || {
+        // SAFETY: reinterpreting live, disjoint f32 buffers as bytes;
+        // `full_bytes` is exactly `n * 4` and f32 has no padding.
         let src =
             unsafe { std::slice::from_raw_parts(weights.as_ptr() as *const u8, full_bytes) };
+        // SAFETY: as above — `restored` is a distinct buffer of n f32s.
         let dst = unsafe {
             std::slice::from_raw_parts_mut(restored.as_mut_ptr() as *mut u8, full_bytes)
         };

@@ -13,6 +13,10 @@
 //!   128-bit lane, `_mm256_permutevar8x32_epi32` compacts across lanes,
 //!   `_mm256_maskstore_epi32` writes only the surviving bytes.
 
+// AVX2 kernel module — one of the few files allowed to use `unsafe`
+// (crate-wide `unsafe_code = "deny"`, see Cargo.toml [lints]).
+#![allow(unsafe_code)]
+
 use super::RoundTo;
 use crate::util::threadpool::parallel_chunks;
 
@@ -108,6 +112,9 @@ fn bitpack_avx2_dispatch(weights: &[f32], round_to: RoundTo, out: &mut [u8]) {
 /// permute compacting both lanes, one masked store of `8·r` bytes.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: caller must have verified AVX2 support (see
+// `bitpack_avx2_dispatch`); every load/store stays inside the `weights`/
+// `out` slices — the masked store writes exactly `8·r` bytes per group.
 unsafe fn bitpack_avx2(weights: &[f32], round_to: RoundTo, out: &mut [u8]) {
     use std::arch::x86_64::*;
     let r = round_to.bytes();

@@ -22,6 +22,10 @@
 //!   the packed end fall back to the scalar tail (see EXPERIMENTS.md §Perf
 //!   for the overlapping-load rationale).
 
+// AVX2 kernel module — one of the few files allowed to use `unsafe`
+// (crate-wide `unsafe_code = "deny"`, see Cargo.toml [lints]).
+#![allow(unsafe_code)]
+
 use super::RoundTo;
 use crate::util::threadpool::parallel_chunks;
 
@@ -167,6 +171,10 @@ pub(crate) fn bitunpack_avx2_dispatch(packed: &[u8], round_to: RoundTo, out: &mu
 /// direction — no masked store is ever needed; only the *load* overlaps.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: caller must have verified AVX2 support (see
+// `bitunpack_avx2_dispatch`); the overlapping 256-bit loads stay inside
+// `packed` (the tail group falls back to the scalar path) and every
+// store writes exactly 32 in-bounds bytes of `out`.
 unsafe fn bitunpack_avx2(packed: &[u8], round_to: RoundTo, out: &mut [f32]) {
     use std::arch::x86_64::*;
     let r = round_to.bytes();

@@ -6,6 +6,10 @@
 //! outer loop. Accumulation is f64 (pairwise within lanes) so the result
 //! is stable for 10⁸-element inputs.
 
+// AVX2 kernel module — one of the few files allowed to use `unsafe`
+// (crate-wide `unsafe_code = "deny"`, see Cargo.toml [lints]).
+#![allow(unsafe_code)]
+
 use crate::util::threadpool::parallel_fold;
 
 /// Scalar sum of squares in f64.
@@ -18,6 +22,8 @@ fn sumsq_scalar(xs: &[f32]) -> f64 {
 /// the weight magnitudes seen in training; validated against f64 scalar).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2", enable = "fma")]
+// SAFETY: caller must have verified AVX2+FMA support (see `sumsq_fast`);
+// all loads are unaligned `loadu` within `xs` bounds (`chunks * 8 <= len`).
 unsafe fn sumsq_avx2(xs: &[f32]) -> f64 {
     use std::arch::x86_64::*;
     let mut acc0 = _mm256_setzero_pd();

@@ -23,7 +23,9 @@
 //! * strings must match exactly, which also rejects the `util::json`
 //!   non-finite sentinels (`"NaN"`, `"±Infinity"`) anywhere a number
 //!   was expected;
-//! * missing fields fail.
+//! * key drift fails in both directions: fields missing from the current
+//!   report, and current-report keys the baseline never recorded (a gate
+//!   blind spot) — `pallas-tidy` cross-checks the same pairs statically.
 //!
 //! The simulator is pure arithmetic, so a clean run sits within rounding
 //! of the baseline; the 5% window only absorbs deliberate recalibration
@@ -71,6 +73,19 @@ fn compare(path: &str, base: &Json, cur: &Json, errs: &mut Vec<String>) -> usize
                 match cur.get(k) {
                     Some(cval) => n += compare(&child, bval, cval, errs),
                     None => errs.push(format!("{child}: missing from current report")),
+                }
+            }
+            // Drift is rejected in both directions: a key the bench now
+            // emits but the baseline never recorded means the gate has a
+            // blind spot — fail until the baseline is re-recorded.
+            if let Json::Obj(cmap) = cur {
+                for k in cmap.keys() {
+                    if !map.contains_key(k) {
+                        errs.push(format!(
+                            "{path}.{k}: current report has a key the baseline does not — \
+                             re-record the baseline to cover it"
+                        ));
+                    }
                 }
             }
             n

@@ -1,0 +1,82 @@
+//! `pallas-tidy` CLI — run the crate's static-analysis pass.
+//!
+//! ```text
+//! cargo run --bin tidy                  # lint the whole crate
+//! cargo run --bin tidy -- --root DIR    # lint the crate rooted at DIR
+//! cargo run --bin tidy -- FILE.rs ...   # lint specific files (fixture mode)
+//! ```
+//!
+//! Exits non-zero iff any finding fired, printing one `file:line: [rule]
+//! message` diagnostic per finding — the same contract CI relies on: it
+//! runs the crate walk (must be clean) and each checked-in fixture under
+//! `tests/tidy_fixtures/` (each must fail).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use a2dtwp::lint::{lint_crate, lint_source, Finding};
+
+fn crate_root(explicit: Option<PathBuf>) -> PathBuf {
+    if let Some(root) = explicit {
+        return root;
+    }
+    if let Ok(dir) = std::env::var("CARGO_MANIFEST_DIR") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(".")
+}
+
+fn main() -> ExitCode {
+    let mut root: Option<PathBuf> = None;
+    let mut files: Vec<PathBuf> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(dir) => root = Some(PathBuf::from(dir)),
+                None => {
+                    eprintln!("tidy: --root requires a directory argument");
+                    return ExitCode::FAILURE;
+                }
+            },
+            "--help" | "-h" => {
+                eprintln!("usage: tidy [--root DIR] [FILE.rs ...]");
+                return ExitCode::SUCCESS;
+            }
+            _ => files.push(PathBuf::from(arg)),
+        }
+    }
+
+    let findings: Vec<Finding> = if files.is_empty() {
+        match lint_crate(&crate_root(root)) {
+            Ok(f) => f,
+            Err(e) => {
+                eprintln!("tidy: crate walk failed: {e}");
+                return ExitCode::FAILURE;
+            }
+        }
+    } else {
+        let mut all = Vec::new();
+        for path in &files {
+            match std::fs::read_to_string(path) {
+                Ok(src) => all.extend(lint_source(&path.to_string_lossy(), &src)),
+                Err(e) => {
+                    eprintln!("tidy: cannot read {}: {e}", path.display());
+                    return ExitCode::FAILURE;
+                }
+            }
+        }
+        all
+    };
+
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        eprintln!("tidy: clean");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("tidy: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}

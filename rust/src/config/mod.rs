@@ -28,6 +28,11 @@ pub struct ExperimentConfig {
     pub batch_size: usize,
     pub policy: PolicyKind,
     pub system: SystemProfile,
+    /// Scenario name the system profile was specialized with
+    /// (`--scenario`; "uniform" = the unmodified base profile). The
+    /// profile itself carries the resulting rates — this records the
+    /// knob for run provenance.
+    pub scenario: String,
     pub mode: ExecMode,
     /// Batch-phase scheduling: the paper's serial loop (default), the
     /// layer-pipelined overlap timeline, or the per-GPU asynchronous
@@ -109,6 +114,7 @@ impl ExperimentConfig {
             batch_size,
             policy,
             system: SystemProfile::by_name(system).unwrap_or_else(SystemProfile::x86),
+            scenario: "uniform".into(),
             mode: if model.ends_with("_micro") { ExecMode::Real } else { ExecMode::Simulated },
             overlap: OverlapMode::Serialized,
             staleness: crate::sim::DEFAULT_STALENESS,
@@ -136,6 +142,7 @@ impl ExperimentConfig {
             ("batch_size", Json::num(self.batch_size as f64)),
             ("policy", Json::str(self.policy.name())),
             ("system", Json::str(self.system.name)),
+            ("scenario", Json::str(&self.scenario)),
             (
                 "mode",
                 Json::str(match self.mode {
@@ -158,6 +165,7 @@ impl ExperimentConfig {
             ("val_every", Json::num(self.val_every as f64)),
             ("target_error", Json::num(self.target_error)),
             ("seed", Json::num(self.seed as f64)),
+            ("artifacts", Json::str(&self.artifacts_dir)),
         ])
     }
 }
@@ -199,6 +207,8 @@ mod tests {
         assert_eq!(j.req_usize("batch_size").unwrap(), 32);
         assert!(j.req_f64("awp_threshold").unwrap() < 0.0);
         assert_eq!(j.req_str("overlap").unwrap(), "serialized");
+        assert_eq!(j.req_str("scenario").unwrap(), "uniform");
+        assert_eq!(j.req_str("artifacts").unwrap(), "artifacts");
     }
 
     #[test]

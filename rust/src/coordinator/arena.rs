@@ -127,9 +127,12 @@ impl PackArena {
             max_weights = max_weights.max(ws[l].len());
         }
         if cfg.threads <= 1 || n <= 1 || max_weights * 2 >= total_weights {
+            // tidy:alloc-free — the steady-state serial pack path: buffers
+            // were sized above, so the per-layer kernel never allocates.
             for l in 0..n {
                 adt::bitpack_into(&ws[l], formats[l], cfg, &mut self.bufs[l][..self.lens[l]]);
             }
+            // tidy:end-alloc-free
         } else {
             let single = AdtConfig { threads: 1, ..*cfg };
             let weight_counts: Vec<usize> = ws.iter().map(|w| w.len()).collect();
@@ -332,6 +335,8 @@ impl StepArena {
     ) -> usize {
         let n = self.sum_gw.len();
         assert_eq!(formats.len(), n, "one gather format per layer");
+        // tidy:alloc-free — error-feedback compensation is a per-batch hot
+        // loop over every gradient element; buffers are pre-sized.
         for l in 0..n {
             let g = &self.sum_gw[l];
             let comp = &mut self.grad_comp[l];
@@ -344,10 +349,12 @@ impl StepArena {
                 comp.copy_from_slice(g);
             }
         }
+        // tidy:end-alloc-free
         let packed = self.grad_pack.pack_layers(&self.grad_comp, formats, cfg);
         for l in 0..n {
             adt::bitunpack_into(self.grad_pack.layer(l), formats[l], cfg, &mut self.grad_q[l]);
         }
+        // tidy:alloc-free — residual update, same contract as above.
         if feedback {
             for l in 0..n {
                 let comp = &self.grad_comp[l];
@@ -358,6 +365,7 @@ impl StepArena {
                 }
             }
         }
+        // tidy:end-alloc-free
         self.grad_packed_bytes_total = packed;
         self.grad_mean_bytes_per_weight = if self.total_weights == 0 {
             4.0

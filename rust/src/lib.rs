@@ -45,6 +45,7 @@ pub mod device;
 pub mod figures;
 pub mod grad;
 pub mod interconnect;
+pub mod lint;
 pub mod metrics;
 pub mod models;
 pub mod optim;

@@ -1,0 +1,377 @@
+//! A minimal hand-rolled Rust lexer for `pallas-tidy`.
+//!
+//! This is *not* a full Rust lexer — it is exactly enough tokenizer to
+//! make the tidy rules robust against the places a regex would lie:
+//! comments (line, nested block, doc), string/char/byte/raw literals,
+//! lifetimes vs char literals, and numbers. Everything else is a
+//! single-character punct token. The token stream keeps comments so
+//! rules can correlate code with marker comments (`// SAFETY:`,
+//! `// tidy:alloc-free`) by line number.
+
+/// Token classification. `text` holds the identifier / literal body /
+/// comment body; puncts carry their character inline.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (`unsafe`, `fn`, `Vec`, …).
+    Ident,
+    /// String literal (plain, raw, byte, raw-byte); `text` is the
+    /// *contents* without quotes/prefix/escapes-processing.
+    Str,
+    /// Char or byte-char literal; `text` is the raw contents.
+    Char,
+    /// Lifetime (`'a`, `'static`); `text` excludes the tick.
+    Lifetime,
+    /// Numeric literal (loosely lexed; never interpreted).
+    Num,
+    /// Any other single character.
+    Punct(char),
+    /// `// …` comment (doc comments included); `text` excludes `//`.
+    LineComment,
+    /// `/* … */` comment, nesting handled; `text` excludes delimiters.
+    BlockComment,
+}
+
+/// One lexed token with the 1-based line it starts on.
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Token {
+    /// Number of lines this token spans beyond its first (0 for
+    /// single-line tokens) — block comments and multi-line strings.
+    pub fn extra_lines(&self) -> usize {
+        self.text.matches('\n').count()
+    }
+}
+
+/// Lex `src` into a token stream. Never fails: unterminated literals
+/// and stray characters degrade to best-effort tokens — the rules only
+/// need sound classification of comments and literals, and a file this
+/// lexer mangles would not compile anyway.
+pub fn lex(src: &str) -> Vec<Token> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let n = chars.len();
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // comments
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            toks.push(Token {
+                kind: TokKind::LineComment,
+                text: chars[start..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let start_line = line;
+            let start = i + 2;
+            let mut j = start;
+            let mut depth = 1usize;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let end = if depth == 0 { j - 2 } else { j };
+            toks.push(Token {
+                kind: TokKind::BlockComment,
+                text: chars[start..end].iter().collect(),
+                line: start_line,
+            });
+            i = j;
+            continue;
+        }
+        // raw / byte string prefixes: r" r#" b" br" b' (checked before
+        // plain identifiers so the prefix letters don't lex as idents)
+        if c == 'r' || c == 'b' {
+            let mut j = i + 1;
+            let mut is_raw = c == 'r';
+            if c == 'b' && j < n && chars[j] == 'r' {
+                is_raw = true;
+                j += 1;
+            }
+            if is_raw && j < n && (chars[j] == '"' || chars[j] == '#') {
+                let mut hashes = 0usize;
+                while j < n && chars[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && chars[j] == '"' {
+                    let start_line = line;
+                    j += 1;
+                    let start = j;
+                    'raw: while j < n {
+                        if chars[j] == '\n' {
+                            line += 1;
+                            j += 1;
+                            continue;
+                        }
+                        if chars[j] == '"' {
+                            let mut k = j + 1;
+                            let mut h = 0usize;
+                            while k < n && h < hashes && chars[k] == '#' {
+                                h += 1;
+                                k += 1;
+                            }
+                            if h == hashes {
+                                toks.push(Token {
+                                    kind: TokKind::Str,
+                                    text: chars[start..j].iter().collect(),
+                                    line: start_line,
+                                });
+                                i = k;
+                                break 'raw;
+                            }
+                        }
+                        j += 1;
+                    }
+                    if j >= n {
+                        toks.push(Token {
+                            kind: TokKind::Str,
+                            text: chars[start..n].iter().collect(),
+                            line: start_line,
+                        });
+                        i = n;
+                    }
+                    continue;
+                }
+                // `r#ident` raw identifier or stray hashes: fall through
+                // to ident lexing below from position `i`.
+            } else if c == 'b' && j < n && (chars[j] == '"' || chars[j] == '\'') {
+                // byte string / byte char: lex as the plain form with the
+                // prefix consumed.
+                i = j;
+                let (tok, ni, nl) = lex_quoted(&chars, i, line);
+                toks.push(tok);
+                i = ni;
+                line = nl;
+                continue;
+            }
+        }
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            let mut j = i;
+            while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+                j += 1;
+            }
+            toks.push(Token {
+                kind: TokKind::Ident,
+                text: chars[start..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c == '"' || c == '\'' {
+            let (tok, ni, nl) = lex_quoted(&chars, i, line);
+            toks.push(tok);
+            i = ni;
+            line = nl;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i;
+            while j < n {
+                let d = chars[j];
+                if d.is_alphanumeric() || d == '_' {
+                    // exponent sign: 1e-3 / 2.5E+8
+                    if (d == 'e' || d == 'E')
+                        && j + 1 < n
+                        && (chars[j + 1] == '+' || chars[j + 1] == '-')
+                        && j + 2 < n
+                        && chars[j + 2].is_ascii_digit()
+                    {
+                        j += 2;
+                    }
+                    j += 1;
+                } else if d == '.' && j + 1 < n && chars[j + 1].is_ascii_digit() {
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Token {
+                kind: TokKind::Num,
+                text: chars[start..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        toks.push(Token { kind: TokKind::Punct(c), text: c.to_string(), line });
+        i += 1;
+    }
+    toks
+}
+
+/// Lex a `"…"` string, `'…'` char, or `'ident` lifetime starting at
+/// `chars[i]` (which is the quote). Returns the token, the next index,
+/// and the updated line count.
+fn lex_quoted(chars: &[char], i: usize, mut line: usize) -> (Token, usize, usize) {
+    let n = chars.len();
+    let start_line = line;
+    if chars[i] == '"' {
+        let start = i + 1;
+        let mut j = start;
+        while j < n {
+            match chars[j] {
+                '\\' => j += 2,
+                '\n' => {
+                    line += 1;
+                    j += 1;
+                }
+                '"' => break,
+                _ => j += 1,
+            }
+        }
+        let end = j.min(n);
+        let tok = Token {
+            kind: TokKind::Str,
+            text: chars[start..end].iter().collect(),
+            line: start_line,
+        };
+        return (tok, (end + 1).min(n), line);
+    }
+    // tick: lifetime vs char literal. A lifetime is `'` + ident-start
+    // not closed by another `'` (so `'a'` is a char, `'a` a lifetime).
+    let start = i + 1;
+    if start < n && (chars[start].is_alphabetic() || chars[start] == '_') && chars[start] != '\\' {
+        let mut j = start;
+        while j < n && (chars[j].is_alphanumeric() || chars[j] == '_') {
+            j += 1;
+        }
+        if j >= n || chars[j] != '\'' {
+            let tok = Token {
+                kind: TokKind::Lifetime,
+                text: chars[start..j].iter().collect(),
+                line: start_line,
+            };
+            return (tok, j, line);
+        }
+        // `'x'` — a char literal after all
+        let tok = Token {
+            kind: TokKind::Char,
+            text: chars[start..j].iter().collect(),
+            line: start_line,
+        };
+        return (tok, j + 1, line);
+    }
+    // escaped or punct char literal: `'\n'`, `'\''`, `'+'`
+    let mut j = start;
+    while j < n {
+        match chars[j] {
+            '\\' => j += 2,
+            '\'' => break,
+            '\n' => {
+                line += 1;
+                j += 1;
+            }
+            _ => j += 1,
+        }
+    }
+    let end = j.min(n);
+    let tok = Token {
+        kind: TokKind::Char,
+        text: chars[start..end].iter().collect(),
+        line: start_line,
+    };
+    (tok, (end + 1).min(n), line)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<TokKind> {
+        lex(src).into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn comments_and_idents() {
+        let toks = lex("// hello\nfn main() {} /* a /* nested */ block */\n");
+        assert_eq!(toks[0].kind, TokKind::LineComment);
+        assert_eq!(toks[0].text, " hello");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].kind, TokKind::Ident);
+        assert_eq!(toks[1].text, "fn");
+        assert_eq!(toks[1].line, 2);
+        let last = toks.last().unwrap();
+        assert_eq!(last.kind, TokKind::BlockComment);
+        assert_eq!(last.text, " a /* nested */ block ");
+    }
+
+    #[test]
+    fn strings_chars_lifetimes() {
+        let toks = lex(r#"let s = "a \" b"; let c = 'x'; let l: &'static str = "";"#);
+        let strs: Vec<&Token> = toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(strs.len(), 2);
+        assert_eq!(strs[0].text, r#"a \" b"#);
+        assert!(toks.iter().any(|t| t.kind == TokKind::Char && t.text == "x"));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "static"));
+    }
+
+    #[test]
+    fn raw_and_byte_strings() {
+        let toks = lex(
+            "let a = r#\"raw \"quoted\" body\"#; let b = b\"bytes\"; let c = r\"plain\";",
+        );
+        let strs: Vec<&Token> = toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(strs.len(), 3);
+        assert_eq!(strs[0].text, "raw \"quoted\" body");
+        assert_eq!(strs[1].text, "bytes");
+        assert_eq!(strs[2].text, "plain");
+    }
+
+    #[test]
+    fn numbers_stay_single_tokens() {
+        let toks = lex("let x = 1e-3 + 2.5 * 0xFF_u32 - 7;");
+        let nums: Vec<&Token> = toks.iter().filter(|t| t.kind == TokKind::Num).collect();
+        let texts: Vec<&str> = nums.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, ["1e-3", "2.5", "0xFF_u32", "7"]);
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_tokens() {
+        let toks = lex("/* one\ntwo */\nunsafe { }\n");
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[0].extra_lines(), 1);
+        let u = toks.iter().find(|t| t.text == "unsafe").unwrap();
+        assert_eq!(u.line, 3);
+    }
+
+    #[test]
+    fn punct_fallback() {
+        assert!(kinds("#[x]").contains(&TokKind::Punct('#')));
+    }
+}

@@ -1,0 +1,688 @@
+//! `pallas-tidy` — a zero-dependency, offline, rustc-`tidy`-style
+//! static-analysis pass over this crate's own sources.
+//!
+//! The crate stacks three layers of hand-rolled concurrency and
+//! `unsafe` SIMD (AVX2 pack/unpack kernels, the threaded reduce, the
+//! multi-queue reorderable timeline scheduler). The invariants those
+//! layers rely on used to be tribal knowledge; tidy machine-checks the
+//! lexical ones on every push (the *semantic* schedule invariants live
+//! in [`crate::sim::verify`]):
+//!
+//! | rule | checks |
+//! |------|--------|
+//! | `safety-comment`        | every `unsafe` keyword carries a `// SAFETY:` comment within the 4 lines above |
+//! | `target-feature-guard`  | every `#[target_feature]` fn is non-`pub` and every call sits within 10 lines below a runtime `is_x86_feature_detected!` guard |
+//! | `alloc-free`            | no allocating calls inside `// tidy:alloc-free` … `// tidy:end-alloc-free` fences |
+//! | `nonfinite-sentinel`    | no raw non-finite float sentinel strings outside `util/json.rs` |
+//! | `scheduler-panic`       | no `unwrap`/`expect`/`panic!` in `sim/timeline.rs` or `interconnect/` non-test code |
+//! | `cli-config-drift`      | every `main.rs` CLI option appears as an `ExperimentConfig::to_json` key |
+//! | `bench-baseline-drift`  | recorded `BENCH_*.json` and `ci/bench_baseline*.json` key sets match in both directions |
+//!
+//! Everything runs on the hand-rolled token stream from [`lexer`] — no
+//! syn, no regex, no network. Run it as `cargo run --bin tidy`; CI runs
+//! it on both matrix legs before the bench gates.
+
+pub mod lexer;
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::path::Path;
+
+use self::lexer::{lex, TokKind, Token};
+
+/// One tidy diagnosis, printed as `file:line: [rule] message`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// Forward-slash-normalized path for suffix/substring scoping.
+fn norm_path(path: &str) -> String {
+    path.replace('\\', "/")
+}
+
+/// Run every per-file rule over one source text. `path` scopes the
+/// path-dependent rules (`scheduler-panic`, the `util/json.rs` sentinel
+/// exemption) — pass the path the file would have in the repo.
+pub fn lint_source(path: &str, src: &str) -> Vec<Finding> {
+    let file = norm_path(path);
+    let toks = lex(src);
+    let code: Vec<&Token> =
+        toks.iter().filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment)).collect();
+    let comments: Vec<&Token> =
+        toks.iter().filter(|t| matches!(t.kind, TokKind::LineComment | TokKind::BlockComment)).collect();
+
+    let mut findings = Vec::new();
+    rule_safety_comment(&file, &code, &comments, &mut findings);
+    rule_target_feature_guard(&file, &code, &mut findings);
+    rule_alloc_free(&file, &code, &comments, &mut findings);
+    rule_nonfinite_sentinel(&file, &code, &mut findings);
+    rule_scheduler_panic(&file, &code, &mut findings);
+    findings
+}
+
+// ---- rule: safety-comment --------------------------------------------------
+
+/// Every `unsafe` keyword (block, fn, impl) must have a comment
+/// containing `SAFETY:` on one of the 4 lines above it (or its own).
+fn rule_safety_comment(
+    file: &str,
+    code: &[&Token],
+    comments: &[&Token],
+    findings: &mut Vec<Finding>,
+) {
+    let mut safety_lines = BTreeSet::new();
+    for c in comments {
+        if c.text.contains("SAFETY:") {
+            for l in c.line..=c.line + c.extra_lines() {
+                safety_lines.insert(l);
+            }
+        }
+    }
+    for t in code {
+        if t.kind == TokKind::Ident && t.text == "unsafe" {
+            let lo = t.line.saturating_sub(4);
+            if safety_lines.range(lo..=t.line).next().is_none() {
+                findings.push(Finding {
+                    file: file.to_string(),
+                    line: t.line,
+                    rule: "safety-comment",
+                    message: "`unsafe` without a `// SAFETY:` comment in the 4 lines above"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+// ---- rule: target-feature-guard --------------------------------------------
+
+/// Every `#[target_feature]` fn must be non-`pub` (reachable only
+/// through its module's dispatch wrapper) and every call to it must sit
+/// within 10 lines below a runtime `is_x86_feature_detected!` guard —
+/// the `BitpackImpl`-style dispatch pattern.
+fn rule_target_feature_guard(file: &str, code: &[&Token], findings: &mut Vec<Finding>) {
+    let is_ident = |t: &Token, s: &str| t.kind == TokKind::Ident && t.text == s;
+    let is_punct = |t: &Token, c: char| t.kind == TokKind::Punct(c);
+
+    // collect guard lines once
+    let detector_lines: Vec<usize> = code
+        .iter()
+        .filter(|t| is_ident(t, "is_x86_feature_detected"))
+        .map(|t| t.line)
+        .collect();
+
+    // find every `#[target_feature(...)] ... fn NAME`
+    let mut gated: Vec<(String, usize)> = Vec::new();
+    for i in 0..code.len() {
+        if !is_ident(code[i], "target_feature") {
+            continue;
+        }
+        if i < 2 || !is_punct(code[i - 1], '[') || !is_punct(code[i - 2], '#') {
+            continue;
+        }
+        // scan forward to the fn name (skipping further attributes and
+        // the `unsafe` keyword); flag any `pub` on the way.
+        let mut j = i + 1;
+        let mut name: Option<(String, usize)> = None;
+        while j < code.len() && j < i + 64 {
+            if is_ident(code[j], "pub") {
+                findings.push(Finding {
+                    file: file.to_string(),
+                    line: code[j].line,
+                    rule: "target-feature-guard",
+                    message: "#[target_feature] fn must not be `pub` — expose a runtime-dispatch \
+                              wrapper instead"
+                        .to_string(),
+                });
+            }
+            if is_ident(code[j], "fn") && j + 1 < code.len() {
+                name = Some((code[j + 1].text.clone(), code[j + 1].line));
+                break;
+            }
+            j += 1;
+        }
+        if let Some(nl) = name {
+            gated.push(nl);
+        }
+    }
+
+    // every call site of a gated fn needs a detector guard close above
+    for (name, def_line) in &gated {
+        for k in 0..code.len() {
+            if !is_ident(code[k], name) || code[k].line == *def_line {
+                continue;
+            }
+            let is_call = k + 1 < code.len() && is_punct(code[k + 1], '(');
+            let is_def = k > 0 && is_ident(code[k - 1], "fn");
+            if !is_call || is_def {
+                continue;
+            }
+            let line = code[k].line;
+            let lo = line.saturating_sub(10);
+            if !detector_lines.iter().any(|&d| (lo..=line).contains(&d)) {
+                findings.push(Finding {
+                    file: file.to_string(),
+                    line,
+                    rule: "target-feature-guard",
+                    message: format!(
+                        "call to #[target_feature] fn `{name}` without an \
+                         is_x86_feature_detected! guard in the 10 lines above"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ---- rule: alloc-free ------------------------------------------------------
+
+const ALLOC_IDENTS: &[&str] = &["to_vec", "collect", "to_string", "with_capacity", "to_owned"];
+const ALLOC_MACROS: &[&str] = &["format", "vec"];
+const ALLOC_TYPES: &[&str] = &["Vec", "Box", "String"];
+const ALLOC_CTORS: &[&str] = &["new", "from", "default"];
+
+/// No allocating calls inside `// tidy:alloc-free` …
+/// `// tidy:end-alloc-free` fences — the static mirror of the
+/// counting-allocator contract (`util::benchkit::AllocCheck`).
+fn rule_alloc_free(
+    file: &str,
+    code: &[&Token],
+    comments: &[&Token],
+    findings: &mut Vec<Finding>,
+) {
+    // the linter's own docs name the markers to describe them
+    if file.contains("src/lint/") {
+        return;
+    }
+    // fence regions from marker comments (end checked first: the open
+    // marker is a prefix of the close marker)
+    let mut regions: Vec<(usize, usize)> = Vec::new();
+    let mut open: Option<usize> = None;
+    for c in comments {
+        if c.text.contains("tidy:end-alloc-free") {
+            match open.take() {
+                Some(start) => regions.push((start, c.line)),
+                None => findings.push(Finding {
+                    file: file.to_string(),
+                    line: c.line,
+                    rule: "alloc-free",
+                    message: "tidy:end-alloc-free without a matching open marker".to_string(),
+                }),
+            }
+        } else if c.text.contains("tidy:alloc-free") {
+            if let Some(start) = open {
+                findings.push(Finding {
+                    file: file.to_string(),
+                    line: c.line,
+                    rule: "alloc-free",
+                    message: format!("tidy:alloc-free nested inside the fence opened at line {start}"),
+                });
+            } else {
+                open = Some(c.line);
+            }
+        }
+    }
+    if let Some(start) = open {
+        findings.push(Finding {
+            file: file.to_string(),
+            line: start,
+            rule: "alloc-free",
+            message: "unclosed tidy:alloc-free fence".to_string(),
+        });
+    }
+    if regions.is_empty() {
+        return;
+    }
+
+    let in_fence = |line: usize| regions.iter().any(|&(s, e)| (s..=e).contains(&line));
+    let mut flag = |line: usize, what: String| {
+        findings.push(Finding {
+            file: file.to_string(),
+            line,
+            rule: "alloc-free",
+            message: format!("allocating call `{what}` inside a tidy:alloc-free fence"),
+        })
+    };
+    for (k, t) in code.iter().enumerate() {
+        if t.kind != TokKind::Ident || !in_fence(t.line) {
+            continue;
+        }
+        let next = code.get(k + 1);
+        if ALLOC_IDENTS.contains(&t.text.as_str()) {
+            flag(t.line, t.text.clone());
+        } else if ALLOC_MACROS.contains(&t.text.as_str())
+            && next.is_some_and(|n| n.kind == TokKind::Punct('!'))
+        {
+            flag(t.line, format!("{}!", t.text));
+        } else if ALLOC_TYPES.contains(&t.text.as_str())
+            && next.is_some_and(|n| n.kind == TokKind::Punct(':'))
+            && code.get(k + 2).is_some_and(|n| n.kind == TokKind::Punct(':'))
+            && code.get(k + 3).is_some_and(|n| {
+                n.kind == TokKind::Ident && ALLOC_CTORS.contains(&n.text.as_str())
+            })
+        {
+            flag(t.line, format!("{}::{}", t.text, code[k + 3].text));
+        }
+    }
+}
+
+// ---- rule: nonfinite-sentinel ----------------------------------------------
+
+/// Raw non-finite float sentinel strings may only be emitted by the
+/// JSON writer (`util/json.rs`), which owns the encode/decode pair —
+/// and by this linter, which must name them to ban them.
+fn rule_nonfinite_sentinel(file: &str, code: &[&Token], findings: &mut Vec<Finding>) {
+    if file.ends_with("util/json.rs") || file.contains("src/lint/") {
+        return;
+    }
+    for t in code {
+        if t.kind == TokKind::Str
+            && (t.text == "NaN" || t.text == "Infinity" || t.text == "-Infinity")
+        {
+            findings.push(Finding {
+                file: file.to_string(),
+                line: t.line,
+                rule: "nonfinite-sentinel",
+                message: format!(
+                    "raw non-finite sentinel string \"{}\" outside util/json.rs",
+                    t.text
+                ),
+            });
+        }
+    }
+}
+
+// ---- rule: scheduler-panic -------------------------------------------------
+
+/// The scheduler paths (`sim/timeline.rs`, `interconnect/`) must stay
+/// panic-free in non-test code: no `.unwrap()`, no `.expect(`, no
+/// `panic!` — a panicking scheduler would take the whole simulated
+/// training run down instead of surfacing a verifiable violation.
+fn rule_scheduler_panic(file: &str, code: &[&Token], findings: &mut Vec<Finding>) {
+    if !(file.ends_with("sim/timeline.rs") || file.contains("interconnect/")) {
+        return;
+    }
+    let is_ident = |t: &Token, s: &str| t.kind == TokKind::Ident && t.text == s;
+    let is_punct = |t: &Token, c: char| t.kind == TokKind::Punct(c);
+
+    // exempt `#[cfg(test)] mod … { … }` regions (token index ranges)
+    let mut exempt: Vec<(usize, usize)> = Vec::new();
+    for i in 0..code.len() {
+        let pat = i + 6 < code.len()
+            && is_punct(code[i], '#')
+            && is_punct(code[i + 1], '[')
+            && is_ident(code[i + 2], "cfg")
+            && is_punct(code[i + 3], '(')
+            && is_ident(code[i + 4], "test")
+            && is_punct(code[i + 5], ')')
+            && is_punct(code[i + 6], ']');
+        if !pat {
+            continue;
+        }
+        // find the block the attribute covers: first `{` after it, then
+        // its matching `}` (string/char braces are inside literal tokens,
+        // so token-level counting is exact)
+        let mut j = i + 7;
+        while j < code.len() && !is_punct(code[j], '{') {
+            j += 1;
+        }
+        let mut depth = 0usize;
+        let start = j;
+        while j < code.len() {
+            if is_punct(code[j], '{') {
+                depth += 1;
+            } else if is_punct(code[j], '}') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            j += 1;
+        }
+        exempt.push((start, j));
+    }
+    let exempted = |k: usize| exempt.iter().any(|&(s, e)| (s..=e).contains(&k));
+
+    for k in 0..code.len() {
+        if exempted(k) {
+            continue;
+        }
+        if is_punct(code[k], '.')
+            && k + 2 < code.len()
+            && code[k + 1].kind == TokKind::Ident
+            && (code[k + 1].text == "unwrap" || code[k + 1].text == "expect")
+            && is_punct(code[k + 2], '(')
+        {
+            findings.push(Finding {
+                file: file.to_string(),
+                line: code[k + 1].line,
+                rule: "scheduler-panic",
+                message: format!(
+                    "`.{}()` on a scheduler path — return or record a violation instead",
+                    code[k + 1].text
+                ),
+            });
+        }
+        if code[k].kind == TokKind::Ident
+            && code[k].text == "panic"
+            && k + 1 < code.len()
+            && is_punct(code[k + 1], '!')
+        {
+            findings.push(Finding {
+                file: file.to_string(),
+                line: code[k].line,
+                rule: "scheduler-panic",
+                message: "`panic!` on a scheduler path".to_string(),
+            });
+        }
+    }
+}
+
+// ---- crate walk + cross-file rules -----------------------------------------
+
+/// Recursively collect `.rs` files under `dir` into `out`, skipping any
+/// directory named `tidy_fixtures` (the known-bad lint fixtures).
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == "tidy_fixtures") {
+                continue;
+            }
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the whole crate rooted at `root` (the directory holding
+/// `Cargo.toml`): every `.rs` file under `src/`, `benches/` and
+/// `tests/` (fixtures excluded) through [`lint_source`], plus the
+/// cross-file drift rules.
+pub fn lint_crate(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    for sub in ["src", "benches", "tests"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files)?;
+        }
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for path in &files {
+        let src = std::fs::read_to_string(path)?;
+        let rel = path.strip_prefix(root).unwrap_or(path);
+        findings.extend(lint_source(&rel.to_string_lossy(), &src));
+    }
+    rule_cli_config_drift(root, &mut findings)?;
+    rule_bench_baseline_drift(root, &mut findings);
+    Ok(findings)
+}
+
+/// CLI options that are output/IO paths, not experiment state — exempt
+/// from the config-provenance requirement.
+const CLI_CONFIG_EXEMPT: &[&str] = &["csv", "json"];
+
+/// `--grad-adt` is a restricted spelling of `--grad-policy`; both land
+/// in the config's `grad_policy` provenance key.
+const CLI_CONFIG_ALIASES: &[(&str, &str)] = &[("grad_adt", "grad_policy")];
+
+/// Every CLI option declared in `src/main.rs` must appear (hyphens →
+/// underscores, aliases applied) as a key in
+/// `ExperimentConfig::to_json` — otherwise a run's provenance JSON
+/// silently under-reports how it was configured.
+fn rule_cli_config_drift(root: &Path, findings: &mut Vec<Finding>) -> std::io::Result<()> {
+    let main_path = root.join("src/main.rs");
+    let config_path = root.join("src/config/mod.rs");
+    if !main_path.is_file() || !config_path.is_file() {
+        return Ok(());
+    }
+    let main_toks = lex(&std::fs::read_to_string(&main_path)?);
+    let config_toks = lex(&std::fs::read_to_string(&config_path)?);
+    let code = |toks: &[Token]| -> Vec<Token> {
+        toks.iter()
+            .filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+            .cloned()
+            .collect()
+    };
+    let main_code = code(&main_toks);
+    let config_code = code(&config_toks);
+
+    // options: every Str between `options :` and the closing `]`
+    let mut options: Vec<(String, usize)> = Vec::new();
+    for i in 0..main_code.len() {
+        if main_code[i].kind == TokKind::Ident
+            && main_code[i].text == "options"
+            && main_code.get(i + 1).is_some_and(|t| t.kind == TokKind::Punct(':'))
+        {
+            let mut j = i + 2;
+            while j < main_code.len() && main_code[j].kind != TokKind::Punct(']') {
+                if main_code[j].kind == TokKind::Str {
+                    options.push((main_code[j].text.clone(), main_code[j].line));
+                }
+                j += 1;
+            }
+            break;
+        }
+    }
+
+    // config keys: every Str directly after `(` inside to_json's body
+    let mut keys = BTreeSet::new();
+    for i in 0..config_code.len() {
+        if !(config_code[i].kind == TokKind::Ident
+            && config_code[i].text == "to_json"
+            && i > 0
+            && config_code[i - 1].kind == TokKind::Ident
+            && config_code[i - 1].text == "fn")
+        {
+            continue;
+        }
+        let mut j = i;
+        while j < config_code.len() && config_code[j].kind != TokKind::Punct('{') {
+            j += 1;
+        }
+        let mut depth = 0usize;
+        while j < config_code.len() {
+            match config_code[j].kind {
+                TokKind::Punct('{') => depth += 1,
+                TokKind::Punct('}') => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                TokKind::Str
+                    if config_code[j - 1].kind == TokKind::Punct('(') =>
+                {
+                    keys.insert(config_code[j].text.clone());
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        break;
+    }
+
+    if options.is_empty() || keys.is_empty() {
+        findings.push(Finding {
+            file: "src/main.rs".to_string(),
+            line: 1,
+            rule: "cli-config-drift",
+            message: "could not extract the CLI option list or config JSON keys".to_string(),
+        });
+        return Ok(());
+    }
+    for (opt, line) in options {
+        if CLI_CONFIG_EXEMPT.contains(&opt.as_str()) {
+            continue;
+        }
+        let mut key = opt.replace('-', "_");
+        if let Some(&(_, target)) = CLI_CONFIG_ALIASES.iter().find(|(a, _)| *a == key) {
+            key = target.to_string();
+        }
+        if !keys.contains(&key) {
+            findings.push(Finding {
+                file: "src/main.rs".to_string(),
+                line,
+                rule: "cli-config-drift",
+                message: format!(
+                    "CLI option --{opt} has no `{key}` key in ExperimentConfig::to_json — \
+                     run provenance would under-report it"
+                ),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// (recorded bench output, checked-in baseline) pairs the CI gates
+/// compare; tidy cross-checks their *key sets* in both directions when
+/// the recorded side exists (it is produced by the benches, so a fresh
+/// checkout silently skips this rule).
+const BENCH_BASELINES: &[(&str, &str)] = &[
+    ("artifacts/bench_out/BENCH_timeline.json", "ci/bench_baseline.json"),
+    ("artifacts/bench_out/BENCH_table2_x86.json", "ci/bench_baseline_table2.json"),
+    ("artifacts/bench_out/BENCH_table3_power.json", "ci/bench_baseline_table3.json"),
+    ("artifacts/bench_out/BENCH_gradcomp.json", "ci/bench_baseline_gradcomp.json"),
+];
+
+fn json_key_paths(prefix: &str, v: &crate::util::json::Json, out: &mut BTreeSet<String>) {
+    if let crate::util::json::Json::Obj(map) = v {
+        for (k, child) in map {
+            let path = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+            json_key_paths(&path, child, out);
+            out.insert(path);
+        }
+    }
+}
+
+/// Every key a bench emitted must exist in its baseline and vice versa
+/// — one-sided drift means the regression gate silently stopped
+/// covering (or started requiring) a metric.
+fn rule_bench_baseline_drift(root: &Path, findings: &mut Vec<Finding>) {
+    for &(bench, baseline) in BENCH_BASELINES {
+        let bench_path = root.join(bench);
+        let baseline_path = root.join(baseline);
+        if !bench_path.is_file() || !baseline_path.is_file() {
+            continue;
+        }
+        let parsed = |p: &Path| {
+            std::fs::read_to_string(p)
+                .ok()
+                .and_then(|s| crate::util::json::Json::parse(&s).ok())
+        };
+        let (Some(bj), Some(cj)) = (parsed(&bench_path), parsed(&baseline_path)) else {
+            findings.push(Finding {
+                file: bench.to_string(),
+                line: 1,
+                rule: "bench-baseline-drift",
+                message: format!("could not parse {bench} or {baseline}"),
+            });
+            continue;
+        };
+        let mut bench_keys = BTreeSet::new();
+        let mut base_keys = BTreeSet::new();
+        json_key_paths("", &bj, &mut bench_keys);
+        json_key_paths("", &cj, &mut base_keys);
+        for missing in bench_keys.difference(&base_keys) {
+            findings.push(Finding {
+                file: baseline.to_string(),
+                line: 1,
+                rule: "bench-baseline-drift",
+                message: format!("bench emits `{missing}` but {baseline} has no such key"),
+            });
+        }
+        for missing in base_keys.difference(&bench_keys) {
+            findings.push(Finding {
+                file: baseline.to_string(),
+                line: 1,
+                rule: "bench-baseline-drift",
+                message: format!("{baseline} requires `{missing}` but the bench no longer emits it"),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_snippet_has_no_findings() {
+        let src = "fn add(a: usize, b: usize) -> usize { a + b }\n";
+        assert!(lint_source("src/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_without_safety_fires() {
+        let src = "fn f(p: *const u8) -> u8 { unsafe { *p } }\n";
+        let f = lint_source("src/foo.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "safety-comment");
+        // …and the comment silences it
+        let ok = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller contract\n    unsafe { *p }\n}\n";
+        assert!(lint_source("src/foo.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn scheduler_panic_is_path_scoped() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+        assert!(lint_source("src/other.rs", src).is_empty());
+        let f = lint_source("src/sim/timeline.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "scheduler-panic");
+        // test modules are exempt
+        let test_mod = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u32>) -> u32 { x.unwrap() }\n}\n";
+        assert!(lint_source("src/sim/timeline.rs", test_mod).is_empty());
+    }
+
+    #[test]
+    fn alloc_fence_catches_vec_new() {
+        let src = "fn f() {\n    // tidy:alloc-free\n    let v: Vec<u8> = Vec::new();\n    // tidy:end-alloc-free\n    drop(v);\n}\n";
+        let f = lint_source("src/foo.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "alloc-free");
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn unbalanced_fence_fires() {
+        let src = "fn f() {\n    // tidy:alloc-free\n    let x = 1;\n    drop(x);\n}\n";
+        let f = lint_source("src/foo.rs", src);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("unclosed"));
+    }
+
+    #[test]
+    fn sentinel_rule_exempts_json_module() {
+        let sentinel = "Na".to_string() + "N";
+        let src = format!("fn f() -> &'static str {{ \"{sentinel}\" }}\n");
+        assert!(lint_source("src/util/json.rs", &src).is_empty());
+        let f = lint_source("src/metrics/mod.rs", &src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "nonfinite-sentinel");
+    }
+
+    #[test]
+    fn target_feature_guard_needs_detector() {
+        let bad = "#[target_feature(enable = \"avx2\")]\nunsafe fn k(x: &[f32]) {}\nfn call(x: &[f32]) {\n    // SAFETY: not actually checked\n    unsafe { k(x) }\n}\n";
+        let f = lint_source("src/foo.rs", bad);
+        assert_eq!(f.len(), 2, "{f:?}"); // missing SAFETY on the gated fn + unguarded call
+        assert!(f.iter().any(|x| x.rule == "target-feature-guard"));
+        let good = "#[target_feature(enable = \"avx2\")]\n// SAFETY: caller checks avx2\nunsafe fn k(x: &[f32]) {}\nfn call(x: &[f32]) {\n    if std::arch::is_x86_feature_detected!(\"avx2\") {\n        // SAFETY: just checked\n        unsafe { k(x) }\n    }\n}\n";
+        assert!(lint_source("src/foo.rs", good).is_empty(), "{:?}", lint_source("src/foo.rs", good));
+    }
+}

@@ -1,12 +1,14 @@
 //! `a2dtwp` — launcher CLI for the A²DTWP training system.
 //!
 //! Subcommands:
-//!   train    Real-mode training of a micro model through the AOT
-//!            executables (paper Fig 1 pipeline, true numerics).
-//!   profile  Simulated-mode per-kernel batch profile of a full-size
-//!            model (the paper's Table II/III).
-//!   models   Print the model zoo (paper Table I census + param counts).
-//!   info     Runtime/platform diagnostics.
+//!   train           Real-mode training of a micro model through the AOT
+//!                   executables (paper Fig 1 pipeline, true numerics).
+//!   profile         Simulated-mode per-kernel batch profile of a
+//!                   full-size model (the paper's Table II/III).
+//!   verify-schedule Run the schedule race/invariant verifier over the
+//!                   recorded lane × queue × overlap-mode grid.
+//!   models          Print the model zoo (paper Table I census + params).
+//!   info            Runtime/platform diagnostics.
 //!
 //! Examples:
 //!   a2dtwp train --model alexnet_micro --batch-size 32 --policy awp
@@ -23,7 +25,7 @@ use a2dtwp::sim::{OverlapMode, SystemProfile, OVERLAP_NAMES, SCENARIO_NAMES};
 use a2dtwp::util::benchkit::Table;
 use a2dtwp::util::cli::{Args, Spec};
 
-const USAGE: &str = "usage: a2dtwp <train|profile|models|info> [options]
+const USAGE: &str = "usage: a2dtwp <train|profile|verify-schedule|models|info> [options]
   common options:
     --model NAME         (train: *_micro; profile: alexnet|vgg_a|resnet34)
     --batch-size N       global batch (split across 4 simulated GPUs)
@@ -92,6 +94,7 @@ fn main() {
     let result = match cmd {
         "train" => cmd_train(&args),
         "profile" => cmd_profile(&args),
+        "verify-schedule" => cmd_verify_schedule(&args),
         "models" => cmd_models(),
         "info" => cmd_info(),
         other => {
@@ -119,6 +122,7 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
         cfg.system = cfg.system.clone().scenario(scenario).ok_or_else(|| {
             format!("unknown scenario '{scenario}' ({})", SCENARIO_NAMES.join("|"))
         })?;
+        cfg.scenario = scenario.to_string();
     }
     if let Some(overlap) = args.get("overlap") {
         cfg.overlap = OverlapMode::parse(overlap).ok_or_else(|| {
@@ -386,6 +390,85 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         std::fs::write(path, metrics.to_string_pretty())?;
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+/// Run the schedule race/invariant verifier (`sim::verify`) over the
+/// recorded grid: 8/64/256 GPU lanes × 1/2/4 D2H queues × the three
+/// overlap modes, plus cross-mode busy-conservation per cell group.
+/// Exits non-zero on any violation — CI runs this on both matrix legs.
+fn cmd_verify_schedule(args: &Args) -> anyhow::Result<()> {
+    use a2dtwp::interconnect::Interconnect;
+    use a2dtwp::sim::{
+        build_training_timeline, layer_loads_mean_bytes, verify_mode_conservation,
+        verify_timeline, BatchSpec, PipelineWindow, Timeline,
+    };
+    let model = args.get_or("model", "vgg_a");
+    let batch = args.get_usize("batch-size", 64).map_err(|e| anyhow::anyhow!(e))?;
+    let desc = model_by_name(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
+    // the paper's converged ≈3x compression state, as in timeline_micro
+    let loads = layer_loads_mean_bytes(&desc, 4.0 / 3.0);
+    let modes =
+        [OverlapMode::Serialized, OverlapMode::LayerPipelined, OverlapMode::GpuPipelined];
+    let mut t = Table::new(
+        format!("verify-schedule — {model} b{batch} on x86"),
+        &["lanes", "queues", "mode", "events", "edges", "checks", "result"],
+    );
+    let mut failures = 0usize;
+    for lanes in [8usize, 64, 256] {
+        for queues in [1usize, 2, 4] {
+            let mut built: Vec<Timeline> = Vec::new();
+            for mode in modes {
+                let profile =
+                    SystemProfile::x86().with_n_gpus(lanes).with_d2h_queues(queues);
+                let mut ic = Interconnect::new(profile.clone());
+                let spec = BatchSpec {
+                    batch_size: batch,
+                    uses_adt: true,
+                    include_norms: true,
+                    grad_adt: false,
+                };
+                // same window for every mode: the sync builders ignore
+                // staleness, so busy totals stay comparable across modes
+                let window = PipelineWindow::new(2, 1);
+                let tl = build_training_timeline(mode, &profile, &mut ic, &loads, spec, window);
+                let (checks, result) = match verify_timeline(&tl) {
+                    Ok(report) => (report.checks, "ok".to_string()),
+                    Err(violations) => {
+                        for v in &violations {
+                            eprintln!("  {lanes}x{queues} {}: {v}", mode.name());
+                        }
+                        failures += violations.len();
+                        (0, format!("{} violations", violations.len()))
+                    }
+                };
+                t.row(&[
+                    lanes.to_string(),
+                    queues.to_string(),
+                    mode.name().to_string(),
+                    tl.events().len().to_string(),
+                    tl.dep_edges().len().to_string(),
+                    checks.to_string(),
+                    result,
+                ]);
+                built.push(tl);
+            }
+            // overlap mode must move work in time, never between phases
+            if let Err(violations) = verify_mode_conservation(&built[0], &[&built[1], &built[2]])
+            {
+                for v in &violations {
+                    eprintln!("  {lanes}x{queues} conservation: {v}");
+                }
+                failures += violations.len();
+            }
+        }
+    }
+    t.print();
+    if failures > 0 {
+        anyhow::bail!("{failures} schedule invariant violation(s)");
+    }
+    println!("\nall schedules verified: deps honoured, resources exclusive, busy conserved");
     Ok(())
 }
 

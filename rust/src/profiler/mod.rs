@@ -68,8 +68,20 @@ impl Phase {
         )
     }
 
-    fn idx(&self) -> usize {
-        Phase::ALL.iter().position(|p| p == self).unwrap()
+    /// Dense row index into `Phase::ALL`-ordered tables (the timeline's
+    /// per-phase busy accumulators share the layout).
+    pub fn idx(&self) -> usize {
+        match self {
+            Phase::H2D => 0,
+            Phase::D2H => 1,
+            Phase::Conv => 2,
+            Phase::Fc => 3,
+            Phase::GradUpdate => 4,
+            Phase::AwpNorm => 5,
+            Phase::Bitpack => 6,
+            Phase::Bitunpack => 7,
+            Phase::GradUnpack => 8,
+        }
     }
 }
 

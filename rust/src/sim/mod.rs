@@ -5,6 +5,7 @@
 
 mod system;
 pub mod timeline;
+pub mod verify;
 
 pub use system::{SystemProfile, SCENARIO_NAMES, SYSTEM_NAMES};
 pub use timeline::{
@@ -12,4 +13,8 @@ pub use timeline::{
     layer_loads, layer_loads_mean_bytes, BatchSpec, Event, EventId, LayerLoad, OverlapMode,
     PipelineWindow, ReadyQueue, Resource, Timeline, DEFAULT_PIPELINE_WINDOW, DEFAULT_STALENESS,
     OVERLAP_NAMES,
+};
+pub use verify::{
+    serialized_chain_violations, verify_mode_conservation, verify_stream, verify_timeline,
+    VerifyReport, Violation,
 };

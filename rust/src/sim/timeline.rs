@@ -125,7 +125,7 @@ impl Resource {
     /// any lane count — the old association-list scan was O(lanes) per
     /// event and dominated `schedule_async_training` beyond a few dozen
     /// GPUs (see `benches/timeline_micro.rs`).
-    fn index(self) -> usize {
+    pub(crate) fn index(self) -> usize {
         match self {
             Resource::Cpu => 0,
             Resource::LinkH2d => 1,
@@ -138,7 +138,7 @@ impl Resource {
 
 /// Handle to a scheduled event, usable as a dependency.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct EventId(usize);
+pub struct EventId(pub(crate) usize);
 
 /// One scheduled event (resolved times included).
 #[derive(Clone, Copy, Debug)]
@@ -354,7 +354,7 @@ impl Timeline {
     pub fn busy_s(&self) -> [f64; 9] {
         let mut busy = [0.0f64; 9];
         for e in &self.events {
-            busy[Phase::ALL.iter().position(|p| *p == e.phase).unwrap()] += e.busy_s;
+            busy[e.phase.idx()] += e.busy_s;
         }
         busy
     }
@@ -802,13 +802,16 @@ fn schedule_sync_batch(
     // 4b-6: backprop in reverse layer order; each layer's gradient gathers
     // and updates as soon as its backward pass finishes, double-buffering
     // against the still-running backprop of earlier layers.
-    let mut prev_bwd: Option<EventId> = None;
+    // The backward chain seeds off the last forward; each iteration then
+    // chains off the previous layer's backward (`fwds` has one event per
+    // layer, so the seed exists whenever the loop body runs at all).
+    let mut prev_bwd: Option<EventId> = fwds.last().copied();
     let mut updates: Vec<Option<EventId>> = vec![None; n];
     for (l, load) in layers.iter().enumerate().rev() {
         let phase = if load.is_conv { Phase::Conv } else { Phase::Fc };
         let rate = if load.is_conv { profile.conv_flops } else { profile.fc_flops };
         let bwd_s = 2.0 * (load.fwd_flops as f64 * batch_size as f64 / rate) * wall;
-        let dep = prev_bwd.unwrap_or(*fwds.last().expect("at least one layer"));
+        let Some(dep) = prev_bwd else { break };
         let bwd = tl.schedule(Resource::GpuPool, phase, bwd_s, &[dep]);
         prev_bwd = Some(bwd);
         let d2h = interconnect.d2h.enqueue(
@@ -846,7 +849,9 @@ fn schedule_sync_batch(
         }
     }
 
-    updates.into_iter().map(|u| u.expect("every layer updated")).collect()
+    // Every layer was updated in the reverse loop above; `flatten` keeps
+    // the collection panic-free on the (impossible) empty slot.
+    updates.into_iter().flatten().collect()
 }
 
 /// Append the asynchronous per-GPU schedule of `window.n_batches`
@@ -962,7 +967,8 @@ fn schedule_async_training(
                 let busy = if g == 0 { base * wall } else { 0.0 };
                 prev_fwd = Some(tl.schedule_weighted(lane, phase, base / speed, busy, &[dep]));
             }
-            let mut chain = prev_fwd.expect("at least one layer");
+            // A lane with no layers has no backward chain to emit.
+            let Some(mut chain) = prev_fwd else { continue };
             for (l, load) in layers.iter().enumerate().rev() {
                 let phase = if load.is_conv { Phase::Conv } else { Phase::Fc };
                 let rate = if load.is_conv { profile.conv_flops } else { profile.fc_flops };
@@ -981,8 +987,7 @@ fn schedule_async_training(
             let mut order: Vec<usize> = (0..n_gpus).collect();
             order.sort_by(|&a, &b| {
                 tl.finish_s(wgrads[l][a])
-                    .partial_cmp(&tl.finish_s(wgrads[l][b]))
-                    .unwrap()
+                    .total_cmp(&tl.finish_s(wgrads[l][b]))
                     .then(a.cmp(&b))
             });
             for (i, &g) in order.iter().enumerate() {

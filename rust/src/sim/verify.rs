@@ -1,0 +1,398 @@
+//! Schedule race/invariant verifier: an exhaustive checker over any
+//! constructed [`Timeline`] event graph.
+//!
+//! The scheduler's correctness rules used to live in scattered
+//! `debug_assert`s and property tests that fire *after* a bug is on a
+//! hot path. This module states them once, checks them on a whole
+//! recorded schedule, and reports every violation it finds:
+//!
+//! 1. **Field sanity** — every event's `start_s` / `duration_s` /
+//!    `busy_s` / `finish_s` is finite and non-negative, and
+//!    `finish_s == start_s + duration_s` bit-for-bit.
+//! 2. **Edge order** — every dependency edge points forward in emission
+//!    order (`from < to`) and stays in range, which also proves the
+//!    dependency graph acyclic (a topological order exists by
+//!    construction).
+//! 3. **Dependencies** — every edge is respected in *time*:
+//!    `events[to].start_s >= events[from].finish_s`.
+//! 4. **Resource exclusivity** — no two events overlap on one clocked
+//!    resource. On [`Resource::LinkD2h`] this is exactly the wire-serial
+//!    constraint across `ReadyQueue` gap-fills: the multi-queue channel
+//!    may reorder legs, but the wire carries one leg at a time.
+//! 5. **Serialized chaining** ([`verify_timeline`] only) — in
+//!    [`OverlapMode::Serialized`] every event starts exactly where the
+//!    previous one finished.
+//! 6. **Mode conservation** ([`verify_mode_conservation`]) — per-phase
+//!    busy totals and the Fig-1 serialized reference are bit-identical
+//!    across overlap modes and queue counts: overlap moves work in time,
+//!    never between phases.
+//!
+//! [`verify_stream`] operates on raw `(&[Event], &[(usize, usize)])`
+//! slices so tests can mutate a recorded schedule (shift a start, swap
+//! an edge) and assert rejection — the public [`Timeline`] API cannot
+//! construct such states. The CLI exposes the whole grid as
+//! `a2dtwp verify-schedule`; CI runs it on both matrix legs.
+
+use std::fmt;
+
+use super::timeline::{Event, OverlapMode, Resource, Timeline};
+
+/// One invariant violation found in a schedule. `Display` renders a
+/// one-line human-readable diagnosis; the enum carries the raw numbers
+/// for programmatic checks.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Violation {
+    /// An event field is NaN or infinite.
+    NonFinite { event: usize, field: &'static str, value: f64 },
+    /// An event field that must be non-negative is negative.
+    NegativeField { event: usize, field: &'static str, value: f64 },
+    /// `finish_s` disagrees with `start_s + duration_s` bit-for-bit.
+    FinishMismatch { event: usize, start_s: f64, duration_s: f64, finish_s: f64 },
+    /// A dependency edge is out of range or points backward/self-ward
+    /// in emission order (would admit a cycle).
+    EdgeOrder { from: usize, to: usize, events: usize },
+    /// A dependent event starts before its dependency finishes.
+    DepViolated { from: usize, to: usize, dep_finish_s: f64, start_s: f64 },
+    /// Two events overlap in time on one clocked resource.
+    ResourceOverlap { resource: Resource, first: usize, second: usize, finish_s: f64, start_s: f64 },
+    /// A `Serialized`-mode event does not start where its predecessor
+    /// finished.
+    SerializedChainBreak { event: usize, expected_s: f64, start_s: f64 },
+    /// A per-phase busy total drifted from the reference schedule.
+    BusyDrift { phase: usize, reference_s: f64, got_s: f64 },
+    /// The Fig-1 serialized reference drifted from the reference schedule.
+    SerialSumDrift { reference_s: f64, got_s: f64 },
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Violation::NonFinite { event, field, value } => {
+                write!(f, "event {event}: {field} is non-finite ({value})")
+            }
+            Violation::NegativeField { event, field, value } => {
+                write!(f, "event {event}: {field} is negative ({value})")
+            }
+            Violation::FinishMismatch { event, start_s, duration_s, finish_s } => write!(
+                f,
+                "event {event}: finish {finish_s} != start {start_s} + duration {duration_s}"
+            ),
+            Violation::EdgeOrder { from, to, events } => write!(
+                f,
+                "edge {from}->{to}: not forward in emission order ({events} events)"
+            ),
+            Violation::DepViolated { from, to, dep_finish_s, start_s } => write!(
+                f,
+                "edge {from}->{to}: dependent starts at {start_s} before dep finishes at {dep_finish_s}"
+            ),
+            Violation::ResourceOverlap { resource, first, second, finish_s, start_s } => write!(
+                f,
+                "{resource:?}: events {first} and {second} overlap ({start_s} < {finish_s})"
+            ),
+            Violation::SerializedChainBreak { event, expected_s, start_s } => write!(
+                f,
+                "event {event}: serialized chain broken (starts {start_s}, predecessor finished {expected_s})"
+            ),
+            Violation::BusyDrift { phase, reference_s, got_s } => write!(
+                f,
+                "phase {phase}: busy total {got_s} drifted from reference {reference_s}"
+            ),
+            Violation::SerialSumDrift { reference_s, got_s } => write!(
+                f,
+                "serialized reference {got_s} drifted from {reference_s}"
+            ),
+        }
+    }
+}
+
+/// What a successful verification covered, for reporting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct VerifyReport {
+    /// Events checked.
+    pub events: usize,
+    /// Dependency edges checked.
+    pub edges: usize,
+    /// Distinct resources whose exclusivity was checked.
+    pub resources: usize,
+    /// Individual invariant checks performed.
+    pub checks: usize,
+}
+
+/// Verify the core schedule invariants (field sanity, edge order /
+/// acyclicity, dependency respect, per-resource exclusivity) over a raw
+/// event stream + edge set. Returns a coverage report, or *every*
+/// violation found.
+pub fn verify_stream(
+    events: &[Event],
+    edges: &[(usize, usize)],
+) -> Result<VerifyReport, Vec<Violation>> {
+    let mut violations = Vec::new();
+    let mut checks = 0usize;
+
+    // 1: field sanity.
+    for (i, e) in events.iter().enumerate() {
+        for (field, value) in [
+            ("start_s", e.start_s),
+            ("duration_s", e.duration_s),
+            ("busy_s", e.busy_s),
+            ("finish_s", e.finish_s),
+        ] {
+            checks += 2;
+            if !value.is_finite() {
+                violations.push(Violation::NonFinite { event: i, field, value });
+            } else if value < 0.0 {
+                violations.push(Violation::NegativeField { event: i, field, value });
+            }
+        }
+        checks += 1;
+        if e.finish_s.to_bits() != (e.start_s + e.duration_s).to_bits() {
+            violations.push(Violation::FinishMismatch {
+                event: i,
+                start_s: e.start_s,
+                duration_s: e.duration_s,
+                finish_s: e.finish_s,
+            });
+        }
+    }
+
+    // 2 + 3: edges forward in emission order (⇒ acyclic) and respected
+    // in time.
+    for &(from, to) in edges {
+        checks += 2;
+        if from >= to || to >= events.len() {
+            violations.push(Violation::EdgeOrder { from, to, events: events.len() });
+            continue;
+        }
+        let dep_finish_s = events[from].finish_s;
+        let start_s = events[to].start_s;
+        if start_s < dep_finish_s {
+            violations.push(Violation::DepViolated { from, to, dep_finish_s, start_s });
+        }
+    }
+
+    // 4: per-resource exclusivity over half-open [start, finish)
+    // intervals. Events are bucketed by the timeline's dense clock-table
+    // index, sorted by start (total order — non-finite starts were
+    // already reported above), and adjacent pairs must not overlap.
+    // On LinkD2h this is the wire-serial constraint across gap-fills.
+    let mut by_resource: Vec<Vec<usize>> = Vec::new();
+    for (i, e) in events.iter().enumerate() {
+        let idx = e.resource.index();
+        if idx >= by_resource.len() {
+            by_resource.resize_with(idx + 1, Vec::new);
+        }
+        by_resource[idx].push(i);
+    }
+    let mut resources = 0usize;
+    for bucket in &mut by_resource {
+        if bucket.is_empty() {
+            continue;
+        }
+        resources += 1;
+        bucket.sort_by(|&a, &b| {
+            events[a]
+                .start_s
+                .total_cmp(&events[b].start_s)
+                .then(events[a].finish_s.total_cmp(&events[b].finish_s))
+        });
+        for w in bucket.windows(2) {
+            checks += 1;
+            let (first, second) = (w[0], w[1]);
+            if events[second].start_s < events[first].finish_s {
+                violations.push(Violation::ResourceOverlap {
+                    resource: events[first].resource,
+                    first,
+                    second,
+                    finish_s: events[first].finish_s,
+                    start_s: events[second].start_s,
+                });
+            }
+        }
+    }
+
+    if violations.is_empty() {
+        Ok(VerifyReport { events: events.len(), edges: edges.len(), resources, checks })
+    } else {
+        Err(violations)
+    }
+}
+
+/// [`verify_stream`] over a constructed [`Timeline`], plus the
+/// `Serialized`-mode chaining invariant: every event starts exactly
+/// (bit-for-bit) where its predecessor finished.
+pub fn verify_timeline(tl: &Timeline) -> Result<VerifyReport, Vec<Violation>> {
+    let mut result = verify_stream(tl.events(), tl.dep_edges());
+    if tl.mode() == OverlapMode::Serialized {
+        let chain = serialized_chain_violations(tl.events());
+        result = match result {
+            Ok(mut report) if chain.is_empty() => {
+                report.checks += tl.events().len();
+                Ok(report)
+            }
+            Ok(_) => Err(chain),
+            Err(mut violations) => {
+                violations.extend(chain);
+                Err(violations)
+            }
+        };
+    }
+    result
+}
+
+/// The `Serialized`-mode chaining invariant over a raw event stream:
+/// event *i* starts bit-for-bit where event *i*−1 finished (event 0 at
+/// 0.0). Exposed separately so tests can check mutated streams that a
+/// [`Timeline`] cannot be coaxed into holding.
+pub fn serialized_chain_violations(events: &[Event]) -> Vec<Violation> {
+    let mut chain = Vec::new();
+    let mut expected_s = 0.0f64;
+    for (i, e) in events.iter().enumerate() {
+        if e.start_s.to_bits() != expected_s.to_bits() {
+            chain.push(Violation::SerializedChainBreak { event: i, expected_s, start_s: e.start_s });
+        }
+        expected_s = e.finish_s;
+    }
+    chain
+}
+
+/// Verify that every schedule in `others` conserves the accounting of
+/// `reference` bit-for-bit: per-phase busy totals ([`Timeline::busy_s`])
+/// and the Fig-1 serialized reference
+/// ([`Timeline::serialized_sum_s`]). Overlap modes and D2H queue counts
+/// move work in *time*, never between phases — this is the cross-mode
+/// conservation law the Tables II/III accounting rests on.
+pub fn verify_mode_conservation(
+    reference: &Timeline,
+    others: &[&Timeline],
+) -> Result<(), Vec<Violation>> {
+    let mut violations = Vec::new();
+    let ref_busy = reference.busy_s();
+    let ref_sum = reference.serialized_sum_s();
+    for tl in others {
+        let busy = tl.busy_s();
+        for (phase, (&reference_s, &got_s)) in ref_busy.iter().zip(busy.iter()).enumerate() {
+            if reference_s.to_bits() != got_s.to_bits() {
+                violations.push(Violation::BusyDrift { phase, reference_s, got_s });
+            }
+        }
+        let got_s = tl.serialized_sum_s();
+        if ref_sum.to_bits() != got_s.to_bits() {
+            violations.push(Violation::SerialSumDrift { reference_s: ref_sum, got_s });
+        }
+    }
+    if violations.is_empty() {
+        Ok(())
+    } else {
+        Err(violations)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::Phase;
+
+    fn chain(mode: OverlapMode) -> Timeline {
+        let mut tl = Timeline::new(mode);
+        let a = tl.schedule(Resource::Cpu, Phase::Bitpack, 0.1, &[]);
+        let b = tl.schedule(Resource::LinkH2d, Phase::H2D, 0.2, &[a]);
+        let c = tl.schedule(Resource::GpuPool, Phase::Conv, 0.3, &[b]);
+        let d = tl.schedule(Resource::LinkD2h, Phase::D2H, 0.15, &[c]);
+        tl.schedule(Resource::Cpu, Phase::GradUpdate, 0.05, &[d]);
+        tl
+    }
+
+    #[test]
+    fn accepts_well_formed_timelines() {
+        for mode in [
+            OverlapMode::Serialized,
+            OverlapMode::LayerPipelined,
+            OverlapMode::GpuPipelined,
+        ] {
+            let tl = chain(mode);
+            let report = verify_timeline(&tl).expect("clean timeline rejected");
+            assert_eq!(report.events, 5);
+            assert_eq!(report.edges, 4);
+            assert!(report.checks > 0);
+        }
+    }
+
+    #[test]
+    fn rejects_shifted_start() {
+        let tl = chain(OverlapMode::LayerPipelined);
+        let mut events = tl.events().to_vec();
+        // pull the H2D transfer before its pack finishes
+        events[1].start_s = 0.0;
+        events[1].finish_s = events[1].start_s + events[1].duration_s;
+        let violations = verify_stream(&events, tl.dep_edges()).unwrap_err();
+        assert!(violations
+            .iter()
+            .any(|v| matches!(v, Violation::DepViolated { from: 0, to: 1, .. })));
+    }
+
+    #[test]
+    fn rejects_swapped_edge() {
+        let tl = chain(OverlapMode::LayerPipelined);
+        let mut edges = tl.dep_edges().to_vec();
+        let (from, to) = edges[0];
+        edges[0] = (to, from);
+        let violations = verify_stream(tl.events(), &edges).unwrap_err();
+        assert!(violations.iter().any(|v| matches!(v, Violation::EdgeOrder { .. })));
+    }
+
+    #[test]
+    fn rejects_resource_overlap() {
+        let tl = chain(OverlapMode::LayerPipelined);
+        let mut events = tl.events().to_vec();
+        // put the gradient update on the CPU while the pack still runs
+        events[4].start_s = 0.05;
+        events[4].finish_s = events[4].start_s + events[4].duration_s;
+        let violations = verify_stream(&events, &[]).unwrap_err();
+        assert!(violations
+            .iter()
+            .any(|v| matches!(v, Violation::ResourceOverlap { resource: Resource::Cpu, .. })));
+    }
+
+    #[test]
+    fn rejects_non_finite_and_broken_finish() {
+        let tl = chain(OverlapMode::LayerPipelined);
+        let mut events = tl.events().to_vec();
+        events[2].duration_s = f64::NAN;
+        let violations = verify_stream(&events, &[]).unwrap_err();
+        assert!(violations.iter().any(|v| matches!(
+            v,
+            Violation::NonFinite { event: 2, field: "duration_s", .. }
+        )));
+        assert!(violations
+            .iter()
+            .any(|v| matches!(v, Violation::FinishMismatch { event: 2, .. })));
+    }
+
+    #[test]
+    fn rejects_serialized_chain_break() {
+        let tl = chain(OverlapMode::Serialized);
+        assert!(serialized_chain_violations(tl.events()).is_empty());
+        let mut events = tl.events().to_vec();
+        // leave a hole in the serial chain: still dep-respecting, still
+        // exclusive, but no longer the left-fold serialized schedule
+        events[4].start_s += 1.0;
+        events[4].finish_s += 1.0;
+        assert!(verify_stream(&events, tl.dep_edges()).is_ok());
+        let chain_breaks = serialized_chain_violations(&events);
+        assert!(chain_breaks
+            .iter()
+            .any(|v| matches!(v, Violation::SerializedChainBreak { event: 4, .. })));
+    }
+
+    #[test]
+    fn mode_conservation_accepts_equal_and_rejects_drift() {
+        let a = chain(OverlapMode::Serialized);
+        let b = chain(OverlapMode::LayerPipelined);
+        assert!(verify_mode_conservation(&a, &[&b]).is_ok());
+        let mut c = Timeline::new(OverlapMode::GpuPipelined);
+        c.schedule(Resource::Cpu, Phase::Bitpack, 0.1, &[]);
+        let violations = verify_mode_conservation(&a, &[&c]).unwrap_err();
+        assert!(violations.iter().any(|v| matches!(v, Violation::BusyDrift { .. })));
+        assert!(violations.iter().any(|v| matches!(v, Violation::SerialSumDrift { .. })));
+    }
+}

@@ -8,6 +8,10 @@
 //! steady state. Benches are declared with `harness = false` and call
 //! [`Bench::run`] / [`Table`] directly.
 
+// The GlobalAlloc pass-through below needs `unsafe` — one of the few
+// files allowed to (crate-wide `unsafe_code = "deny"`, Cargo.toml [lints]).
+#![allow(unsafe_code)]
+
 use super::stats::Summary;
 use super::timer::{fmt_duration, Stopwatch};
 use std::alloc::{GlobalAlloc, Layout, System};
@@ -33,21 +37,25 @@ fn bump_alloc_count() {
 // SAFETY: pure pass-through to `System`; the counter has no effect on the
 // returned memory.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: forwards the caller's contract to `System::alloc` unchanged.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         bump_alloc_count();
         System.alloc(layout)
     }
 
+    // SAFETY: forwards the caller's contract to `System::alloc_zeroed`.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         bump_alloc_count();
         System.alloc_zeroed(layout)
     }
 
+    // SAFETY: forwards the caller's contract to `System::realloc`.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         bump_alloc_count();
         System.realloc(ptr, layout, new_size)
     }
 
+    // SAFETY: forwards the caller's contract to `System::dealloc`.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
         System.dealloc(ptr, layout)
     }

@@ -216,6 +216,9 @@ pub fn reduce_slices_into(dst: &mut [f32], srcs: &[&[f32]], scale: f32) {
         dst.fill(0.0);
         return;
     };
+    // tidy:alloc-free — the fused reduce is a steady-state hot loop; the
+    // counting-allocator contract (`AllocCheck`) pins it to zero heap
+    // traffic and `pallas-tidy` rejects allocating calls statically.
     let chunks = n / 8;
     for c in 0..chunks {
         let base = c * 8;
@@ -238,6 +241,7 @@ pub fn reduce_slices_into(dst: &mut [f32], srcs: &[&[f32]], scale: f32) {
         }
         dst[i] = acc * scale;
     }
+    // tidy:end-alloc-free
 }
 
 /// Threaded fused gradient reduce: partitions `dst` and runs

@@ -1,0 +1,193 @@
+//! Property-based tests over the schedule verifier (`sim::verify`).
+//!
+//! The contract pinned here (ISSUE 7 acceptance criteria):
+//!
+//! 1. Every timeline the builders construct — random profile, model,
+//!    loads, overlap mode, D2H queue count, pipeline window — passes
+//!    [`verify_timeline`], and the three overlap modes conserve busy
+//!    totals under [`verify_mode_conservation`].
+//! 2. Deliberately mutated schedules are rejected: shifting a dependent
+//!    event before its dependency reports `DepViolated`, swapping a
+//!    dependency edge reports `EdgeOrder`, and breaking the serialized
+//!    left-fold reports `SerializedChainBreak`.
+
+use a2dtwp::adt::RoundTo;
+use a2dtwp::interconnect::Interconnect;
+use a2dtwp::models::{alexnet, resnet34, vgg_a, ModelDesc};
+use a2dtwp::sim::{
+    build_training_timeline, layer_loads, layer_loads_mean_bytes, serialized_chain_violations,
+    verify_mode_conservation, verify_stream, verify_timeline, BatchSpec, LayerLoad, OverlapMode,
+    PipelineWindow, SystemProfile, Timeline, Violation, SCENARIO_NAMES,
+};
+use a2dtwp::util::propcheck::{check, Gen};
+
+const MODES: [OverlapMode; 3] =
+    [OverlapMode::Serialized, OverlapMode::LayerPipelined, OverlapMode::GpuPipelined];
+
+fn any_model(g: &mut Gen) -> ModelDesc {
+    match g.usize_in(0..3) {
+        0 => alexnet(200),
+        1 => vgg_a(200),
+        _ => resnet34(200),
+    }
+}
+
+fn any_loads(g: &mut Gen, desc: &ModelDesc, uses_adt: bool) -> Vec<LayerLoad> {
+    if !uses_adt {
+        layer_loads(desc, None)
+    } else if g.bool() {
+        let formats: Vec<RoundTo> =
+            (0..desc.weight_counts().len()).map(|_| *g.pick(&RoundTo::ALL)).collect();
+        layer_loads(desc, Some(&formats))
+    } else {
+        layer_loads_mean_bytes(desc, 1.0 + 3.0 * g.f32_in(0.0, 1.0) as f64)
+    }
+}
+
+fn any_profile(g: &mut Gen) -> SystemProfile {
+    let base = if g.bool() { SystemProfile::x86() } else { SystemProfile::power() };
+    let lanes = *g.pick(&[4usize, 8, 16]);
+    let scenario = *g.pick(&SCENARIO_NAMES);
+    let queues = *g.pick(&[1usize, 2, 4]);
+    base.with_n_gpus(lanes).scenario(scenario).unwrap().with_d2h_queues(queues)
+}
+
+fn any_spec(g: &mut Gen) -> BatchSpec {
+    let uses_adt = g.bool();
+    BatchSpec {
+        batch_size: *g.pick(&[32usize, 64]),
+        uses_adt,
+        include_norms: uses_adt,
+        grad_adt: false,
+    }
+}
+
+fn any_window(g: &mut Gen) -> PipelineWindow {
+    PipelineWindow::new(g.usize_in(1..4), g.usize_in(1..3))
+}
+
+fn build(
+    mode: OverlapMode,
+    profile: &SystemProfile,
+    loads: &[LayerLoad],
+    spec: BatchSpec,
+    window: PipelineWindow,
+) -> Timeline {
+    let mut ic = Interconnect::new(profile.clone());
+    build_training_timeline(mode, profile, &mut ic, loads, spec, window)
+}
+
+#[test]
+fn prop_verifier_accepts_every_built_timeline() {
+    check("verifier accepts builders", 60, |g| {
+        let profile = any_profile(g);
+        let desc = any_model(g);
+        let spec = any_spec(g);
+        let loads = any_loads(g, &desc, spec.uses_adt);
+        // same window for every mode: the sync builders ignore staleness,
+        // so busy totals stay comparable under mode conservation
+        let window = any_window(g);
+        let mut built = Vec::new();
+        for mode in MODES {
+            let tl = build(mode, &profile, &loads, spec, window);
+            let report = match verify_timeline(&tl) {
+                Ok(report) => report,
+                Err(violations) => {
+                    panic!("{mode:?} rejected: {violations:?}");
+                }
+            };
+            assert_eq!(report.events, tl.events().len());
+            assert_eq!(report.edges, tl.dep_edges().len());
+            assert!(report.checks >= report.events + report.edges);
+            built.push(tl);
+        }
+        // overlap moves work in time, never between phases
+        let (reference, others) = (&built[0], [&built[1], &built[2]]);
+        if let Err(violations) = verify_mode_conservation(reference, &others) {
+            panic!("mode conservation broken: {violations:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_verifier_rejects_shifted_starts() {
+    check("shifted start rejected", 40, |g| {
+        let profile = any_profile(g);
+        let desc = any_model(g);
+        let spec = any_spec(g);
+        let loads = any_loads(g, &desc, spec.uses_adt);
+        let tl = build(*g.pick(&MODES), &profile, &loads, spec, any_window(g));
+        // pick an edge whose dependency takes real time, then pull the
+        // dependent event strictly before that dependency finishes
+        let Some(&(from, to)) = tl
+            .dep_edges()
+            .iter()
+            .find(|&&(from, _)| tl.events()[from].finish_s > 0.0)
+        else {
+            return; // degenerate draw: nothing to mutate
+        };
+        let mut events = tl.events().to_vec();
+        events[to].start_s = events[from].finish_s * 0.5;
+        events[to].finish_s = events[to].start_s + events[to].duration_s;
+        let violations =
+            verify_stream(&events, tl.dep_edges()).expect_err("mutated schedule accepted");
+        assert!(
+            violations
+                .iter()
+                .any(|v| matches!(v, Violation::DepViolated { from: f, to: t, .. }
+                    if (*f, *t) == (from, to))),
+            "expected DepViolated {from}->{to}, got {violations:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_verifier_rejects_swapped_edges() {
+    check("swapped edge rejected", 40, |g| {
+        let profile = any_profile(g);
+        let desc = any_model(g);
+        let spec = any_spec(g);
+        let loads = any_loads(g, &desc, spec.uses_adt);
+        let tl = build(*g.pick(&MODES), &profile, &loads, spec, any_window(g));
+        let mut edges = tl.dep_edges().to_vec();
+        assert!(!edges.is_empty(), "builders always emit dependencies");
+        let victim = g.usize_in(0..edges.len());
+        let (from, to) = edges[victim];
+        edges[victim] = (to, from);
+        let violations =
+            verify_stream(tl.events(), &edges).expect_err("cyclic edge accepted");
+        assert!(
+            violations
+                .iter()
+                .any(|v| matches!(v, Violation::EdgeOrder { from: f, to: t, .. }
+                    if (*f, *t) == (to, from))),
+            "expected EdgeOrder {to}->{from}, got {violations:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_serialized_chain_breaks_are_reported() {
+    check("serialized chain break rejected", 40, |g| {
+        let profile = any_profile(g);
+        let desc = any_model(g);
+        let spec = any_spec(g);
+        let loads = any_loads(g, &desc, spec.uses_adt);
+        let tl = build(OverlapMode::Serialized, &profile, &loads, spec, any_window(g));
+        assert!(serialized_chain_violations(tl.events()).is_empty());
+        // shift one event later: still dep-respecting and exclusive, but
+        // no longer the left-fold serialized schedule
+        let mut events = tl.events().to_vec();
+        let victim = g.usize_in(0..events.len());
+        events[victim].start_s += 0.25;
+        events[victim].finish_s += 0.25;
+        let breaks = serialized_chain_violations(&events);
+        assert!(
+            breaks
+                .iter()
+                .any(|v| matches!(v, Violation::SerializedChainBreak { event, .. }
+                    if *event == victim)),
+            "expected a chain break at {victim}, got {breaks:?}"
+        );
+    });
+}

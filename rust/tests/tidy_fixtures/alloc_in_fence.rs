@@ -1,0 +1,9 @@
+// tidy fixture: an allocating call inside a tidy fence — must fire
+// `alloc-free` exactly once. Never compiled; only lexed by tidy.
+
+fn hot() -> Vec<u8> {
+    // tidy:alloc-free
+    let buf: Vec<u8> = Vec::new();
+    // tidy:end-alloc-free
+    buf
+}

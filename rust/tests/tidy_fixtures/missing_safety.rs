@@ -1,0 +1,6 @@
+// tidy fixture: an `unsafe` block with no safety comment — must fire
+// `safety-comment` exactly once. Never compiled; only lexed by tidy.
+
+fn read(p: *const u8) -> u8 {
+    unsafe { *p }
+}

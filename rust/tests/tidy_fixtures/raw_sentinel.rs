@@ -1,0 +1,7 @@
+// tidy fixture: a raw non-finite float sentinel string outside
+// util/json.rs — must fire `nonfinite-sentinel` exactly once. Never
+// compiled; only lexed by tidy.
+
+fn sentinel() -> &'static str {
+    "NaN"
+}

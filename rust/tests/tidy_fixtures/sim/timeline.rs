@@ -1,0 +1,7 @@
+// tidy fixture: `.unwrap()` on a scheduler path (the rule is scoped to
+// paths ending in sim/timeline.rs) — must fire `scheduler-panic`
+// exactly once. Never compiled; only lexed by tidy.
+
+fn finish(last: Option<f64>) -> f64 {
+    last.unwrap()
+}

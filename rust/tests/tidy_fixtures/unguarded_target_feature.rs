@@ -1,0 +1,16 @@
+// tidy fixture: a #[target_feature] fn called without a runtime
+// feature-detection guard — must fire `target-feature-guard` exactly
+// once. Never compiled; only lexed by tidy.
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+// SAFETY: fixture only — the caller below is the violation under test.
+unsafe fn kernel(xs: &[f32]) -> f32 {
+    xs[0]
+}
+
+#[cfg(target_arch = "x86_64")]
+fn call_without_guard(xs: &[f32]) -> f32 {
+    // SAFETY: deliberately wrong — nothing verified AVX2 support here.
+    unsafe { kernel(xs) }
+}

@@ -1,0 +1,82 @@
+//! Integration tests for the `pallas-tidy` static-analysis pass: every
+//! checked-in fixture under `tests/tidy_fixtures/` fires its lint
+//! exactly once (the same files CI feeds to `cargo run --bin tidy` and
+//! requires a non-zero exit for), and the crate's own tree is clean.
+
+use std::path::PathBuf;
+
+use a2dtwp::lint::{lint_crate, lint_source};
+
+fn crate_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture(rel: &str) -> (String, String) {
+    let path = crate_root().join("tests/tidy_fixtures").join(rel);
+    let src = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {rel} unreadable: {e}"));
+    (format!("tests/tidy_fixtures/{rel}"), src)
+}
+
+fn assert_fires_exactly_once(rel: &str, rule: &str) {
+    let (path, src) = fixture(rel);
+    let findings = lint_source(&path, &src);
+    assert_eq!(
+        findings.len(),
+        1,
+        "{rel}: expected exactly one finding, got {findings:?}"
+    );
+    assert_eq!(findings[0].rule, rule, "{rel}: wrong rule: {}", findings[0]);
+    assert!(findings[0].line > 0, "{rel}: finding carries no line");
+}
+
+#[test]
+fn fixture_missing_safety_comment() {
+    assert_fires_exactly_once("missing_safety.rs", "safety-comment");
+}
+
+#[test]
+fn fixture_unguarded_target_feature_call() {
+    assert_fires_exactly_once("unguarded_target_feature.rs", "target-feature-guard");
+}
+
+#[test]
+fn fixture_allocation_inside_fence() {
+    assert_fires_exactly_once("alloc_in_fence.rs", "alloc-free");
+}
+
+#[test]
+fn fixture_scheduler_panic_is_path_scoped() {
+    assert_fires_exactly_once("sim/timeline.rs", "scheduler-panic");
+    // the same source under a non-scheduler path is clean
+    let (_, src) = fixture("sim/timeline.rs");
+    assert!(lint_source("tests/tidy_fixtures/elsewhere.rs", &src).is_empty());
+}
+
+#[test]
+fn fixture_raw_nonfinite_sentinel() {
+    assert_fires_exactly_once("raw_sentinel.rs", "nonfinite-sentinel");
+}
+
+#[test]
+fn crate_tree_is_tidy() {
+    let findings = lint_crate(&crate_root()).expect("crate walk failed");
+    assert!(
+        findings.is_empty(),
+        "tidy found {} issue(s) in the tree:\n{}",
+        findings.len(),
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn findings_render_clickable_locations() {
+    let (path, src) = fixture("raw_sentinel.rs");
+    let findings = lint_source(&path, &src);
+    let rendered = findings[0].to_string();
+    assert!(
+        rendered.starts_with("tests/tidy_fixtures/raw_sentinel.rs:"),
+        "diagnostic should lead with file:line, got {rendered}"
+    );
+    assert!(rendered.contains("[nonfinite-sentinel]"));
+}
