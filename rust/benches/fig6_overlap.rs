@@ -245,6 +245,7 @@ fn main() {
         ])
     };
     let report = Json::obj(vec![
+        ("schema_version", Json::num(a2dtwp::util::benchkit::METRICS_SCHEMA_VERSION)),
         ("bench", Json::str("timeline")),
         ("model", Json::str("vgg_a")),
         ("batch", Json::num(BATCH as f64)),

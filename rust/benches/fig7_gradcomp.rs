@@ -137,6 +137,7 @@ fn main() {
         Json::obj(pairs)
     };
     let report = Json::obj(vec![
+        ("schema_version", Json::num(a2dtwp::util::benchkit::METRICS_SCHEMA_VERSION)),
         ("bench", Json::str("gradcomp")),
         ("model", Json::str("vgg_a")),
         ("batch", Json::num(BATCH as f64)),

@@ -117,6 +117,7 @@ pub fn run(system: &str, paper: &PaperColumn, csv_path: &str, json_path: &str) {
 
     // machine-readable column for the CI bench gate
     let mut fields: Vec<(&str, Json)> = vec![
+        ("schema_version", Json::num(a2dtwp::util::benchkit::METRICS_SCHEMA_VERSION)),
         ("bench", Json::str("table_profile")),
         ("system", Json::str(system)),
         ("model", Json::str("vgg_a")),

@@ -25,16 +25,37 @@
 //!   was expected;
 //! * key drift fails in both directions: fields missing from the current
 //!   report, and current-report keys the baseline never recorded (a gate
-//!   blind spot) — `pallas-tidy` cross-checks the same pairs statically.
+//!   blind spot) — `pallas-tidy` cross-checks the same pairs statically;
+//! * every document (baseline, current, `--validate` target) must carry
+//!   a top-level `schema_version` equal to
+//!   [`METRICS_SCHEMA_VERSION`](a2dtwp::util::benchkit::METRICS_SCHEMA_VERSION)
+//!   — a report produced by a binary from before/after a schema bump can
+//!   never silently pass the gate.
 //!
 //! The simulator is pure arithmetic, so a clean run sits within rounding
 //! of the baseline; the 5% window only absorbs deliberate recalibration
 //! dust, never a lost overlap win.
 
+use a2dtwp::util::benchkit::METRICS_SCHEMA_VERSION;
 use a2dtwp::util::json::Json;
 
 const SPEEDUP_FLOOR: f64 = 0.95;
 const TIME_CEILING: f64 = 1.05;
+
+/// Reject a document whose top-level `schema_version` is missing or does
+/// not match the gate's own version.
+fn check_schema(path: &str, doc: &Json, errs: &mut Vec<String>) {
+    match doc.get("schema_version").and_then(|v| v.as_f64()) {
+        Some(v) if (v - METRICS_SCHEMA_VERSION).abs() < 1e-9 => {}
+        Some(v) => errs.push(format!(
+            "{path}: schema_version {v} != expected {METRICS_SCHEMA_VERSION} — regenerate \
+             the artifact with the current binaries"
+        )),
+        None => errs.push(format!(
+            "{path}: missing top-level schema_version (expected {METRICS_SCHEMA_VERSION})"
+        )),
+    }
+}
 
 /// Recursively reject non-finite sentinels and count numeric leaves.
 fn validate(path: &str, v: &Json, errs: &mut Vec<String>) -> usize {
@@ -149,6 +170,7 @@ fn run() -> Result<String, Vec<String>> {
         [flag, path] if flag == "--validate" => {
             let doc = load(path).map_err(|e| vec![e])?;
             let mut errs = Vec::new();
+            check_schema(path, &doc, &mut errs);
             let nums = validate("$", &doc, &mut errs);
             if nums == 0 {
                 errs.push(format!("{path}: no numeric metrics found"));
@@ -163,7 +185,10 @@ fn run() -> Result<String, Vec<String>> {
             let baseline = load(baseline_path).map_err(|e| vec![e])?;
             let current = load(current_path).map_err(|e| vec![e])?;
             let mut errs = Vec::new();
-            // the current report must be sane on its own…
+            // both sides must speak the gate's schema version…
+            check_schema(baseline_path, &baseline, &mut errs);
+            check_schema(current_path, &current, &mut errs);
+            // …the current report must be sane on its own…
             validate("$", &current, &mut errs);
             // …and must not regress against the checked-in baseline.
             let nums = compare("$", &baseline, &current, &mut errs);

@@ -154,6 +154,10 @@ impl ExperimentConfig {
             ("staleness", Json::num(self.staleness as f64)),
             ("pipeline_window", Json::num(self.pipeline_window as f64)),
             ("d2h_queues", Json::num(self.system.d2h_queues as f64)),
+            ("nodes", Json::num(self.system.n_nodes as f64)),
+            ("collective", Json::str(self.system.collective.name())),
+            ("internode_gbps", Json::num(self.system.internode_bps / 1e9)),
+            ("internode_latency_us", Json::num(self.system.internode_latency_s * 1e6)),
             ("awp_threshold", Json::num(self.awp.threshold)),
             ("awp_interval", Json::num(self.awp.interval as f64)),
             ("grad_policy", Json::str(self.grad.name())),
@@ -222,6 +226,11 @@ mod tests {
         assert_eq!(j.req_usize("pipeline_window").unwrap(), 4);
         // the D2H channel defaults to a single FIFO queue
         assert_eq!(j.req_usize("d2h_queues").unwrap(), 1);
+        // …and the fabric to the paper's single node, star collective
+        assert_eq!(j.req_usize("nodes").unwrap(), 1);
+        assert_eq!(j.req_str("collective").unwrap(), "star");
+        assert!((j.req_f64("internode_gbps").unwrap() - 12.5).abs() < 1e-12);
+        assert!((j.req_f64("internode_latency_us").unwrap() - 25.0).abs() < 1e-12);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::grad::GatherPayload;
 use crate::interconnect::Interconnect;
 use crate::metrics::TrainCurve;
 use crate::models::ModelDesc;
-use crate::sim::SystemProfile;
+use crate::sim::{Collective, SystemProfile};
 use crate::sim::{
     apply_grad_mean_bytes, build_training_timeline, layer_loads, layer_loads_mean_bytes,
     BatchSpec, OverlapMode, PipelineWindow,
@@ -42,6 +42,12 @@ pub fn batch_time(
 /// [`batch_time`]: the gather payload flows through the shared
 /// [`GatherPayload`] descriptor in both cases and the grad term is
 /// appended last, so every pre-existing partial sum keeps its bits.
+///
+/// On a multi-node profile (`n_nodes > 1`) the serial loop additionally
+/// pays [`SystemProfile::collective_time`] over the whole gather wire
+/// payload — the closed-form inter-node allreduce under the profile's
+/// [`Collective`]. The term is gated on `n_nodes > 1` so single-node
+/// batch times keep their bits regardless of the selected collective.
 pub fn batch_time_grad(
     profile: &SystemProfile,
     desc: &ModelDesc,
@@ -93,6 +99,9 @@ pub fn batch_time_grad(
     }
     if grad_bytes_per_weight.is_some() {
         t += profile.grad_unpack_time(gather.packed_weight_grad_bytes * profile.n_gpus);
+    }
+    if profile.n_nodes > 1 {
+        t += profile.collective_time(gather.wire_bytes());
     }
     t
 }
@@ -226,6 +235,68 @@ pub fn d2h_queue_comparison(
         window,
     );
     (fifo, mq)
+}
+
+/// One cell of the Fig-8 fabric-scaling sweep: per-batch times of one
+/// (node count, collective) point. `crit_s` is the event-driven overlap
+/// timeline's critical path (inter-node hops on `Resource::LinkInter`
+/// extend it); `serial_s` is the closed-form serial loop of
+/// [`batch_time_grad`], whose fabric term is one
+/// [`SystemProfile::collective_time`] over the whole gather payload.
+#[derive(Clone, Copy, Debug)]
+pub struct FabricCell {
+    pub nodes: usize,
+    pub collective: Collective,
+    pub crit_s: f64,
+    pub serial_s: f64,
+}
+
+/// "Fig 8": per-batch time vs node count × collective topology. Each
+/// cell clones `base` onto `n` nodes with collective `c` and reports
+/// the overlap timeline's critical path next to the serial loop. At
+/// `nodes == 1` no fabric is instantiated at all, so every collective's
+/// cell is bit-identical to the single-node base — the degeneracy
+/// `tests/prop_fabric.rs` pins. `benches/fig8_fabric.rs` tabulates the
+/// sweep and CI gates its serial column.
+#[allow(clippy::too_many_arguments)]
+pub fn fabric_scaling(
+    base: &SystemProfile,
+    desc: &ModelDesc,
+    batch: usize,
+    policy: PolicyKind,
+    bytes_per_weight: f64,
+    grad_bytes_per_weight: Option<f64>,
+    mode: OverlapMode,
+    window: PipelineWindow,
+    nodes: &[usize],
+    collectives: &[Collective],
+) -> Vec<FabricCell> {
+    let mut out = Vec::with_capacity(nodes.len() * collectives.len());
+    for &n in nodes {
+        for &c in collectives {
+            let profile = base.clone().with_nodes(n).with_collective(c);
+            let (crit_s, _) = batch_time_overlap_windowed_grad(
+                &profile,
+                desc,
+                batch,
+                policy,
+                bytes_per_weight,
+                grad_bytes_per_weight,
+                mode,
+                window,
+            );
+            let serial_s = batch_time_grad(
+                &profile,
+                desc,
+                batch,
+                policy,
+                bytes_per_weight,
+                grad_bytes_per_weight,
+            );
+            out.push(FabricCell { nodes: n, collective: c, crit_s, serial_s });
+        }
+    }
+    out
 }
 
 /// One cell of the Fig-7 gather-compression sweep (seconds per batch
@@ -617,6 +688,95 @@ mod tests {
         assert!(cells[1].serial_s > cells[0].serial_s, "16-bit gather should lose on uniform x86");
         assert!(cells[2].serial_s < cells[0].serial_s, "8-bit gather should win on uniform x86");
         assert!(cells[2].serial_s < cells[1].serial_s);
+    }
+
+    #[test]
+    fn single_node_batch_time_ignores_the_collective() {
+        let d = vgg_a(200);
+        for profile in [SystemProfile::x86(), SystemProfile::power()] {
+            let base = batch_time_grad(&profile, &d, 64, PolicyKind::Awp, 4.0 / 3.0, Some(1.0));
+            for c in [
+                Collective::Star,
+                Collective::Ring,
+                Collective::Tree,
+                Collective::Hierarchical,
+            ] {
+                let t = batch_time_grad(
+                    &profile.clone().with_collective(c),
+                    &d,
+                    64,
+                    PolicyKind::Awp,
+                    4.0 / 3.0,
+                    Some(1.0),
+                );
+                assert_eq!(base.to_bits(), t.to_bits(), "{}: {c:?} drifted", profile.name);
+            }
+            // two nodes pay a strictly positive fabric term
+            let two = batch_time_grad(
+                &profile.clone().with_nodes(2),
+                &d,
+                64,
+                PolicyKind::Awp,
+                4.0 / 3.0,
+                Some(1.0),
+            );
+            assert!(two > base, "{}: 2-node batch not slower", profile.name);
+        }
+    }
+
+    #[test]
+    fn fabric_scaling_orders_topologies_under_congestion() {
+        // the ISSUE-8 acceptance pin: at 4 congested nodes with the
+        // 8-bit packed gather, hierarchical must beat the flat star in
+        // the serial loop AND on the overlap timeline's critical path.
+        let d = vgg_a(200);
+        let base = SystemProfile::x86().scenario("internode-congested").unwrap();
+        let all = [
+            Collective::Star,
+            Collective::Ring,
+            Collective::Tree,
+            Collective::Hierarchical,
+        ];
+        let cells = fabric_scaling(
+            &base,
+            &d,
+            64,
+            PolicyKind::Awp,
+            4.0 / 3.0,
+            Some(1.0),
+            OverlapMode::LayerPipelined,
+            PipelineWindow::single(),
+            &[1, 4],
+            &all,
+        );
+        assert_eq!(cells.len(), 8);
+        // nodes == 1: every collective degenerates to the same bits
+        for c in &cells[1..4] {
+            assert_eq!(c.crit_s.to_bits(), cells[0].crit_s.to_bits(), "{:?}", c.collective);
+            assert_eq!(c.serial_s.to_bits(), cells[0].serial_s.to_bits(), "{:?}", c.collective);
+        }
+        let star = cells[4];
+        let hier = cells[7];
+        assert_eq!(star.collective, Collective::Star);
+        assert_eq!(hier.collective, Collective::Hierarchical);
+        assert!(
+            hier.serial_s < star.serial_s,
+            "serial: hierarchical {} !< star {}",
+            hier.serial_s,
+            star.serial_s
+        );
+        assert!(
+            hier.crit_s < star.crit_s,
+            "crit: hierarchical {} !< star {}",
+            hier.crit_s,
+            star.crit_s
+        );
+        // scaling out is never free: every 4-node cell is slower than
+        // its single-node counterpart under either schedule
+        for c in &cells[4..] {
+            assert!(c.serial_s > cells[0].serial_s, "{:?}", c.collective);
+            assert!(c.crit_s > cells[0].crit_s, "{:?}", c.collective);
+        }
     }
 
     #[test]

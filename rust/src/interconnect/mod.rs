@@ -36,7 +36,7 @@
 
 use crate::profiler::Phase;
 use crate::sim::timeline::{EventId, ReadyQueue, Resource, Timeline};
-use crate::sim::SystemProfile;
+use crate::sim::{Collective, SystemProfile};
 
 /// Direction of a simulated transfer.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -230,13 +230,150 @@ impl Channel {
     }
 }
 
-/// Simulated CPU↔GPU interconnect of one platform: one channel per
-/// direction.
+/// The inter-node half of the hierarchical fabric: one shared serial
+/// link between nodes, onto which the profile's [`Collective`] lowers as
+/// a chain of hops. Only instantiated when `n_nodes > 1` — a single
+/// node has no fabric and executes the historic node-local code path
+/// bit-for-bit (same `Option` discipline as [`Channel`]'s `mq`).
+///
+/// Every hop is charged `busy_s = 0.0` on the timeline: hop durations
+/// lengthen the critical path (and serialize on the link), but the
+/// Tables II/III busy totals — and therefore the serialized-sum
+/// reference — stay *topology-invariant* for identical payloads, which
+/// is what lets `verify_mode_conservation` compare collectives
+/// directly. Wire bytes are accounted per hop into the fabric's own
+/// `bytes_total`, so each hop is charged exactly once and the node-local
+/// D2H accounting stays untouched.
+#[derive(Clone, Debug)]
+pub struct Fabric {
+    n_nodes: usize,
+    n_gpus: usize,
+    /// Effective inter-node bandwidth, bytes/s.
+    bps: f64,
+    /// Per-hop setup latency, seconds.
+    latency_s: f64,
+    collective: Collective,
+    total_s: f64,
+    bytes_total: u64,
+}
+
+impl Fabric {
+    pub fn new(profile: &SystemProfile) -> Fabric {
+        assert!(profile.n_nodes > 1, "a single node has no inter-node fabric");
+        Fabric {
+            n_nodes: profile.n_nodes,
+            n_gpus: profile.n_gpus,
+            bps: profile.internode_bps,
+            latency_s: profile.internode_latency_s,
+            collective: profile.collective,
+            total_s: 0.0,
+            bytes_total: 0,
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.n_nodes
+    }
+
+    pub fn collective(&self) -> Collective {
+        self.collective
+    }
+
+    /// Wall seconds of one fabric hop carrying `bytes`.
+    pub fn hop_time(&self, bytes: usize) -> f64 {
+        self.latency_s + bytes as f64 / self.bps
+    }
+
+    /// (serial hops, wire bytes per hop) for reducing `bytes` of
+    /// per-node payload under the fabric's topology.
+    pub fn hop_payloads(&self, bytes: usize) -> (usize, usize) {
+        self.collective.hops_and_chunk(self.n_nodes, self.n_gpus, bytes)
+    }
+
+    /// Serial allreduce time: the hops share one link, so the sum of
+    /// hop times *is* the wire time (matches
+    /// `SystemProfile::collective_time` bit-for-bit).
+    pub fn allreduce_time(&self, bytes: usize) -> f64 {
+        let (hops, chunk) = self.hop_payloads(bytes);
+        if hops == 0 {
+            0.0
+        } else {
+            hops as f64 * self.hop_time(chunk)
+        }
+    }
+
+    /// Account one serial allreduce without a timeline (the serial
+    /// Fig-1 accounting path); returns its wall seconds.
+    pub fn account_allreduce(&mut self, bytes: usize) -> f64 {
+        let (hops, chunk) = self.hop_payloads(bytes);
+        let seconds = self.allreduce_time(bytes);
+        self.total_s += seconds;
+        self.bytes_total += (hops * chunk) as u64;
+        seconds
+    }
+
+    /// Lower the collective onto the timeline as `hops` chained events
+    /// on [`Resource::LinkInter`], the first depending on `deps` (the
+    /// node-local gather legs of the layer). Returns the final hop, or
+    /// `None` for a zero-hop collective. Each hop carries `busy_s = 0.0`
+    /// — see the type docs for why.
+    pub fn enqueue_hops(
+        &mut self,
+        timeline: &mut Timeline,
+        bytes: usize,
+        deps: &[EventId],
+    ) -> Option<EventId> {
+        let (hops, chunk) = self.hop_payloads(bytes);
+        let mut last: Option<EventId> = None;
+        for _ in 0..hops {
+            let seconds = self.hop_time(chunk);
+            self.total_s += seconds;
+            self.bytes_total += chunk as u64;
+            last = Some(match last {
+                None => {
+                    timeline.schedule_weighted(Resource::LinkInter, Phase::D2H, seconds, 0.0, deps)
+                }
+                Some(prev) => timeline.schedule_weighted(
+                    Resource::LinkInter,
+                    Phase::D2H,
+                    seconds,
+                    0.0,
+                    &[prev],
+                ),
+            });
+        }
+        last
+    }
+
+    /// Cumulative accounted fabric seconds.
+    pub fn total_s(&self) -> f64 {
+        self.total_s
+    }
+
+    /// Cumulative wire bytes moved across the fabric (each hop charged
+    /// exactly once).
+    pub fn bytes_total(&self) -> u64 {
+        self.bytes_total
+    }
+
+    pub fn reset(&mut self) {
+        self.total_s = 0.0;
+        self.bytes_total = 0;
+    }
+}
+
+/// Simulated interconnect of one platform: one node-local channel per
+/// direction, plus the inter-node fabric when the profile spans more
+/// than one node.
 #[derive(Clone, Debug)]
 pub struct Interconnect {
     profile: SystemProfile,
     pub h2d: Channel,
     pub d2h: Channel,
+    /// `None` at `n_nodes == 1`: the historic single-node interconnect,
+    /// bit-for-bit (the fabric is never instantiated, so no code path
+    /// can perturb the node-local schedule).
+    pub fabric: Option<Fabric>,
 }
 
 impl Interconnect {
@@ -246,7 +383,8 @@ impl Interconnect {
         let d2h =
             Channel::new(Direction::D2H, profile.d2h_bps, profile.link_latency_s, profile.n_gpus)
                 .with_queues(profile.d2h_queues);
-        Interconnect { profile, h2d, d2h }
+        let fabric = (profile.n_nodes > 1).then(|| Fabric::new(&profile));
+        Interconnect { profile, h2d, d2h, fabric }
     }
 
     pub fn profile(&self) -> &SystemProfile {
@@ -258,9 +396,34 @@ impl Interconnect {
         self.h2d.transfer(bytes_per_gpu)
     }
 
-    /// Account a device→host gather of `bytes_per_gpu` from every GPU.
+    /// Account a device→host gather of `bytes_per_gpu` from every GPU,
+    /// followed by the inter-node collective when a fabric exists (the
+    /// serial path: the reported seconds cover local gather + fabric
+    /// allreduce of the per-node reduced payload).
     pub fn gather(&mut self, bytes_per_gpu: usize) -> Transfer {
-        self.d2h.transfer(bytes_per_gpu)
+        let mut t = self.d2h.transfer(bytes_per_gpu);
+        if let Some(f) = self.fabric.as_mut() {
+            t.seconds += f.account_allreduce(bytes_per_gpu);
+        }
+        t
+    }
+
+    /// Lower the profile's collective onto the timeline after `dep`:
+    /// chained [`Resource::LinkInter`] hops when a fabric exists, `dep`
+    /// unchanged (zero events) on a single node.
+    pub fn lower_collective(
+        &mut self,
+        timeline: &mut Timeline,
+        bytes: usize,
+        dep: EventId,
+    ) -> EventId {
+        match self.fabric.as_mut() {
+            None => dep,
+            Some(f) => match f.enqueue_hops(timeline, bytes, &[dep]) {
+                Some(last) => last,
+                None => dep,
+            },
+        }
     }
 
     pub fn h2d_total_s(&self) -> f64 {
@@ -275,11 +438,22 @@ impl Interconnect {
     pub fn d2h_bytes_total(&self) -> u64 {
         self.d2h.bytes_total()
     }
+    /// Cumulative inter-node wire bytes (0 on a single node).
+    pub fn fabric_bytes_total(&self) -> u64 {
+        self.fabric.as_ref().map_or(0, |f| f.bytes_total())
+    }
+    /// Cumulative inter-node fabric seconds (0 on a single node).
+    pub fn fabric_total_s(&self) -> f64 {
+        self.fabric.as_ref().map_or(0.0, |f| f.total_s())
+    }
 
     /// Reset accumulated accounting (per-experiment reuse).
     pub fn reset(&mut self) {
         self.h2d.reset();
         self.d2h.reset();
+        if let Some(f) = self.fabric.as_mut() {
+            f.reset();
+        }
     }
 }
 
@@ -437,6 +611,66 @@ mod tests {
             assert_eq!(a.finish_s.to_bits(), b.finish_s.to_bits());
             assert_eq!(a.duration_s.to_bits(), b.duration_s.to_bits());
         }
+    }
+
+    #[test]
+    fn single_node_has_no_fabric_and_gather_is_untouched() {
+        let mut ic = Interconnect::new(SystemProfile::x86());
+        assert!(ic.fabric.is_none());
+        assert_eq!(ic.fabric_bytes_total(), 0);
+        assert_eq!(ic.fabric_total_s(), 0.0);
+        let t = ic.gather(518_298_368);
+        let reference = SystemProfile::x86().d2h_time(518_298_368);
+        assert_eq!(t.seconds.to_bits(), reference.to_bits());
+        // lower_collective is the identity: no event, dep unchanged
+        let mut tl = Timeline::new(OverlapMode::LayerPipelined);
+        let dep = tl.schedule(Resource::Cpu, Phase::GradUpdate, 0.1, &[]);
+        let n = tl.events().len();
+        assert_eq!(ic.lower_collective(&mut tl, 1 << 20, dep), dep);
+        assert_eq!(tl.events().len(), n);
+    }
+
+    #[test]
+    fn fabric_hops_serialize_on_the_internode_link_with_zero_busy() {
+        let p = SystemProfile::x86().with_nodes(4).with_collective(crate::sim::Collective::Ring);
+        let mut ic = Interconnect::new(p.clone());
+        let mut tl = Timeline::new(OverlapMode::LayerPipelined);
+        let dep = tl.schedule(Resource::LinkD2h, Phase::D2H, 0.01, &[]);
+        let bytes = 1 << 24;
+        let last = ic.lower_collective(&mut tl, bytes, dep);
+        let (hops, chunk) = ic.fabric.as_ref().unwrap().hop_payloads(bytes);
+        assert_eq!(tl.events().len(), 1 + hops);
+        assert_eq!(ic.fabric_bytes_total(), (hops * chunk) as u64);
+        // serial chain: each hop starts when the previous finishes
+        let mut prev_finish = tl.events()[dep.0].finish_s;
+        for e in &tl.events()[1..] {
+            assert_eq!(e.resource, Resource::LinkInter);
+            assert_eq!(e.busy_s, 0.0, "fabric hops must not charge busy");
+            assert_eq!(e.start_s.to_bits(), prev_finish.to_bits());
+            prev_finish = e.finish_s;
+        }
+        assert_eq!(tl.finish_s(last).to_bits(), prev_finish.to_bits());
+        // and the serial chain length matches the closed-form time
+        let wire = tl.finish_s(last) - tl.events()[dep.0].finish_s;
+        let expect = p.collective_time(bytes);
+        assert!((wire / expect - 1.0).abs() < 1e-12, "wire={wire} expect={expect}");
+    }
+
+    #[test]
+    fn serial_gather_charges_local_plus_fabric() {
+        let base = SystemProfile::power();
+        let p = base.clone().with_nodes(2).with_collective(crate::sim::Collective::Hierarchical);
+        let mut local = Interconnect::new(base.clone());
+        let mut fab = Interconnect::new(p.clone());
+        let bytes = 518_298_368 / 3;
+        let a = local.gather(bytes).seconds;
+        let b = fab.gather(bytes).seconds;
+        assert_eq!((b - a).to_bits(), p.collective_time(bytes).to_bits());
+        assert_eq!(fab.fabric_total_s().to_bits(), p.collective_time(bytes).to_bits());
+        // reset clears fabric accounting too
+        fab.reset();
+        assert_eq!(fab.fabric_bytes_total(), 0);
+        assert_eq!(fab.fabric_total_s(), 0.0);
     }
 
     #[test]

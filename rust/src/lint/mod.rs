@@ -557,6 +557,7 @@ const BENCH_BASELINES: &[(&str, &str)] = &[
     ("artifacts/bench_out/BENCH_table2_x86.json", "ci/bench_baseline_table2.json"),
     ("artifacts/bench_out/BENCH_table3_power.json", "ci/bench_baseline_table3.json"),
     ("artifacts/bench_out/BENCH_gradcomp.json", "ci/bench_baseline_gradcomp.json"),
+    ("artifacts/bench_out/BENCH_fabric.json", "ci/bench_baseline_fabric.json"),
 ];
 
 fn json_key_paths(prefix: &str, v: &crate::util::json::Json, out: &mut BTreeSet<String>) {

@@ -21,7 +21,9 @@ use a2dtwp::coordinator::{formats_for_mean_bytes, SimRunner, Trainer};
 use a2dtwp::grad::GradPolicyKind;
 use a2dtwp::models::{model_by_name, MODEL_NAMES};
 use a2dtwp::profiler::Profiler;
-use a2dtwp::sim::{OverlapMode, SystemProfile, OVERLAP_NAMES, SCENARIO_NAMES};
+use a2dtwp::sim::{
+    Collective, OverlapMode, SystemProfile, COLLECTIVE_NAMES, OVERLAP_NAMES, SCENARIO_NAMES,
+};
 use a2dtwp::util::benchkit::Table;
 use a2dtwp::util::cli::{Args, Spec};
 
@@ -32,12 +34,21 @@ const USAGE: &str = "usage: a2dtwp <train|profile|verify-schedule|models|info> [
     --policy P           baseline|awp|fixed8|fixed16|fixed24|fixed32
     --system S           x86|power
     --scenario NAME      uniform|straggler-mild|straggler-severe|hetero-linear|
-                         pcie-contended|nvlink-degraded|pack-starved
+                         pcie-contended|nvlink-degraded|pack-starved|
+                         internode-congested
     --overlap M          serialized|pipelined|gpu-pipelined (batch scheduling)
     --staleness K        gpu-pipelined bounded staleness (0 = sync barrier)
     --pipeline-window N  gpu-pipelined cross-batch window (default 4)
     --d2h-queues N       D2H DMA queues (default 1 = the FIFO channel;
                          >1 gap-fills idle gather-link time by priority)
+    --nodes N            fabric nodes (default 1 = the paper's single node;
+                         >1 lowers the allreduce onto the inter-node link)
+    --collective C       star|ring|tree|hierarchical (multi-node allreduce
+                         topology; ignored at --nodes 1)
+    --internode-gbps G   inter-node link bandwidth override (GB/s; applied
+                         after --scenario)
+    --internode-latency-us U
+                         per-hop inter-node setup latency override (us)
     --grad-adt F         ADT-packed gradient gather: off|8|16|24|32
                          (profile: applies to the A2DTWP column)
     --grad-policy P      gather-format policy: off|fixed8|fixed16|fixed24|
@@ -64,6 +75,10 @@ fn main() {
             "staleness",
             "pipeline-window",
             "d2h-queues",
+            "nodes",
+            "collective",
+            "internode-gbps",
+            "internode-latency-us",
             "grad-adt",
             "grad-policy",
             "grad-feedback",
@@ -139,6 +154,27 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
         return Err("--d2h-queues must be >= 1".into());
     }
     cfg.system = cfg.system.clone().with_d2h_queues(d2h_queues);
+    let nodes = args.get_usize("nodes", cfg.system.n_nodes)?;
+    if nodes == 0 {
+        return Err("--nodes must be >= 1".into());
+    }
+    cfg.system = cfg.system.clone().with_nodes(nodes);
+    if let Some(name) = args.get("collective") {
+        let c = Collective::parse(name).ok_or_else(|| {
+            format!("unknown collective '{name}' ({})", COLLECTIVE_NAMES.join("|"))
+        })?;
+        cfg.system = cfg.system.clone().with_collective(c);
+    }
+    let gbps = args.get_f64("internode-gbps", cfg.system.internode_bps / 1e9)?;
+    if !(gbps.is_finite() && gbps > 0.0) {
+        return Err("--internode-gbps must be finite and positive".into());
+    }
+    cfg.system.internode_bps = gbps * 1e9;
+    let lat_us = args.get_f64("internode-latency-us", cfg.system.internode_latency_s * 1e6)?;
+    if !(lat_us.is_finite() && lat_us >= 0.0) {
+        return Err("--internode-latency-us must be finite and >= 0".into());
+    }
+    cfg.system.internode_latency_s = lat_us * 1e-6;
     if let Some(g) = args.get("grad-adt") {
         cfg.grad = GradPolicyKind::parse(g)
             .ok_or_else(|| format!("unknown --grad-adt '{g}' (off|8|16|24|32)"))?;
@@ -253,6 +289,32 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         anyhow::bail!("--d2h-queues must be >= 1");
     }
     profile = profile.with_d2h_queues(d2h_queues);
+    let nodes = args.get_usize("nodes", profile.n_nodes).map_err(|e| anyhow::anyhow!(e))?;
+    if nodes == 0 {
+        anyhow::bail!("--nodes must be >= 1");
+    }
+    profile = profile.with_nodes(nodes);
+    if let Some(name) = args.get("collective") {
+        let c = Collective::parse(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown collective '{name}' ({})", COLLECTIVE_NAMES.join("|"))
+        })?;
+        profile = profile.with_collective(c);
+    }
+    let gbps = args
+        .get_f64("internode-gbps", profile.internode_bps / 1e9)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    if !(gbps.is_finite() && gbps > 0.0) {
+        anyhow::bail!("--internode-gbps must be finite and positive");
+    }
+    profile.internode_bps = gbps * 1e9;
+    let lat_us = args
+        .get_f64("internode-latency-us", profile.internode_latency_s * 1e6)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    if !(lat_us.is_finite() && lat_us >= 0.0) {
+        anyhow::bail!("--internode-latency-us must be finite and >= 0");
+    }
+    profile.internode_latency_s = lat_us * 1e-6;
+    let collective_name = profile.collective.name();
     let grad_format = match args.get("grad-adt") {
         None => None,
         Some(g) => match GradPolicyKind::parse(g) {
@@ -336,10 +398,15 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = args.get("json") {
         use a2dtwp::util::json::Json;
         let metrics = Json::obj(vec![
+            // bump when the report's key set or semantics change —
+            // check_bench rejects version drift on both sides.
+            ("schema_version", Json::num(a2dtwp::util::benchkit::METRICS_SCHEMA_VERSION)),
             ("model", Json::str(model)),
             ("system", Json::str(system)),
             ("scenario", Json::str(args.get("scenario").unwrap_or("uniform"))),
             ("overlap", Json::str(overlap.name())),
+            ("nodes", Json::num(nodes as f64)),
+            ("collective", Json::str(collective_name)),
             ("batch", Json::num(batch as f64)),
             ("staleness", Json::num(staleness as f64)),
             ("pipeline_window", Json::num(window as f64)),
@@ -401,7 +468,7 @@ fn cmd_verify_schedule(args: &Args) -> anyhow::Result<()> {
     use a2dtwp::interconnect::Interconnect;
     use a2dtwp::sim::{
         build_training_timeline, layer_loads_mean_bytes, verify_mode_conservation,
-        verify_timeline, BatchSpec, PipelineWindow, Timeline,
+        verify_timeline, BatchSpec, PipelineWindow, Resource, Timeline,
     };
     let model = args.get_or("model", "vgg_a");
     let batch = args.get_usize("batch-size", 64).map_err(|e| anyhow::anyhow!(e))?;
@@ -465,6 +532,91 @@ fn cmd_verify_schedule(args: &Args) -> anyhow::Result<()> {
         }
     }
     t.print();
+
+    // fabric grid: every (node count × collective × overlap mode) cell at
+    // 8 lanes / 2 queues under the congested fabric. Within one node
+    // count the busy totals must be identical across ALL topologies and
+    // modes — fabric hops charge zero busy — so the star serialized
+    // timeline anchors the conservation check for the whole group. At one
+    // node no `LinkInter` event may exist at all; at more than one, every
+    // cell must lower hops onto the fabric.
+    let collectives =
+        [Collective::Star, Collective::Ring, Collective::Tree, Collective::Hierarchical];
+    let mut tf = Table::new(
+        format!("verify-schedule fabric — {model} b{batch} on x86, 8 lanes x 2 queues"),
+        &["nodes", "collective", "mode", "events", "edges", "checks", "result"],
+    );
+    for nodes in [1usize, 2, 4] {
+        let mut group: Vec<Timeline> = Vec::new();
+        for collective in collectives {
+            for mode in modes {
+                let profile = SystemProfile::x86()
+                    .with_n_gpus(8)
+                    .with_d2h_queues(2)
+                    .with_nodes(nodes)
+                    .with_collective(collective)
+                    .scenario("internode-congested")
+                    .unwrap();
+                let mut ic = Interconnect::new(profile.clone());
+                let spec = BatchSpec {
+                    batch_size: batch,
+                    uses_adt: true,
+                    include_norms: true,
+                    grad_adt: false,
+                };
+                let window = PipelineWindow::new(2, 1);
+                let tl = build_training_timeline(mode, &profile, &mut ic, &loads, spec, window);
+                let hops =
+                    tl.events().iter().filter(|e| e.resource == Resource::LinkInter).count();
+                if nodes == 1 && hops > 0 {
+                    eprintln!(
+                        "  1-node {} {}: {hops} inter-node hop(s) on a fabric that must not \
+                         exist",
+                        collective.name(),
+                        mode.name()
+                    );
+                    failures += 1;
+                }
+                if nodes > 1 && hops == 0 {
+                    eprintln!(
+                        "  {nodes}-node {} {}: no inter-node hops lowered onto the fabric",
+                        collective.name(),
+                        mode.name()
+                    );
+                    failures += 1;
+                }
+                let (checks, result) = match verify_timeline(&tl) {
+                    Ok(report) => (report.checks, "ok".to_string()),
+                    Err(violations) => {
+                        for v in &violations {
+                            eprintln!("  {nodes}n {} {}: {v}", collective.name(), mode.name());
+                        }
+                        failures += violations.len();
+                        (0, format!("{} violations", violations.len()))
+                    }
+                };
+                tf.row(&[
+                    nodes.to_string(),
+                    collective.name().to_string(),
+                    mode.name().to_string(),
+                    tl.events().len().to_string(),
+                    tl.dep_edges().len().to_string(),
+                    checks.to_string(),
+                    result,
+                ]);
+                group.push(tl);
+            }
+        }
+        let others: Vec<&Timeline> = group[1..].iter().collect();
+        if let Err(violations) = verify_mode_conservation(&group[0], &others) {
+            for v in &violations {
+                eprintln!("  {nodes}-node fabric conservation: {v}");
+            }
+            failures += violations.len();
+        }
+    }
+    tf.print();
+
     if failures > 0 {
         anyhow::bail!("{failures} schedule invariant violation(s)");
     }

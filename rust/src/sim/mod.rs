@@ -7,7 +7,7 @@ mod system;
 pub mod timeline;
 pub mod verify;
 
-pub use system::{SystemProfile, SCENARIO_NAMES, SYSTEM_NAMES};
+pub use system::{Collective, SystemProfile, COLLECTIVE_NAMES, SCENARIO_NAMES, SYSTEM_NAMES};
 pub use timeline::{
     apply_grad_formats, apply_grad_mean_bytes, build_batch_timeline, build_training_timeline,
     layer_loads, layer_loads_mean_bytes, BatchSpec, Event, EventId, LayerLoad, OverlapMode,

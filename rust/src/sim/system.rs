@@ -12,6 +12,73 @@
 /// Names accepted by `--system`.
 pub const SYSTEM_NAMES: [&str; 2] = ["x86", "power"];
 
+/// Names accepted by `--collective`.
+pub const COLLECTIVE_NAMES: [&str; 4] = ["star", "ring", "tree", "hierarchical"];
+
+/// Allreduce topology lowered onto the inter-node fabric when
+/// `n_nodes > 1`. Every topology moves the *same* reduced payload —
+/// they differ only in how many serial hops the fabric link carries and
+/// how large each hop is, which is exactly the latency-vs-bandwidth
+/// tradeoff HyPar (arXiv 1901.02067) shows dominating at array scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Collective {
+    /// Flat gather to node 0: every non-leader node forwards all of its
+    /// GPUs' *unreduced* contributions over the fabric — the multi-node
+    /// generalization of the paper's single-node star gather, and the
+    /// bandwidth-worst baseline the other topologies are measured
+    /// against.
+    Star,
+    /// Flat bandwidth-optimal ring over all `n_nodes · n_gpus`
+    /// endpoints: `2·(G−1)` chunked steps of `⌈bytes/G⌉` each
+    /// (reduce-scatter + allgather). Minimal bytes/endpoint, but every
+    /// step pays the inter-node setup latency.
+    Ring,
+    /// Flat binary-tree reduce over all endpoints: `⌈log₂ G⌉` levels,
+    /// each moving the full payload across the fabric once.
+    Tree,
+    /// Two-level: intra-node reduce on the node-local D2H channel (the
+    /// existing gather), then a ring over the `n_nodes` node leaders —
+    /// `2·(p−1)` steps of `⌈bytes/p⌉` — then intra-node broadcast.
+    Hierarchical,
+}
+
+impl Collective {
+    pub fn parse(name: &str) -> Option<Collective> {
+        match name {
+            "star" => Some(Collective::Star),
+            "ring" => Some(Collective::Ring),
+            "tree" => Some(Collective::Tree),
+            "hierarchical" => Some(Collective::Hierarchical),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Collective::Star => "star",
+            Collective::Ring => "ring",
+            Collective::Tree => "tree",
+            Collective::Hierarchical => "hierarchical",
+        }
+    }
+
+    /// Serial hop count and per-hop wire bytes for reducing `bytes` of
+    /// per-node payload across `n_nodes` nodes of `n_gpus` lanes each.
+    /// (0 hops at a single node: the fabric is not involved.)
+    pub fn hops_and_chunk(&self, n_nodes: usize, n_gpus: usize, bytes: usize) -> (usize, usize) {
+        if n_nodes <= 1 {
+            return (0, 0);
+        }
+        let endpoints = n_nodes * n_gpus.max(1);
+        match self {
+            Collective::Star => (n_nodes - 1, n_gpus.max(1) * bytes),
+            Collective::Ring => (2 * (endpoints - 1), bytes.div_ceil(endpoints)),
+            Collective::Tree => ((usize::BITS - (endpoints - 1).leading_zeros()) as usize, bytes),
+            Collective::Hierarchical => (2 * (n_nodes - 1), bytes.div_ceil(n_nodes)),
+        }
+    }
+}
+
 /// Effective-rate profile of one CPU + multi-GPU platform.
 #[derive(Clone, Debug)]
 pub struct SystemProfile {
@@ -68,6 +135,19 @@ pub struct SystemProfile {
     /// gap-fill scheduler (`--d2h-queues`, see
     /// `interconnect::Channel::with_queues`).
     pub d2h_queues: usize,
+    /// Nodes in the fabric (`--nodes`). 1 ⇒ the paper's single node: no
+    /// inter-node link exists and every topology degenerates to the
+    /// historic star gather bit-exactly.
+    pub n_nodes: usize,
+    /// Effective inter-node link bandwidth, bytes/s (shared serial
+    /// fabric link — the multi-node analogue of the aggregate PCIe
+    /// budget above).
+    pub internode_bps: f64,
+    /// Per-hop inter-node setup latency, seconds (network stack + NIC,
+    /// orders above the PCIe `link_latency_s`).
+    pub internode_latency_s: f64,
+    /// Allreduce topology lowered onto the fabric (`--collective`).
+    pub collective: Collective,
 }
 
 /// Scenario presets accepted by `--scenario`: named perturbations of a
@@ -76,7 +156,7 @@ pub struct SystemProfile {
 /// perturb the GPU pool, `pcie-contended`/`nvlink-degraded` the link,
 /// and `pack-starved` the CPU side — all just rate edits feeding the
 /// same timeline.
-pub const SCENARIO_NAMES: [&str; 7] = [
+pub const SCENARIO_NAMES: [&str; 8] = [
     "uniform",
     "straggler-mild",
     "straggler-severe",
@@ -84,6 +164,7 @@ pub const SCENARIO_NAMES: [&str; 7] = [
     "pcie-contended",
     "nvlink-degraded",
     "pack-starved",
+    "internode-congested",
 ];
 
 /// VGG-A/200 f32 payload used for calibration (Table II/III workload):
@@ -121,6 +202,12 @@ impl SystemProfile {
             cpu_threads: 16,
             gpu_speed: Vec::new(),
             d2h_queues: 1,
+            n_nodes: 1,
+            // 100 GbE fabric: 12.5 GB/s effective, ~25 µs per hop
+            // through the kernel network stack.
+            internode_bps: 12.5e9,
+            internode_latency_s: 25e-6,
+            collective: Collective::Star,
         }
     }
 
@@ -146,6 +233,11 @@ impl SystemProfile {
             cpu_threads: 40,
             gpu_speed: Vec::new(),
             d2h_queues: 1,
+            n_nodes: 1,
+            // InfiniBand EDR-class fabric: 25 GB/s effective, ~10 µs/hop.
+            internode_bps: 2.5e10,
+            internode_latency_s: 10e-6,
+            collective: Collective::Star,
         }
     }
 
@@ -177,6 +269,42 @@ impl SystemProfile {
     pub fn with_d2h_queues(mut self, queues: usize) -> SystemProfile {
         assert!(queues >= 1, "the D2H channel needs at least one queue");
         self.d2h_queues = queues;
+        self
+    }
+
+    /// Scale the fabric out to `n` nodes of [`n_gpus`](Self::n_gpus)
+    /// lanes each. Every node keeps the full calibrated node-local link
+    /// budget; only the inter-node collective rides the fabric link.
+    pub fn with_nodes(mut self, n: usize) -> SystemProfile {
+        assert!(n >= 1, "a fabric needs at least one node");
+        self.n_nodes = n;
+        self
+    }
+
+    /// Select the allreduce topology lowered onto the fabric.
+    pub fn with_collective(mut self, c: Collective) -> SystemProfile {
+        self.collective = c;
+        self
+    }
+
+    /// Scale the inter-node link's effective bandwidth and per-hop setup
+    /// latency (fabric congestion from co-tenant traffic). `bw_scale`
+    /// must be finite and positive; `latency_mult >= 1`.
+    pub fn with_internode_perturbation(
+        mut self,
+        bw_scale: f64,
+        latency_mult: f64,
+    ) -> SystemProfile {
+        assert!(
+            bw_scale.is_finite() && bw_scale > 0.0,
+            "inter-node bandwidth scale must be finite and positive"
+        );
+        assert!(
+            latency_mult.is_finite() && latency_mult >= 1.0,
+            "inter-node latency multiplier must be finite and >= 1"
+        );
+        self.internode_bps *= bw_scale;
+        self.internode_latency_s *= latency_mult;
         self
     }
 
@@ -260,6 +388,10 @@ impl SystemProfile {
             // the pack/norm thread pool starved to a quarter of its
             // calibrated throughput by co-scheduled CPU work.
             "pack-starved" => Some(self.with_cpu_starvation(0.25)),
+            // co-tenant traffic on the shared fabric: a quarter of the
+            // inter-node bandwidth survives and per-hop latency is 8×
+            // (incast queueing). Node-local links are untouched.
+            "internode-congested" => Some(self.with_internode_perturbation(0.25, 8.0)),
             _ => None,
         }
     }
@@ -335,6 +467,24 @@ impl SystemProfile {
             0.0
         } else {
             packed_bytes as f64 / self.grad_unpack_bps
+        }
+    }
+
+    /// One inter-node fabric hop carrying `bytes` of wire payload.
+    pub fn internode_hop_time(&self, bytes: usize) -> f64 {
+        self.internode_latency_s + bytes as f64 / self.internode_bps
+    }
+
+    /// Serial inter-node collective time for `bytes` of per-node wire
+    /// payload under the profile's topology — every hop rides the same
+    /// fabric link, so the serial sum *is* the wire time. Exactly 0.0 at
+    /// a single node (the fabric does not exist).
+    pub fn collective_time(&self, bytes: usize) -> f64 {
+        let (hops, chunk) = self.collective.hops_and_chunk(self.n_nodes, self.n_gpus, bytes);
+        if hops == 0 {
+            0.0
+        } else {
+            hops as f64 * self.internode_hop_time(chunk)
         }
     }
 }
@@ -505,5 +655,80 @@ mod tests {
             assert!(SystemProfile::by_name(n).is_some());
         }
         assert!(SystemProfile::by_name("arm").is_none());
+    }
+
+    #[test]
+    fn collective_registry_round_trips() {
+        for n in COLLECTIVE_NAMES {
+            let c = Collective::parse(n).unwrap();
+            assert_eq!(c.name(), n);
+        }
+        assert!(Collective::parse("butterfly").is_none());
+    }
+
+    #[test]
+    fn single_node_has_no_fabric() {
+        let s = SystemProfile::x86();
+        assert_eq!(s.n_nodes, 1);
+        assert_eq!(s.collective, Collective::Star);
+        for n in COLLECTIVE_NAMES {
+            let c = Collective::parse(n).unwrap();
+            assert_eq!(c.hops_and_chunk(1, 4, 1 << 20), (0, 0), "{n}");
+            let p = SystemProfile::x86().with_collective(c);
+            assert_eq!(p.collective_time(1 << 20), 0.0, "{n}");
+        }
+    }
+
+    #[test]
+    fn hop_counts_match_the_textbook_formulas() {
+        // p = 4 nodes × 4 GPUs ⇒ G = 16 endpoints, payload B.
+        let b = 1_000_000usize;
+        assert_eq!(Collective::Star.hops_and_chunk(4, 4, b), (3, 4 * b));
+        assert_eq!(Collective::Ring.hops_and_chunk(4, 4, b), (30, b.div_ceil(16)));
+        assert_eq!(Collective::Tree.hops_and_chunk(4, 4, b), (4, b));
+        assert_eq!(Collective::Hierarchical.hops_and_chunk(4, 4, b), (6, b.div_ceil(4)));
+        // non-power-of-two endpoint counts round the tree depth up
+        assert_eq!(Collective::Tree.hops_and_chunk(3, 2, b).0, 3); // ceil(log2 6)
+    }
+
+    #[test]
+    fn hierarchical_moves_the_fewest_wire_bytes_star_the_most() {
+        let b = VGG_PAYLOAD as usize / 3;
+        let wire = |c: Collective| {
+            let (hops, chunk) = c.hops_and_chunk(4, 4, b);
+            hops * chunk
+        };
+        assert!(wire(Collective::Hierarchical) < wire(Collective::Ring));
+        assert!(wire(Collective::Ring) < wire(Collective::Tree));
+        assert!(wire(Collective::Tree) < wire(Collective::Star));
+    }
+
+    #[test]
+    fn internode_congestion_perturbs_only_the_fabric() {
+        let base = SystemProfile::x86();
+        let cong = SystemProfile::x86().scenario("internode-congested").unwrap();
+        assert!((cong.internode_bps / base.internode_bps - 0.25).abs() < 1e-12);
+        assert!((cong.internode_latency_s / base.internode_latency_s - 8.0).abs() < 1e-12);
+        assert_eq!(cong.h2d_bps.to_bits(), base.h2d_bps.to_bits());
+        assert_eq!(cong.d2h_bps.to_bits(), base.d2h_bps.to_bits());
+        assert_eq!(cong.pack_bps.to_bits(), base.pack_bps.to_bits());
+        assert_eq!(cong.compute_wall_factor(), 1.0);
+    }
+
+    #[test]
+    fn hierarchical_beats_star_at_four_congested_nodes() {
+        // The acceptance-criterion shape: 4 nodes, internode-congested,
+        // ≈8-bit packed payload — hierarchical must crush the flat star.
+        let b = VGG_PAYLOAD as usize / 4;
+        for sys in ["x86", "power"] {
+            let p = SystemProfile::by_name(sys)
+                .unwrap()
+                .with_nodes(4)
+                .scenario("internode-congested")
+                .unwrap();
+            let star = p.clone().with_collective(Collective::Star).collective_time(b);
+            let hier = p.clone().with_collective(Collective::Hierarchical).collective_time(b);
+            assert!(hier < star / 4.0, "{sys}: hier={hier} star={star}");
+        }
     }
 }

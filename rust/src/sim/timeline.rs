@@ -113,6 +113,10 @@ pub enum Resource {
     LinkD2h,
     /// The lockstep data-parallel GPU pool (aggregate calibrated rates).
     GpuPool,
+    /// The shared inter-node fabric link: collective-allreduce hops
+    /// serialize here when the profile spans `n_nodes > 1` (see
+    /// `interconnect::Fabric`). Never occupied on a single node.
+    LinkInter,
     /// One GPU lane: the synchronous builders use the lockstep
     /// [`Resource::GpuPool`]; [`OverlapMode::GpuPipelined`] schedules
     /// every lane independently.
@@ -131,7 +135,8 @@ impl Resource {
             Resource::LinkH2d => 1,
             Resource::LinkD2h => 2,
             Resource::GpuPool => 3,
-            Resource::Gpu(g) => 4 + g,
+            Resource::LinkInter => 4,
+            Resource::Gpu(g) => 5 + g,
         }
     }
 }
@@ -820,6 +825,10 @@ fn schedule_sync_batch(
             load.grad_packed_bytes + load.bias_bytes,
             &[bwd],
         );
+        // Multi-node: the layer's reduced gradient rides the inter-node
+        // collective before the leader may touch it (identity — zero
+        // events, `d2h` unchanged — on a single node).
+        let d2h = interconnect.lower_collective(tl, load.grad_packed_bytes + load.bias_bytes, d2h);
         // grad-ADT: the leader restores every GPU's packed contribution
         // before it can apply the layer's update.
         let upd_dep = if grad_adt {
@@ -897,8 +906,11 @@ fn schedule_async_training(
         if profile.gpu_speed.is_empty() { &uniform } else { &profile.gpu_speed };
     let n = layers.len();
 
-    // Per-batch gather legs ([batch][layer][leg]) and applied updates.
+    // Per-batch gather legs ([batch][layer][leg]), per-layer inter-node
+    // collective completion ([batch][layer], all None on a single node),
+    // and applied updates.
     let mut legs: Vec<Vec<Vec<EventId>>> = Vec::with_capacity(n_batches);
+    let mut fabric_dones: Vec<Vec<Option<EventId>>> = Vec::with_capacity(n_batches);
     let mut updates: Vec<Option<Vec<Vec<EventId>>>> = vec![None; n_batches];
 
     for nb in 0..n_batches {
@@ -911,6 +923,7 @@ fn schedule_async_training(
                     profile,
                     layers,
                     &legs[m],
+                    &fabric_dones[m],
                     include_norms,
                     grad_adt,
                     n_gpus,
@@ -981,7 +994,12 @@ fn schedule_async_training(
         }
 
         // Per-GPU gather legs, interleaved by wgrad readiness per layer.
+        // With a fabric, each layer's reduced gradient then rides the
+        // inter-node collective: the first hop waits on *all* of the
+        // layer's local legs (the intra-node reduce is complete), and
+        // the layer's updates wait on the final hop.
         let mut batch_legs: Vec<Vec<EventId>> = vec![Vec::new(); n];
+        let mut batch_fabric: Vec<Option<EventId>> = vec![None; n];
         for l in (0..n).rev() {
             let bytes = layers[l].grad_packed_bytes + layers[l].bias_bytes;
             let mut order: Vec<usize> = (0..n_gpus).collect();
@@ -996,8 +1014,12 @@ fn schedule_async_training(
                     interconnect.d2h.enqueue_leg(tl, Phase::D2H, bytes, busy, &[wgrads[l][g]]);
                 batch_legs[l].push(leg);
             }
+            if let Some(f) = interconnect.fabric.as_mut() {
+                batch_fabric[l] = f.enqueue_hops(tl, bytes, &batch_legs[l]);
+            }
         }
         legs.push(batch_legs);
+        fabric_dones.push(batch_fabric);
     }
 
     // Drain: apply every gradient still in flight past the last batch.
@@ -1008,6 +1030,7 @@ fn schedule_async_training(
                 profile,
                 layers,
                 &legs[m],
+                &fabric_dones[m],
                 include_norms,
                 grad_adt,
                 n_gpus,
@@ -1031,6 +1054,7 @@ fn emit_async_updates(
     profile: &SystemProfile,
     layers: &[LayerLoad],
     batch_legs: &[Vec<EventId>],
+    fabric_done: &[Option<EventId>],
     include_norms: bool,
     grad_adt: bool,
     n_gpus: usize,
@@ -1041,24 +1065,34 @@ fn emit_async_updates(
         let full = profile.update_time(layers[l].params);
         let split = full / n_gpus as f64;
         for (i, leg) in batch_legs[l].iter().enumerate() {
-            let dep = if grad_adt {
+            // With a fabric, the layer's reduced gradient only exists
+            // once the final inter-node hop lands — an extra dependency
+            // on every CPU-side event. None on a single node, keeping
+            // the dependency lists (hence the schedule) bit-identical
+            // to the historic path.
+            let mut deps: Vec<EventId> = Vec::with_capacity(2);
+            deps.push(*leg);
+            if let Some(fab) = fabric_done[l] {
+                deps.push(fab);
+            }
+            if grad_adt {
                 let unpack_busy = if i == 0 {
                     profile.grad_unpack_time(layers[l].grad_packed_bytes * profile.n_gpus)
                 } else {
                     0.0
                 };
-                tl.schedule_weighted(
+                let unpack = tl.schedule_weighted(
                     Resource::Cpu,
                     Phase::GradUnpack,
                     profile.grad_unpack_time(layers[l].grad_packed_bytes),
                     unpack_busy,
-                    &[*leg],
-                )
-            } else {
-                *leg
-            };
+                    &deps,
+                );
+                deps.clear();
+                deps.push(unpack);
+            }
             let busy = if i == 0 { full } else { 0.0 };
-            ups[l].push(tl.schedule_weighted(Resource::Cpu, Phase::GradUpdate, split, busy, &[dep]));
+            ups[l].push(tl.schedule_weighted(Resource::Cpu, Phase::GradUpdate, split, busy, &deps));
         }
     }
     if include_norms {

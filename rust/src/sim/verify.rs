@@ -18,7 +18,11 @@
 //! 4. **Resource exclusivity** — no two events overlap on one clocked
 //!    resource. On [`Resource::LinkD2h`] this is exactly the wire-serial
 //!    constraint across `ReadyQueue` gap-fills: the multi-queue channel
-//!    may reorder legs, but the wire carries one leg at a time.
+//!    may reorder legs, but the wire carries one leg at a time. On
+//!    [`Resource::LinkInter`] it proves inter-node collective hops never
+//!    overlap on the fabric link; additionally every fabric hop must
+//!    charge zero busy ([`Violation::FabricHopBusy`]), the invariant
+//!    keeping busy totals topology-invariant across collectives.
 //! 5. **Serialized chaining** ([`verify_timeline`] only) — in
 //!    [`OverlapMode::Serialized`] every event starts exactly where the
 //!    previous one finished.
@@ -62,6 +66,12 @@ pub enum Violation {
     BusyDrift { phase: usize, reference_s: f64, got_s: f64 },
     /// The Fig-1 serialized reference drifted from the reference schedule.
     SerialSumDrift { reference_s: f64, got_s: f64 },
+    /// An inter-node fabric hop charged a non-zero busy total. Fabric
+    /// hops lengthen the critical path but must never contribute to the
+    /// Tables II/III busy accounting — that invariant is what keeps
+    /// busy totals (and the serialized reference) topology-invariant
+    /// across collectives.
+    FabricHopBusy { event: usize, busy_s: f64 },
 }
 
 impl fmt::Display for Violation {
@@ -100,6 +110,10 @@ impl fmt::Display for Violation {
             Violation::SerialSumDrift { reference_s, got_s } => write!(
                 f,
                 "serialized reference {got_s} drifted from {reference_s}"
+            ),
+            Violation::FabricHopBusy { event, busy_s } => write!(
+                f,
+                "event {event}: inter-node fabric hop charges busy {busy_s} (must be 0)"
             ),
         }
     }
@@ -152,6 +166,14 @@ pub fn verify_stream(
                 duration_s: e.duration_s,
                 finish_s: e.finish_s,
             });
+        }
+        // Fabric hops carry no Tables II/III busy charge — see the
+        // variant docs.
+        if e.resource == Resource::LinkInter {
+            checks += 1;
+            if e.busy_s != 0.0 {
+                violations.push(Violation::FabricHopBusy { event: i, busy_s: e.busy_s });
+            }
         }
     }
 
@@ -382,6 +404,20 @@ mod tests {
         assert!(chain_breaks
             .iter()
             .any(|v| matches!(v, Violation::SerializedChainBreak { event: 4, .. })));
+    }
+
+    #[test]
+    fn rejects_busy_charging_fabric_hops() {
+        let mut tl = Timeline::new(OverlapMode::LayerPipelined);
+        let a = tl.schedule(Resource::LinkD2h, Phase::D2H, 0.1, &[]);
+        tl.schedule_weighted(Resource::LinkInter, Phase::D2H, 0.2, 0.0, &[a]);
+        assert!(verify_timeline(&tl).is_ok(), "zero-busy hops are clean");
+        let mut events = tl.events().to_vec();
+        events[1].busy_s = 0.2;
+        let violations = verify_stream(&events, tl.dep_edges()).unwrap_err();
+        assert!(violations
+            .iter()
+            .any(|v| matches!(v, Violation::FabricHopBusy { event: 1, .. })));
     }
 
     #[test]

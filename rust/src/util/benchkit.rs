@@ -17,6 +17,14 @@ use super::timer::{fmt_duration, Stopwatch};
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 
+/// Schema version stamped into every machine-readable metrics artifact
+/// (`profile --json`, the `BENCH_*.json` reports) as `schema_version`.
+/// `check_bench` refuses any document whose version does not match, so
+/// a report produced by an older binary can never silently pass a newer
+/// gate (or vice versa). Bump on any key-set or semantics change,
+/// re-recording the `ci/bench_baseline*.json` files in the same commit.
+pub const METRICS_SCHEMA_VERSION: f64 = 1.0;
+
 thread_local! {
     static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };
 }

@@ -1,0 +1,230 @@
+//! Property-based tests over the multi-node hierarchical fabric
+//! (ISSUE 8 acceptance criteria):
+//!
+//! 1. **Single-node degeneracy** — at `n_nodes == 1` no fabric exists:
+//!    every collective's timeline is bit-identical to the star's,
+//!    event by event, in every overlap mode, and no event ever occupies
+//!    [`Resource::LinkInter`].
+//! 2. **Topology invariance** — per-phase busy totals and the Fig-1
+//!    serialized reference are bit-identical across all collectives,
+//!    node counts and overlap modes: fabric hops lengthen the schedule
+//!    but charge zero busy, so the Tables II/III accounting never moves.
+//! 3. **Hop conservation** — the fabric charges each hop's wire bytes
+//!    exactly once: `Fabric::bytes_total` equals the closed-form
+//!    Σ over gathers of `hops × chunk`, and the hop-event count on the
+//!    timeline matches the collective's hop formula. The node-local D2H
+//!    channel's byte totals are fabric-invariant.
+//! 4. **Verified schedules** — every fabric timeline passes the full
+//!    race/invariant verifier (deps honoured, link exclusive, zero-busy
+//!    hops).
+
+use a2dtwp::adt::RoundTo;
+use a2dtwp::interconnect::Interconnect;
+use a2dtwp::models::{alexnet, resnet34, vgg_a, ModelDesc};
+use a2dtwp::sim::{
+    build_training_timeline, layer_loads, layer_loads_mean_bytes, verify_mode_conservation,
+    verify_timeline, BatchSpec, Collective, LayerLoad, OverlapMode, PipelineWindow, Resource,
+    SystemProfile, Timeline, SCENARIO_NAMES,
+};
+use a2dtwp::util::propcheck::{check, Gen};
+
+const COLLECTIVES: [Collective; 4] =
+    [Collective::Star, Collective::Ring, Collective::Tree, Collective::Hierarchical];
+const MODES: [OverlapMode; 3] =
+    [OverlapMode::Serialized, OverlapMode::LayerPipelined, OverlapMode::GpuPipelined];
+
+fn any_base(g: &mut Gen) -> SystemProfile {
+    let base = if g.bool() { SystemProfile::x86() } else { SystemProfile::power() };
+    let scenario = *g.pick(&SCENARIO_NAMES);
+    base.scenario(scenario).unwrap()
+}
+
+fn any_model(g: &mut Gen) -> ModelDesc {
+    match g.usize_in(0..3) {
+        0 => alexnet(200),
+        1 => vgg_a(200),
+        _ => resnet34(200),
+    }
+}
+
+fn any_loads(g: &mut Gen, desc: &ModelDesc, uses_adt: bool) -> Vec<LayerLoad> {
+    if !uses_adt {
+        layer_loads(desc, None)
+    } else if g.bool() {
+        let formats: Vec<RoundTo> =
+            (0..desc.weight_counts().len()).map(|_| *g.pick(&RoundTo::ALL)).collect();
+        layer_loads(desc, Some(&formats))
+    } else {
+        layer_loads_mean_bytes(desc, 1.0 + 3.0 * g.f32_in(0.0, 1.0) as f64)
+    }
+}
+
+fn any_spec(g: &mut Gen, uses_adt: bool) -> BatchSpec {
+    BatchSpec {
+        batch_size: *g.pick(&[16usize, 32, 64]),
+        uses_adt,
+        include_norms: uses_adt && g.bool(),
+        grad_adt: g.bool(),
+    }
+}
+
+/// Build one training window and return the timeline plus the
+/// interconnect that accounted it.
+fn build(
+    profile: &SystemProfile,
+    loads: &[LayerLoad],
+    spec: BatchSpec,
+    window: PipelineWindow,
+    mode: OverlapMode,
+) -> (Timeline, Interconnect) {
+    let mut ic = Interconnect::new(profile.clone());
+    let tl = build_training_timeline(mode, profile, &mut ic, loads, spec, window);
+    (tl, ic)
+}
+
+fn hop_events(tl: &Timeline) -> usize {
+    tl.events().iter().filter(|e| e.resource == Resource::LinkInter).count()
+}
+
+#[test]
+fn prop_single_node_is_star_bit_exact() {
+    check("single node == star, any collective", 60, |g| {
+        let base = any_base(g);
+        let desc = any_model(g);
+        let uses_adt = g.bool();
+        let loads = any_loads(g, &desc, uses_adt);
+        let spec = any_spec(g, uses_adt);
+        let window = PipelineWindow::new(g.usize_in(1..4), g.usize_in(1..3));
+        let mode = *g.pick(&MODES);
+        let (star_tl, star_ic) =
+            build(&base.clone().with_collective(Collective::Star), &loads, spec, window, mode);
+        assert_eq!(hop_events(&star_tl), 0, "a single node occupied the fabric link");
+        assert_eq!(star_ic.fabric_bytes_total(), 0);
+        for c in COLLECTIVES {
+            let (tl, ic) = build(&base.clone().with_collective(c), &loads, spec, window, mode);
+            assert_eq!(tl.events().len(), star_tl.events().len(), "{c:?} event count");
+            assert_eq!(tl.dep_edges(), star_tl.dep_edges(), "{c:?} edges");
+            for (i, (e, s)) in tl.events().iter().zip(star_tl.events()).enumerate() {
+                assert_eq!(e.resource, s.resource, "{c:?} event {i} resource");
+                assert_eq!(e.phase, s.phase, "{c:?} event {i} phase");
+                assert_eq!(e.duration_s.to_bits(), s.duration_s.to_bits(), "{c:?} event {i}");
+                assert_eq!(e.busy_s.to_bits(), s.busy_s.to_bits(), "{c:?} event {i} busy");
+                assert_eq!(e.start_s.to_bits(), s.start_s.to_bits(), "{c:?} event {i} start");
+                assert_eq!(e.finish_s.to_bits(), s.finish_s.to_bits(), "{c:?} event {i} finish");
+            }
+            assert_eq!(ic.fabric_bytes_total(), 0);
+            assert_eq!(ic.fabric_total_s().to_bits(), 0.0f64.to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_busy_totals_are_topology_and_node_invariant() {
+    check("fabric busy conservation", 50, |g| {
+        let base = any_base(g);
+        let desc = any_model(g);
+        let uses_adt = g.bool();
+        let loads = any_loads(g, &desc, uses_adt);
+        let spec = any_spec(g, uses_adt);
+        let window = PipelineWindow::new(g.usize_in(1..3), g.usize_in(1..3));
+        let mode = *g.pick(&MODES);
+        // reference: the historic single-node schedule (no fabric at all)
+        let (reference, _) = build(&base, &loads, spec, window, mode);
+        let nodes = *g.pick(&[2usize, 3, 4, 8]);
+        let fabric_tls: Vec<Timeline> = COLLECTIVES
+            .iter()
+            .map(|&c| {
+                build(&base.clone().with_nodes(nodes).with_collective(c), &loads, spec, window, mode)
+                    .0
+            })
+            .collect();
+        let others: Vec<&Timeline> = fabric_tls.iter().collect();
+        verify_mode_conservation(&reference, &others)
+            .expect("fabric hops moved Tables II/III busy totals");
+        // every multi-node schedule actually rode the fabric, with the
+        // collective's closed-form hop count per (batch, layer) gather
+        for (tl, &c) in fabric_tls.iter().zip(COLLECTIVES.iter()) {
+            let (hops, _) = c.hops_and_chunk(nodes, base.n_gpus, 1);
+            assert_eq!(
+                hop_events(tl),
+                hops * loads.len() * window.n_batches,
+                "{c:?} at {nodes} nodes: unexpected fabric hop count"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_fabric_bytes_charge_each_hop_once() {
+    check("fabric byte conservation", 50, |g| {
+        let base = any_base(g);
+        let desc = any_model(g);
+        let uses_adt = g.bool();
+        let loads = any_loads(g, &desc, uses_adt);
+        let spec = any_spec(g, uses_adt);
+        let window = PipelineWindow::new(g.usize_in(1..3), g.usize_in(1..3));
+        let mode = *g.pick(&MODES);
+        let nodes = *g.pick(&[2usize, 4, 6]);
+        let collective = *g.pick(&COLLECTIVES);
+        let profile = base.clone().with_nodes(nodes).with_collective(collective);
+        let (_, ic) = build(&profile, &loads, spec, window, mode);
+        // closed form: each (batch, layer) gather crosses the fabric as
+        // `hops` chunks, each charged exactly once
+        let per_batch: u64 = loads
+            .iter()
+            .map(|l| {
+                let (hops, chunk) = collective.hops_and_chunk(
+                    nodes,
+                    profile.n_gpus,
+                    l.grad_packed_bytes + l.bias_bytes,
+                );
+                (hops * chunk) as u64
+            })
+            .sum();
+        assert_eq!(
+            ic.fabric_bytes_total(),
+            per_batch * window.n_batches as u64,
+            "{collective:?} at {nodes} nodes: fabric bytes drifted from hops × chunk"
+        );
+        // the node-local gather channel never sees the fabric: its byte
+        // total matches the star's (and the single-node schedule's)
+        let (_, star_ic) = build(
+            &base.clone().with_nodes(nodes).with_collective(Collective::Star),
+            &loads,
+            spec,
+            window,
+            mode,
+        );
+        let (_, local_ic) = build(&base, &loads, spec, window, mode);
+        assert_eq!(ic.d2h_bytes_total(), star_ic.d2h_bytes_total());
+        assert_eq!(ic.d2h_bytes_total(), local_ic.d2h_bytes_total());
+    });
+}
+
+#[test]
+fn prop_fabric_schedules_pass_the_verifier() {
+    check("fabric schedules verify clean", 40, |g| {
+        let base = any_base(g);
+        let desc = any_model(g);
+        let uses_adt = g.bool();
+        let loads = any_loads(g, &desc, uses_adt);
+        let spec = any_spec(g, uses_adt);
+        let window = PipelineWindow::new(g.usize_in(1..3), g.usize_in(1..3));
+        let mode = *g.pick(&MODES);
+        let nodes = *g.pick(&[1usize, 2, 4]);
+        let collective = *g.pick(&COLLECTIVES);
+        let profile = base.with_nodes(nodes).with_collective(collective);
+        let (tl, _) = build(&profile, &loads, spec, window, mode);
+        let report = verify_timeline(&tl).unwrap_or_else(|v| {
+            panic!("{collective:?}@{nodes} {mode:?}: verifier rejected schedule: {v:?}")
+        });
+        assert!(report.events > 0 && report.checks > 0);
+        // fabric hops charge zero busy — pinned here independently of
+        // the verifier's FabricHopBusy rule
+        for e in tl.events() {
+            if e.resource == Resource::LinkInter {
+                assert_eq!(e.busy_s.to_bits(), 0.0f64.to_bits());
+            }
+        }
+    });
+}
