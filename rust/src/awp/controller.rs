@@ -193,6 +193,52 @@ impl AwpController {
         self.batch
     }
 
+    /// Raw per-layer bit state (checkpointing).
+    pub fn bits_per_layer(&self) -> &[u32] {
+        &self.bits_per_layer
+    }
+
+    /// Raw per-layer interval counters (checkpointing).
+    pub fn interval_counters(&self) -> &[u32] {
+        &self.interval_counter
+    }
+
+    /// Previous-batch norms (checkpointing).
+    pub fn prev_norms(&self) -> &[Option<f64>] {
+        &self.prev_norm
+    }
+
+    /// Restore controller state from a checkpoint so every future widen
+    /// decision is identical to the uninterrupted run. The event log is
+    /// intentionally not restored — it is diagnostics, not decision state.
+    pub fn restore(
+        &mut self,
+        bits: &[u32],
+        counters: &[u32],
+        prev_norms: &[Option<f64>],
+        batch: u64,
+    ) -> Result<(), String> {
+        let n = self.num_layers();
+        if bits.len() != n || counters.len() != n || prev_norms.len() != n {
+            return Err(format!(
+                "AWP snapshot shapes {}/{}/{} do not match {n} layers",
+                bits.len(),
+                counters.len(),
+                prev_norms.len()
+            ));
+        }
+        for (l, &b) in bits.iter().enumerate() {
+            if b % 8 != 0 || !(8..=32).contains(&b) {
+                return Err(format!("AWP snapshot layer {l}: invalid bit state {b}"));
+            }
+        }
+        self.bits_per_layer.copy_from_slice(bits);
+        self.interval_counter.copy_from_slice(counters);
+        self.prev_norm.copy_from_slice(prev_norms);
+        self.batch = batch;
+        Ok(())
+    }
+
     /// Mean transfer bytes per weight across layers, weighted by layer
     /// weight counts — the effective compression state of the network.
     pub fn mean_bytes_per_weight(&self, layer_weights: &[usize]) -> f64 {
@@ -363,6 +409,49 @@ mod tests {
         }
         // norms are still recorded for diagnostics
         assert!((c.prev_norm[0].unwrap() - n).abs() < 1e-12);
+    }
+
+    #[test]
+    fn restore_resumes_widen_decisions_bit_exactly() {
+        let norms: Vec<f64> = (0..30).map(|i| 1.0 * 0.93f64.powi(i)).collect();
+        let mut straight = AwpController::new(2, params(-0.01, 4));
+        for &n in &norms {
+            straight.observe_batch(&[n, n * 0.5]);
+        }
+
+        let mut first = AwpController::new(2, params(-0.01, 4));
+        for &n in &norms[..11] {
+            first.observe_batch(&[n, n * 0.5]);
+        }
+        let mut resumed = AwpController::new(2, params(-0.01, 4));
+        resumed
+            .restore(
+                first.bits_per_layer(),
+                first.interval_counters(),
+                first.prev_norms(),
+                first.batches_seen(),
+            )
+            .unwrap();
+        for &n in &norms[11..] {
+            resumed.observe_batch(&[n, n * 0.5]);
+        }
+        assert_eq!(straight.formats(), resumed.formats());
+        assert_eq!(straight.batches_seen(), resumed.batches_seen());
+        // post-resume events carry the same batch stamps as the tail of the
+        // straight run's log
+        let tail: Vec<AwpEvent> =
+            straight.events().iter().copied().filter(|e| e.batch >= 11).collect();
+        assert_eq!(tail, resumed.events());
+    }
+
+    #[test]
+    fn restore_rejects_bad_snapshots() {
+        let mut c = AwpController::new(2, params(-0.01, 4));
+        assert!(c.restore(&[8], &[0, 0], &[None, None], 0).is_err()); // shape
+        assert!(c.restore(&[8, 12], &[0, 0], &[None, None], 0).is_err()); // bits
+        assert!(c.restore(&[8, 16], &[0, 3], &[None, Some(1.0)], 5).is_ok());
+        assert_eq!(c.round_to(1), RoundTo::B2);
+        assert_eq!(c.batches_seen(), 5);
     }
 
     #[test]

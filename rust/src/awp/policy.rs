@@ -125,6 +125,37 @@ impl Policy {
             _ => None,
         }
     }
+
+    /// Restore an adaptive policy from a checkpoint: controller decision
+    /// state (per-group bits, interval counters, previous norms, batch) and
+    /// the per-layer formats the policy had published. Errors on static
+    /// policies or shape mismatches.
+    pub fn restore_adaptive(
+        &mut self,
+        bits: &[u32],
+        counters: &[u32],
+        prev_norms: &[Option<f64>],
+        batch: u64,
+        formats: &[RoundTo],
+    ) -> Result<(), String> {
+        match self {
+            Policy::Static { .. } => {
+                Err("cannot restore adaptive AWP state into a static policy".into())
+            }
+            Policy::Adaptive { ctl, formats: f, .. } => {
+                ctl.restore(bits, counters, prev_norms, batch)?;
+                if formats.len() != f.len() {
+                    return Err(format!(
+                        "AWP format snapshot has {} layers, policy has {}",
+                        formats.len(),
+                        f.len()
+                    ));
+                }
+                f.copy_from_slice(formats);
+                Ok(())
+            }
+        }
+    }
 }
 
 impl PrecisionPolicy for Policy {
@@ -248,6 +279,37 @@ mod tests {
         let labels = ["stem", "b1", "b1", "b2", "b2", "b2", "fc"];
         assert_eq!(resnet_block_groups(&labels), vec![0, 1, 1, 2, 2, 2, 3]);
         assert_eq!(resnet_block_groups(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn restore_adaptive_resumes_format_decisions() {
+        let norms: Vec<f64> = (0..12).map(|i| 0.9f64.powi(i)).collect();
+        let mut straight = Policy::new(PolicyKind::Awp, 2, awp_params(), None);
+        for &n in &norms {
+            straight.observe_batch(&[n, 1.0]);
+        }
+
+        let mut first = Policy::new(PolicyKind::Awp, 2, awp_params(), None);
+        for &n in &norms[..5] {
+            first.observe_batch(&[n, 1.0]);
+        }
+        let ctl = first.controller().unwrap();
+        let (bits, counters, prevs, batch) = (
+            ctl.bits_per_layer().to_vec(),
+            ctl.interval_counters().to_vec(),
+            ctl.prev_norms().to_vec(),
+            ctl.batches_seen(),
+        );
+        let snap_formats = first.formats().to_vec();
+        let mut resumed = Policy::new(PolicyKind::Awp, 2, awp_params(), None);
+        resumed.restore_adaptive(&bits, &counters, &prevs, batch, &snap_formats).unwrap();
+        for &n in &norms[5..] {
+            resumed.observe_batch(&[n, 1.0]);
+        }
+        assert_eq!(straight.formats(), resumed.formats());
+
+        let mut stat = Policy::new(PolicyKind::Baseline, 2, awp_params(), None);
+        assert!(stat.restore_adaptive(&bits, &counters, &prevs, batch, &snap_formats).is_err());
     }
 
     #[test]

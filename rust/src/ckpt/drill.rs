@@ -1,0 +1,620 @@
+//! Checkpoint drill: a fully deterministic synthetic training loop over
+//! the *real* state-carrying components — `data::Loader`, `optim::MomentumSgd`,
+//! `awp::Policy`, `grad::GradPolicy`, and the `StepArena`'s error-feedback
+//! quantizer — with synthetic gradients in place of the artifact-gated
+//! Pallas executor.
+//!
+//! The drill exists so the store's headline invariant is testable anywhere
+//! (CI, fresh checkouts, no `make artifacts`): train 2N batches straight
+//! versus train N, kill the process, resume, train N — the weights,
+//! optimizer momentum, controller decisions, and error-feedback residuals
+//! must be bit-identical (`tests/prop_ckpt.rs`, and the release-binary
+//! round-trip smoke in CI). Every piece of state the real `Trainer`
+//! checkpoints flows through the same snapshot/restore surface here.
+//!
+//! Synthetic gradients are `g = 0.05·w + η·(1 + 0.1·s)` with `η` drawn
+//! from the drill's own PRNG and `s` a statistic of the loaded batch —
+//! so the gradient stream depends on the loader position, the noise
+//! PRNG, *and* the weights, and any resume drift in any of them shows up
+//! in the weight hash immediately.
+
+use super::manifest::{
+    AwpState, CkptKind, CkptManifest, Encoding, GradState, LayerShards, TrainState,
+};
+use super::store::CkptStore;
+use super::{f32s_to_le_bytes, fnv1a64, hex_f64, hex_u64, u64s_to_le_bytes, CKPT_SCHEMA_VERSION};
+use crate::adt::{self, AdtConfig, RoundTo};
+use crate::awp::{l2_norm_fast, AwpParams, Policy, PolicyKind, PrecisionPolicy};
+use crate::coordinator::StepArena;
+use crate::data::{Loader, SynthDataset};
+use crate::grad::{GradParams, GradPolicy, GradPolicyKind};
+use crate::models::{model_by_name, ModelDesc, MODEL_NAMES};
+use crate::optim::{MomentumSgd, SgdConfig};
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+use crate::util::timer::Stopwatch;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::PathBuf;
+
+/// Drill run parameters (CLI `a2dtwp drill`).
+#[derive(Clone, Debug)]
+pub struct DrillConfig {
+    pub model: String,
+    pub policy: PolicyKind,
+    pub grad: GradPolicyKind,
+    pub grad_feedback: bool,
+    pub batch_size: usize,
+    pub train_size: u64,
+    pub seed: u64,
+    pub lr: f32,
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Checkpoint cadence in batches; 0 disables checkpointing.
+    pub checkpoint_every: u64,
+}
+
+impl DrillConfig {
+    /// Micro defaults: both adaptive controllers on, error feedback on.
+    pub fn micro() -> DrillConfig {
+        DrillConfig {
+            model: "alexnet_micro".into(),
+            policy: PolicyKind::Awp,
+            grad: GradPolicyKind::Adaptive,
+            grad_feedback: true,
+            batch_size: 16,
+            train_size: 64,
+            seed: 7,
+            lr: 0.01,
+            checkpoint_dir: None,
+            checkpoint_every: 0,
+        }
+    }
+}
+
+/// The deterministic drill loop (see module docs).
+pub struct Drill {
+    desc: ModelDesc,
+    cfg: DrillConfig,
+    layer_names: Vec<String>,
+    ws: Vec<Vec<f32>>,
+    bs: Vec<Vec<f32>>,
+    opt: MomentumSgd,
+    loader: Loader,
+    policy: Policy,
+    grad: GradPolicy,
+    arena: StepArena,
+    adt: AdtConfig,
+    /// Synthetic-gradient noise stream (checkpointed as `aux_rng`).
+    noise: Rng,
+    batches_done: u64,
+    smoothed_loss: f64,
+    awp_events: u64,
+    grad_events: u64,
+    last_ckpt_write_s: f64,
+    ckpt_bytes_last: usize,
+}
+
+impl Drill {
+    pub fn new(cfg: DrillConfig) -> Result<Drill> {
+        let desc = model_by_name(&cfg.model).ok_or_else(|| {
+            anyhow!("unknown model '{}' — available: {}", cfg.model, MODEL_NAMES.join(", "))
+        })?;
+        if cfg.batch_size == 0 || cfg.batch_size as u64 > cfg.train_size {
+            bail!(
+                "drill batch size {} must be in 1..={} (train size)",
+                cfg.batch_size,
+                cfg.train_size
+            );
+        }
+        let weight_counts = desc.weight_counts();
+        let bias_counts = desc.bias_counts();
+        let layer_names: Vec<String> = desc
+            .layers
+            .iter()
+            .filter(|l| l.is_weighted())
+            .map(|l| l.name.clone())
+            .collect();
+        let n = weight_counts.len();
+
+        let mut init = Rng::new(cfg.seed ^ 0x0D11_11);
+        let mut ws: Vec<Vec<f32>> = weight_counts.iter().map(|&c| vec![0f32; c]).collect();
+        for w in &mut ws {
+            init.fill_normal(w, 0.0, 0.05);
+        }
+        let bs: Vec<Vec<f32>> = bias_counts.iter().map(|&c| vec![0f32; c]).collect();
+
+        let sizes: Vec<usize> =
+            weight_counts.iter().chain(&bias_counts).copied().collect();
+        let opt = MomentumSgd::new(SgdConfig::paper_defaults(cfg.lr, 50), &sizes);
+        let loader = Loader::new(
+            SynthDataset::default_micro(cfg.seed),
+            cfg.batch_size,
+            1,
+            cfg.train_size,
+            64,
+            cfg.seed,
+        );
+        // aggressive controller settings so format decisions actually fire
+        // inside short drill runs — the resume invariant must cover them
+        let awp = AwpParams::for_model(&cfg.model).with_interval(2).with_threshold(-1e-4);
+        let groups = if cfg.model.contains("resnet") {
+            Some(crate::awp::resnet_block_groups(&desc.block_labels()))
+        } else {
+            None
+        };
+        let policy = Policy::new(cfg.policy, n, awp, groups);
+        let grad = GradPolicy::new(cfg.grad, n, GradParams { interval: 2, ..GradParams::default() });
+        let arena = StepArena::new(&weight_counts, &bias_counts);
+        let noise = Rng::new(cfg.seed ^ 0x5EED_0001);
+
+        Ok(Drill {
+            desc,
+            layer_names,
+            ws,
+            bs,
+            opt,
+            loader,
+            policy,
+            grad,
+            arena,
+            adt: AdtConfig { threads: 1, ..AdtConfig::default() },
+            noise,
+            batches_done: 0,
+            smoothed_loss: 0.0,
+            awp_events: 0,
+            grad_events: 0,
+            last_ckpt_write_s: 0.0,
+            ckpt_bytes_last: 0,
+            cfg,
+        })
+    }
+
+    /// Rebuild a drill from the committed checkpoint in
+    /// `cfg.checkpoint_dir` and restore every piece of training state.
+    pub fn resume(cfg: DrillConfig) -> Result<Drill> {
+        let dir = cfg
+            .checkpoint_dir
+            .clone()
+            .ok_or_else(|| anyhow!("--resume requires --checkpoint-dir"))?;
+        let mut d = Drill::new(cfg)?;
+        let store = CkptStore::new(dir);
+        let manifest = store.load_manifest()?;
+        manifest.check_against(&d.desc)?;
+        let state = manifest.state.as_ref().ok_or_else(|| {
+            anyhow!(
+                "checkpoint at {} is a '{}' manifest without train state — cannot resume",
+                store.dir().display(),
+                manifest.kind.name()
+            )
+        })?;
+
+        let (ws, bs) = store.load_weights(&manifest, &d.adt)?;
+        d.ws = ws;
+        d.bs = bs;
+        let vel = store.read_f32s(&state.velocity, &d.adt)?;
+        d.opt
+            .restore_from_flat(&vel, state.opt_batch)
+            .map_err(|e| anyhow!("optimizer restore: {e}"))?;
+        let res = store.read_f32s(&state.residuals, &d.adt)?;
+        d.arena
+            .restore_grad_residuals_from_flat(&res)
+            .map_err(|e| anyhow!("residual restore: {e}"))?;
+        let order = store.read_u64s(&state.loader_order)?;
+        d.loader
+            .restore(order, state.loader_cursor, state.loader_epoch, state.loader_rng)
+            .map_err(|e| anyhow!("loader restore: {e}"))?;
+        match (&state.awp, d.policy.needs_norms()) {
+            (Some(a), true) => d
+                .policy
+                .restore_adaptive(
+                    &a.bits_per_layer,
+                    &a.interval_counter,
+                    &a.prev_norm,
+                    a.batch,
+                    &a.formats,
+                )
+                .map_err(|e| anyhow!("AWP policy restore: {e}"))?,
+            (None, true) => bail!("checkpoint carries no AWP state but the awp policy needs it"),
+            _ => {}
+        }
+        match (&state.grad, d.grad.needs_norms()) {
+            (Some(g), true) => d
+                .grad
+                .restore_adaptive(
+                    &g.bytes_per_layer,
+                    &g.stable_counter,
+                    &g.prev_norm,
+                    g.batch,
+                    &g.formats,
+                )
+                .map_err(|e| anyhow!("grad policy restore: {e}"))?,
+            (None, true) => {
+                bail!("checkpoint carries no grad state but the adaptive gather needs it")
+            }
+            _ => {}
+        }
+        let aux = state
+            .aux_rng
+            .ok_or_else(|| anyhow!("checkpoint lacks the drill's auxiliary PRNG state"))?;
+        d.noise = Rng::from_state(aux);
+        d.batches_done = state.batches_run;
+        d.smoothed_loss = state.smoothed_loss;
+        d.awp_events = state.awp_events;
+        d.grad_events = state.grad_events;
+        Ok(d)
+    }
+
+    pub fn batches_done(&self) -> u64 {
+        self.batches_done
+    }
+
+    /// Wall-clock seconds spent writing the most recent checkpoint.
+    pub fn last_ckpt_write_s(&self) -> f64 {
+        self.last_ckpt_write_s
+    }
+
+    /// Total shard + state bytes of the most recent checkpoint.
+    pub fn ckpt_bytes_last(&self) -> usize {
+        self.ckpt_bytes_last
+    }
+
+    /// One synthetic training step over the real state-carrying components.
+    pub fn step(&mut self) -> Result<()> {
+        let n = self.ws.len();
+        let formats: Vec<RoundTo> = self.policy.formats().to_vec();
+        self.arena.begin_step(&formats);
+        if self.policy.kind().uses_adt() {
+            // pack the weights exactly as the broadcast path would
+            self.arena.pack_layers(&self.ws, &self.adt);
+        }
+
+        let batch = self.loader.next_train();
+        let probe = batch.images.len().min(64);
+        let stim: f32 = if probe == 0 {
+            0.0
+        } else {
+            batch.images[..probe].iter().sum::<f32>() / probe as f32
+        };
+
+        for l in 0..n {
+            for i in 0..self.ws[l].len() {
+                self.arena.sum_gw[l][i] = 0.05 * self.ws[l][i]
+                    + self.noise.normal_f32(0.0, 0.002) * (1.0 + 0.1 * stim);
+            }
+            for i in 0..self.bs[l].len() {
+                self.arena.sum_gb[l][i] = 0.05 * self.bs[l][i]
+                    + self.noise.normal_f32(0.0, 0.002) * (1.0 + 0.1 * stim);
+            }
+        }
+
+        let use_q = self.grad.kind().uses_adt();
+        if use_q {
+            let gf: Vec<RoundTo> = self.grad.formats().to_vec();
+            self.arena.quantize_grads_with_feedback(&gf, self.cfg.grad_feedback, &self.adt);
+        }
+        {
+            let gw: &[Vec<f32>] =
+                if use_q { &self.arena.grad_q } else { &self.arena.sum_gw };
+            self.opt.step_split(
+                &mut self.ws,
+                &mut self.bs,
+                gw,
+                &self.arena.sum_gb,
+                self.arena.decay(),
+                1,
+            );
+        }
+
+        if self.policy.needs_norms() {
+            for l in 0..n {
+                self.arena.norms[l] = l2_norm_fast(&self.ws[l], 1);
+            }
+            let evs = self.policy.observe_batch(&self.arena.norms);
+            self.awp_events += evs.len() as u64;
+        }
+        if self.grad.needs_norms() {
+            for l in 0..n {
+                self.arena.grad_norms[l] = l2_norm_fast(&self.arena.sum_gw[l], 1);
+                self.arena.grad_wnorms[l] = l2_norm_fast(&self.ws[l], 1);
+            }
+            let evs = self.grad.observe_batch(&self.arena.grad_norms, &self.arena.grad_wnorms);
+            self.grad_events += evs.len() as u64;
+        }
+
+        let loss: f64 =
+            self.ws.iter().map(|w| l2_norm_fast(w, 1)).sum::<f64>() / n as f64;
+        self.smoothed_loss = if self.batches_done == 0 {
+            loss
+        } else {
+            0.9 * self.smoothed_loss + 0.1 * loss
+        };
+        self.batches_done += 1;
+
+        if self.cfg.checkpoint_every > 0
+            && self.cfg.checkpoint_dir.is_some()
+            && self.batches_done % self.cfg.checkpoint_every == 0
+        {
+            self.save().context("periodic checkpoint")?;
+        }
+        Ok(())
+    }
+
+    /// Run until `to_batch` total batches have been trained.
+    pub fn run(&mut self, to_batch: u64) -> Result<()> {
+        while self.batches_done < to_batch {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Write a train checkpoint (lossless 32-bit weight shards + full
+    /// sidecar state) to `cfg.checkpoint_dir` via the two-phase commit.
+    pub fn save(&mut self) -> Result<()> {
+        let dir = self
+            .cfg
+            .checkpoint_dir
+            .clone()
+            .ok_or_else(|| anyhow!("no --checkpoint-dir configured"))?;
+        let sw = Stopwatch::start();
+        let store = CkptStore::new(dir);
+        let mut payloads: Vec<(String, Vec<u8>)> = Vec::new();
+        let mut layers = Vec::with_capacity(self.ws.len());
+        for (l, name) in self.layer_names.iter().enumerate() {
+            // B4 is lossless, so resume is bit-exact AND the shard is the
+            // same byte stream the 32-bit broadcast wire carries
+            let mut packed = Vec::new();
+            adt::bitpack(&self.ws[l], RoundTo::B4, &self.adt, &mut packed);
+            let weight =
+                super::ShardRef::for_payload(&packed, self.ws[l].len(), Encoding::Adt(RoundTo::B4))?;
+            payloads.push((weight.id.clone(), packed));
+            let braw = f32s_to_le_bytes([self.bs[l].as_slice()]);
+            let bias = super::ShardRef::for_payload(&braw, self.bs[l].len(), Encoding::F32Le)?;
+            payloads.push((bias.id.clone(), braw));
+            layers.push(LayerShards { layer: l, name: name.clone(), weight, bias });
+        }
+
+        let vel_bytes = f32s_to_le_bytes(self.opt.velocity().iter().map(|v| v.as_slice()));
+        let vel_count = self.opt.velocity().iter().map(|v| v.len()).sum::<usize>();
+        let velocity = super::ShardRef::for_payload(&vel_bytes, vel_count, Encoding::F32Le)?;
+        payloads.push((velocity.id.clone(), vel_bytes));
+
+        let res_bytes =
+            f32s_to_le_bytes(self.arena.grad_residuals().iter().map(|r| r.as_slice()));
+        let res_count = self.arena.grad_residuals().iter().map(|r| r.len()).sum::<usize>();
+        let residuals = super::ShardRef::for_payload(&res_bytes, res_count, Encoding::F32Le)?;
+        payloads.push((residuals.id.clone(), res_bytes));
+
+        let order_bytes = u64s_to_le_bytes(self.loader.order());
+        let loader_order =
+            super::ShardRef::for_payload(&order_bytes, self.loader.order().len(), Encoding::U64Le)?;
+        payloads.push((loader_order.id.clone(), order_bytes));
+
+        let awp = self.policy.controller().map(|ctl| AwpState {
+            bits_per_layer: ctl.bits_per_layer().to_vec(),
+            interval_counter: ctl.interval_counters().to_vec(),
+            prev_norm: ctl.prev_norms().to_vec(),
+            batch: ctl.batches_seen(),
+            formats: self.policy.formats().to_vec(),
+        });
+        let grad = self.grad.controller().map(|ctl| GradState {
+            bytes_per_layer: ctl.bytes_per_layer().to_vec(),
+            stable_counter: ctl.stable_counters().to_vec(),
+            prev_norm: ctl.prev_norms().to_vec(),
+            batch: ctl.batches_seen(),
+            formats: self.grad.formats().to_vec(),
+        });
+
+        let state = TrainState {
+            batches_run: self.batches_done,
+            smoothed_loss: self.smoothed_loss,
+            sim_time_s: 0.0,
+            loader_order,
+            loader_cursor: self.loader.cursor(),
+            loader_epoch: self.loader.epoch(),
+            loader_rng: self.loader.rng_state(),
+            velocity,
+            opt_batch: self.opt.batches_applied(),
+            residuals,
+            aux_rng: Some(self.noise.state()),
+            awp,
+            grad,
+            awp_events: self.awp_events,
+            grad_events: self.grad_events,
+        };
+        let manifest = CkptManifest {
+            schema_version: CKPT_SCHEMA_VERSION,
+            kind: CkptKind::Train,
+            model: self.cfg.model.clone(),
+            batches: self.batches_done,
+            min_runnable_depth: layers.len(),
+            layers,
+            state: Some(state),
+        };
+        self.ckpt_bytes_last = payloads.iter().map(|(_, p)| p.len()).sum();
+        store.prepare(manifest, payloads)?.commit()?;
+        self.last_ckpt_write_s = sw.elapsed_s();
+        Ok(())
+    }
+
+    /// Deterministic run summary: content hashes over every piece of
+    /// training state, bit-pattern loss, controller formats and event
+    /// counts. Two runs produce equal reports iff their state is
+    /// bit-identical — the object CI diffs for the kill/resume smoke.
+    /// (Deliberately excludes wall-clock and checkpoint-size fields.)
+    pub fn report(&self) -> Json {
+        let weights_fnv = {
+            let bytes =
+                f32s_to_le_bytes(self.ws.iter().chain(&self.bs).map(|t| t.as_slice()));
+            hex_u64(fnv1a64(&bytes))
+        };
+        let velocity_fnv = {
+            let bytes = f32s_to_le_bytes(self.opt.velocity().iter().map(|v| v.as_slice()));
+            hex_u64(fnv1a64(&bytes))
+        };
+        let residual_fnv = {
+            let bytes =
+                f32s_to_le_bytes(self.arena.grad_residuals().iter().map(|r| r.as_slice()));
+            hex_u64(fnv1a64(&bytes))
+        };
+        Json::obj(vec![
+            ("model", Json::str(self.cfg.model.clone())),
+            ("policy", Json::str(self.policy.kind().name())),
+            ("grad_policy", Json::str(self.grad.kind().name())),
+            ("batches", Json::num(self.batches_done as f64)),
+            ("weights_fnv", Json::str(weights_fnv)),
+            ("velocity_fnv", Json::str(velocity_fnv)),
+            ("residual_fnv", Json::str(residual_fnv)),
+            ("smoothed_loss_bits", Json::str(hex_f64(self.smoothed_loss))),
+            (
+                "formats",
+                Json::arr(self.policy.formats().iter().map(|rt| Json::num(rt.bits() as f64))),
+            ),
+            (
+                "grad_formats",
+                Json::arr(self.grad.formats().iter().map(|rt| Json::num(rt.bits() as f64))),
+            ),
+            ("awp_events", Json::num(self.awp_events as f64)),
+            ("grad_events", Json::num(self.grad_events as f64)),
+            ("loader_epoch", Json::num(self.loader.epoch() as f64)),
+            ("loader_cursor", Json::num(self.loader.cursor() as f64)),
+        ])
+    }
+}
+
+/// Re-pack a committed train checkpoint as a serving manifest: weights at
+/// the (lossy) `rt` format, biases raw, progressive floor `min_depth`, no
+/// train state — the distribution artifact for inference fleets.
+pub fn export_serving(
+    src: &CkptStore,
+    dst: &CkptStore,
+    rt: RoundTo,
+    min_depth: usize,
+    cfg: &AdtConfig,
+) -> Result<CkptManifest> {
+    let train = src.load_manifest()?;
+    if min_depth == 0 || min_depth > train.layers.len() {
+        bail!(
+            "export min_runnable_depth {min_depth} is outside 1..={} layers",
+            train.layers.len()
+        );
+    }
+    let (ws, bs) = src.load_weights(&train, cfg)?;
+    let mut payloads: Vec<(String, Vec<u8>)> = Vec::new();
+    let mut layers = Vec::with_capacity(train.layers.len());
+    for (l, src_layer) in train.layers.iter().enumerate() {
+        let mut packed = Vec::new();
+        adt::bitpack(&ws[l], rt, cfg, &mut packed);
+        let weight = super::ShardRef::for_payload(&packed, ws[l].len(), Encoding::Adt(rt))?;
+        payloads.push((weight.id.clone(), packed));
+        let braw = f32s_to_le_bytes([bs[l].as_slice()]);
+        let bias = super::ShardRef::for_payload(&braw, bs[l].len(), Encoding::F32Le)?;
+        payloads.push((bias.id.clone(), braw));
+        layers.push(LayerShards { layer: l, name: src_layer.name.clone(), weight, bias });
+    }
+    let manifest = CkptManifest {
+        schema_version: CKPT_SCHEMA_VERSION,
+        kind: CkptKind::Serving,
+        model: train.model.clone(),
+        batches: train.batches,
+        min_runnable_depth: min_depth,
+        layers,
+        state: None,
+    };
+    dst.prepare(manifest.clone(), payloads)?.commit()?;
+    Ok(manifest)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+    use std::path::Path;
+
+    struct Scratch(PathBuf);
+
+    impl Scratch {
+        fn new(name: &str) -> Scratch {
+            let dir = std::env::temp_dir()
+                .join(format!("a2dtwp_drill_{name}_{}", std::process::id()));
+            let _ = fs::remove_dir_all(&dir);
+            fs::create_dir_all(&dir).unwrap();
+            Scratch(dir)
+        }
+        fn path(&self) -> &Path {
+            &self.0
+        }
+    }
+
+    impl Drop for Scratch {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.0);
+        }
+    }
+
+    #[test]
+    fn drill_is_deterministic() {
+        let mut a = Drill::new(DrillConfig::micro()).unwrap();
+        let mut b = Drill::new(DrillConfig::micro()).unwrap();
+        a.run(8).unwrap();
+        b.run(8).unwrap();
+        assert_eq!(a.report().to_string_compact(), b.report().to_string_compact());
+    }
+
+    #[test]
+    fn kill_and_resume_matches_straight_run() {
+        let s = Scratch::new("resume");
+        let mut straight = Drill::new(DrillConfig::micro()).unwrap();
+        straight.run(12).unwrap();
+
+        let cfg = DrillConfig {
+            checkpoint_dir: Some(s.path().to_path_buf()),
+            checkpoint_every: 6,
+            ..DrillConfig::micro()
+        };
+        let mut first = Drill::new(cfg.clone()).unwrap();
+        first.run(6).unwrap();
+        drop(first); // the "kill"
+        let mut resumed = Drill::resume(cfg).unwrap();
+        assert_eq!(resumed.batches_done(), 6);
+        resumed.run(12).unwrap();
+        assert_eq!(
+            straight.report().to_string_compact(),
+            resumed.report().to_string_compact()
+        );
+    }
+
+    #[test]
+    fn export_produces_verifiable_serving_manifest() {
+        let src_dir = Scratch::new("export_src");
+        let dst_dir = Scratch::new("export_dst");
+        let cfg = DrillConfig {
+            checkpoint_dir: Some(src_dir.path().to_path_buf()),
+            checkpoint_every: 4,
+            ..DrillConfig::micro()
+        };
+        let mut d = Drill::new(cfg).unwrap();
+        d.run(4).unwrap();
+        assert!(d.ckpt_bytes_last() > 0);
+        let src = CkptStore::new(src_dir.path());
+        let dst = CkptStore::new(dst_dir.path());
+        let adt = AdtConfig { threads: 1, ..AdtConfig::default() };
+        let m = export_serving(&src, &dst, RoundTo::B1, 2, &adt).unwrap();
+        assert_eq!(m.kind, CkptKind::Serving);
+        assert_eq!(m.min_runnable_depth, 2);
+        dst.verify(&dst.load_manifest().unwrap()).unwrap();
+        // serving shards are real compression: 8-bit weights ≈ ¼ the bytes
+        let train = src.load_manifest().unwrap();
+        let train_w: usize = train.layers.iter().map(|l| l.weight.bytes).sum();
+        let serve_w: usize = m.layers.iter().map(|l| l.weight.bytes).sum();
+        assert!(serve_w * 3 < train_w, "serving {serve_w} vs train {train_w}");
+        // progressive load at the floor works; a serving manifest refuses resume
+        let (ws, _) = dst.load_weights_progressive(&m, 2, &adt).unwrap();
+        assert_eq!(ws.len(), 2);
+        let err = Drill::resume(DrillConfig {
+            checkpoint_dir: Some(dst_dir.path().to_path_buf()),
+            checkpoint_every: 0,
+            ..DrillConfig::micro()
+        })
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("cannot resume"), "{err:#}");
+    }
+}

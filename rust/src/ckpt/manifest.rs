@@ -1,0 +1,763 @@
+//! The checkpoint manifest: schema-versioned JSON describing per-layer
+//! content-addressed shards plus the sidecar state bit-exact resume needs.
+//!
+//! Versioning rules (see CONTRIBUTING.md §Checkpoint manifest schema):
+//! loaders refuse any manifest whose `schema_version` differs from
+//! [`CKPT_SCHEMA_VERSION`](super::CKPT_SCHEMA_VERSION); scalars that must
+//! survive the round trip bit-exactly are stored as hex bit patterns
+//! (`*_bits` keys / `loader_rng` words), never as JSON numbers.
+
+use super::{f64_from_hex, hex_f64, hex_u64, parse_hex_u64, CKPT_SCHEMA_VERSION};
+use crate::adt::{self, RoundTo};
+use crate::models::ModelDesc;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// At-rest encoding of one shard's payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Encoding {
+    /// Packed ADT bytes at the given format (`adt::bitpack_into` output).
+    Adt(RoundTo),
+    /// Raw little-endian f32 stream (biases, optimizer state).
+    F32Le,
+    /// Raw little-endian u64 stream (loader shuffle order).
+    U64Le,
+}
+
+impl Encoding {
+    pub fn name(&self) -> String {
+        match self {
+            Encoding::Adt(rt) => format!("adt{}", rt.bits()),
+            Encoding::F32Le => "f32le".into(),
+            Encoding::U64Le => "u64le".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Encoding> {
+        match s {
+            "adt8" => Some(Encoding::Adt(RoundTo::B1)),
+            "adt16" => Some(Encoding::Adt(RoundTo::B2)),
+            "adt24" => Some(Encoding::Adt(RoundTo::B3)),
+            "adt32" => Some(Encoding::Adt(RoundTo::B4)),
+            "f32le" => Some(Encoding::F32Le),
+            "u64le" => Some(Encoding::U64Le),
+            _ => None,
+        }
+    }
+
+    /// Exact byte length a payload of `count` elements must have.
+    pub fn byte_len(&self, count: usize) -> usize {
+        match self {
+            Encoding::Adt(rt) => adt::packed_len(count, *rt),
+            Encoding::F32Le => count * 4,
+            Encoding::U64Le => count * 8,
+        }
+    }
+}
+
+/// One content-addressed shard: `id` is the FNV-1a 64 hash of the payload
+/// bytes, rendered as 16 hex digits — the filename under `shards/`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardRef {
+    pub id: String,
+    pub bytes: usize,
+    pub count: usize,
+    pub encoding: Encoding,
+}
+
+impl ShardRef {
+    /// Address a payload: hash the bytes, record length/count/encoding.
+    pub fn for_payload(payload: &[u8], count: usize, encoding: Encoding) -> Result<ShardRef> {
+        let expect = encoding.byte_len(count);
+        if payload.len() != expect {
+            bail!(
+                "shard payload is {} bytes but {count} {} elements need {expect}",
+                payload.len(),
+                encoding.name()
+            );
+        }
+        Ok(ShardRef {
+            id: hex_u64(super::fnv1a64(payload)),
+            bytes: payload.len(),
+            count,
+            encoding,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::str(self.id.clone())),
+            ("bytes", Json::num(self.bytes as f64)),
+            ("count", Json::num(self.count as f64)),
+            ("encoding", Json::str(self.encoding.name())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ShardRef> {
+        let id = j.req_str("id").map_err(|e| anyhow!("{e}"))?.to_string();
+        parse_hex_u64(&id).map_err(|e| anyhow!("shard id: {e}"))?;
+        let enc_name = j.req_str("encoding").map_err(|e| anyhow!("{e}"))?;
+        let encoding = Encoding::parse(enc_name)
+            .ok_or_else(|| anyhow!("shard {id}: unknown encoding '{enc_name}'"))?;
+        let bytes = j.req_usize("bytes").map_err(|e| anyhow!("{e}"))?;
+        let count = j.req_usize("count").map_err(|e| anyhow!("{e}"))?;
+        if encoding.byte_len(count) != bytes {
+            bail!(
+                "shard {id}: manifest length disagreement — {count} {} elements need {} bytes, manifest says {bytes}",
+                encoding.name(),
+                encoding.byte_len(count)
+            );
+        }
+        Ok(ShardRef { id, bytes, count, encoding })
+    }
+}
+
+/// One weighted layer's shards: packed weights plus raw-f32 biases.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerShards {
+    pub layer: usize,
+    pub name: String,
+    pub weight: ShardRef,
+    pub bias: ShardRef,
+}
+
+impl LayerShards {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("layer", Json::num(self.layer as f64)),
+            ("name", Json::str(self.name.clone())),
+            ("weight", self.weight.to_json()),
+            ("bias", self.bias.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<LayerShards> {
+        Ok(LayerShards {
+            layer: j.req_usize("layer").map_err(|e| anyhow!("{e}"))?,
+            name: j.req_str("name").map_err(|e| anyhow!("{e}"))?.to_string(),
+            weight: ShardRef::from_json(j.req("weight").map_err(|e| anyhow!("{e}"))?)
+                .context("weight shard")?,
+            bias: ShardRef::from_json(j.req("bias").map_err(|e| anyhow!("{e}"))?)
+                .context("bias shard")?,
+        })
+    }
+}
+
+/// Train checkpoints carry resume state; serving manifests carry only the
+/// (possibly lossy) layer shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CkptKind {
+    Train,
+    Serving,
+}
+
+impl CkptKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CkptKind::Train => "train",
+            CkptKind::Serving => "serving",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CkptKind> {
+        match s {
+            "train" => Some(CkptKind::Train),
+            "serving" => Some(CkptKind::Serving),
+            _ => None,
+        }
+    }
+}
+
+/// Snapshot of the adaptive AWP controller (`awp::AwpController`), enough
+/// to make every future widen decision identical after resume.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AwpState {
+    pub bits_per_layer: Vec<u32>,
+    pub interval_counter: Vec<u32>,
+    pub prev_norm: Vec<Option<f64>>,
+    pub batch: u64,
+    /// The policy's current per-layer formats (refreshed only on events,
+    /// so they must be restored explicitly, not derived).
+    pub formats: Vec<RoundTo>,
+}
+
+/// Snapshot of the adaptive gather controller (`grad::GradController`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GradState {
+    pub bytes_per_layer: Vec<u8>,
+    pub stable_counter: Vec<u32>,
+    pub prev_norm: Vec<Option<f64>>,
+    pub batch: u64,
+    pub formats: Vec<RoundTo>,
+}
+
+/// Sidecar state for bit-exact resume.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainState {
+    pub batches_run: u64,
+    /// Loss EMA, stored as f64 bit pattern (hex) so resume is bit-exact.
+    pub smoothed_loss: f64,
+    pub sim_time_s: f64,
+    /// Loader shuffle order — a u64le state shard (train_size elements).
+    pub loader_order: ShardRef,
+    pub loader_cursor: usize,
+    pub loader_epoch: u64,
+    pub loader_rng: [u64; 4],
+    /// Optimizer momentum, one f32le shard: weight tensors then bias
+    /// tensors, construction-time layout.
+    pub velocity: ShardRef,
+    pub opt_batch: u64,
+    /// Error-feedback residuals, one f32le shard over the weight tensors.
+    pub residuals: ShardRef,
+    /// Auxiliary PRNG (the drill's synthetic-gradient stream).
+    pub aux_rng: Option<[u64; 4]>,
+    pub awp: Option<AwpState>,
+    pub grad: Option<GradState>,
+    /// Cumulative event counts (reporting parity with a straight run —
+    /// restored controllers start with empty event logs).
+    pub awp_events: u64,
+    pub grad_events: u64,
+}
+
+fn rng_to_json(s: &[u64; 4]) -> Json {
+    Json::arr(s.iter().map(|&w| Json::str(hex_u64(w))))
+}
+
+fn rng_from_json(j: &Json, what: &str) -> Result<[u64; 4]> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("{what}: expected an array of 4 hex words"))?;
+    if arr.len() != 4 {
+        bail!("{what}: expected 4 hex words, got {}", arr.len());
+    }
+    let mut out = [0u64; 4];
+    for (i, w) in arr.iter().enumerate() {
+        let s = w.as_str().ok_or_else(|| anyhow!("{what}[{i}]: expected a hex string"))?;
+        out[i] = parse_hex_u64(s).map_err(|e| anyhow!("{what}[{i}]: {e}"))?;
+    }
+    Ok(out)
+}
+
+fn norms_to_json(norms: &[Option<f64>]) -> Json {
+    Json::arr(norms.iter().map(|n| match n {
+        None => Json::Null,
+        Some(x) => Json::str(hex_f64(*x)),
+    }))
+}
+
+fn norms_from_json(j: &Json, what: &str) -> Result<Vec<Option<f64>>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("{what}: expected an array"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, v)| match v {
+            Json::Null => Ok(None),
+            Json::Str(s) => {
+                f64_from_hex(s).map(Some).map_err(|e| anyhow!("{what}[{i}]: {e}"))
+            }
+            _ => Err(anyhow!("{what}[{i}]: expected null or a hex bit pattern")),
+        })
+        .collect()
+}
+
+fn u32s_to_json(xs: &[u32]) -> Json {
+    Json::arr(xs.iter().map(|&x| Json::num(x as f64)))
+}
+
+fn u32s_from_json(j: &Json, what: &str) -> Result<Vec<u32>> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("{what}: expected an array"))?;
+    arr.iter()
+        .enumerate()
+        .map(|(i, v)| {
+            v.as_usize()
+                .and_then(|x| u32::try_from(x).ok())
+                .ok_or_else(|| anyhow!("{what}[{i}]: expected a u32"))
+        })
+        .collect()
+}
+
+fn formats_to_json(formats: &[RoundTo]) -> Json {
+    Json::arr(formats.iter().map(|rt| Json::num(rt.bits() as f64)))
+}
+
+fn formats_from_json(j: &Json, what: &str) -> Result<Vec<RoundTo>> {
+    let bits = u32s_from_json(j, what)?;
+    bits.iter()
+        .map(|&b| {
+            if b % 8 != 0 {
+                return Err(anyhow!("{what}: {b} bits is not byte-granular"));
+            }
+            RoundTo::from_bits(b).ok_or_else(|| anyhow!("{what}: bad format width {b}"))
+        })
+        .collect()
+}
+
+fn req_u64(j: &Json, key: &str) -> Result<u64> {
+    j.req(key)
+        .map_err(|e| anyhow!("{e}"))?
+        .as_f64()
+        .and_then(|x| if x >= 0.0 && x.fract() == 0.0 { Some(x as u64) } else { None })
+        .ok_or_else(|| anyhow!("field '{key}' is not a non-negative integer"))
+}
+
+fn req_bits_f64(j: &Json, key: &str) -> Result<f64> {
+    let s = j.req_str(key).map_err(|e| anyhow!("{e}"))?;
+    f64_from_hex(s).map_err(|e| anyhow!("field '{key}': {e}"))
+}
+
+impl AwpState {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bits_per_layer", u32s_to_json(&self.bits_per_layer)),
+            ("interval_counter", u32s_to_json(&self.interval_counter)),
+            ("prev_norm_bits", norms_to_json(&self.prev_norm)),
+            ("batch", Json::num(self.batch as f64)),
+            ("formats", formats_to_json(&self.formats)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<AwpState> {
+        Ok(AwpState {
+            bits_per_layer: u32s_from_json(
+                j.req("bits_per_layer").map_err(|e| anyhow!("{e}"))?,
+                "awp.bits_per_layer",
+            )?,
+            interval_counter: u32s_from_json(
+                j.req("interval_counter").map_err(|e| anyhow!("{e}"))?,
+                "awp.interval_counter",
+            )?,
+            prev_norm: norms_from_json(
+                j.req("prev_norm_bits").map_err(|e| anyhow!("{e}"))?,
+                "awp.prev_norm_bits",
+            )?,
+            batch: req_u64(j, "batch")?,
+            formats: formats_from_json(
+                j.req("formats").map_err(|e| anyhow!("{e}"))?,
+                "awp.formats",
+            )?,
+        })
+    }
+}
+
+impl GradState {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "bytes_per_layer",
+                Json::arr(self.bytes_per_layer.iter().map(|&b| Json::num(b as f64))),
+            ),
+            ("stable_counter", u32s_to_json(&self.stable_counter)),
+            ("prev_norm_bits", norms_to_json(&self.prev_norm)),
+            ("batch", Json::num(self.batch as f64)),
+            ("formats", formats_to_json(&self.formats)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<GradState> {
+        let bytes = u32s_from_json(
+            j.req("bytes_per_layer").map_err(|e| anyhow!("{e}"))?,
+            "grad.bytes_per_layer",
+        )?;
+        let bytes_per_layer = bytes
+            .iter()
+            .map(|&b| {
+                if (1..=4).contains(&b) {
+                    Ok(b as u8)
+                } else {
+                    Err(anyhow!("grad.bytes_per_layer: {b} is outside 1..=4"))
+                }
+            })
+            .collect::<Result<Vec<u8>>>()?;
+        Ok(GradState {
+            bytes_per_layer,
+            stable_counter: u32s_from_json(
+                j.req("stable_counter").map_err(|e| anyhow!("{e}"))?,
+                "grad.stable_counter",
+            )?,
+            prev_norm: norms_from_json(
+                j.req("prev_norm_bits").map_err(|e| anyhow!("{e}"))?,
+                "grad.prev_norm_bits",
+            )?,
+            batch: req_u64(j, "batch")?,
+            formats: formats_from_json(
+                j.req("formats").map_err(|e| anyhow!("{e}"))?,
+                "grad.formats",
+            )?,
+        })
+    }
+}
+
+impl TrainState {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("batches_run", Json::num(self.batches_run as f64)),
+            ("smoothed_loss_bits", Json::str(hex_f64(self.smoothed_loss))),
+            ("sim_time_s_bits", Json::str(hex_f64(self.sim_time_s))),
+            ("loader_order", self.loader_order.to_json()),
+            ("loader_cursor", Json::num(self.loader_cursor as f64)),
+            ("loader_epoch", Json::num(self.loader_epoch as f64)),
+            ("loader_rng", rng_to_json(&self.loader_rng)),
+            ("velocity", self.velocity.to_json()),
+            ("opt_batch", Json::num(self.opt_batch as f64)),
+            ("residuals", self.residuals.to_json()),
+            ("awp_events", Json::num(self.awp_events as f64)),
+            ("grad_events", Json::num(self.grad_events as f64)),
+        ];
+        if let Some(rng) = &self.aux_rng {
+            pairs.push(("aux_rng", rng_to_json(rng)));
+        }
+        if let Some(awp) = &self.awp {
+            pairs.push(("awp", awp.to_json()));
+        }
+        if let Some(grad) = &self.grad {
+            pairs.push(("grad", grad.to_json()));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrainState> {
+        Ok(TrainState {
+            batches_run: req_u64(j, "batches_run")?,
+            smoothed_loss: req_bits_f64(j, "smoothed_loss_bits")?,
+            sim_time_s: req_bits_f64(j, "sim_time_s_bits")?,
+            loader_order: ShardRef::from_json(
+                j.req("loader_order").map_err(|e| anyhow!("{e}"))?,
+            )
+            .context("loader_order shard")?,
+            loader_cursor: j.req_usize("loader_cursor").map_err(|e| anyhow!("{e}"))?,
+            loader_epoch: req_u64(j, "loader_epoch")?,
+            loader_rng: rng_from_json(
+                j.req("loader_rng").map_err(|e| anyhow!("{e}"))?,
+                "loader_rng",
+            )?,
+            velocity: ShardRef::from_json(j.req("velocity").map_err(|e| anyhow!("{e}"))?)
+                .context("velocity shard")?,
+            opt_batch: req_u64(j, "opt_batch")?,
+            residuals: ShardRef::from_json(j.req("residuals").map_err(|e| anyhow!("{e}"))?)
+                .context("residuals shard")?,
+            aux_rng: match j.get("aux_rng") {
+                None => None,
+                Some(v) => Some(rng_from_json(v, "aux_rng")?),
+            },
+            awp: match j.get("awp") {
+                None => None,
+                Some(v) => Some(AwpState::from_json(v).context("awp state")?),
+            },
+            grad: match j.get("grad") {
+                None => None,
+                Some(v) => Some(GradState::from_json(v).context("grad state")?),
+            },
+            awp_events: req_u64(j, "awp_events")?,
+            grad_events: req_u64(j, "grad_events")?,
+        })
+    }
+}
+
+/// The whole checkpoint / serving manifest.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CkptManifest {
+    pub schema_version: f64,
+    pub kind: CkptKind,
+    pub model: String,
+    pub batches: u64,
+    /// Progressive-serving floor: a loader holding only the first
+    /// `min_runnable_depth` layer shards may serve the truncated model.
+    pub min_runnable_depth: usize,
+    pub layers: Vec<LayerShards>,
+    pub state: Option<TrainState>,
+}
+
+impl CkptManifest {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("schema_version", Json::num(self.schema_version)),
+            ("kind", Json::str(self.kind.name())),
+            ("model", Json::str(self.model.clone())),
+            ("batches", Json::num(self.batches as f64)),
+            ("min_runnable_depth", Json::num(self.min_runnable_depth as f64)),
+            ("layers", Json::arr(self.layers.iter().map(|l| l.to_json()))),
+        ];
+        if let Some(state) = &self.state {
+            pairs.push(("state", state.to_json()));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<CkptManifest> {
+        let version = j.req_f64("schema_version").map_err(|e| anyhow!("{e}"))?;
+        if (version - CKPT_SCHEMA_VERSION).abs() > 1e-9 {
+            bail!(
+                "checkpoint manifest schema_version {version} does not match this binary's {CKPT_SCHEMA_VERSION} — re-export the checkpoint or use a matching binary"
+            );
+        }
+        let kind_name = j.req_str("kind").map_err(|e| anyhow!("{e}"))?;
+        let kind = CkptKind::parse(kind_name)
+            .ok_or_else(|| anyhow!("unknown checkpoint kind '{kind_name}'"))?;
+        let layers = j
+            .req_arr("layers")
+            .map_err(|e| anyhow!("{e}"))?
+            .iter()
+            .enumerate()
+            .map(|(i, l)| LayerShards::from_json(l).with_context(|| format!("layers[{i}]")))
+            .collect::<Result<Vec<_>>>()?;
+        let min_runnable_depth = j.req_usize("min_runnable_depth").map_err(|e| anyhow!("{e}"))?;
+        if min_runnable_depth == 0 || min_runnable_depth > layers.len() {
+            bail!(
+                "min_runnable_depth {min_runnable_depth} is outside 1..={} layers",
+                layers.len()
+            );
+        }
+        let state = match j.get("state") {
+            None => None,
+            Some(v) => Some(TrainState::from_json(v).context("train state")?),
+        };
+        Ok(CkptManifest {
+            schema_version: version,
+            kind,
+            model: j.req_str("model").map_err(|e| anyhow!("{e}"))?.to_string(),
+            batches: req_u64(j, "batches")?,
+            min_runnable_depth,
+            layers,
+            state,
+        })
+    }
+
+    /// All shard references this manifest points at (layer + state shards)
+    /// — the commit-time GC liveness set.
+    pub fn shard_refs(&self) -> Vec<&ShardRef> {
+        let mut out = Vec::with_capacity(self.layers.len() * 2 + 3);
+        for l in &self.layers {
+            out.push(&l.weight);
+            out.push(&l.bias);
+        }
+        if let Some(s) = &self.state {
+            out.push(&s.loader_order);
+            out.push(&s.velocity);
+            out.push(&s.residuals);
+        }
+        out
+    }
+
+    /// Verify the manifest agrees with the Rust-side model descriptor:
+    /// same weighted-layer count, names, and element counts — the
+    /// `runtime::manifest::check_against` pattern, so a checkpoint can
+    /// never silently load into a drifted zoo entry.
+    pub fn check_against(&self, desc: &ModelDesc) -> Result<()> {
+        let weight_counts = desc.weight_counts();
+        let bias_counts = desc.bias_counts();
+        let names: Vec<&str> = desc
+            .layers
+            .iter()
+            .filter(|l| l.is_weighted())
+            .map(|l| l.name.as_str())
+            .collect();
+        if self.model != desc.name {
+            bail!(
+                "checkpoint is for model '{}', descriptor is '{}'",
+                self.model,
+                desc.name
+            );
+        }
+        if self.layers.len() != weight_counts.len() {
+            bail!(
+                "{}: checkpoint has {} weighted layers, descriptor has {}",
+                self.model,
+                self.layers.len(),
+                weight_counts.len()
+            );
+        }
+        for (i, l) in self.layers.iter().enumerate() {
+            if l.layer != i {
+                bail!("{} layers[{i}]: out-of-order layer index {}", self.model, l.layer);
+            }
+            if l.name != names[i] {
+                bail!(
+                    "{} layer {i}: checkpoint names it '{}', descriptor '{}'",
+                    self.model,
+                    l.name,
+                    names[i]
+                );
+            }
+            if l.weight.count != weight_counts[i] {
+                bail!(
+                    "{} layer {i} ({}): weight count {} != descriptor {}",
+                    self.model,
+                    l.name,
+                    l.weight.count,
+                    weight_counts[i]
+                );
+            }
+            if l.bias.count != bias_counts[i] {
+                bail!(
+                    "{} layer {i} ({}): bias count {} != descriptor {}",
+                    self.model,
+                    l.name,
+                    l.bias.count,
+                    bias_counts[i]
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::model_by_name;
+
+    fn shard(count: usize, encoding: Encoding) -> ShardRef {
+        let payload = vec![0u8; encoding.byte_len(count)];
+        ShardRef::for_payload(&payload, count, encoding).unwrap()
+    }
+
+    fn sample_manifest() -> CkptManifest {
+        let desc = model_by_name("alexnet_micro").unwrap();
+        let layers = desc
+            .layers
+            .iter()
+            .filter(|l| l.is_weighted())
+            .enumerate()
+            .map(|(i, l)| LayerShards {
+                layer: i,
+                name: l.name.clone(),
+                weight: shard(l.weight_count(), Encoding::Adt(RoundTo::B4)),
+                bias: shard(l.bias_count(), Encoding::F32Le),
+            })
+            .collect::<Vec<_>>();
+        let n = layers.len();
+        let total_w: usize = desc.weight_counts().iter().sum();
+        let total_b: usize = desc.bias_counts().iter().sum();
+        CkptManifest {
+            schema_version: CKPT_SCHEMA_VERSION,
+            kind: CkptKind::Train,
+            model: desc.name.clone(),
+            batches: 7,
+            min_runnable_depth: n,
+            layers,
+            state: Some(TrainState {
+                batches_run: 7,
+                smoothed_loss: 0.125,
+                sim_time_s: 0.0,
+                loader_order: shard(256, Encoding::U64Le),
+                loader_cursor: 64,
+                loader_epoch: 0,
+                loader_rng: [1, 2, 3, u64::MAX],
+                velocity: shard(total_w + total_b, Encoding::F32Le),
+                opt_batch: 7,
+                residuals: shard(total_w, Encoding::F32Le),
+                aux_rng: Some([9, 8, 7, 6]),
+                awp: Some(AwpState {
+                    bits_per_layer: vec![8; n],
+                    interval_counter: vec![0; n],
+                    prev_norm: vec![None; n],
+                    batch: 7,
+                    formats: vec![RoundTo::B1; n],
+                }),
+                grad: Some(GradState {
+                    bytes_per_layer: vec![4; n],
+                    stable_counter: vec![1; n],
+                    prev_norm: vec![Some(1.5); n],
+                    batch: 7,
+                    formats: vec![RoundTo::B4; n],
+                }),
+                awp_events: 0,
+                grad_events: 2,
+            }),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let m = sample_manifest();
+        let text = m.to_json().to_string_pretty();
+        let back = CkptManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn scalars_survive_bit_exactly() {
+        let mut m = sample_manifest();
+        // a value decimal formatting would mangle
+        let tricky = f64::from_bits(0x3FB9_9999_9999_999A); // 0.1
+        m.state.as_mut().unwrap().smoothed_loss = tricky * 3.0;
+        let back = CkptManifest::from_json(
+            &Json::parse(&m.to_json().to_string_compact()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            back.state.unwrap().smoothed_loss.to_bits(),
+            m.state.unwrap().smoothed_loss.to_bits()
+        );
+    }
+
+    #[test]
+    fn schema_version_mismatch_is_refused() {
+        let mut m = sample_manifest();
+        m.schema_version = CKPT_SCHEMA_VERSION + 1.0;
+        let err =
+            CkptManifest::from_json(&Json::parse(&m.to_json().to_string_compact()).unwrap())
+                .unwrap_err();
+        assert!(format!("{err:#}").contains("schema_version"), "{err:#}");
+    }
+
+    #[test]
+    fn check_against_accepts_matching_descriptor() {
+        let m = sample_manifest();
+        let desc = model_by_name("alexnet_micro").unwrap();
+        m.check_against(&desc).unwrap();
+    }
+
+    #[test]
+    fn check_against_rejects_drift() {
+        let m = sample_manifest();
+        let err = m.check_against(&model_by_name("vgg_micro").unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("model"), "{err:#}");
+        let mut m2 = sample_manifest();
+        m2.layers[0].weight.count += 1;
+        // keep bytes consistent so from_json-level checks aren't what fires
+        let desc = model_by_name("alexnet_micro").unwrap();
+        let err = m2.check_against(&desc).unwrap_err();
+        assert!(format!("{err:#}").contains("weight count"), "{err:#}");
+    }
+
+    #[test]
+    fn depth_bounds_are_enforced() {
+        let mut m = sample_manifest();
+        m.min_runnable_depth = m.layers.len() + 1;
+        let err =
+            CkptManifest::from_json(&Json::parse(&m.to_json().to_string_compact()).unwrap())
+                .unwrap_err();
+        assert!(format!("{err:#}").contains("min_runnable_depth"), "{err:#}");
+    }
+
+    #[test]
+    fn shard_length_disagreement_is_refused() {
+        let m = sample_manifest();
+        let mut j = m.to_json();
+        // corrupt the first layer's weight byte count in the rendered JSON
+        if let Json::Obj(top) = &mut j {
+            if let Some(Json::Arr(layers)) = top.get_mut("layers") {
+                if let Json::Obj(l0) = &mut layers[0] {
+                    if let Some(Json::Obj(w)) = l0.get_mut("weight") {
+                        w.insert("bytes".into(), Json::num(1.0));
+                    }
+                }
+            }
+        }
+        let err = CkptManifest::from_json(&j).unwrap_err();
+        assert!(format!("{err:#}").contains("length disagreement"), "{err:#}");
+    }
+
+    #[test]
+    fn encoding_names_roundtrip() {
+        for e in [
+            Encoding::Adt(RoundTo::B1),
+            Encoding::Adt(RoundTo::B2),
+            Encoding::Adt(RoundTo::B3),
+            Encoding::Adt(RoundTo::B4),
+            Encoding::F32Le,
+            Encoding::U64Le,
+        ] {
+            assert_eq!(Encoding::parse(&e.name()), Some(e));
+        }
+        assert_eq!(Encoding::parse("f64le"), None);
+    }
+}

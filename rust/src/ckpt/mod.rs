@@ -1,0 +1,167 @@
+//! Content-addressed ADT shard store: checkpoint, bit-exact resume, and
+//! progressive serving.
+//!
+//! The packed-ADT byte stream the wire carries (`adt::bitpack_into`) is
+//! also the at-rest format: a checkpoint is a schema-versioned JSON
+//! manifest ([`manifest::CkptManifest`]) listing per-layer
+//! content-addressed shards — id (the FNV-1a hash of the packed bytes),
+//! byte length, element count and format descriptor — plus sidecar state
+//! for bit-exact resume (optimizer momentum, AWP / grad-policy controller
+//! state, error-feedback residuals, PRNG states, batch counters).
+//!
+//! Durability contract ([`store::CkptStore`]): shards are written
+//! tmp-then-rename first, the manifest commits last via an atomic rename,
+//! so a crash at *any* point leaves the previous checkpoint loadable.
+//! Loaders verify every hash and reject drift against the model zoo
+//! descriptors (the `runtime::manifest::check_against` pattern), and can
+//! load progressively — the first `min_runnable_depth` layers at full
+//! fidelity for truncated serving.
+//!
+//! Bit-exactness at rest: train checkpoints pack weights at the lossless
+//! 32-bit format and encode every scalar (loss EMA, norms, PRNG words) as
+//! hex bit patterns, so resume reproduces the uninterrupted run
+//! bit-for-bit (`tests/prop_ckpt.rs`). Serving manifests re-pack at the
+//! policy's per-layer formats for real compression.
+
+pub mod drill;
+pub mod manifest;
+pub mod store;
+
+pub use manifest::{
+    AwpState, CkptKind, CkptManifest, Encoding, GradState, LayerShards, ShardRef, TrainState,
+};
+pub use store::{CkptStore, PendingCkpt, VerifyReport};
+
+/// Schema version stamped into every checkpoint manifest. Bump on any
+/// key-set or semantics change; loaders refuse mismatched manifests so an
+/// old binary can never silently misread a new layout (or vice versa).
+pub const CKPT_SCHEMA_VERSION: f64 = 1.0;
+
+/// FNV-1a 64-bit over a byte stream — the shard content address. Hand
+/// rolled (the crate is zero-dependency); the constants are the standard
+/// Fowler–Noll–Vo offset basis and prime.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Canonical rendering of a shard id / bit pattern: 16 lowercase hex digits.
+pub fn hex_u64(x: u64) -> String {
+    format!("{x:016x}")
+}
+
+/// Inverse of [`hex_u64`]; accepts any non-empty hex string up to 16 digits.
+pub fn parse_hex_u64(s: &str) -> Result<u64, String> {
+    if s.is_empty() || s.len() > 16 {
+        return Err(format!("bad hex u64 '{s}': expected 1..=16 hex digits"));
+    }
+    u64::from_str_radix(s, 16).map_err(|e| format!("bad hex u64 '{s}': {e}"))
+}
+
+/// f64 encoded as the hex of its IEEE-754 bit pattern — the only encoding
+/// that survives a JSON round trip bit-exactly (`Json::Num` re-renders
+/// through decimal).
+pub fn hex_f64(x: f64) -> String {
+    hex_u64(x.to_bits())
+}
+
+pub fn f64_from_hex(s: &str) -> Result<f64, String> {
+    parse_hex_u64(s).map(f64::from_bits)
+}
+
+// ---- little-endian bulk codecs for state shards ---------------------------
+
+/// Concatenate f32 slices into one little-endian byte stream (velocity /
+/// residual state shards).
+pub fn f32s_to_le_bytes<'a>(tensors: impl IntoIterator<Item = &'a [f32]>) -> Vec<u8> {
+    let mut out = Vec::new();
+    for t in tensors {
+        for &x in t {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    out
+}
+
+pub fn f32s_from_le_bytes(bytes: &[u8]) -> Result<Vec<f32>, String> {
+    if bytes.len() % 4 != 0 {
+        return Err(format!("f32le stream length {} is not a multiple of 4", bytes.len()));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// u64 slice as a little-endian byte stream (loader shuffle order shard).
+pub fn u64s_to_le_bytes(xs: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 8);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+pub fn u64s_from_le_bytes(bytes: &[u8]) -> Result<Vec<u64>, String> {
+    if bytes.len() % 8 != 0 {
+        return Err(format!("u64le stream length {} is not a multiple of 8", bytes.len()));
+    }
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // standard FNV-1a test vectors
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn hex_u64_roundtrip() {
+        for x in [0u64, 1, u64::MAX, 0xdead_beef_0123_4567] {
+            assert_eq!(parse_hex_u64(&hex_u64(x)).unwrap(), x);
+        }
+        assert!(parse_hex_u64("").is_err());
+        assert!(parse_hex_u64("zz").is_err());
+        assert!(parse_hex_u64("00000000000000000").is_err()); // 17 digits
+    }
+
+    #[test]
+    fn f64_hex_is_bit_exact_for_every_pattern() {
+        for x in [0.0f64, -0.0, 1.5, f64::MIN_POSITIVE, f64::MAX, f64::NAN, f64::INFINITY] {
+            let back = f64_from_hex(&hex_f64(x)).unwrap();
+            assert_eq!(back.to_bits(), x.to_bits());
+        }
+    }
+
+    #[test]
+    fn le_codecs_roundtrip() {
+        let a = [1.0f32, -2.5, f32::MIN_POSITIVE];
+        let b = [0.0f32, 1e-20];
+        let bytes = f32s_to_le_bytes([&a[..], &b[..]]);
+        assert_eq!(bytes.len(), 20);
+        let back = f32s_from_le_bytes(&bytes).unwrap();
+        assert_eq!(back.len(), 5);
+        for (i, x) in a.iter().chain(&b).enumerate() {
+            assert_eq!(back[i].to_bits(), x.to_bits());
+        }
+        assert!(f32s_from_le_bytes(&bytes[..3]).is_err());
+
+        let xs = [0u64, u64::MAX, 42];
+        let back = u64s_from_le_bytes(&u64s_to_le_bytes(&xs)).unwrap();
+        assert_eq!(back, xs);
+        assert!(u64s_from_le_bytes(&[0u8; 7]).is_err());
+    }
+}

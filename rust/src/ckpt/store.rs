@@ -1,0 +1,460 @@
+//! On-disk checkpoint store with a crash-safe commit protocol.
+//!
+//! Layout under the store directory:
+//!
+//! ```text
+//! <dir>/manifest.json          committed manifest (atomic rename target)
+//! <dir>/shards/<id>.bin        content-addressed payloads
+//! ```
+//!
+//! Durability contract: [`CkptStore::prepare`] writes every shard
+//! tmp-then-rename; [`PendingCkpt::commit`] then renames the manifest into
+//! place and only afterwards garbage-collects unreferenced shards. A crash
+//! at any point — mid-shard, between shards and manifest, mid-GC — leaves
+//! the previously committed checkpoint fully loadable, because the old
+//! manifest stays in place until the rename and every shard it references
+//! survives until the new manifest is durable.
+
+use super::manifest::{CkptManifest, Encoding, ShardRef};
+use super::{f32s_from_le_bytes, fnv1a64, hex_u64, u64s_from_le_bytes};
+use crate::adt::{self, AdtConfig};
+use anyhow::{anyhow, bail, Context, Result};
+use std::fs;
+use std::io::ErrorKind;
+use std::path::{Path, PathBuf};
+
+/// Summary returned by [`CkptStore::verify`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct VerifyReport {
+    pub shards_checked: usize,
+    pub bytes_total: usize,
+}
+
+/// Handle on one checkpoint directory.
+#[derive(Clone, Debug)]
+pub struct CkptStore {
+    dir: PathBuf,
+}
+
+/// A checkpoint whose shards are durable but whose manifest has not yet
+/// been committed. Dropping it without [`PendingCkpt::commit`] models a
+/// crash between shard write and manifest commit: the previous checkpoint
+/// in the directory remains the loadable one.
+#[derive(Debug)]
+pub struct PendingCkpt<'a> {
+    store: &'a CkptStore,
+    manifest: CkptManifest,
+}
+
+impl CkptStore {
+    pub fn new(dir: impl Into<PathBuf>) -> CkptStore {
+        CkptStore { dir: dir.into() }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.dir.join("manifest.json")
+    }
+
+    fn shards_dir(&self) -> PathBuf {
+        self.dir.join("shards")
+    }
+
+    pub fn shard_path(&self, id: &str) -> PathBuf {
+        self.shards_dir().join(format!("{id}.bin"))
+    }
+
+    /// Write every payload durably (tmp-then-rename, deduplicating against
+    /// shards already on disk) and return the pending checkpoint. The
+    /// manifest is NOT yet visible to loaders.
+    pub fn prepare(
+        &self,
+        manifest: CkptManifest,
+        payloads: Vec<(String, Vec<u8>)>,
+    ) -> Result<PendingCkpt<'_>> {
+        let shards = self.shards_dir();
+        fs::create_dir_all(&shards)
+            .with_context(|| format!("create shard directory {}", shards.display()))?;
+        for (id, payload) in &payloads {
+            let computed = hex_u64(fnv1a64(payload));
+            if *id != computed {
+                bail!(
+                    "shard {id}: payload hashes to {computed} — refusing to write a mislabelled shard"
+                );
+            }
+            let path = self.shard_path(id);
+            if let Ok(meta) = fs::metadata(&path) {
+                if meta.len() == payload.len() as u64 {
+                    continue; // content-addressed: same id + length => same bytes
+                }
+            }
+            let tmp = shards.join(format!(".tmp-{id}"));
+            fs::write(&tmp, payload)
+                .with_context(|| format!("write shard {id} to {}", tmp.display()))?;
+            fs::rename(&tmp, &path)
+                .with_context(|| format!("publish shard {id} at {}", path.display()))?;
+        }
+        // Every shard the manifest references must now be on disk — catch a
+        // missing payload here, before the manifest can ever commit.
+        for r in manifest.shard_refs() {
+            let path = self.shard_path(&r.id);
+            let meta = fs::metadata(&path).map_err(|_| {
+                anyhow!(
+                    "shard {}: referenced by the manifest but absent at {} — missing payload",
+                    r.id,
+                    path.display()
+                )
+            })?;
+            if meta.len() != r.bytes as u64 {
+                bail!(
+                    "shard {}: on-disk length {} != manifest length {}",
+                    r.id,
+                    meta.len(),
+                    r.bytes
+                );
+            }
+        }
+        Ok(PendingCkpt { store: self, manifest })
+    }
+
+    /// Load the committed manifest, if any.
+    pub fn load_manifest(&self) -> Result<CkptManifest> {
+        let path = self.manifest_path();
+        let text = fs::read_to_string(&path).with_context(|| {
+            format!("read checkpoint manifest {} — no committed checkpoint?", path.display())
+        })?;
+        let json = crate::util::json::Json::parse(&text)
+            .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        CkptManifest::from_json(&json)
+            .with_context(|| format!("invalid checkpoint manifest {}", path.display()))
+    }
+
+    /// Read one shard's bytes, checking length then content hash. Error
+    /// precedence: missing file, then length mismatch (truncation or
+    /// manifest/shard disagreement), then hash mismatch (corruption).
+    pub fn read_shard(&self, r: &ShardRef) -> Result<Vec<u8>> {
+        let path = self.shard_path(&r.id);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == ErrorKind::NotFound => {
+                bail!("shard {}: missing shard file {}", r.id, path.display());
+            }
+            Err(e) => {
+                return Err(e).with_context(|| format!("read shard {} at {}", r.id, path.display()))
+            }
+        };
+        if bytes.len() != r.bytes {
+            bail!(
+                "shard {}: expected {} bytes, found {} (truncated shard or manifest/shard length disagreement)",
+                r.id,
+                r.bytes,
+                bytes.len()
+            );
+        }
+        let computed = hex_u64(fnv1a64(&bytes));
+        if computed != r.id {
+            bail!(
+                "shard {}: content hash mismatch — stored bytes hash to {computed} (corrupted shard)",
+                r.id
+            );
+        }
+        Ok(bytes)
+    }
+
+    /// Integrity-check every shard the manifest references.
+    pub fn verify(&self, manifest: &CkptManifest) -> Result<VerifyReport> {
+        let mut report = VerifyReport::default();
+        for r in manifest.shard_refs() {
+            let bytes = self.read_shard(r)?;
+            report.shards_checked += 1;
+            report.bytes_total += bytes.len();
+        }
+        Ok(report)
+    }
+
+    /// Read + decode an f32 shard (packed ADT or raw f32le).
+    pub fn read_f32s(&self, r: &ShardRef, cfg: &AdtConfig) -> Result<Vec<f32>> {
+        let bytes = self.read_shard(r)?;
+        decode_f32s(&bytes, r, cfg)
+    }
+
+    /// Read + decode a u64le shard.
+    pub fn read_u64s(&self, r: &ShardRef) -> Result<Vec<u64>> {
+        let bytes = self.read_shard(r)?;
+        match r.encoding {
+            Encoding::U64Le => {
+                u64s_from_le_bytes(&bytes).map_err(|e| anyhow!("shard {}: {e}", r.id))
+            }
+            _ => bail!("shard {}: {} shard cannot decode as u64s", r.id, r.encoding.name()),
+        }
+    }
+
+    /// Decode all layers' weights and biases.
+    pub fn load_weights(
+        &self,
+        manifest: &CkptManifest,
+        cfg: &AdtConfig,
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        self.load_weights_progressive(manifest, manifest.layers.len(), cfg)
+    }
+
+    /// Progressive load: decode only the first `depth` layers. `depth`
+    /// must be at least the manifest's `min_runnable_depth` — the floor
+    /// below which the truncated model is not servable.
+    pub fn load_weights_progressive(
+        &self,
+        manifest: &CkptManifest,
+        depth: usize,
+        cfg: &AdtConfig,
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>)> {
+        if depth < manifest.min_runnable_depth || depth > manifest.layers.len() {
+            bail!(
+                "progressive depth {depth} is outside the manifest's runnable range {}..={}",
+                manifest.min_runnable_depth,
+                manifest.layers.len()
+            );
+        }
+        let mut ws = Vec::with_capacity(depth);
+        let mut bs = Vec::with_capacity(depth);
+        for l in &manifest.layers[..depth] {
+            ws.push(
+                self.read_f32s(&l.weight, cfg)
+                    .with_context(|| format!("layer {} ({}) weights", l.layer, l.name))?,
+            );
+            bs.push(
+                self.read_f32s(&l.bias, cfg)
+                    .with_context(|| format!("layer {} ({}) biases", l.layer, l.name))?,
+            );
+        }
+        Ok((ws, bs))
+    }
+}
+
+impl<'a> PendingCkpt<'a> {
+    pub fn manifest(&self) -> &CkptManifest {
+        &self.manifest
+    }
+
+    /// Atomically publish the manifest, then garbage-collect shards no
+    /// longer referenced (best-effort; GC errors are ignored — orphans are
+    /// collected by the next commit).
+    pub fn commit(self) -> Result<()> {
+        let final_path = self.store.manifest_path();
+        let tmp = self.store.dir.join("manifest.json.tmp");
+        let text = self.manifest.to_json().to_string_pretty();
+        fs::write(&tmp, text.as_bytes())
+            .with_context(|| format!("write manifest to {}", tmp.display()))?;
+        fs::rename(&tmp, &final_path)
+            .with_context(|| format!("commit manifest at {}", final_path.display()))?;
+
+        let live: std::collections::BTreeSet<String> =
+            self.manifest.shard_refs().iter().map(|r| r.id.clone()).collect();
+        if let Ok(entries) = fs::read_dir(self.store.shards_dir()) {
+            for entry in entries.flatten() {
+                let name = entry.file_name();
+                let name = name.to_string_lossy();
+                let stale_tmp = name.starts_with(".tmp-");
+                let dead = name
+                    .strip_suffix(".bin")
+                    .map(|id| !live.contains(id))
+                    .unwrap_or(false);
+                if stale_tmp || dead {
+                    let _ = fs::remove_file(entry.path());
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Decode a payload already read (and hash-checked) from disk.
+pub fn decode_f32s(bytes: &[u8], r: &ShardRef, cfg: &AdtConfig) -> Result<Vec<f32>> {
+    match r.encoding {
+        Encoding::Adt(rt) => {
+            if adt::packed_len(r.count, rt) != bytes.len() {
+                bail!(
+                    "shard {}: {} packed bytes cannot hold {} elements at {}",
+                    r.id,
+                    bytes.len(),
+                    r.count,
+                    rt
+                );
+            }
+            let mut out = vec![0f32; r.count];
+            adt::bitunpack_into(bytes, rt, cfg, &mut out);
+            Ok(out)
+        }
+        Encoding::F32Le => {
+            let out = f32s_from_le_bytes(bytes).map_err(|e| anyhow!("shard {}: {e}", r.id))?;
+            if out.len() != r.count {
+                bail!("shard {}: decoded {} f32s, manifest says {}", r.id, out.len(), r.count);
+            }
+            Ok(out)
+        }
+        Encoding::U64Le => {
+            bail!("shard {}: u64le shard cannot decode as f32s", r.id)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adt::RoundTo;
+    use crate::ckpt::manifest::{CkptKind, LayerShards};
+    use crate::ckpt::CKPT_SCHEMA_VERSION;
+
+    /// Temp dir that removes itself on drop.
+    struct Scratch(PathBuf);
+
+    impl Scratch {
+        fn new(name: &str) -> Scratch {
+            let dir = std::env::temp_dir()
+                .join(format!("a2dtwp_ckpt_{name}_{}", std::process::id()));
+            let _ = fs::remove_dir_all(&dir);
+            fs::create_dir_all(&dir).unwrap();
+            Scratch(dir)
+        }
+    }
+
+    impl Drop for Scratch {
+        fn drop(&mut self) {
+            let _ = fs::remove_dir_all(&self.0);
+        }
+    }
+
+    fn payload_and_ref(data: &[u8], count: usize, enc: Encoding) -> (Vec<u8>, ShardRef) {
+        let r = ShardRef::for_payload(data, count, enc).unwrap();
+        (data.to_vec(), r)
+    }
+
+    /// Tiny two-layer manifest over arbitrary payloads (no ModelDesc —
+    /// check_against is exercised in manifest tests).
+    fn tiny(batches: u64, fill: u8) -> (CkptManifest, Vec<(String, Vec<u8>)>) {
+        let cfg = AdtConfig { threads: 1, ..AdtConfig::default() };
+        let w0: Vec<f32> = (0..16).map(|i| i as f32 * 0.25 + fill as f32).collect();
+        let mut packed = Vec::new();
+        crate::adt::bitpack(&w0, RoundTo::B4, &cfg, &mut packed);
+        let (p0, r0) = payload_and_ref(&packed, 16, Encoding::Adt(RoundTo::B4));
+        let (p1, r1) = payload_and_ref(&[fill; 16], 4, Encoding::F32Le);
+        let (p2, r2) = payload_and_ref(&[fill.wrapping_add(1); 8], 2, Encoding::F32Le);
+        let (p3, r3) = payload_and_ref(&[fill.wrapping_add(2); 4], 1, Encoding::F32Le);
+        let manifest = CkptManifest {
+            schema_version: CKPT_SCHEMA_VERSION,
+            kind: CkptKind::Serving,
+            model: "tiny".into(),
+            batches,
+            min_runnable_depth: 1,
+            layers: vec![
+                LayerShards { layer: 0, name: "conv1".into(), weight: r0, bias: r1 },
+                LayerShards { layer: 1, name: "fc".into(), weight: r2, bias: r3 },
+            ],
+            state: None,
+        };
+        let payloads = vec![
+            (manifest.layers[0].weight.id.clone(), p0),
+            (manifest.layers[0].bias.id.clone(), p1),
+            (manifest.layers[1].weight.id.clone(), p2),
+            (manifest.layers[1].bias.id.clone(), p3),
+        ];
+        (manifest, payloads)
+    }
+
+    #[test]
+    fn commit_then_load_roundtrips() {
+        let s = Scratch::new("roundtrip");
+        let store = CkptStore::new(&s.0);
+        let (manifest, payloads) = tiny(3, 7);
+        store.prepare(manifest.clone(), payloads).unwrap().commit().unwrap();
+        let back = store.load_manifest().unwrap();
+        assert_eq!(back, manifest);
+        let report = store.verify(&back).unwrap();
+        assert_eq!(report.shards_checked, 4);
+        let cfg = AdtConfig { threads: 1, ..AdtConfig::default() };
+        let (ws, bs) = store.load_weights(&back, &cfg).unwrap();
+        assert_eq!(ws[0].len(), 16);
+        assert_eq!(bs[1].len(), 1);
+        assert_eq!(ws[0][1], 1.25 + 7.0);
+    }
+
+    #[test]
+    fn uncommitted_prepare_leaves_previous_checkpoint_loadable() {
+        let s = Scratch::new("crash");
+        let store = CkptStore::new(&s.0);
+        let (m1, p1) = tiny(1, 1);
+        store.prepare(m1.clone(), p1).unwrap().commit().unwrap();
+        // "crash" between shard write and manifest commit
+        let (m2, p2) = tiny(2, 99);
+        drop(store.prepare(m2, p2).unwrap());
+        let back = store.load_manifest().unwrap();
+        assert_eq!(back.batches, 1);
+        store.verify(&back).unwrap();
+    }
+
+    #[test]
+    fn commit_garbage_collects_unreferenced_shards() {
+        let s = Scratch::new("gc");
+        let store = CkptStore::new(&s.0);
+        let (m1, p1) = tiny(1, 1);
+        let old_id = m1.layers[0].bias.id.clone();
+        store.prepare(m1, p1).unwrap().commit().unwrap();
+        let (m2, p2) = tiny(2, 50);
+        store.prepare(m2, p2).unwrap().commit().unwrap();
+        assert!(!store.shard_path(&old_id).exists());
+        store.verify(&store.load_manifest().unwrap()).unwrap();
+    }
+
+    #[test]
+    fn corruption_truncation_and_missing_are_actionable() {
+        let s = Scratch::new("failures");
+        let store = CkptStore::new(&s.0);
+        let (manifest, payloads) = tiny(1, 3);
+        store.prepare(manifest.clone(), payloads).unwrap().commit().unwrap();
+        let victim = &manifest.layers[0].weight;
+
+        let mut bytes = fs::read(store.shard_path(&victim.id)).unwrap();
+        bytes[0] ^= 0xff;
+        fs::write(store.shard_path(&victim.id), &bytes).unwrap();
+        let err = store.verify(&manifest).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("hash mismatch") && msg.contains(&victim.id), "{msg}");
+
+        fs::write(store.shard_path(&victim.id), &bytes[..5]).unwrap();
+        let err = store.read_shard(victim).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+
+        fs::remove_file(store.shard_path(&victim.id)).unwrap();
+        let err = store.read_shard(victim).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("missing shard file") && msg.contains(&victim.id), "{msg}");
+    }
+
+    #[test]
+    fn progressive_load_respects_min_runnable_depth() {
+        let s = Scratch::new("depth");
+        let store = CkptStore::new(&s.0);
+        let (manifest, payloads) = tiny(1, 2);
+        store.prepare(manifest.clone(), payloads).unwrap().commit().unwrap();
+        let cfg = AdtConfig { threads: 1, ..AdtConfig::default() };
+        let (ws, bs) = store.load_weights_progressive(&manifest, 1, &cfg).unwrap();
+        assert_eq!(ws.len(), 1);
+        assert_eq!(bs.len(), 1);
+        let err = store.load_weights_progressive(&manifest, 0, &cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("runnable range"), "{err:#}");
+        let err = store.load_weights_progressive(&manifest, 3, &cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("runnable range"), "{err:#}");
+    }
+
+    #[test]
+    fn mislabelled_payload_is_refused() {
+        let s = Scratch::new("mislabel");
+        let store = CkptStore::new(&s.0);
+        let (manifest, mut payloads) = tiny(1, 4);
+        payloads[0].1[0] ^= 0x01; // bytes no longer match the claimed id
+        let err = store.prepare(manifest, payloads).unwrap_err();
+        assert!(format!("{err:#}").contains("mislabelled"), "{err:#}");
+    }
+}

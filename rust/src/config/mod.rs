@@ -68,6 +68,13 @@ pub struct ExperimentConfig {
     pub seed: u64,
     /// Directory holding AOT artifacts.
     pub artifacts_dir: String,
+    /// Checkpoint store directory (`--checkpoint-dir`); empty = off.
+    pub checkpoint_dir: String,
+    /// Checkpoint cadence in batches (`--checkpoint-every`); 0 = off.
+    pub checkpoint_every: u64,
+    /// Resume from the committed checkpoint in `checkpoint_dir`
+    /// (`--resume`).
+    pub resume: bool,
 }
 
 impl ExperimentConfig {
@@ -132,6 +139,9 @@ impl ExperimentConfig {
             val_size: 512,
             seed: 42,
             artifacts_dir: "artifacts".into(),
+            checkpoint_dir: String::new(),
+            checkpoint_every: 0,
+            resume: false,
         }
     }
 
@@ -170,6 +180,9 @@ impl ExperimentConfig {
             ("target_error", Json::num(self.target_error)),
             ("seed", Json::num(self.seed as f64)),
             ("artifacts", Json::str(&self.artifacts_dir)),
+            ("checkpoint_dir", Json::str(&self.checkpoint_dir)),
+            ("checkpoint_every", Json::num(self.checkpoint_every as f64)),
+            ("resume", Json::num(if self.resume { 1.0 } else { 0.0 })),
         ])
     }
 }
@@ -213,6 +226,9 @@ mod tests {
         assert_eq!(j.req_str("overlap").unwrap(), "serialized");
         assert_eq!(j.req_str("scenario").unwrap(), "uniform");
         assert_eq!(j.req_str("artifacts").unwrap(), "artifacts");
+        assert_eq!(j.req_str("checkpoint_dir").unwrap(), "");
+        assert_eq!(j.req_usize("checkpoint_every").unwrap(), 0);
+        assert_eq!(j.req_f64("resume").unwrap(), 0.0);
     }
 
     #[test]

@@ -375,6 +375,31 @@ impl StepArena {
         packed
     }
 
+    /// Error-feedback residual buffers, one per weighted layer
+    /// (checkpointing — the truncated mass that must survive a resume for
+    /// the gather trajectory to stay bit-exact).
+    pub fn grad_residuals(&self) -> &[Vec<f32>] {
+        &self.grad_residual
+    }
+
+    /// Restore error-feedback residuals from a checkpoint. `flat` is the
+    /// concatenation of every layer's residual buffer in layer order.
+    pub fn restore_grad_residuals_from_flat(&mut self, flat: &[f32]) -> Result<(), String> {
+        if flat.len() != self.total_weights {
+            return Err(format!(
+                "residual snapshot has {} elements, model has {} weights",
+                flat.len(),
+                self.total_weights
+            ));
+        }
+        let mut off = 0;
+        for r in &mut self.grad_residual {
+            r.copy_from_slice(&flat[off..off + r.len()]);
+            off += r.len();
+        }
+        Ok(())
+    }
+
     /// Fused threaded reduce of per-shard gradients into `sum_gw`/`sum_gb`,
     /// scaled by `1/outs.len()` — one pass, replacing the historical
     /// accumulate-then-scale double loop. `scratch` is the caller's slice
@@ -644,6 +669,37 @@ mod tests {
         assert_eq!(check.count(), 0, "narrowing grad quantize allocated");
         assert!(!arena.grad_pack.grew_last_pack());
         assert!((arena.grad_mean_bytes_per_weight() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn residual_restore_resumes_feedback_trajectory_bit_exactly() {
+        let counts = [257usize, 33];
+        let g = random_weights(&counts, 5);
+        let cfg = scalar_cfg(1);
+        let formats = [RoundTo::B2, RoundTo::B1];
+        let drive = |arena: &mut StepArena, batches: usize| -> Vec<Vec<u32>> {
+            let mut qs = Vec::new();
+            for _ in 0..batches {
+                for (dst, src) in arena.sum_gw.iter_mut().zip(&g) {
+                    dst.copy_from_slice(src);
+                }
+                arena.quantize_grads_with_feedback(&formats, true, &cfg);
+                qs.push(arena.grad_q.iter().flatten().map(|x| x.to_bits()).collect());
+            }
+            qs
+        };
+        let mut straight = StepArena::new(&counts, &[1, 1]);
+        let all = drive(&mut straight, 10);
+
+        let mut first = StepArena::new(&counts, &[1, 1]);
+        drive(&mut first, 6);
+        let flat: Vec<f32> =
+            first.grad_residuals().iter().flatten().copied().collect();
+        let mut resumed = StepArena::new(&counts, &[1, 1]);
+        resumed.restore_grad_residuals_from_flat(&flat).unwrap();
+        let tail = drive(&mut resumed, 4);
+        assert_eq!(&all[6..], &tail[..]);
+        assert!(resumed.restore_grad_residuals_from_flat(&flat[..5]).is_err());
     }
 
     #[test]

@@ -529,6 +529,159 @@ impl Trainer {
         Ok(loss)
     }
 
+    /// Write a train checkpoint to `cfg.checkpoint_dir` via the store's
+    /// two-phase commit. Weights are packed at the lossless 32-bit ADT
+    /// format, so a resumed run restarts from bit-identical state; the
+    /// sidecar carries momentum, error-feedback residuals, loader
+    /// position, and both controllers' decision state.
+    fn save_checkpoint(&mut self, batch: u64) -> Result<()> {
+        use crate::adt::RoundTo;
+        use crate::ckpt::{
+            f32s_to_le_bytes, u64s_to_le_bytes, AwpState, CkptKind, CkptManifest, CkptStore,
+            Encoding, GradState, LayerShards, ShardRef, TrainState, CKPT_SCHEMA_VERSION,
+        };
+        let store = CkptStore::new(self.cfg.checkpoint_dir.clone());
+        let mut payloads: Vec<(String, Vec<u8>)> = Vec::new();
+        let mut layers = Vec::with_capacity(self.ws.len());
+        for (l, ml) in self.manifest.layers.iter().enumerate() {
+            let mut packed = Vec::new();
+            crate::adt::bitpack(&self.ws[l], RoundTo::B4, &self.cfg.adt, &mut packed);
+            let weight =
+                ShardRef::for_payload(&packed, self.ws[l].len(), Encoding::Adt(RoundTo::B4))?;
+            payloads.push((weight.id.clone(), packed));
+            let braw = f32s_to_le_bytes([self.bs[l].as_slice()]);
+            let bias = ShardRef::for_payload(&braw, self.bs[l].len(), Encoding::F32Le)?;
+            payloads.push((bias.id.clone(), braw));
+            layers.push(LayerShards { layer: l, name: ml.name.clone(), weight, bias });
+        }
+        let vel_bytes = f32s_to_le_bytes(self.opt.velocity().iter().map(|v| v.as_slice()));
+        let vel_count = self.opt.velocity().iter().map(|v| v.len()).sum::<usize>();
+        let velocity = ShardRef::for_payload(&vel_bytes, vel_count, Encoding::F32Le)?;
+        payloads.push((velocity.id.clone(), vel_bytes));
+        let res_bytes =
+            f32s_to_le_bytes(self.arena.grad_residuals().iter().map(|r| r.as_slice()));
+        let res_count = self.arena.grad_residuals().iter().map(|r| r.len()).sum::<usize>();
+        let residuals = ShardRef::for_payload(&res_bytes, res_count, Encoding::F32Le)?;
+        payloads.push((residuals.id.clone(), res_bytes));
+        let order_bytes = u64s_to_le_bytes(self.loader.order());
+        let loader_order =
+            ShardRef::for_payload(&order_bytes, self.loader.order().len(), Encoding::U64Le)?;
+        payloads.push((loader_order.id.clone(), order_bytes));
+        let awp = self.policy.controller().map(|ctl| AwpState {
+            bits_per_layer: ctl.bits_per_layer().to_vec(),
+            interval_counter: ctl.interval_counters().to_vec(),
+            prev_norm: ctl.prev_norms().to_vec(),
+            batch: ctl.batches_seen(),
+            formats: self.policy.formats().to_vec(),
+        });
+        let grad = self.grad.controller().map(|ctl| GradState {
+            bytes_per_layer: ctl.bytes_per_layer().to_vec(),
+            stable_counter: ctl.stable_counters().to_vec(),
+            prev_norm: ctl.prev_norms().to_vec(),
+            batch: ctl.batches_seen(),
+            formats: self.grad.formats().to_vec(),
+        });
+        let state = TrainState {
+            batches_run: batch,
+            smoothed_loss: self.smoothed_loss,
+            sim_time_s: self.sim_time_s,
+            loader_order,
+            loader_cursor: self.loader.cursor(),
+            loader_epoch: self.loader.epoch(),
+            loader_rng: self.loader.rng_state(),
+            velocity,
+            opt_batch: self.opt.batches_applied(),
+            residuals,
+            aux_rng: None,
+            awp,
+            grad,
+            awp_events: self.policy.controller().map_or(0, |c| c.events().len()) as u64,
+            grad_events: self.grad.controller().map_or(0, |c| c.events().len()) as u64,
+        };
+        let manifest = CkptManifest {
+            schema_version: CKPT_SCHEMA_VERSION,
+            kind: CkptKind::Train,
+            model: self.cfg.model.clone(),
+            batches: batch,
+            min_runnable_depth: layers.len(),
+            layers,
+            state: Some(state),
+        };
+        store.prepare(manifest, payloads)?.commit()?;
+        Ok(())
+    }
+
+    /// Restore training state from the committed checkpoint in
+    /// `cfg.checkpoint_dir`; returns the batch count to resume from.
+    /// Controller *event logs* restart empty (decision state is restored;
+    /// the logs are reporting, not dynamics — `ckpt::manifest` docs).
+    fn resume_from_checkpoint(&mut self) -> Result<u64> {
+        use crate::ckpt::CkptStore;
+        let store = CkptStore::new(self.cfg.checkpoint_dir.clone());
+        let manifest = store.load_manifest()?;
+        let micro_desc = model_by_name(&self.cfg.model)
+            .with_context(|| format!("unknown model {}", self.cfg.model))?;
+        manifest.check_against(&micro_desc)?;
+        let state = manifest.state.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "checkpoint at {} is a '{}' manifest without train state — cannot resume",
+                store.dir().display(),
+                manifest.kind.name()
+            )
+        })?;
+        let (ws, bs) = store.load_weights(&manifest, &self.cfg.adt)?;
+        self.ws = ws;
+        self.bs = bs;
+        let vel = store.read_f32s(&state.velocity, &self.cfg.adt)?;
+        self.opt
+            .restore_from_flat(&vel, state.opt_batch)
+            .map_err(|e| anyhow::anyhow!("optimizer restore: {e}"))?;
+        let res = store.read_f32s(&state.residuals, &self.cfg.adt)?;
+        self.arena
+            .restore_grad_residuals_from_flat(&res)
+            .map_err(|e| anyhow::anyhow!("residual restore: {e}"))?;
+        let order = store.read_u64s(&state.loader_order)?;
+        self.loader
+            .restore(order, state.loader_cursor, state.loader_epoch, state.loader_rng)
+            .map_err(|e| anyhow::anyhow!("loader restore: {e}"))?;
+        match (&state.awp, self.policy.needs_norms()) {
+            (Some(a), true) => self
+                .policy
+                .restore_adaptive(
+                    &a.bits_per_layer,
+                    &a.interval_counter,
+                    &a.prev_norm,
+                    a.batch,
+                    &a.formats,
+                )
+                .map_err(|e| anyhow::anyhow!("AWP policy restore: {e}"))?,
+            (None, true) => {
+                bail!("checkpoint carries no AWP state but the awp policy needs it")
+            }
+            _ => {}
+        }
+        match (&state.grad, self.grad.needs_norms()) {
+            (Some(g), true) => self
+                .grad
+                .restore_adaptive(
+                    &g.bytes_per_layer,
+                    &g.stable_counter,
+                    &g.prev_norm,
+                    g.batch,
+                    &g.formats,
+                )
+                .map_err(|e| anyhow::anyhow!("grad policy restore: {e}"))?,
+            (None, true) => {
+                bail!("checkpoint carries no grad state but the adaptive gather needs it")
+            }
+            _ => {}
+        }
+        self.smoothed_loss = state.smoothed_loss;
+        self.sim_time_s = state.sim_time_s;
+        self.overlap_crit_cache = None;
+        Ok(state.batches_run)
+    }
+
     /// Validation top-1 error under the *device-side* view of the weights
     /// (current masks), as the paper measures during training.
     pub fn validate(&mut self) -> Result<f64> {
@@ -570,22 +723,27 @@ impl Trainer {
 
     /// Train until `target_error` or `max_batches`, recording the curve.
     pub fn run(&mut self) -> Result<TrainReport> {
+        let start = if self.cfg.resume { self.resume_from_checkpoint()? } else { 0 };
         let mut reached = false;
-        let mut batches_run = 0u64;
+        let mut batches_run = start;
         let mut final_loss = f64::NAN;
-        // initial point
+        // initial point (on resume: the restored state's trajectory point)
         let err0 = self.validate()?;
         let bpw0 = self.mean_bytes_per_weight();
         self.curve.push(ValPoint {
-            batch: 0,
-            sim_time_s: 0.0,
+            batch: start,
+            sim_time_s: self.sim_time_s,
             val_error: err0,
-            train_loss: f64::NAN,
+            train_loss: if start == 0 { f64::NAN } else { self.smoothed_loss },
             bytes_per_weight: bpw0,
         });
-        for b in 1..=self.cfg.max_batches {
+        let ckpt_on = self.cfg.checkpoint_every > 0 && !self.cfg.checkpoint_dir.is_empty();
+        for b in (start + 1)..=self.cfg.max_batches {
             final_loss = self.step()?;
             batches_run = b;
+            if ckpt_on && b % self.cfg.checkpoint_every == 0 {
+                self.save_checkpoint(b).context("periodic checkpoint")?;
+            }
             if b % self.cfg.val_every == 0 {
                 let err = self.validate()?;
                 let bpw = self.mean_bytes_per_weight();

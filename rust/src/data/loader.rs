@@ -103,6 +103,61 @@ impl Loader {
         self.train_size / self.batch_size as u64
     }
 
+    /// Current epoch's shuffled sample order (checkpointing).
+    pub fn order(&self) -> &[u64] {
+        &self.order
+    }
+
+    /// Position within the current epoch's order (checkpointing).
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Shuffle-RNG snapshot (checkpointing).
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// Restore mid-epoch position from a checkpoint so the batch stream
+    /// continues bit-exactly: same order, same cursor, same shuffle RNG for
+    /// every future epoch boundary.
+    pub fn restore(
+        &mut self,
+        order: Vec<u64>,
+        cursor: usize,
+        epoch: u64,
+        rng: [u64; 4],
+    ) -> Result<(), String> {
+        if order.len() != self.train_size as usize {
+            return Err(format!(
+                "loader order has {} entries, train_size is {}",
+                order.len(),
+                self.train_size
+            ));
+        }
+        let mut seen = vec![false; order.len()];
+        for &i in &order {
+            let slot = seen
+                .get_mut(i as usize)
+                .ok_or_else(|| format!("loader order index {i} is out of range"))?;
+            if *slot {
+                return Err(format!("loader order repeats index {i} — not a permutation"));
+            }
+            *slot = true;
+        }
+        if cursor > order.len() || cursor % self.batch_size != 0 {
+            return Err(format!(
+                "loader cursor {cursor} is not a batch boundary of {} samples",
+                order.len()
+            ));
+        }
+        self.order = order;
+        self.cursor = cursor;
+        self.epoch = epoch;
+        self.rng = Rng::from_state(rng);
+        Ok(())
+    }
+
     fn reshuffle(&mut self) {
         self.rng.shuffle(&mut self.order);
         self.cursor = 0;
@@ -202,5 +257,41 @@ mod tests {
     #[should_panic(expected = "evenly")]
     fn uneven_shard_split_rejected() {
         loader(30, 4);
+    }
+
+    #[test]
+    fn restore_resumes_batch_stream_bit_exactly() {
+        let mut straight = loader(32, 2);
+        let mut killed = loader(32, 2);
+        for _ in 0..5 {
+            straight.next_train();
+            killed.next_train();
+        }
+        let (order, cursor, epoch, rng) =
+            (killed.order().to_vec(), killed.cursor(), killed.epoch(), killed.rng_state());
+        // fresh loader, different position — then restore the snapshot
+        let mut resumed = loader(32, 2);
+        resumed.next_train();
+        resumed.restore(order, cursor, epoch, rng).unwrap();
+        for _ in 0..10 {
+            let a = straight.next_train();
+            let b = resumed.next_train();
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.images, b.images);
+        }
+        assert_eq!(straight.epoch(), resumed.epoch());
+    }
+
+    #[test]
+    fn restore_rejects_bad_state() {
+        let mut l = loader(32, 2);
+        let rng = l.rng_state();
+        assert!(l.restore(vec![0; 10], 0, 0, rng).is_err()); // wrong length
+        assert!(l.restore(vec![0; 256], 0, 0, rng).is_err()); // not a permutation
+        let order: Vec<u64> = (0..256).collect();
+        assert!(l.restore(order.clone(), 33, 0, rng).is_err()); // off-boundary cursor
+        assert!(l.restore(order, 64, 3, rng).is_ok());
+        assert_eq!(l.epoch(), 3);
+        assert_eq!(l.cursor(), 64);
     }
 }

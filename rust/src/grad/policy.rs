@@ -341,6 +341,54 @@ impl GradController {
     pub fn batches_seen(&self) -> u64 {
         self.batch
     }
+
+    /// Raw per-layer byte state (checkpointing).
+    pub fn bytes_per_layer(&self) -> &[u8] {
+        &self.bytes_per_layer
+    }
+
+    /// Raw per-layer stability counters (checkpointing).
+    pub fn stable_counters(&self) -> &[u32] {
+        &self.stable_counter
+    }
+
+    /// Previous-batch gradient norms (checkpointing).
+    pub fn prev_norms(&self) -> &[Option<f64>] {
+        &self.prev_norm
+    }
+
+    /// Restore decision state from a checkpoint so every future narrow /
+    /// widen decision is identical to the uninterrupted run. The cost
+    /// model is construction-time configuration (re-armed via
+    /// [`set_cost_model`](Self::set_cost_model)) and the event log is
+    /// diagnostics — neither is restored here.
+    pub fn restore(
+        &mut self,
+        bytes: &[u8],
+        counters: &[u32],
+        prev_norms: &[Option<f64>],
+        batch: u64,
+    ) -> Result<(), String> {
+        let n = self.num_layers();
+        if bytes.len() != n || counters.len() != n || prev_norms.len() != n {
+            return Err(format!(
+                "grad snapshot shapes {}/{}/{} do not match {n} layers",
+                bytes.len(),
+                counters.len(),
+                prev_norms.len()
+            ));
+        }
+        for (l, &b) in bytes.iter().enumerate() {
+            if !(1..=4).contains(&b) {
+                return Err(format!("grad snapshot layer {l}: invalid byte state {b}"));
+            }
+        }
+        self.bytes_per_layer.copy_from_slice(bytes);
+        self.stable_counter.copy_from_slice(counters);
+        self.prev_norm.copy_from_slice(prev_norms);
+        self.batch = batch;
+        Ok(())
+    }
 }
 
 /// Runtime gather policy: decides each layer's format every batch.
@@ -414,6 +462,36 @@ impl GradPolicy {
     pub fn set_cost_model(&mut self, weights_per_layer: Vec<usize>, cost: GradCost) {
         if let GradPolicy::Adaptive { ctl, .. } = self {
             ctl.set_cost_model(weights_per_layer, cost);
+        }
+    }
+
+    /// Restore an adaptive policy from a checkpoint: controller decision
+    /// state plus the per-layer formats the policy had published. Errors
+    /// on static policies or shape mismatches.
+    pub fn restore_adaptive(
+        &mut self,
+        bytes: &[u8],
+        counters: &[u32],
+        prev_norms: &[Option<f64>],
+        batch: u64,
+        formats: &[RoundTo],
+    ) -> Result<(), String> {
+        match self {
+            GradPolicy::Static { .. } => {
+                Err("cannot restore adaptive grad state into a static policy".into())
+            }
+            GradPolicy::Adaptive { ctl, formats: f } => {
+                ctl.restore(bytes, counters, prev_norms, batch)?;
+                if formats.len() != f.len() {
+                    return Err(format!(
+                        "grad format snapshot has {} layers, policy has {}",
+                        formats.len(),
+                        f.len()
+                    ));
+                }
+                f.copy_from_slice(formats);
+                Ok(())
+            }
         }
     }
 }
@@ -630,6 +708,54 @@ mod tests {
         let evs = c.observe_batch(&[10.0], &[100.0]);
         assert_eq!(evs.len(), 1);
         assert_eq!(evs[0].to, RoundTo::B2);
+    }
+
+    #[test]
+    fn restore_resumes_format_decisions_bit_exactly() {
+        // grad norms that narrow, then spike, then narrow again
+        let norms: Vec<f64> = (0..24)
+            .map(|i| if i == 14 { 10.0 } else { 1.0 + 0.001 * i as f64 })
+            .collect();
+        let drive = |c: &mut GradController, slice: &[f64]| {
+            for &n in slice {
+                c.observe_batch(&[n], &[100.0]);
+            }
+        };
+        let mut straight = GradController::new(1, params(0.05, 3));
+        drive(&mut straight, &norms);
+
+        let mut first = GradController::new(1, params(0.05, 3));
+        drive(&mut first, &norms[..9]);
+        let mut resumed = GradController::new(1, params(0.05, 3));
+        resumed
+            .restore(
+                first.bytes_per_layer(),
+                first.stable_counters(),
+                first.prev_norms(),
+                first.batches_seen(),
+            )
+            .unwrap();
+        drive(&mut resumed, &norms[9..]);
+        assert_eq!(straight.round_to(0), resumed.round_to(0));
+        assert_eq!(straight.batches_seen(), resumed.batches_seen());
+        let tail: Vec<GradEvent> =
+            straight.events().iter().copied().filter(|e| e.batch >= 9).collect();
+        assert_eq!(tail, resumed.events());
+    }
+
+    #[test]
+    fn restore_rejects_bad_snapshots() {
+        let mut c = GradController::new(2, params(0.05, 3));
+        assert!(c.restore(&[4], &[0, 0], &[None, None], 0).is_err()); // shape
+        assert!(c.restore(&[4, 5], &[0, 0], &[None, None], 0).is_err()); // bytes
+        assert!(c.restore(&[4, 2], &[1, 0], &[Some(0.5), None], 9).is_ok());
+        assert_eq!(c.round_to(1), RoundTo::B2);
+        assert_eq!(c.batches_seen(), 9);
+
+        let mut stat = GradPolicy::new(GradPolicyKind::Off, 2, GradParams::default());
+        assert!(stat
+            .restore_adaptive(&[4, 4], &[0, 0], &[None, None], 0, &[RoundTo::B4; 2])
+            .is_err());
     }
 
     #[test]

@@ -30,14 +30,16 @@
 //! (GPU compute-time model), [`data`] (synthetic learnable image set),
 //! [`models`] (Table-I descriptors + micro variants), [`optim`]
 //! (momentum SGD + exponential LR decay), [`profiler`] (Table II/III
-//! emitters), and dependency-free [`util`] plumbing (PRNG, JSON, CLI,
-//! thread pool, bench kit).
+//! emitters), [`ckpt`] (content-addressed ADT shard store: checkpoint,
+//! bit-exact resume, progressive serving), and dependency-free [`util`]
+//! plumbing (PRNG, JSON, CLI, thread pool, bench kit).
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod adt;
 pub mod awp;
+pub mod ckpt;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -14,7 +14,7 @@
 //! | `target-feature-guard`  | every `#[target_feature]` fn is non-`pub` and every call sits within 10 lines below a runtime `is_x86_feature_detected!` guard |
 //! | `alloc-free`            | no allocating calls inside `// tidy:alloc-free` … `// tidy:end-alloc-free` fences |
 //! | `nonfinite-sentinel`    | no raw non-finite float sentinel strings outside `util/json.rs` |
-//! | `scheduler-panic`       | no `unwrap`/`expect`/`panic!` in `sim/timeline.rs` or `interconnect/` non-test code |
+//! | `scheduler-panic`       | no `unwrap`/`expect`/`panic!` in `sim/timeline.rs`, `interconnect/` or `ckpt/` non-test code |
 //! | `cli-config-drift`      | every `main.rs` CLI option appears as an `ExperimentConfig::to_json` key |
 //! | `bench-baseline-drift`  | recorded `BENCH_*.json` and `ci/bench_baseline*.json` key sets match in both directions |
 //!
@@ -304,12 +304,17 @@ fn rule_nonfinite_sentinel(file: &str, code: &[&Token], findings: &mut Vec<Findi
 
 // ---- rule: scheduler-panic -------------------------------------------------
 
-/// The scheduler paths (`sim/timeline.rs`, `interconnect/`) must stay
-/// panic-free in non-test code: no `.unwrap()`, no `.expect(`, no
-/// `panic!` — a panicking scheduler would take the whole simulated
-/// training run down instead of surfacing a verifiable violation.
+/// The scheduler paths (`sim/timeline.rs`, `interconnect/`) and the
+/// checkpoint store (`ckpt/`) must stay panic-free in non-test code: no
+/// `.unwrap()`, no `.expect(`, no `panic!` — a panicking scheduler would
+/// take the whole simulated training run down instead of surfacing a
+/// verifiable violation, and a corrupted shard must yield an actionable
+/// error naming the shard, never a crash.
 fn rule_scheduler_panic(file: &str, code: &[&Token], findings: &mut Vec<Finding>) {
-    if !(file.ends_with("sim/timeline.rs") || file.contains("interconnect/")) {
+    if !(file.ends_with("sim/timeline.rs")
+        || file.contains("interconnect/")
+        || file.contains("ckpt/"))
+    {
         return;
     }
     let is_ident = |t: &Token, s: &str| t.kind == TokKind::Ident && t.text == s;
@@ -558,6 +563,7 @@ const BENCH_BASELINES: &[(&str, &str)] = &[
     ("artifacts/bench_out/BENCH_table3_power.json", "ci/bench_baseline_table3.json"),
     ("artifacts/bench_out/BENCH_gradcomp.json", "ci/bench_baseline_gradcomp.json"),
     ("artifacts/bench_out/BENCH_fabric.json", "ci/bench_baseline_fabric.json"),
+    ("artifacts/bench_out/BENCH_cli_profile.json", "ci/bench_baseline_cli_profile.json"),
 ];
 
 fn json_key_paths(prefix: &str, v: &crate::util::json::Json, out: &mut BTreeSet<String>) {
@@ -645,9 +651,14 @@ mod tests {
         let f = lint_source("src/sim/timeline.rs", src);
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].rule, "scheduler-panic");
+        // the checkpoint store is held to the same no-panic contract
+        let f = lint_source("src/ckpt/store.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "scheduler-panic");
         // test modules are exempt
         let test_mod = "#[cfg(test)]\nmod tests {\n    fn f(x: Option<u32>) -> u32 { x.unwrap() }\n}\n";
         assert!(lint_source("src/sim/timeline.rs", test_mod).is_empty());
+        assert!(lint_source("src/ckpt/store.rs", test_mod).is_empty());
     }
 
     #[test]

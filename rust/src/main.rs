@@ -7,6 +7,13 @@
 //!                   full-size model (the paper's Table II/III).
 //!   verify-schedule Run the schedule race/invariant verifier over the
 //!                   recorded lane × queue × overlap-mode grid.
+//!   drill           Deterministic synthetic training loop over the real
+//!                   state-carrying components — the checkpoint/resume
+//!                   proving ground (runs without AOT artifacts).
+//!   export          Re-pack a train checkpoint as a progressive serving
+//!                   manifest at a chosen ADT format.
+//!   verify-ckpt     Verify every shard hash of a committed checkpoint
+//!                   and check the manifest against the model zoo.
 //!   models          Print the model zoo (paper Table I census + params).
 //!   info            Runtime/platform diagnostics.
 //!
@@ -27,7 +34,11 @@ use a2dtwp::sim::{
 use a2dtwp::util::benchkit::Table;
 use a2dtwp::util::cli::{Args, Spec};
 
-const USAGE: &str = "usage: a2dtwp <train|profile|verify-schedule|models|info> [options]
+const USAGE: &str = "usage: a2dtwp <train|profile|verify-schedule|drill|export|verify-ckpt|models|info> [options]
+  checkpoint subcommands:
+    a2dtwp drill [options] [--resume]       synthetic train loop, checkpointable
+    a2dtwp export <ckpt-dir> <out-dir> [bits] [min-depth]
+    a2dtwp verify-ckpt <ckpt-dir>
   common options:
     --model NAME         (train: *_micro; profile: alexnet|vgg_a|resnet34)
     --batch-size N       global batch (split across 4 simulated GPUs)
@@ -60,8 +71,12 @@ const USAGE: &str = "usage: a2dtwp <train|profile|verify-schedule|models|info> [
     --target-error E     stop when top-1 val error <= E
     --seed N             PRNG seed
     --artifacts DIR      AOT artifacts directory (default: artifacts)
+    --checkpoint-dir D   content-addressed checkpoint store directory
+    --checkpoint-every N checkpoint cadence in batches (0 = off)
+    --resume             resume from the committed checkpoint in
+                         --checkpoint-dir (train|drill)
     --csv PATH           also write the result table as CSV
-    --json PATH          (profile) write machine-readable metrics JSON";
+    --json PATH          (profile|drill) write machine-readable metrics JSON";
 
 fn main() {
     let spec = Spec {
@@ -88,10 +103,12 @@ fn main() {
             "seed",
             "lr",
             "artifacts",
+            "checkpoint-dir",
+            "checkpoint-every",
             "csv",
             "json",
         ],
-        flags: &["verbose", "help"],
+        flags: &["verbose", "help", "resume"],
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(argv, &spec) {
@@ -110,6 +127,9 @@ fn main() {
         "train" => cmd_train(&args),
         "profile" => cmd_profile(&args),
         "verify-schedule" => cmd_verify_schedule(&args),
+        "drill" => cmd_drill(&args),
+        "export" => cmd_export(&args),
+        "verify-ckpt" => cmd_verify_ckpt(&args),
         "models" => cmd_models(),
         "info" => cmd_info(),
         other => {
@@ -197,6 +217,12 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
     cfg.seed = args.get_u64("seed", cfg.seed)?;
     cfg.sgd.schedule.initial = args.get_f64("lr", cfg.sgd.schedule.initial as f64)? as f32;
     cfg.artifacts_dir = args.get_or("artifacts", &cfg.artifacts_dir).to_string();
+    cfg.checkpoint_dir = args.get_or("checkpoint-dir", &cfg.checkpoint_dir).to_string();
+    cfg.checkpoint_every = args.get_u64("checkpoint-every", cfg.checkpoint_every)?;
+    cfg.resume = args.flag("resume");
+    if (cfg.resume || cfg.checkpoint_every > 0) && cfg.checkpoint_dir.is_empty() {
+        return Err("--resume / --checkpoint-every need --checkpoint-dir".into());
+    }
     Ok(cfg)
 }
 
@@ -397,6 +423,35 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(path) = args.get("json") {
         use a2dtwp::util::json::Json;
+        let w_counts = runner.desc.weight_counts();
+        let b_counts = runner.desc.bias_counts();
+        let mut ckpt_bytes_total = 0usize;
+        let mut ckpt_layer_compression: Vec<f64> = Vec::with_capacity(w_counts.len());
+        for (l, &wc) in w_counts.iter().enumerate() {
+            let packed = a2dtwp::adt::packed_len(wc, formats[l]);
+            ckpt_bytes_total += packed + b_counts[l] * 4;
+            ckpt_layer_compression
+                .push(if packed == 0 { 1.0 } else { wc as f64 * 4.0 / packed as f64 });
+        }
+        let ckpt_write_ms = {
+            let tmp = std::env::temp_dir()
+                .join(format!("a2dtwp_ckpt_probe_{}", std::process::id()));
+            let chunk = vec![0u8; 8 << 20];
+            let sw = a2dtwp::util::timer::Stopwatch::start();
+            let mut f = std::fs::File::create(&tmp)?;
+            use std::io::Write as _;
+            let mut left = ckpt_bytes_total;
+            while left > 0 {
+                let n = left.min(chunk.len());
+                f.write_all(&chunk[..n])?;
+                left -= n;
+            }
+            f.sync_all()?;
+            drop(f);
+            let ms = sw.elapsed_s() * 1e3;
+            let _ = std::fs::remove_file(&tmp);
+            ms
+        };
         let metrics = Json::obj(vec![
             // bump when the report's key set or semantics change —
             // check_bench rejects version drift on both sides.
@@ -448,6 +503,16 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
                     Json::num(if total > 0.0 { s / total } else { 0.0 })
                 }))
             }),
+            // Checkpoint cost model at this profile point: shard bytes if
+            // a checkpoint were cut at the A²DTWP formats (weights packed
+            // per-layer, biases raw f32le), per-layer compression ratio vs
+            // an f32 dump, and a measured cold write of that many bytes.
+            ("ckpt_bytes_total", Json::num(ckpt_bytes_total as f64)),
+            (
+                "ckpt_layer_compression",
+                Json::arr(ckpt_layer_compression.iter().map(|&r| Json::num(r))),
+            ),
+            ("ckpt_write_ms", Json::num(ckpt_write_ms)),
         ]);
         if let Some(dir) = std::path::Path::new(path).parent() {
             if !dir.as_os_str().is_empty() {
@@ -621,6 +686,133 @@ fn cmd_verify_schedule(args: &Args) -> anyhow::Result<()> {
         anyhow::bail!("{failures} schedule invariant violation(s)");
     }
     println!("\nall schedules verified: deps honoured, resources exclusive, busy conserved");
+    Ok(())
+}
+
+/// Deterministic synthetic training loop over the real state-carrying
+/// components (loader, momentum SGD, AWP + grad controllers, error
+/// feedback) — the checkpoint/resume proving ground. CI kills a drill
+/// mid-run, resumes it, and byte-compares the report JSON against an
+/// uninterrupted run.
+fn cmd_drill(args: &Args) -> anyhow::Result<()> {
+    use a2dtwp::ckpt::drill::{Drill, DrillConfig};
+    let mut cfg = DrillConfig::micro();
+    cfg.model = args.get_or("model", &cfg.model).to_string();
+    cfg.batch_size =
+        args.get_usize("batch-size", cfg.batch_size).map_err(|e| anyhow::anyhow!(e))?;
+    let policy_name = args.get_or("policy", "awp");
+    cfg.policy = PolicyKind::parse(policy_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown policy '{policy_name}'"))?;
+    if let Some(g) = args.get("grad-adt") {
+        cfg.grad = GradPolicyKind::parse(g)
+            .ok_or_else(|| anyhow::anyhow!("unknown --grad-adt '{g}' (off|8|16|24|32)"))?;
+    }
+    if let Some(g) = args.get("grad-policy") {
+        cfg.grad = GradPolicyKind::parse(g).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown --grad-policy '{g}' (off|fixed8|fixed16|fixed24|fixed32|adaptive)"
+            )
+        })?;
+    }
+    if let Some(fb) = args.get("grad-feedback") {
+        cfg.grad_feedback = match fb {
+            "on" => true,
+            "off" => false,
+            other => anyhow::bail!("--grad-feedback must be on|off, got '{other}'"),
+        };
+    }
+    cfg.seed = args.get_u64("seed", cfg.seed).map_err(|e| anyhow::anyhow!(e))?;
+    cfg.lr = args.get_f64("lr", cfg.lr as f64).map_err(|e| anyhow::anyhow!(e))? as f32;
+    cfg.checkpoint_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
+    cfg.checkpoint_every =
+        args.get_u64("checkpoint-every", cfg.checkpoint_every).map_err(|e| anyhow::anyhow!(e))?;
+    let max_batches = args.get_u64("max-batches", 12).map_err(|e| anyhow::anyhow!(e))?;
+    let mut drill =
+        if args.flag("resume") { Drill::resume(cfg)? } else { Drill::new(cfg)? };
+    drill.run(max_batches)?;
+    let report = drill.report();
+    println!("{}", report.to_string_compact());
+    if drill.ckpt_bytes_last() > 0 {
+        println!(
+            "last checkpoint: {} bytes written in {:.2} ms",
+            drill.ckpt_bytes_last(),
+            drill.last_ckpt_write_s() * 1e3
+        );
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_string_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Re-pack a committed train checkpoint as a progressive serving manifest:
+/// `a2dtwp export <ckpt-dir> <out-dir> [bits] [min-depth]`.
+fn cmd_export(args: &Args) -> anyhow::Result<()> {
+    use a2dtwp::adt::{AdtConfig, RoundTo};
+    use a2dtwp::ckpt::{drill::export_serving, CkptStore};
+    let pos = args.positional();
+    if pos.len() < 3 {
+        anyhow::bail!("usage: a2dtwp export <ckpt-dir> <out-dir> [bits] [min-depth]");
+    }
+    let src = CkptStore::new(pos[1].as_str());
+    let dst = CkptStore::new(pos[2].as_str());
+    let bits: u32 = match pos.get(3) {
+        Some(s) => s.parse().map_err(|_| anyhow::anyhow!("export bits: '{s}' is not a number"))?,
+        None => 8,
+    };
+    let rt = RoundTo::from_bits(bits)
+        .ok_or_else(|| anyhow::anyhow!("export bits must be in 1..=32, got {bits}"))?;
+    let min_depth: usize = match pos.get(4) {
+        Some(s) => {
+            s.parse().map_err(|_| anyhow::anyhow!("min-depth: '{s}' is not a number"))?
+        }
+        None => 1,
+    };
+    let manifest = export_serving(&src, &dst, rt, min_depth, &AdtConfig::default())?;
+    let bytes: usize = manifest.layers.iter().map(|l| l.weight.bytes + l.bias.bytes).sum();
+    println!(
+        "exported {} ({} layers, {} batches trained) at {}-bit weights, \
+         min runnable depth {}: {} shard bytes -> {}",
+        manifest.model,
+        manifest.layers.len(),
+        manifest.batches,
+        rt.bits(),
+        manifest.min_runnable_depth,
+        bytes,
+        dst.dir().display()
+    );
+    Ok(())
+}
+
+/// Verify every shard hash of a committed checkpoint and check the
+/// manifest against the model zoo: `a2dtwp verify-ckpt <ckpt-dir>`.
+fn cmd_verify_ckpt(args: &Args) -> anyhow::Result<()> {
+    use a2dtwp::ckpt::CkptStore;
+    let pos = args.positional();
+    if pos.len() < 2 {
+        anyhow::bail!("usage: a2dtwp verify-ckpt <ckpt-dir>");
+    }
+    let store = CkptStore::new(pos[1].as_str());
+    let manifest = store.load_manifest()?;
+    let desc = model_by_name(&manifest.model).ok_or_else(|| {
+        anyhow::anyhow!(
+            "manifest names model '{}' which is not in the zoo ({})",
+            manifest.model,
+            MODEL_NAMES.join("|")
+        )
+    })?;
+    manifest.check_against(&desc)?;
+    let report = store.verify(&manifest)?;
+    println!(
+        "checkpoint ok: {} {} — {} layers, {} batches, {} shards, {} bytes verified",
+        manifest.kind.name(),
+        manifest.model,
+        manifest.layers.len(),
+        manifest.batches,
+        report.shards_checked,
+        report.bytes_total
+    );
     Ok(())
 }
 

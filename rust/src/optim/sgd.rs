@@ -120,6 +120,31 @@ impl MomentumSgd {
         self.batch
     }
 
+    /// Per-tensor velocity buffers, construction-time layout (checkpointing).
+    pub fn velocity(&self) -> &[Vec<f32>] {
+        &self.velocity
+    }
+
+    /// Restore velocity + batch counter from a checkpoint. `flat` is the
+    /// concatenation of every velocity tensor in construction-time order
+    /// (the layout [`velocity`](Self::velocity) exposes).
+    pub fn restore_from_flat(&mut self, flat: &[f32], batch: u64) -> Result<(), String> {
+        let total: usize = self.velocity.iter().map(|v| v.len()).sum();
+        if flat.len() != total {
+            return Err(format!(
+                "velocity snapshot has {} elements, optimizer holds {total}",
+                flat.len()
+            ));
+        }
+        let mut off = 0;
+        for v in &mut self.velocity {
+            v.copy_from_slice(&flat[off..off + v.len()]);
+            off += v.len();
+        }
+        self.batch = batch;
+        Ok(())
+    }
+
     /// Apply one update step. `params[i]` and `grads[i]` must match the
     /// construction-time tensor sizes. `grads` are the *averaged* gradient
     /// contributions gathered from the GPUs.
@@ -361,6 +386,36 @@ mod tests {
         joined.extend(bs);
         assert_eq!(bits(&params_a), bits(&joined));
         assert_eq!(opt_a.batches_applied(), opt_b.batches_applied());
+    }
+
+    #[test]
+    fn velocity_restore_resumes_bit_exactly() {
+        let sizes = [53usize, 7];
+        let cfg = SgdConfig::paper_defaults(0.02, 10);
+        let (params0, grads) = sample_state(13, &sizes);
+
+        let mut straight = MomentumSgd::new(cfg, &sizes);
+        let mut p_straight = params0.clone();
+        for _ in 0..6 {
+            straight.step(&mut p_straight, &grads, &[true, false]);
+        }
+
+        // run 3 steps, snapshot, restore into a fresh optimizer, run 3 more
+        let mut first = MomentumSgd::new(cfg, &sizes);
+        let mut p = params0.clone();
+        for _ in 0..3 {
+            first.step(&mut p, &grads, &[true, false]);
+        }
+        let flat: Vec<f32> = first.velocity().iter().flat_map(|v| v.iter().copied()).collect();
+        let mut resumed = MomentumSgd::new(cfg, &sizes);
+        resumed.restore_from_flat(&flat, first.batches_applied()).unwrap();
+        for _ in 0..3 {
+            resumed.step(&mut p, &grads, &[true, false]);
+        }
+        assert_eq!(bits(&p_straight), bits(&p));
+        assert_eq!(straight.batches_applied(), resumed.batches_applied());
+
+        assert!(resumed.restore_from_flat(&flat[..10], 0).is_err());
     }
 
     #[test]

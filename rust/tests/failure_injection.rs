@@ -1,16 +1,43 @@
 //! Failure injection: every load/parse/configuration error path must fail
 //! loudly with an actionable message — never panic, never compute garbage.
+//! Covers the artifact manifest, the executor, the trace cache, and the
+//! checkpoint store (corrupted / truncated / missing shards, manifest
+//! length disagreement, crash between shard write and manifest commit).
 
 use a2dtwp::awp::PolicyKind;
+use a2dtwp::ckpt::drill::{Drill, DrillConfig};
+use a2dtwp::ckpt::{CkptManifest, CkptStore};
 use a2dtwp::config::ExperimentConfig;
 use a2dtwp::coordinator::Trainer;
 use a2dtwp::runtime::{Executor, Manifest};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-fn scratch(name: &str) -> PathBuf {
-    let dir = std::env::temp_dir().join(format!("a2dtwp_fail_{name}_{}", std::process::id()));
-    std::fs::create_dir_all(&dir).unwrap();
-    dir
+/// Temp dir that removes itself on drop — including on assertion unwind —
+/// so failed runs don't leak `a2dtwp_fail_*` directories into the temp dir.
+struct Scratch(PathBuf);
+
+impl Scratch {
+    fn new(name: &str) -> Scratch {
+        let dir =
+            std::env::temp_dir().join(format!("a2dtwp_fail_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        Scratch(dir)
+    }
+
+    fn path(&self) -> &Path {
+        &self.0
+    }
+
+    fn join(&self, p: &str) -> PathBuf {
+        self.0.join(p)
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
 }
 
 #[test]
@@ -22,27 +49,27 @@ fn missing_artifacts_dir_is_actionable() {
 
 #[test]
 fn corrupt_manifest_json_is_reported_with_path() {
-    let dir = scratch("corrupt");
+    let dir = Scratch::new("corrupt");
     std::fs::write(dir.join("manifest.json"), "{ not json !!").unwrap();
-    let err = Manifest::load(&dir).unwrap_err();
+    let err = Manifest::load(dir.path()).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("manifest.json"), "{msg}");
 }
 
 #[test]
 fn manifest_with_missing_fields_is_rejected() {
-    let dir = scratch("fields");
+    let dir = Scratch::new("fields");
     std::fs::write(
         dir.join("manifest.json"),
         r#"{"models": {"m": {"input": [32,32,3]}}}"#,
     )
     .unwrap();
-    assert!(Manifest::load(&dir).is_err());
+    assert!(Manifest::load(dir.path()).is_err());
 }
 
 #[test]
 fn truncated_hlo_file_fails_at_compile_not_execute() {
-    let dir = scratch("hlo");
+    let dir = Scratch::new("hlo");
     let path = dir.join("broken.hlo.txt");
     std::fs::write(&path, "HloModule broken\nENTRY main {").unwrap();
     let mut exec = Executor::new().unwrap();
@@ -56,7 +83,7 @@ fn manifest_descriptor_drift_is_detected() {
     // A manifest whose layer table disagrees with the Rust zoo must be
     // rejected at Trainer construction (the cross-check in
     // runtime::manifest::check_against).
-    let dir = scratch("drift");
+    let dir = Scratch::new("drift");
     std::fs::write(
         dir.join("manifest.json"),
         r#"{"format":"hlo-text","models":{"alexnet_micro":{
@@ -68,7 +95,7 @@ fn manifest_descriptor_drift_is_detected() {
     .unwrap();
     let mut cfg =
         ExperimentConfig::preset("alexnet_micro", 32, PolicyKind::Baseline, "x86");
-    cfg.artifacts_dir = dir.to_string_lossy().to_string();
+    cfg.artifacts_dir = dir.path().to_string_lossy().to_string();
     let err = match Trainer::new(cfg) {
         Err(e) => e,
         Ok(_) => panic!("drifted manifest accepted"),
@@ -99,11 +126,11 @@ fn unknown_model_and_bad_batch_are_rejected() {
 
 #[test]
 fn corrupt_trace_cache_is_surfaced_not_silently_retrained() {
-    let dir = scratch("trace");
+    let dir = Scratch::new("trace");
     std::fs::create_dir_all(dir.join("traces")).unwrap();
     // Write a corrupt cached trace, then point a config at it.
     let mut cfg = ExperimentConfig::preset("alexnet_micro", 32, PolicyKind::Baseline, "x86");
-    cfg.artifacts_dir = dir.to_string_lossy().to_string();
+    cfg.artifacts_dir = dir.path().to_string_lossy().to_string();
     let key = a2dtwp::coordinator::TraceKey {
         model: cfg.model.clone(),
         batch_size: cfg.batch_size,
@@ -115,4 +142,92 @@ fn corrupt_trace_cache_is_surfaced_not_silently_retrained() {
     let err = a2dtwp::coordinator::load_or_record_trace(&cfg).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("json"), "{msg}");
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint store failure injection. A real checkpoint is produced by the
+// drill (same save path the Trainer uses), then damaged on disk; every
+// failure must name the shard or manifest involved and never panic.
+// ---------------------------------------------------------------------------
+
+/// Train 4 drill batches with a checkpoint cadence of 2 and hand back the
+/// committed store + manifest (last commit at batch 4).
+fn trained_ckpt(dir: &Path) -> (CkptStore, CkptManifest, DrillConfig) {
+    let mut cfg = DrillConfig::micro();
+    cfg.checkpoint_dir = Some(dir.to_path_buf());
+    cfg.checkpoint_every = 2;
+    let mut d = Drill::new(cfg.clone()).unwrap();
+    d.run(4).unwrap();
+    let store = CkptStore::new(dir);
+    let manifest = store.load_manifest().unwrap();
+    (store, manifest, cfg)
+}
+
+#[test]
+fn corrupted_ckpt_shard_names_the_shard() {
+    let dir = Scratch::new("ckpt_corrupt");
+    let (store, manifest, _) = trained_ckpt(dir.path());
+    let victim = &manifest.layers[0].weight;
+    let mut bytes = std::fs::read(store.shard_path(&victim.id)).unwrap();
+    bytes[0] ^= 0xff; // same length, different content
+    std::fs::write(store.shard_path(&victim.id), &bytes).unwrap();
+    let err = store.verify(&manifest).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("corrupted shard") && msg.contains(&victim.id), "{msg}");
+}
+
+#[test]
+fn truncated_ckpt_shard_is_actionable() {
+    let dir = Scratch::new("ckpt_trunc");
+    let (store, manifest, _) = trained_ckpt(dir.path());
+    let victim = &manifest.layers[0].bias;
+    let bytes = std::fs::read(store.shard_path(&victim.id)).unwrap();
+    std::fs::write(store.shard_path(&victim.id), &bytes[..bytes.len() / 2]).unwrap();
+    let err = store.read_shard(victim).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("truncated shard") && msg.contains(&victim.id), "{msg}");
+}
+
+#[test]
+fn ckpt_manifest_shard_length_disagreement_is_reported() {
+    let dir = Scratch::new("ckpt_len");
+    let (store, manifest, _) = trained_ckpt(dir.path());
+    let victim = &manifest.layers[0].weight;
+    let mut bytes = std::fs::read(store.shard_path(&victim.id)).unwrap();
+    bytes.extend_from_slice(&[0u8; 8]); // longer than the manifest claims
+    std::fs::write(store.shard_path(&victim.id), &bytes).unwrap();
+    let err = store.read_shard(victim).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("length disagreement") && msg.contains(&victim.id), "{msg}");
+}
+
+#[test]
+fn missing_ckpt_shard_file_is_actionable() {
+    let dir = Scratch::new("ckpt_missing");
+    let (store, manifest, _) = trained_ckpt(dir.path());
+    let state = manifest.state.as_ref().expect("train manifest carries state");
+    let victim = &state.velocity;
+    std::fs::remove_file(store.shard_path(&victim.id)).unwrap();
+    let err = store.read_shard(victim).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("missing shard file") && msg.contains(&victim.id), "{msg}");
+}
+
+#[test]
+fn crash_between_shard_write_and_manifest_commit_recovers() {
+    let dir = Scratch::new("ckpt_crash");
+    let (store, manifest, cfg) = trained_ckpt(dir.path());
+    // Simulate a crash mid-commit of a *later* checkpoint: an orphaned
+    // shard temp file plus a half-written manifest temp that never got
+    // renamed into place.
+    std::fs::write(dir.join("shards/.tmp-deadbeefdeadbeef"), b"partial").unwrap();
+    std::fs::write(dir.join("manifest.json.tmp"), b"{ half-written").unwrap();
+    // The committed checkpoint must still load, verify, and resume.
+    let back = store.load_manifest().unwrap();
+    assert_eq!(back, manifest);
+    store.verify(&back).unwrap();
+    let mut resumed = Drill::resume(cfg).unwrap();
+    assert_eq!(resumed.batches_done(), 4);
+    resumed.run(6).unwrap();
+    assert_eq!(resumed.batches_done(), 6);
 }

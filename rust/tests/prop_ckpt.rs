@@ -1,0 +1,136 @@
+//! Property tests for the content-addressed checkpoint store.
+//!
+//! Headline invariant: train 2N batches straight versus train N, kill the
+//! process, resume from disk, train N more — every piece of training state
+//! (weights, momentum, controller decisions, error-feedback residuals,
+//! loader position, PRNG streams) must be bit-identical. Exercised across
+//! the precision-policy × gradient-policy matrix so the sidecar state for
+//! each controller is proven on the resume path, not just serialized.
+//!
+//! Second invariant: pack → disk → unpack is bit-exact at every ADT width,
+//! i.e. the store adds nothing lossy on top of the pack kernels.
+
+use a2dtwp::adt::{self, AdtConfig, RoundTo};
+use a2dtwp::awp::PolicyKind;
+use a2dtwp::ckpt::drill::{Drill, DrillConfig};
+use a2dtwp::ckpt::{
+    CkptKind, CkptManifest, CkptStore, Encoding, LayerShards, ShardRef, CKPT_SCHEMA_VERSION,
+};
+use a2dtwp::grad::GradPolicyKind;
+use a2dtwp::util::prng::Rng;
+use std::path::PathBuf;
+
+/// Temp dir that removes itself on drop (also on assertion unwind), so
+/// failed runs don't leak `a2dtwp_prop_*` directories into the temp dir.
+struct Scratch(PathBuf);
+
+impl Scratch {
+    fn new(name: &str) -> Scratch {
+        let dir =
+            std::env::temp_dir().join(format!("a2dtwp_prop_{name}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        Scratch(dir)
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+#[test]
+fn kill_and_resume_is_bit_identical_across_policy_combos() {
+    let combos: &[(PolicyKind, GradPolicyKind, &str)] = &[
+        (PolicyKind::Baseline, GradPolicyKind::Off, "base_off"),
+        (PolicyKind::Fixed(RoundTo::B1), GradPolicyKind::Fixed(RoundTo::B2), "fixed_fixed"),
+        (PolicyKind::Fixed(RoundTo::B2), GradPolicyKind::Adaptive, "fixed_adaptive"),
+        (PolicyKind::Awp, GradPolicyKind::Off, "awp_off"),
+        (PolicyKind::Awp, GradPolicyKind::Adaptive, "awp_adaptive"),
+    ];
+    for &(policy, grad, tag) in combos {
+        let s = Scratch::new(tag);
+        let mut cfg = DrillConfig::micro();
+        cfg.policy = policy;
+        cfg.grad = grad;
+
+        let mut straight = Drill::new(cfg.clone()).unwrap();
+        straight.run(12).unwrap();
+
+        cfg.checkpoint_dir = Some(s.0.clone());
+        cfg.checkpoint_every = 3;
+        let first = {
+            let mut d = Drill::new(cfg.clone()).unwrap();
+            d.run(6).unwrap();
+            d
+        };
+        drop(first); // the "kill": in-process state gone, disk state remains
+
+        let mut resumed = Drill::resume(cfg).unwrap();
+        assert_eq!(resumed.batches_done(), 6, "{tag}: resumed at the wrong batch");
+        resumed.run(12).unwrap();
+
+        assert_eq!(
+            resumed.report().to_string_compact(),
+            straight.report().to_string_compact(),
+            "{tag}: kill/resume drifted from the uninterrupted run"
+        );
+    }
+}
+
+#[test]
+fn pack_disk_unpack_is_bit_exact_at_every_adt_width() {
+    let cfg = AdtConfig { threads: 1, ..AdtConfig::default() };
+    // odd length so the sub-word tail path of every width is exercised
+    let mut vals = vec![0f32; 1003];
+    Rng::new(3).fill_normal(&mut vals, 0.0, 0.05);
+
+    for rt in RoundTo::ALL {
+        let mut packed = Vec::new();
+        adt::bitpack(&vals, rt, &cfg, &mut packed);
+        let mut direct = vec![0f32; vals.len()];
+        adt::bitunpack_into(&packed, rt, &cfg, &mut direct);
+
+        let s = Scratch::new(&format!("width{}", rt.bits()));
+        let store = CkptStore::new(&s.0);
+        let weight = ShardRef::for_payload(&packed, vals.len(), Encoding::Adt(rt)).unwrap();
+        let bias_bytes = vec![0u8; 4];
+        let bias = ShardRef::for_payload(&bias_bytes, 1, Encoding::F32Le).unwrap();
+        let manifest = CkptManifest {
+            schema_version: CKPT_SCHEMA_VERSION,
+            kind: CkptKind::Serving,
+            model: "prop".into(),
+            batches: 0,
+            min_runnable_depth: 1,
+            layers: vec![LayerShards {
+                layer: 0,
+                name: "l0".into(),
+                weight: weight.clone(),
+                bias: bias.clone(),
+            }],
+            state: None,
+        };
+        store
+            .prepare(
+                manifest.clone(),
+                vec![(weight.id.clone(), packed.clone()), (bias.id.clone(), bias_bytes)],
+            )
+            .unwrap()
+            .commit()
+            .unwrap();
+
+        let loaded = store.load_manifest().unwrap();
+        assert_eq!(loaded, manifest);
+        let (ws, _bs) = store.load_weights(&loaded, &cfg).unwrap();
+        assert_eq!(ws[0].len(), direct.len());
+        for (i, (disk, mem)) in ws[0].iter().zip(&direct).enumerate() {
+            assert_eq!(
+                disk.to_bits(),
+                mem.to_bits(),
+                "bit drift at {} bits, element {i}",
+                rt.bits()
+            );
+        }
+    }
+}

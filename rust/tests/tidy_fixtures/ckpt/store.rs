@@ -1,0 +1,7 @@
+// tidy fixture: `.unwrap()` on a checkpoint path (the rule covers any
+// path containing `ckpt/`) — must fire `scheduler-panic` exactly once.
+// Never compiled; only lexed by tidy.
+
+fn read_shard(bytes: Option<Vec<u8>>) -> Vec<u8> {
+    bytes.unwrap()
+}

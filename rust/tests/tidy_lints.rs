@@ -54,6 +54,14 @@ fn fixture_scheduler_panic_is_path_scoped() {
 }
 
 #[test]
+fn fixture_ckpt_panic_is_path_scoped() {
+    assert_fires_exactly_once("ckpt/store.rs", "scheduler-panic");
+    // the same source outside a checkpoint path is clean
+    let (_, src) = fixture("ckpt/store.rs");
+    assert!(lint_source("tests/tidy_fixtures/elsewhere.rs", &src).is_empty());
+}
+
+#[test]
 fn fixture_raw_nonfinite_sentinel() {
     assert_fires_exactly_once("raw_sentinel.rs", "nonfinite-sentinel");
 }
