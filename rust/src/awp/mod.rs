@@ -15,6 +15,6 @@ mod policy;
 
 pub use controller::{AwpController, AwpEvent, AwpParams};
 pub use norm::{l2_norm_fast, l2_norm_simd};
-pub use policy::{resnet_block_groups, Policy, PolicyKind, PrecisionPolicy};
+pub use policy::{resnet_block_groups, AwpCost, Policy, PolicyKind, PrecisionPolicy};
 
 pub use crate::adt::RoundTo;

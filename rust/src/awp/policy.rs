@@ -201,6 +201,76 @@ impl PrecisionPolicy for Policy {
     }
 }
 
+/// Calibrated rates for the broadcast-side cost guard: the AWP
+/// controller's norm rule says a layer *can* ride the packed ADT
+/// broadcast; these rates decide whether packing actually *pays* on the
+/// current machine. Broadcasting a layer of `w` weights at `b`
+/// bytes/weight costs `4·w / pack_bps` seconds of CPU Bitpack (the pack
+/// always reads the full f32 image, so its cost is width-independent)
+/// plus `w·b / unpack_bps` seconds of device Bitunpack (each GPU
+/// restores its own copy in parallel, so no `n_gpus` factor), and saves
+/// `n_gpus·w·(4−b) / h2d_bps` seconds of H2D versus the raw f32
+/// broadcast. Under `pack-starved` CPUs the pack term dominates and the
+/// f32 broadcast wins — the weight-side mirror of [`GradCost`]'s gather
+/// inversion.
+///
+/// [`GradCost`]: crate::grad::GradCost
+#[derive(Clone, Copy, Debug)]
+pub struct AwpCost {
+    /// CPU Bitpack rate (bytes/s of f32 input consumed).
+    pub pack_bps: f64,
+    /// Device Bitunpack rate per GPU (bytes/s of packed input restored).
+    pub unpack_bps: f64,
+    /// Aggregate H2D link rate across the node's GPUs (bytes/s).
+    pub h2d_bps: f64,
+    /// Weight replicas broadcast per batch (one per GPU).
+    pub n_gpus: usize,
+}
+
+impl AwpCost {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(self.pack_bps.is_finite() && self.pack_bps > 0.0) {
+            return Err(format!("pack_bps must be finite and > 0, got {}", self.pack_bps));
+        }
+        if !(self.unpack_bps.is_finite() && self.unpack_bps > 0.0) {
+            return Err(format!("unpack_bps must be finite and > 0, got {}", self.unpack_bps));
+        }
+        if !(self.h2d_bps.is_finite() && self.h2d_bps > 0.0) {
+            return Err(format!("h2d_bps must be finite and > 0, got {}", self.h2d_bps));
+        }
+        if self.n_gpus == 0 {
+            return Err("n_gpus must be >= 1".into());
+        }
+        Ok(())
+    }
+
+    /// Projected per-batch CPU Bitpack seconds for one layer of
+    /// `weights` (width-independent: the pack consumes the f32 image).
+    pub fn pack_s(&self, weights: usize) -> f64 {
+        (weights * 4) as f64 / self.pack_bps
+    }
+
+    /// Projected per-batch device Bitunpack seconds for one layer of
+    /// `weights` broadcast at `bytes` per weight (GPUs restore their
+    /// replicas in parallel).
+    pub fn unpack_s(&self, weights: usize, bytes: u8) -> f64 {
+        (weights * bytes as usize) as f64 / self.unpack_bps
+    }
+
+    /// Projected per-batch H2D seconds saved versus the f32 broadcast
+    /// for one layer of `weights` broadcast at `bytes` per weight.
+    pub fn h2d_saved_s(&self, weights: usize, bytes: u8) -> f64 {
+        (self.n_gpus * weights * (4usize.saturating_sub(bytes as usize))) as f64 / self.h2d_bps
+    }
+
+    /// Does broadcasting this layer packed at `bytes`/weight save more
+    /// link time than the pack/unpack round trip costs? (Equality counts
+    /// as a win: the bytes come off the contended link either way.)
+    pub fn adt_pays(&self, weights: usize, bytes: u8) -> bool {
+        self.pack_s(weights) + self.unpack_s(weights, bytes) <= self.h2d_saved_s(weights, bytes)
+    }
+}
+
 /// Build the ResNet layer→building-block map from per-layer block labels:
 /// consecutive layers sharing a label form one group (paper §IV-B: "best
 /// results when adapting precision at the Resnet building block level").
@@ -310,6 +380,67 @@ mod tests {
 
         let mut stat = Policy::new(PolicyKind::Baseline, 2, awp_params(), None);
         assert!(stat.restore_adaptive(&bits, &counters, &prevs, batch, &snap_formats).is_err());
+    }
+
+    fn awp_cost_of(profile: &crate::sim::SystemProfile) -> AwpCost {
+        AwpCost {
+            pack_bps: profile.pack_bps,
+            unpack_bps: profile.unpack_bps,
+            h2d_bps: profile.h2d_bps,
+            n_gpus: profile.n_gpus,
+        }
+    }
+
+    #[test]
+    fn awp_cost_validates_rates() {
+        let ok = AwpCost { pack_bps: 1e9, unpack_bps: 1e9, h2d_bps: 1e10, n_gpus: 4 };
+        assert!(ok.validate().is_ok());
+        assert!(AwpCost { pack_bps: 0.0, ..ok }.validate().is_err());
+        assert!(AwpCost { unpack_bps: f64::NAN, ..ok }.validate().is_err());
+        assert!(AwpCost { h2d_bps: -1.0, ..ok }.validate().is_err());
+        assert!(AwpCost { n_gpus: 0, ..ok }.validate().is_err());
+    }
+
+    #[test]
+    fn adt_pays_under_uniform_rates_on_both_platforms() {
+        // Calibrated Table II/III rates: pack+unpack is a small fraction
+        // of the H2D time it removes, so the packed broadcast wins.
+        let w = 1_000_000;
+        for sys in [crate::sim::SystemProfile::x86(), crate::sim::SystemProfile::power()] {
+            let cost = awp_cost_of(&sys);
+            assert!(cost.validate().is_ok());
+            assert!(cost.adt_pays(w, 1), "{}: 8-bit broadcast must pay", sys.name);
+            assert!(cost.adt_pays(w, 2), "{}: 16-bit broadcast must pay", sys.name);
+        }
+    }
+
+    #[test]
+    fn pack_starved_cpu_inverts_the_broadcast_on_power() {
+        // pack-starved quarters the CPU pack rate. POWER's links are so
+        // fast that the inflated pack time (≈42 ms for the VGG payload)
+        // exceeds the ≈29 ms of H2D the packing would save — raw f32
+        // broadcast wins. On x86 the slower PCIe keeps ADT profitable
+        // (≈79 ms pack vs ≈115 ms saved).
+        let w = 1_000_000;
+        let power =
+            crate::sim::SystemProfile::power().scenario("pack-starved").unwrap();
+        let x86 = crate::sim::SystemProfile::x86().scenario("pack-starved").unwrap();
+        assert!(!awp_cost_of(&power).adt_pays(w, 1), "POWER pack-starved must refuse ADT");
+        assert!(awp_cost_of(&x86).adt_pays(w, 1), "x86 pack-starved still pays");
+    }
+
+    #[test]
+    fn awp_cost_terms_match_hand_arithmetic() {
+        let cost = AwpCost { pack_bps: 4e9, unpack_bps: 2e9, h2d_bps: 8e9, n_gpus: 4 };
+        let w = 1_000_000_000usize;
+        // pack reads 4 GB of f32 at 4 GB/s regardless of target width
+        assert!((cost.pack_s(w) - 1.0).abs() < 1e-12);
+        // unpack restores 1 GB packed at 2 GB/s, per GPU in parallel
+        assert!((cost.unpack_s(w, 1) - 0.5).abs() < 1e-12);
+        // saves 4 GPUs x 3 GB off an 8 GB/s link
+        assert!((cost.h2d_saved_s(w, 1) - 1.5).abs() < 1e-12);
+        assert!(cost.adt_pays(w, 1)); // 1.0 + 0.5 <= 1.5 (equality wins)
+        assert!(!cost.adt_pays(w, 2)); // 1.0 + 1.0 > 1.0
     }
 
     #[test]

@@ -75,6 +75,11 @@ pub struct ExperimentConfig {
     /// Resume from the committed checkpoint in `checkpoint_dir`
     /// (`--resume`).
     pub resume: bool,
+    /// Cost-aware self-tuning governor (`--autotune`): re-estimate
+    /// platform rates from observed profiler windows and re-arm the
+    /// format cost guards online. Off by default — with the flag off
+    /// every code path stays bit-identical to the untuned loop.
+    pub autotune: bool,
 }
 
 impl ExperimentConfig {
@@ -142,6 +147,7 @@ impl ExperimentConfig {
             checkpoint_dir: String::new(),
             checkpoint_every: 0,
             resume: false,
+            autotune: false,
         }
     }
 
@@ -164,6 +170,8 @@ impl ExperimentConfig {
             ("staleness", Json::num(self.staleness as f64)),
             ("pipeline_window", Json::num(self.pipeline_window as f64)),
             ("d2h_queues", Json::num(self.system.d2h_queues as f64)),
+            ("d2h_priority", Json::str(self.system.d2h_priority.name())),
+            ("autotune", Json::num(if self.autotune { 1.0 } else { 0.0 })),
             ("nodes", Json::num(self.system.n_nodes as f64)),
             ("collective", Json::str(self.system.collective.name())),
             ("internode_gbps", Json::num(self.system.internode_bps / 1e9)),
@@ -242,6 +250,10 @@ mod tests {
         assert_eq!(j.req_usize("pipeline_window").unwrap(), 4);
         // the D2H channel defaults to a single FIFO queue
         assert_eq!(j.req_usize("d2h_queues").unwrap(), 1);
+        assert_eq!(j.req_str("d2h_priority").unwrap(), "fifo");
+        // the governor is opt-in: presets leave it off
+        assert!(!c.autotune);
+        assert_eq!(j.req_f64("autotune").unwrap(), 0.0);
         // …and the fabric to the paper's single node, star collective
         assert_eq!(j.req_usize("nodes").unwrap(), 1);
         assert_eq!(j.req_str("collective").unwrap(), "star");

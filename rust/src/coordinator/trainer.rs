@@ -71,9 +71,25 @@ pub struct Trainer {
     /// window × n_gpus × layers event set in gpu-pipelined mode) would
     /// be repeated identical work.
     overlap_crit_cache: Option<(u64, u64, f64)>,
+    /// Accounting snapshot at the last autotune window close (phase
+    /// seconds + wire bytes); deltas against it are the observed window
+    /// the governor re-estimates from. Only read when `cfg.autotune`.
+    tune_mark: TuneMark,
+    /// Cost-guard re-arms performed by the autotune hook.
+    tune_rearms: u64,
     smoothed_loss: f64,
     train_path: std::path::PathBuf,
     infer_path: std::path::PathBuf,
+}
+
+/// Cumulative-accounting snapshot the autotune window deltas against.
+#[derive(Clone, Copy, Debug, Default)]
+struct TuneMark {
+    h2d_s: f64,
+    d2h_s: f64,
+    norm_s: f64,
+    h2d_bytes: u64,
+    d2h_bytes: u64,
 }
 
 impl Trainer {
@@ -208,6 +224,8 @@ impl Trainer {
             sim_time_s: 0.0,
             arena,
             overlap_crit_cache: None,
+            tune_mark: TuneMark::default(),
+            tune_rearms: 0,
             cfg,
             smoothed_loss: f64::NAN,
             train_path,
@@ -232,6 +250,11 @@ impl Trainer {
     }
     pub fn weights(&self) -> &[Vec<f32>] {
         &self.ws
+    }
+    /// Observed-rate cost-guard re-arms performed so far (0 unless
+    /// `--autotune`).
+    pub fn tune_rearms(&self) -> u64 {
+        self.tune_rearms
     }
 
     /// Full-size packed payload implied by the micro policy state: the
@@ -521,12 +544,76 @@ impl Trainer {
         }
         self.sim_time_s += self.profiler.last_critical_s();
 
+        // ---- 9: autotune — close the observation window and re-arm the
+        // gather cost guard from *observed* rates. Strictly unreachable
+        // when `--autotune` is off: every existing run stays bit-identical.
+        if self.cfg.autotune {
+            self.autotune_rearm();
+        }
+
         self.smoothed_loss = if self.smoothed_loss.is_nan() {
             loss
         } else {
             0.9 * self.smoothed_loss + 0.1 * loss
         };
         Ok(loss)
+    }
+
+    /// Every [`tune::DEFAULT_TUNE_WINDOW`] batches, delta the profiler /
+    /// interconnect accounting against the last window mark, estimate the
+    /// platform the observations imply ([`tune::estimate_profile`]), and
+    /// re-arm the adaptive grad policy's [`GradCost`] on the estimated
+    /// rates — the paper's §V loop generalized from static calibration to
+    /// observed rates. In Real mode the charged rates *are* the calibrated
+    /// ones, so the estimate converges on `cfg.system` and the guard's
+    /// decisions are unchanged; the loop exists so drifted accounting
+    /// (simulated scenarios, future live backends) flows straight through.
+    ///
+    /// [`tune::DEFAULT_TUNE_WINDOW`]: crate::tune::DEFAULT_TUNE_WINDOW
+    /// [`tune::estimate_profile`]: crate::tune::estimate_profile
+    fn autotune_rearm(&mut self) {
+        use crate::tune::{estimate_profile, WindowStats, DEFAULT_TUNE_WINDOW};
+        let batches = self.profiler.batches();
+        if batches == 0 || batches % DEFAULT_TUNE_WINDOW != 0 {
+            return;
+        }
+        let (h2d_s, d2h_s, norm_s) = (
+            self.profiler.total_s(Phase::H2D),
+            self.profiler.total_s(Phase::D2H),
+            self.profiler.total_s(Phase::AwpNorm),
+        );
+        let (h2d_bytes, d2h_bytes) =
+            (self.interconnect.h2d_bytes_total(), self.interconnect.d2h_bytes_total());
+        // Norm passes per batch are fixed by the policies: one AWP pass
+        // when the broadcast controller watches norms, two more (gradient
+        // + weight) when the gather controller does.
+        let norm_passes = u64::from(self.policy.needs_norms())
+            + 2 * u64::from(self.grad.needs_norms());
+        let stats = WindowStats {
+            h2d_s: h2d_s - self.tune_mark.h2d_s,
+            h2d_bytes: (h2d_bytes - self.tune_mark.h2d_bytes) as f64,
+            d2h_s: d2h_s - self.tune_mark.d2h_s,
+            d2h_bytes: (d2h_bytes - self.tune_mark.d2h_bytes) as f64,
+            norm_s: norm_s - self.tune_mark.norm_s,
+            norm_bytes: (norm_passes * DEFAULT_TUNE_WINDOW) as f64
+                * self.full_desc.weight_bytes_f32() as f64,
+            // Lane skew drives schedule choice, not the format guard; the
+            // trainer's schedule is operator-pinned, so no compute probe.
+            conv_s: 0.0,
+            conv_ref_s: 0.0,
+            batches: DEFAULT_TUNE_WINDOW,
+        };
+        self.tune_mark = TuneMark { h2d_s, d2h_s, norm_s, h2d_bytes, d2h_bytes };
+        let est = estimate_profile(&self.cfg.system, &stats);
+        let cost = GradCost {
+            grad_unpack_bps: est.grad_unpack_bps,
+            d2h_bps: est.d2h_bps,
+            n_gpus: est.n_gpus,
+        };
+        if cost.validate().is_ok() {
+            self.grad.set_cost_model(self.ws.iter().map(|w| w.len()).collect(), cost);
+            self.tune_rearms += 1;
+        }
     }
 
     /// Write a train checkpoint to `cfg.checkpoint_dir` via the store's

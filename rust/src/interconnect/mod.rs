@@ -35,7 +35,7 @@
 //! (`tests/prop_channel.rs`).
 
 use crate::profiler::Phase;
-use crate::sim::timeline::{EventId, ReadyQueue, Resource, Timeline};
+use crate::sim::timeline::{D2hPriority, EventId, ReadyQueue, Resource, Timeline};
 use crate::sim::{Collective, SystemProfile};
 
 /// Direction of a simulated transfer.
@@ -104,6 +104,15 @@ impl Channel {
     pub fn with_queues(mut self, queues: usize) -> Channel {
         assert!(queues >= 1, "a channel needs at least one DMA queue");
         self.mq = (queues > 1).then(|| ReadyQueue::new(queues));
+        self
+    }
+
+    /// Select the multi-queue scheduler's gap-selection priority class
+    /// (see [`D2hPriority`]). Inert on a single-queue channel — the
+    /// reorderable state does not exist there, so the FIFO path stays
+    /// bit-exact regardless of the class.
+    pub fn with_priority(mut self, priority: D2hPriority) -> Channel {
+        self.mq = self.mq.map(|mq| mq.with_priority(priority));
         self
     }
 
@@ -382,7 +391,8 @@ impl Interconnect {
             Channel::new(Direction::H2D, profile.h2d_bps, profile.link_latency_s, profile.n_gpus);
         let d2h =
             Channel::new(Direction::D2H, profile.d2h_bps, profile.link_latency_s, profile.n_gpus)
-                .with_queues(profile.d2h_queues);
+                .with_queues(profile.d2h_queues)
+                .with_priority(profile.d2h_priority);
         let fabric = (profile.n_nodes > 1).then(|| Fabric::new(&profile));
         Interconnect { profile, h2d, d2h, fabric }
     }

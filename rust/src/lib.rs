@@ -31,7 +31,9 @@
 //! [`models`] (Table-I descriptors + micro variants), [`optim`]
 //! (momentum SGD + exponential LR decay), [`profiler`] (Table II/III
 //! emitters), [`ckpt`] (content-addressed ADT shard store: checkpoint,
-//! bit-exact resume, progressive serving), and dependency-free [`util`]
+//! bit-exact resume, progressive serving), [`tune`] (cost-aware
+//! self-tuning governor: observed-rate format guards + projected
+//! schedule switching, `--autotune`), and dependency-free [`util`]
 //! plumbing (PRNG, JSON, CLI, thread pool, bench kit).
 //!
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
@@ -54,6 +56,7 @@ pub mod optim;
 pub mod profiler;
 pub mod runtime;
 pub mod sim;
+pub mod tune;
 pub mod util;
 
 /// Crate-wide result type.

@@ -17,6 +17,8 @@
 //! | `scheduler-panic`       | no `unwrap`/`expect`/`panic!` in `sim/timeline.rs`, `interconnect/` or `ckpt/` non-test code |
 //! | `cli-config-drift`      | every `main.rs` CLI option appears as an `ExperimentConfig::to_json` key |
 //! | `bench-baseline-drift`  | recorded `BENCH_*.json` and `ci/bench_baseline*.json` key sets match in both directions |
+//! | `metrics-docs-drift`    | the `profile --json` key set (via its checked-in baseline) matches the CONTRIBUTING.md metrics reference table in both directions |
+//! | `cli-docs-drift`        | every `--flag` named in README.md / docs/TUNING.md exists in the CLI spec, and every CLI option/flag is named in those docs |
 //!
 //! Everything runs on the hand-rolled token stream from [`lexer`] — no
 //! syn, no regex, no network. Run it as `cargo run --bin tidy`; CI runs
@@ -434,6 +436,8 @@ pub fn lint_crate(root: &Path) -> std::io::Result<Vec<Finding>> {
     }
     rule_cli_config_drift(root, &mut findings)?;
     rule_bench_baseline_drift(root, &mut findings);
+    rule_metrics_docs_drift(root, &mut findings);
+    rule_cli_docs_drift(root, &mut findings)?;
     Ok(findings)
 }
 
@@ -564,6 +568,7 @@ const BENCH_BASELINES: &[(&str, &str)] = &[
     ("artifacts/bench_out/BENCH_gradcomp.json", "ci/bench_baseline_gradcomp.json"),
     ("artifacts/bench_out/BENCH_fabric.json", "ci/bench_baseline_fabric.json"),
     ("artifacts/bench_out/BENCH_cli_profile.json", "ci/bench_baseline_cli_profile.json"),
+    ("artifacts/bench_out/BENCH_autotune.json", "ci/bench_baseline_autotune.json"),
 ];
 
 fn json_key_paths(prefix: &str, v: &crate::util::json::Json, out: &mut BTreeSet<String>) {
@@ -621,6 +626,231 @@ fn rule_bench_baseline_drift(root: &Path, findings: &mut Vec<Finding>) {
             });
         }
     }
+}
+
+// ---- rule: metrics-docs-drift ----------------------------------------------
+
+/// Markers fencing the `profile --json` metrics-key reference table in
+/// `CONTRIBUTING.md`; the first backticked span of each `|` table row
+/// between them is a documented key name.
+const METRICS_DOCS_BEGIN: &str = "<!-- metrics-keys:begin -->";
+const METRICS_DOCS_END: &str = "<!-- metrics-keys:end -->";
+
+/// The `profile --json` key set must match the CONTRIBUTING.md metrics
+/// reference table in both directions. The emitted side is read from
+/// the checked-in `ci/bench_baseline_cli_profile.json` (whose key set
+/// `bench-baseline-drift` in turn ties to the binary's real emission),
+/// so this rule needs no recorded artifacts and runs on every checkout.
+fn rule_metrics_docs_drift(root: &Path, findings: &mut Vec<Finding>) {
+    let baseline_path = root.join("ci/bench_baseline_cli_profile.json");
+    let docs_path = root.join("CONTRIBUTING.md");
+    if !baseline_path.is_file() || !docs_path.is_file() {
+        return;
+    }
+    let parsed = std::fs::read_to_string(&baseline_path)
+        .ok()
+        .and_then(|s| crate::util::json::Json::parse(&s).ok());
+    let Some(crate::util::json::Json::Obj(map)) = parsed else {
+        findings.push(Finding {
+            file: "ci/bench_baseline_cli_profile.json".to_string(),
+            line: 1,
+            rule: "metrics-docs-drift",
+            message: "could not parse the cli-profile baseline as a JSON object".to_string(),
+        });
+        return;
+    };
+    let emitted: BTreeSet<String> = map.iter().map(|(k, _)| k.clone()).collect();
+
+    let Ok(docs) = std::fs::read_to_string(&docs_path) else {
+        return;
+    };
+    let mut documented: BTreeSet<String> = BTreeSet::new();
+    let mut in_region = false;
+    let mut saw_region = false;
+    for (idx, line) in docs.lines().enumerate() {
+        if line.contains(METRICS_DOCS_BEGIN) {
+            in_region = true;
+            saw_region = true;
+            continue;
+        }
+        if line.contains(METRICS_DOCS_END) {
+            in_region = false;
+            continue;
+        }
+        if !in_region || !line.trim_start().starts_with('|') {
+            continue;
+        }
+        // first backticked span of the row is the key name; header and
+        // separator rows have none and fall through
+        let Some(open) = line.find('`') else { continue };
+        let rest = &line[open + 1..];
+        let Some(close) = rest.find('`') else { continue };
+        let key = &rest[..close];
+        if !documented.insert(key.to_string()) {
+            findings.push(Finding {
+                file: "CONTRIBUTING.md".to_string(),
+                line: idx + 1,
+                rule: "metrics-docs-drift",
+                message: format!("metrics key `{key}` documented twice"),
+            });
+        }
+    }
+    if !saw_region {
+        findings.push(Finding {
+            file: "CONTRIBUTING.md".to_string(),
+            line: 1,
+            rule: "metrics-docs-drift",
+            message: format!(
+                "missing the `{METRICS_DOCS_BEGIN}` … `{METRICS_DOCS_END}` metrics reference table"
+            ),
+        });
+        return;
+    }
+    for key in emitted.difference(&documented) {
+        findings.push(Finding {
+            file: "CONTRIBUTING.md".to_string(),
+            line: 1,
+            rule: "metrics-docs-drift",
+            message: format!(
+                "`profile --json` emits `{key}` but the CONTRIBUTING.md metrics table does not \
+                 document it"
+            ),
+        });
+    }
+    for key in documented.difference(&emitted) {
+        findings.push(Finding {
+            file: "CONTRIBUTING.md".to_string(),
+            line: 1,
+            rule: "metrics-docs-drift",
+            message: format!(
+                "CONTRIBUTING.md documents metrics key `{key}` but `profile --json` does not \
+                 emit it"
+            ),
+        });
+    }
+}
+
+// ---- rule: cli-docs-drift --------------------------------------------------
+
+/// `--flag` spellings the operator docs may use that are not `a2dtwp`
+/// CLI names: cargo/tooling flags the quickstart and CI recipes quote.
+const DOCS_CLI_EXEMPT: &[&str] = &["release", "bench", "smoke", "validate", "bin", "workspace"];
+
+/// Every `"str"` token of a `FIELD: &[...]` list in already-lexed code
+/// tokens, with the list's source lines.
+fn spec_str_list(code: &[Token], field: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for i in 0..code.len() {
+        if code[i].kind == TokKind::Ident
+            && code[i].text == field
+            && code.get(i + 1).is_some_and(|t| t.kind == TokKind::Punct(':'))
+        {
+            let mut j = i + 2;
+            while j < code.len() && code[j].kind != TokKind::Punct(']') {
+                if code[j].kind == TokKind::Str {
+                    out.push((code[j].text.clone(), code[j].line));
+                }
+                j += 1;
+            }
+            break;
+        }
+    }
+    out
+}
+
+/// `--name` spellings mentioned in a markdown text, with their lines.
+/// A mention is `--` followed by a lowercase ASCII run of
+/// `[a-z0-9-]`, not preceded by an alphanumeric or another dash (so
+/// `---` rules and `-->` comment closers never match).
+fn md_cli_mentions(text: &str) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        let b = line.as_bytes();
+        let mut i = 0;
+        while i + 2 < b.len() {
+            let boundary = i == 0 || !(b[i - 1].is_ascii_alphanumeric() || b[i - 1] == b'-');
+            if boundary && b[i] == b'-' && b[i + 1] == b'-' && b[i + 2].is_ascii_lowercase() {
+                let mut j = i + 2;
+                while j < b.len()
+                    && (b[j].is_ascii_lowercase() || b[j].is_ascii_digit() || b[j] == b'-')
+                {
+                    j += 1;
+                }
+                out.push((line[i + 2..j].trim_end_matches('-').to_string(), idx + 1));
+                i = j;
+            } else {
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// The operator docs (top-level `README.md`, `docs/TUNING.md`) and the
+/// CLI spec must agree in both directions: every `--flag` the docs name
+/// must exist in `src/main.rs`'s `Spec` (minus [`DOCS_CLI_EXEMPT`]
+/// tooling flags), and every CLI option/flag must be named in at least
+/// one of the docs — an undocumented knob is invisible to operators.
+fn rule_cli_docs_drift(root: &Path, findings: &mut Vec<Finding>) -> std::io::Result<()> {
+    let main_path = root.join("src/main.rs");
+    if !main_path.is_file() {
+        return Ok(());
+    }
+    let main_code: Vec<Token> = lex(&std::fs::read_to_string(&main_path)?)
+        .into_iter()
+        .filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+        .collect();
+    let mut spec: BTreeSet<String> = BTreeSet::new();
+    for field in ["options", "flags"] {
+        for (name, _) in spec_str_list(&main_code, field) {
+            spec.insert(name);
+        }
+    }
+    if spec.is_empty() {
+        findings.push(Finding {
+            file: "src/main.rs".to_string(),
+            line: 1,
+            rule: "cli-docs-drift",
+            message: "could not extract the CLI option/flag spec".to_string(),
+        });
+        return Ok(());
+    }
+
+    let docs = [("README.md", root.join("../README.md")), ("docs/TUNING.md", root.join("../docs/TUNING.md"))];
+    let mut mentioned: BTreeSet<String> = BTreeSet::new();
+    let mut any_doc = false;
+    for (label, path) in &docs {
+        let Ok(text) = std::fs::read_to_string(path) else {
+            continue;
+        };
+        any_doc = true;
+        for (name, line) in md_cli_mentions(&text) {
+            if spec.contains(&name) {
+                mentioned.insert(name);
+            } else if !DOCS_CLI_EXEMPT.contains(&name.as_str()) {
+                findings.push(Finding {
+                    file: (*label).to_string(),
+                    line,
+                    rule: "cli-docs-drift",
+                    message: format!("names `--{name}`, which is not an a2dtwp CLI option or flag"),
+                });
+            }
+        }
+    }
+    if !any_doc {
+        return Ok(());
+    }
+    for name in spec.difference(&mentioned) {
+        findings.push(Finding {
+            file: "README.md".to_string(),
+            line: 1,
+            rule: "cli-docs-drift",
+            message: format!(
+                "CLI option/flag `--{name}` is not named in README.md or docs/TUNING.md"
+            ),
+        });
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -686,6 +916,25 @@ mod tests {
         let f = lint_source("src/metrics/mod.rs", &src);
         assert_eq!(f.len(), 1);
         assert_eq!(f[0].rule, "nonfinite-sentinel");
+    }
+
+    #[test]
+    fn md_cli_mentions_finds_flags_not_rules() {
+        let text = "# title\n\n---\n\nRun with `--autotune` and `--d2h-priority size`.\n<!-- a comment -->\nAlso `a2dtwp profile --json out.json`.\n";
+        let names: Vec<String> = md_cli_mentions(text).into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, ["autotune", "d2h-priority", "json"]);
+    }
+
+    #[test]
+    fn spec_str_list_reads_a_field() {
+        let code: Vec<Token> = lex("let s = Spec { options: &[\"model\", \"seed\"], flags: &[\"help\"] };")
+            .into_iter()
+            .filter(|t| !matches!(t.kind, TokKind::LineComment | TokKind::BlockComment))
+            .collect();
+        let opts: Vec<String> = spec_str_list(&code, "options").into_iter().map(|(n, _)| n).collect();
+        let flags: Vec<String> = spec_str_list(&code, "flags").into_iter().map(|(n, _)| n).collect();
+        assert_eq!(opts, ["model", "seed"]);
+        assert_eq!(flags, ["help"]);
     }
 
     #[test]

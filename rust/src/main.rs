@@ -29,7 +29,8 @@ use a2dtwp::grad::GradPolicyKind;
 use a2dtwp::models::{model_by_name, MODEL_NAMES};
 use a2dtwp::profiler::Profiler;
 use a2dtwp::sim::{
-    Collective, OverlapMode, SystemProfile, COLLECTIVE_NAMES, OVERLAP_NAMES, SCENARIO_NAMES,
+    Collective, D2hPriority, OverlapMode, Scenario, SystemProfile, COLLECTIVE_NAMES,
+    D2H_PRIORITY_NAMES, DRIFTING_SCENARIO_NAME, OVERLAP_NAMES, SCENARIO_NAMES,
 };
 use a2dtwp::util::benchkit::Table;
 use a2dtwp::util::cli::{Args, Spec};
@@ -46,12 +47,19 @@ const USAGE: &str = "usage: a2dtwp <train|profile|verify-schedule|drill|export|v
     --system S           x86|power
     --scenario NAME      uniform|straggler-mild|straggler-severe|hetero-linear|
                          pcie-contended|nvlink-degraded|pack-starved|
-                         internode-congested
+                         internode-congested|drifting (drifting: the preset
+                         time-varying schedule; profile only, needs --autotune)
     --overlap M          serialized|pipelined|gpu-pipelined (batch scheduling)
     --staleness K        gpu-pipelined bounded staleness (0 = sync barrier)
     --pipeline-window N  gpu-pipelined cross-batch window (default 4)
     --d2h-queues N       D2H DMA queues (default 1 = the FIFO channel;
                          >1 gap-fills idle gather-link time by priority)
+    --d2h-priority P     D2H ready-queue dispatch class: fifo|size
+                         (size = smallest-leg-first best-fit gap filling)
+    --autotune           cost-aware self-tuning governor: profile runs the
+                         scenario with gather/broadcast/schedule driven
+                         online from observed rates; train re-arms the
+                         gather cost guard every window from observed rates
     --nodes N            fabric nodes (default 1 = the paper's single node;
                          >1 lowers the allreduce onto the inter-node link)
     --collective C       star|ring|tree|hierarchical (multi-node allreduce
@@ -90,6 +98,7 @@ fn main() {
             "staleness",
             "pipeline-window",
             "d2h-queues",
+            "d2h-priority",
             "nodes",
             "collective",
             "internode-gbps",
@@ -108,7 +117,7 @@ fn main() {
             "csv",
             "json",
         ],
-        flags: &["verbose", "help", "resume"],
+        flags: &["verbose", "help", "resume", "autotune"],
     };
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = match Args::parse(argv, &spec) {
@@ -174,6 +183,13 @@ fn build_config(args: &Args) -> Result<ExperimentConfig, String> {
         return Err("--d2h-queues must be >= 1".into());
     }
     cfg.system = cfg.system.clone().with_d2h_queues(d2h_queues);
+    if let Some(p) = args.get("d2h-priority") {
+        let pr = D2hPriority::parse(p).ok_or_else(|| {
+            format!("unknown --d2h-priority '{p}' ({})", D2H_PRIORITY_NAMES.join("|"))
+        })?;
+        cfg.system = cfg.system.clone().with_d2h_priority(pr);
+    }
+    cfg.autotune = args.flag("autotune");
     let nodes = args.get_usize("nodes", cfg.system.n_nodes)?;
     if nodes == 0 {
         return Err("--nodes must be >= 1".into());
@@ -290,10 +306,23 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("unknown model '{model}'"))?;
     let mut profile = SystemProfile::by_name(system)
         .ok_or_else(|| anyhow::anyhow!("unknown system '{system}'"))?;
+    let scenario_name = args.get("scenario").unwrap_or("uniform").to_string();
+    let autotune = args.flag("autotune");
+    if scenario_name == DRIFTING_SCENARIO_NAME && !autotune {
+        anyhow::bail!(
+            "--scenario {DRIFTING_SCENARIO_NAME} is a time-varying schedule — a static \
+             profile point is meaningless; run it with --autotune"
+        );
+    }
     if let Some(scenario) = args.get("scenario") {
-        profile = profile.scenario(scenario).ok_or_else(|| {
-            anyhow::anyhow!("unknown scenario '{scenario}' ({})", SCENARIO_NAMES.join("|"))
-        })?;
+        if scenario != DRIFTING_SCENARIO_NAME {
+            profile = profile.scenario(scenario).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown scenario '{scenario}' ({}|{DRIFTING_SCENARIO_NAME})",
+                    SCENARIO_NAMES.join("|")
+                )
+            })?;
+        }
     }
     let overlap = match args.get("overlap") {
         Some(o) => OverlapMode::parse(o).ok_or_else(|| {
@@ -315,6 +344,13 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
         anyhow::bail!("--d2h-queues must be >= 1");
     }
     profile = profile.with_d2h_queues(d2h_queues);
+    let d2h_priority = match args.get("d2h-priority") {
+        None => profile.d2h_priority,
+        Some(p) => D2hPriority::parse(p).ok_or_else(|| {
+            anyhow::anyhow!("unknown --d2h-priority '{p}' ({})", D2H_PRIORITY_NAMES.join("|"))
+        })?,
+    };
+    profile = profile.with_d2h_priority(d2h_priority);
     let nodes = args.get_usize("nodes", profile.n_nodes).map_err(|e| anyhow::anyhow!(e))?;
     if nodes == 0 {
         anyhow::bail!("--nodes must be >= 1");
@@ -341,6 +377,29 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
     }
     profile.internode_latency_s = lat_us * 1e-6;
     let collective_name = profile.collective.name();
+    // The governor's base is the *unperturbed* platform carrying the same
+    // topology knobs: the scenario schedule re-applies each segment's
+    // perturbation on top of it (`Scenario::profiles`), so starting from
+    // the already-perturbed table profile would double-apply it.
+    let auto_base = if autotune {
+        let mut base = SystemProfile::by_name(system)
+            .unwrap()
+            .with_d2h_queues(d2h_queues)
+            .with_d2h_priority(d2h_priority)
+            .with_nodes(nodes);
+        if args.get("collective").is_some() {
+            base = base.with_collective(profile.collective);
+        }
+        if args.get("internode-gbps").is_some() {
+            base.internode_bps = profile.internode_bps;
+        }
+        if args.get("internode-latency-us").is_some() {
+            base.internode_latency_s = profile.internode_latency_s;
+        }
+        Some(base)
+    } else {
+        None
+    };
     let grad_format = match args.get("grad-adt") {
         None => None,
         Some(g) => match GradPolicyKind::parse(g) {
@@ -417,6 +476,49 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
             adt.overlap_speedup(),
         );
     }
+    // --autotune: drive the governor through the (possibly drifting)
+    // scenario schedule and pit it against the best hand-picked static
+    // configuration from the fig9 grid.
+    let auto = match &auto_base {
+        None => None,
+        Some(base_prof) => {
+            let scn = Scenario::parse(&scenario_name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown scenario '{scenario_name}' ({}|{DRIFTING_SCENARIO_NAME})",
+                    SCENARIO_NAMES.join("|")
+                )
+            })?;
+            let run = a2dtwp::tune::run_autotuned(
+                base_prof,
+                &scn,
+                &runner.desc,
+                batch,
+                a2dtwp::tune::DEFAULT_TUNE_WINDOW,
+            );
+            let (best_cfg, best_s) =
+                a2dtwp::tune::best_static(base_prof, &scn, &runner.desc, batch);
+            println!(
+                "\nautotune over '{}' ({} batches): {:.2} ms total vs best static {:.2} ms \
+                 ({:.2}x; best static: {})",
+                scn.name(),
+                run.batches,
+                run.total_s * 1e3,
+                best_s * 1e3,
+                best_s / run.total_s,
+                best_cfg.summary()
+            );
+            for e in &run.events {
+                println!(
+                    "  switch at batch {:>3}: {}  ->  {}",
+                    e.batch,
+                    e.from.summary(),
+                    e.to.summary()
+                );
+            }
+            println!("  final: {}", run.final_decision.summary());
+            Some((run, best_s))
+        }
+    };
     if let Some(path) = args.get("csv") {
         t.save_csv(path)?;
         println!("wrote {path}");
@@ -466,6 +568,7 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
             ("staleness", Json::num(staleness as f64)),
             ("pipeline_window", Json::num(window as f64)),
             ("d2h_queues", Json::num(d2h_queues as f64)),
+            ("d2h_priority", Json::str(d2h_priority.name())),
             ("baseline_critical_path_ms", Json::num(base.critical_path_s * 1e3)),
             ("baseline_serialized_ms", Json::num(base.serialized_s * 1e3)),
             ("baseline_overlap_speedup", Json::num(base.overlap_speedup())),
@@ -513,6 +616,32 @@ fn cmd_profile(args: &Args) -> anyhow::Result<()> {
                 Json::arr(ckpt_layer_compression.iter().map(|&r| Json::num(r))),
             ),
             ("ckpt_write_ms", Json::num(ckpt_write_ms)),
+            // Self-tuning governor outcome (inert placeholders when
+            // --autotune is off, so the key set never varies).
+            ("autotune", Json::num(if auto.is_some() { 1.0 } else { 0.0 })),
+            ("autotune_window", Json::num(a2dtwp::tune::DEFAULT_TUNE_WINDOW as f64)),
+            (
+                "autotune_switches",
+                Json::num(auto.as_ref().map_or(0.0, |(r, _)| r.events.len() as f64)),
+            ),
+            (
+                "autotune_total_ms",
+                Json::num(auto.as_ref().map_or(0.0, |(r, _)| r.total_s * 1e3)),
+            ),
+            (
+                "autotune_best_static_ms",
+                Json::num(auto.as_ref().map_or(0.0, |(_, b)| b * 1e3)),
+            ),
+            (
+                "autotune_vs_best_static_speedup",
+                Json::num(auto.as_ref().map_or(1.0, |(r, b)| b / r.total_s)),
+            ),
+            (
+                "autotune_final_config",
+                Json::str(
+                    auto.as_ref().map_or("off".to_string(), |(r, _)| r.final_decision.summary()),
+                ),
+            ),
         ]);
         if let Some(dir) = std::path::Path::new(path).parent() {
             if !dir.as_os_str().is_empty() {

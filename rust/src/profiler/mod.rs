@@ -228,6 +228,20 @@ impl Profiler {
         }
     }
 
+    /// Observed throughput of `phase`: `bytes` moved (caller-supplied —
+    /// the profiler tracks seconds, the interconnect tracks bytes) over
+    /// the phase's accumulated busy seconds. `None` when either side of
+    /// the division has seen nothing — the autotune governor then falls
+    /// back to the calibrated rate instead of poisoning its estimate.
+    pub fn observed_bps(&self, phase: Phase, bytes: u64) -> Option<f64> {
+        let s = self.total_s(phase);
+        if s > 0.0 && bytes > 0 {
+            Some(bytes as f64 / s)
+        } else {
+            None
+        }
+    }
+
     /// Render the paper's two-column table given a baseline profiler
     /// (32-bit FP) and this profiler (A²DTWP). Returns (label, baseline
     /// ms or None, a2dtwp ms) rows in paper order.
@@ -348,6 +362,17 @@ mod tests {
         assert_eq!(rows.len(), 9);
         assert_eq!(rows.last().unwrap().0, Phase::GradUnpack.label());
         assert!(rows.last().unwrap().1.is_none(), "no 32-bit baseline column");
+    }
+
+    #[test]
+    fn observed_bps_divides_bytes_by_busy_seconds() {
+        let mut p = Profiler::new();
+        assert_eq!(p.observed_bps(Phase::H2D, 1_000), None, "no time accounted yet");
+        p.add(Phase::H2D, 0.5);
+        p.end_batch();
+        assert!((p.observed_bps(Phase::H2D, 1_000).unwrap() - 2_000.0).abs() < 1e-9);
+        assert_eq!(p.observed_bps(Phase::H2D, 0), None, "no bytes, no rate");
+        assert_eq!(p.observed_bps(Phase::D2H, 1_000), None, "idle phase has no rate");
     }
 
     #[test]

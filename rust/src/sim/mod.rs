@@ -7,12 +7,15 @@ mod system;
 pub mod timeline;
 pub mod verify;
 
-pub use system::{Collective, SystemProfile, COLLECTIVE_NAMES, SCENARIO_NAMES, SYSTEM_NAMES};
+pub use system::{
+    Collective, Scenario, SystemProfile, COLLECTIVE_NAMES, DRIFTING_SCENARIO_NAME, SCENARIO_NAMES,
+    SYSTEM_NAMES,
+};
 pub use timeline::{
     apply_grad_formats, apply_grad_mean_bytes, build_batch_timeline, build_training_timeline,
-    layer_loads, layer_loads_mean_bytes, BatchSpec, Event, EventId, LayerLoad, OverlapMode,
-    PipelineWindow, ReadyQueue, Resource, Timeline, DEFAULT_PIPELINE_WINDOW, DEFAULT_STALENESS,
-    OVERLAP_NAMES,
+    layer_loads, layer_loads_mean_bytes, BatchSpec, D2hPriority, Event, EventId, LayerLoad,
+    OverlapMode, PipelineWindow, ReadyQueue, Resource, Timeline, D2H_PRIORITY_NAMES,
+    DEFAULT_PIPELINE_WINDOW, DEFAULT_STALENESS, OVERLAP_NAMES,
 };
 pub use verify::{
     serialized_chain_violations, verify_mode_conservation, verify_stream, verify_timeline,

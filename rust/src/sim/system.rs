@@ -9,6 +9,8 @@
 //! other models/batch sizes through the descriptors' byte/flop counts.
 //! DESIGN.md §3 records the substitution.
 
+use crate::sim::timeline::D2hPriority;
+
 /// Names accepted by `--system`.
 pub const SYSTEM_NAMES: [&str; 2] = ["x86", "power"];
 
@@ -135,6 +137,10 @@ pub struct SystemProfile {
     /// gap-fill scheduler (`--d2h-queues`, see
     /// `interconnect::Channel::with_queues`).
     pub d2h_queues: usize,
+    /// Gap-selection priority class of the multi-queue D2H scheduler
+    /// (`--d2h-priority`; inert at `d2h_queues == 1`, where the channel
+    /// is a FIFO by construction).
+    pub d2h_priority: D2hPriority,
     /// Nodes in the fabric (`--nodes`). 1 ⇒ the paper's single node: no
     /// inter-node link exists and every topology degenerates to the
     /// historic star gather bit-exactly.
@@ -202,6 +208,7 @@ impl SystemProfile {
             cpu_threads: 16,
             gpu_speed: Vec::new(),
             d2h_queues: 1,
+            d2h_priority: D2hPriority::Fifo,
             n_nodes: 1,
             // 100 GbE fabric: 12.5 GB/s effective, ~25 µs per hop
             // through the kernel network stack.
@@ -233,6 +240,7 @@ impl SystemProfile {
             cpu_threads: 40,
             gpu_speed: Vec::new(),
             d2h_queues: 1,
+            d2h_priority: D2hPriority::Fifo,
             n_nodes: 1,
             // InfiniBand EDR-class fabric: 25 GB/s effective, ~10 µs/hop.
             internode_bps: 2.5e10,
@@ -269,6 +277,13 @@ impl SystemProfile {
     pub fn with_d2h_queues(mut self, queues: usize) -> SystemProfile {
         assert!(queues >= 1, "the D2H channel needs at least one queue");
         self.d2h_queues = queues;
+        self
+    }
+
+    /// Select the multi-queue D2H scheduler's gap-selection priority
+    /// class (see [`d2h_priority`](Self::d2h_priority)).
+    pub fn with_d2h_priority(mut self, priority: D2hPriority) -> SystemProfile {
+        self.d2h_priority = priority;
         self
     }
 
@@ -489,6 +504,105 @@ impl SystemProfile {
     }
 }
 
+// ---- time-varying scenarios ------------------------------------------------
+
+/// Name accepted by `--scenario` for the preset drifting schedule
+/// ([`Scenario::drifting_preset`]).
+pub const DRIFTING_SCENARIO_NAME: &str = "drifting";
+
+/// A possibly *time-varying* scenario: a schedule of
+/// `(preset, n_batches)` segments, each a named [`SCENARIO_NAMES`]
+/// perturbation of the same base platform. A fixed scenario is the
+/// one-segment degenerate case; a drifting scenario is the "heavy
+/// traffic" testbed the autotuner (`crate::tune`) is measured against —
+/// contention arrives and leaves on a schedule the governor cannot see,
+/// only infer from observed rates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Scenario {
+    name: String,
+    segments: Vec<(String, u64)>,
+}
+
+impl Scenario {
+    /// A single named preset held for the whole run. `None` for names
+    /// outside [`SCENARIO_NAMES`].
+    pub fn fixed(name: &str) -> Option<Scenario> {
+        if !SCENARIO_NAMES.contains(&name) {
+            return None;
+        }
+        Scenario::drifting(name, &[(name, 1)])
+    }
+
+    /// A named schedule of `(preset, n_batches)` segments. `None` when
+    /// the schedule is empty, names a preset outside [`SCENARIO_NAMES`],
+    /// or holds a segment for zero batches.
+    pub fn drifting(name: &str, schedule: &[(&str, u64)]) -> Option<Scenario> {
+        if schedule.is_empty() {
+            return None;
+        }
+        let mut segments = Vec::with_capacity(schedule.len());
+        for &(preset, n_batches) in schedule {
+            if !SCENARIO_NAMES.contains(&preset) || n_batches == 0 {
+                return None;
+            }
+            segments.push((preset.to_string(), n_batches));
+        }
+        Some(Scenario { name: name.to_string(), segments })
+    }
+
+    /// The preset drifting schedule (`--scenario drifting`): contention
+    /// walks across the subsystems — the shared bus, then the calibrated
+    /// platform, then the CPU pack pool — 8 batches each, two autotune
+    /// windows per segment.
+    pub fn drifting_preset() -> Scenario {
+        let schedule = [("pcie-contended", 8), ("uniform", 8), ("pack-starved", 8)];
+        // the names above are SCENARIO_NAMES members with non-zero spans,
+        // so the constructor cannot reject them
+        Scenario::drifting(DRIFTING_SCENARIO_NAME, &schedule)
+            .unwrap_or_else(|| Scenario { name: DRIFTING_SCENARIO_NAME.into(), segments: Vec::new() })
+    }
+
+    /// Parse a `--scenario` value: any fixed preset name, or
+    /// [`DRIFTING_SCENARIO_NAME`] for the preset drifting schedule.
+    pub fn parse(name: &str) -> Option<Scenario> {
+        if name == DRIFTING_SCENARIO_NAME {
+            Some(Scenario::drifting_preset())
+        } else {
+            Scenario::fixed(name)
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// `(preset name, n_batches)` segments in schedule order.
+    pub fn segments(&self) -> &[(String, u64)] {
+        &self.segments
+    }
+
+    /// More than one segment ⇒ the rates move mid-run.
+    pub fn is_drifting(&self) -> bool {
+        self.segments.len() > 1
+    }
+
+    /// Total batches the schedule spans (fixed scenarios report their
+    /// single segment's nominal span).
+    pub fn total_batches(&self) -> u64 {
+        self.segments.iter().map(|(_, n)| n).sum()
+    }
+
+    /// Specialize `base` per segment: the perturbed profile and its
+    /// batch span, in schedule order. Segment names are validated at
+    /// construction, so every preset applies.
+    pub fn profiles(&self, base: &SystemProfile) -> Vec<(SystemProfile, u64)> {
+        self.segments
+            .iter()
+            .filter_map(|(preset, n)| base.clone().scenario(preset).map(|p| (p, *n)))
+            .collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -633,9 +747,49 @@ mod tests {
     }
 
     #[test]
+    fn drifting_scenario_schedules_validated_segments() {
+        let s = Scenario::drifting_preset();
+        assert_eq!(s.name(), DRIFTING_SCENARIO_NAME);
+        assert!(s.is_drifting());
+        assert_eq!(s.total_batches(), 24);
+        let profiles = s.profiles(&SystemProfile::x86());
+        assert_eq!(profiles.len(), 3);
+        let base = SystemProfile::x86();
+        // segment 1: the bus is contended, the CPU untouched
+        assert!((profiles[0].0.h2d_bps / base.h2d_bps - 0.6).abs() < 1e-12);
+        assert_eq!(profiles[0].0.pack_bps.to_bits(), base.pack_bps.to_bits());
+        assert_eq!(profiles[0].1, 8);
+        // segment 2: the calibrated platform, bit-for-bit
+        assert_eq!(profiles[1].0.h2d_bps.to_bits(), base.h2d_bps.to_bits());
+        assert_eq!(profiles[1].0.pack_bps.to_bits(), base.pack_bps.to_bits());
+        // segment 3: the pack pool starves, the bus recovers
+        assert!((profiles[2].0.pack_bps / base.pack_bps - 0.25).abs() < 1e-12);
+        assert_eq!(profiles[2].0.h2d_bps.to_bits(), base.h2d_bps.to_bits());
+    }
+
+    #[test]
+    fn scenario_parse_covers_fixed_and_drifting() {
+        for n in SCENARIO_NAMES {
+            let s = Scenario::parse(n).unwrap();
+            assert_eq!(s.name(), n);
+            assert!(!s.is_drifting());
+            assert_eq!(s.profiles(&SystemProfile::power()).len(), 1);
+        }
+        assert!(Scenario::parse(DRIFTING_SCENARIO_NAME).unwrap().is_drifting());
+        assert!(Scenario::parse("bogus").is_none());
+        // invalid schedules are rejected, not truncated
+        assert!(Scenario::drifting("d", &[]).is_none());
+        assert!(Scenario::drifting("d", &[("uniform", 0)]).is_none());
+        assert!(Scenario::drifting("d", &[("uniform", 4), ("bogus", 4)]).is_none());
+    }
+
+    #[test]
     fn scale_out_and_queue_builders() {
         let p = SystemProfile::x86();
         assert_eq!(p.d2h_queues, 1, "default is the historic FIFO channel");
+        assert_eq!(p.d2h_priority, D2hPriority::Fifo, "default gap selection is first-feasible");
+        let sized = SystemProfile::x86().with_d2h_priority(D2hPriority::Size);
+        assert_eq!(sized.d2h_priority, D2hPriority::Size);
         let wide = SystemProfile::x86().with_n_gpus(16).scenario("straggler-severe").unwrap();
         assert_eq!(wide.n_gpus, 16);
         assert_eq!(wide.gpu_speed.len(), 16, "straggler applies to the scaled pool");

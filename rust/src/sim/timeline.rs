@@ -377,6 +377,44 @@ impl Timeline {
 
 // ---- reorderable placement -------------------------------------------------
 
+/// Names accepted by `--d2h-priority`.
+pub const D2H_PRIORITY_NAMES: [&str; 2] = ["fifo", "size"];
+
+/// Priority class of a multi-queue [`ReadyQueue`]: how a ready leg picks
+/// among the link's idle gaps.
+///
+/// * [`Fifo`](D2hPriority::Fifo) — first-feasible: the earliest gap that
+///   fits, the historic gap-fill scheduler bit-for-bit.
+/// * [`Size`](D2hPriority::Size) — smallest-leg-first best-fit: the
+///   feasible gap with the least leftover slack, so a small leg stops
+///   burning a large gap a bigger leg still needs (ties go to the
+///   earliest start). Placement only — byte/second accounting and the
+///   wire-serial invariant are priority-independent, and with one queue
+///   no gap is ever reachable, so both classes degenerate to the FIFO
+///   channel (`tests/prop_channel.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum D2hPriority {
+    Fifo,
+    Size,
+}
+
+impl D2hPriority {
+    pub fn parse(s: &str) -> Option<D2hPriority> {
+        match s {
+            "fifo" => Some(D2hPriority::Fifo),
+            "size" => Some(D2hPriority::Size),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            D2hPriority::Fifo => "fifo",
+            D2hPriority::Size => "size",
+        }
+    }
+}
+
 /// One idle interval of a reorderable resource. Heap-ordered by
 /// *earliest* start (`BinaryHeap` is a max-heap, so the `Ord` is
 /// reversed); live gaps are disjoint, so the start orders them totally.
@@ -433,6 +471,8 @@ pub struct ReadyQueue {
     /// Reused pop buffer for the in-order gap scan (allocation-free
     /// once warm).
     scratch: Vec<Gap>,
+    /// Gap-selection priority class (see [`D2hPriority`]).
+    priority: D2hPriority,
 }
 
 impl ReadyQueue {
@@ -444,7 +484,19 @@ impl ReadyQueue {
             queue_busy: vec![0.0; queues],
             link_tail: 0.0,
             scratch: Vec::new(),
+            priority: D2hPriority::Fifo,
         }
+    }
+
+    /// Select the gap-selection priority class (default
+    /// [`D2hPriority::Fifo`], the historic first-feasible scheduler).
+    pub fn with_priority(mut self, priority: D2hPriority) -> ReadyQueue {
+        self.priority = priority;
+        self
+    }
+
+    pub fn priority(&self) -> D2hPriority {
+        self.priority
     }
 
     pub fn queues(&self) -> usize {
@@ -471,12 +523,15 @@ impl ReadyQueue {
 
     /// Place a leg of `dur_s` that becomes ready at `ready_s`. Queue
     /// choice: earliest feasible issue time `e = max(ready, tail[q])`,
-    /// ties to the lowest index. Link placement: the earliest idle gap
-    /// that fits the whole leg at/after `e` (splitting the gap's
-    /// remainders back into the heap), else appended at the link tail —
-    /// recording any `[tail, start)` idle skipped over as a new gap for
-    /// later legs to fill. Gaps no queue can reach anymore
-    /// (`end <= min(tails)`) are pruned. Returns `(start_s, queue)`.
+    /// ties to the lowest index. Link placement under
+    /// [`D2hPriority::Fifo`]: the earliest idle gap that fits the whole
+    /// leg at/after `e` (splitting the gap's remainders back into the
+    /// heap), else appended at the link tail — recording any
+    /// `[tail, start)` idle skipped over as a new gap for later legs to
+    /// fill. Under [`D2hPriority::Size`] the feasible gap with the least
+    /// leftover slack wins instead (smallest-leg-first best fit). Gaps no
+    /// queue can reach anymore (`end <= min(tails)`) are pruned. Returns
+    /// `(start_s, queue)`.
     pub fn place(&mut self, ready_s: f64, dur_s: f64) -> (f64, usize) {
         let mut q = 0;
         let mut e = f64::INFINITY;
@@ -489,10 +544,49 @@ impl ReadyQueue {
         }
         self.scratch.clear();
         let mut placed: Option<f64> = None;
-        while let Some(gap) = self.gaps.pop() {
-            if placed.is_none() {
-                let s = if gap.start_s > e { gap.start_s } else { e };
-                if s + dur_s <= gap.end_s {
+        match self.priority {
+            D2hPriority::Fifo => {
+                while let Some(gap) = self.gaps.pop() {
+                    if placed.is_none() {
+                        let s = if gap.start_s > e { gap.start_s } else { e };
+                        if s + dur_s <= gap.end_s {
+                            placed = Some(s);
+                            if s > gap.start_s {
+                                self.scratch.push(Gap { start_s: gap.start_s, end_s: s });
+                            }
+                            if s + dur_s < gap.end_s {
+                                self.scratch.push(Gap { start_s: s + dur_s, end_s: gap.end_s });
+                            }
+                            continue;
+                        }
+                    }
+                    self.scratch.push(gap);
+                }
+            }
+            D2hPriority::Size => {
+                // Best fit: scan every gap and keep the feasible one with
+                // the least leftover slack, so a small leg does not burn a
+                // large gap a bigger leg still needs. Ties go to the
+                // earliest start (the heap pops in start order; strict `<`
+                // keeps the first winner).
+                let mut best: Option<(f64, usize)> = None;
+                while let Some(gap) = self.gaps.pop() {
+                    let s = if gap.start_s > e { gap.start_s } else { e };
+                    if s + dur_s <= gap.end_s {
+                        let slack = (gap.end_s - s) - dur_s;
+                        let better = match best {
+                            None => true,
+                            Some((b, _)) => slack < b,
+                        };
+                        if better {
+                            best = Some((slack, self.scratch.len()));
+                        }
+                    }
+                    self.scratch.push(gap);
+                }
+                if let Some((_, i)) = best {
+                    let gap = self.scratch.swap_remove(i);
+                    let s = if gap.start_s > e { gap.start_s } else { e };
                     placed = Some(s);
                     if s > gap.start_s {
                         self.scratch.push(Gap { start_s: gap.start_s, end_s: s });
@@ -500,10 +594,8 @@ impl ReadyQueue {
                     if s + dur_s < gap.end_s {
                         self.scratch.push(Gap { start_s: s + dur_s, end_s: gap.end_s });
                     }
-                    continue;
                 }
             }
-            self.scratch.push(gap);
         }
         let start = match placed {
             Some(s) => s,
@@ -1425,6 +1517,56 @@ mod tests {
         assert_eq!(rq.place(0.0, 5.0), (11.0, 1));
         let busy: f64 = rq.queue_busy_s().iter().sum();
         assert_eq!(busy, 15.0);
+    }
+
+    #[test]
+    fn d2h_priority_registry_round_trips() {
+        for n in D2H_PRIORITY_NAMES {
+            let p = D2hPriority::parse(n).unwrap();
+            assert_eq!(p.name(), n);
+        }
+        assert!(D2hPriority::parse("deadline").is_none());
+        assert_eq!(ReadyQueue::new(2).priority(), D2hPriority::Fifo);
+        let rq = ReadyQueue::new(2).with_priority(D2hPriority::Size);
+        assert_eq!(rq.priority(), D2hPriority::Size);
+    }
+
+    #[test]
+    fn ready_queue_size_priority_best_fits_the_tightest_gap() {
+        // Two idle gaps: a wide [0, 6) and a snug [7, 9). A ready 2-leg
+        // under FIFO takes the earliest (wide) gap; under Size it takes
+        // the snug one, leaving the wide gap whole for the 5-leg that
+        // follows — which FIFO can then only append past the link tail.
+        let drive = |priority: D2hPriority| {
+            let mut rq = ReadyQueue::new(4).with_priority(priority);
+            assert_eq!(rq.place(6.0, 1.0), (6.0, 0)); // gap [0, 6)
+            assert_eq!(rq.place(9.0, 2.0), (9.0, 0)); // gap [7, 9)
+            let small = rq.place(0.0, 2.0);
+            let large = rq.place(0.0, 5.0);
+            let busy: f64 = rq.queue_busy_s().iter().sum();
+            (small, large, busy)
+        };
+        let (fifo_small, fifo_large, fifo_busy) = drive(D2hPriority::Fifo);
+        assert_eq!(fifo_small, (0.0, 1), "FIFO: first-feasible takes the wide gap");
+        assert_eq!(fifo_large, (11.0, 2), "FIFO: the 5-leg no longer fits any gap");
+        let (size_small, size_large, size_busy) = drive(D2hPriority::Size);
+        assert_eq!(size_small, (7.0, 1), "Size: best fit takes the snug gap");
+        assert_eq!(size_large, (0.0, 2), "Size: the wide gap survived for the 5-leg");
+        // placement only — occupancy accounting is priority-independent
+        assert_eq!(fifo_busy.to_bits(), size_busy.to_bits());
+    }
+
+    #[test]
+    fn ready_queue_size_priority_single_queue_is_fifo() {
+        // With one queue no gap is ever reachable (the tail is always
+        // past it), so the Size class degenerates to the FIFO clock
+        // bit-exactly — same sequence as the q=1 FIFO test above.
+        let mut rq = ReadyQueue::new(1).with_priority(D2hPriority::Size);
+        assert_eq!(rq.place(0.0, 1.0), (0.0, 0));
+        assert_eq!(rq.place(0.0, 1.0), (1.0, 0));
+        assert_eq!(rq.place(5.0, 1.0), (5.0, 0));
+        assert_eq!(rq.place(0.0, 0.5), (6.0, 0));
+        assert_eq!(rq.queue_busy_s(), &[3.5]);
     }
 
     #[test]

@@ -23,7 +23,7 @@ use std::cell::Cell;
 /// a report produced by an older binary can never silently pass a newer
 /// gate (or vice versa). Bump on any key-set or semantics change,
 /// re-recording the `ci/bench_baseline*.json` files in the same commit.
-pub const METRICS_SCHEMA_VERSION: f64 = 1.1;
+pub const METRICS_SCHEMA_VERSION: f64 = 1.2;
 
 thread_local! {
     static THREAD_ALLOCS: Cell<u64> = const { Cell::new(0) };

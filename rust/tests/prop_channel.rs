@@ -21,8 +21,9 @@ use a2dtwp::adt::RoundTo;
 use a2dtwp::interconnect::Interconnect;
 use a2dtwp::models::{alexnet, resnet34, vgg_a, ModelDesc};
 use a2dtwp::sim::{
-    build_training_timeline, layer_loads, layer_loads_mean_bytes, BatchSpec, LayerLoad,
-    OverlapMode, PipelineWindow, ReadyQueue, Resource, SystemProfile, Timeline, SCENARIO_NAMES,
+    build_training_timeline, layer_loads, layer_loads_mean_bytes, BatchSpec, D2hPriority,
+    LayerLoad, OverlapMode, PipelineWindow, ReadyQueue, Resource, SystemProfile, Timeline,
+    SCENARIO_NAMES,
 };
 use a2dtwp::util::propcheck::{check, Gen};
 
@@ -207,6 +208,87 @@ fn prop_gap_filled_schedules_stay_physical() {
                 w[1].0,
                 w[1].1
             );
+        }
+    });
+}
+
+#[test]
+fn prop_one_queue_size_priority_is_fifo_bit_exactly() {
+    // engine-level: with a single queue there is never a gap choice to
+    // make, so the smallest-leg-first class must place every leg where
+    // the FIFO clock would — bit-exact on arbitrary leg soups.
+    check("ReadyQueue(1, size) == FIFO", 200, |g| {
+        let mut sz = ReadyQueue::new(1).with_priority(D2hPriority::Size);
+        let mut fifo = ReadyQueue::new(1);
+        for _ in 0..g.usize_in(1..60) {
+            let ready = g.f32_in(0.0, 2.0) as f64;
+            let dur = g.f32_in(0.0, 0.5) as f64;
+            let (s_start, s_queue) = sz.place(ready, dur);
+            let (f_start, f_queue) = fifo.place(ready, dur);
+            assert_eq!(s_queue, f_queue);
+            assert_eq!(s_start.to_bits(), f_start.to_bits(), "q=1 size diverged from FIFO");
+        }
+        assert_eq!(sz.queue_busy_s()[0].to_bits(), fifo.queue_busy_s()[0].to_bits());
+    });
+}
+
+#[test]
+fn prop_priority_class_never_moves_work_between_phases() {
+    // the dispatch class reorders leg *placement* only: busy totals, the
+    // Fig-1 serialized reference and the byte counters are bit-identical
+    // between fifo and size at every queue count, the q=1 timelines are
+    // indistinguishable event by event, and the size-class schedules
+    // stay physical (deps honoured, wire serial).
+    check("size-priority busy+bytes invariant", 60, |g| {
+        let desc = any_model(g);
+        let uses_adt = g.bool();
+        let loads = any_loads(g, &desc, uses_adt);
+        let spec = BatchSpec {
+            batch_size: *g.pick(&[32usize, 64]),
+            uses_adt,
+            include_norms: uses_adt,
+            grad_adt: false,
+        };
+        let window = PipelineWindow::new(g.usize_in(1..4), g.usize_in(1..3));
+        for queues in [1usize, 2, 4] {
+            let base = any_scaled_profile(g, queues);
+            assert_eq!(base.d2h_priority, D2hPriority::Fifo, "fifo must stay the default");
+            let (fifo_tl, fifo_ic) = build_window(&base, &loads, spec, window);
+            let sized = base.clone().with_d2h_priority(D2hPriority::Size);
+            let (sz_tl, sz_ic) = build_window(&sized, &loads, spec, window);
+            for (i, (a, b)) in fifo_tl.busy_s().iter().zip(sz_tl.busy_s()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "phase {i} busy differs under size q={queues}");
+            }
+            assert_eq!(
+                fifo_tl.serialized_sum_s().to_bits(),
+                sz_tl.serialized_sum_s().to_bits(),
+                "serial reference drifted under size priority"
+            );
+            assert_eq!(fifo_ic.d2h_bytes_total(), sz_ic.d2h_bytes_total());
+            assert_eq!(fifo_ic.h2d_bytes_total(), sz_ic.h2d_bytes_total());
+            if queues == 1 {
+                assert_eq!(fifo_tl.critical_path_s().to_bits(), sz_tl.critical_path_s().to_bits());
+                for (ea, eb) in fifo_tl.events().iter().zip(sz_tl.events()) {
+                    assert_eq!(ea.start_s.to_bits(), eb.start_s.to_bits());
+                    assert_eq!(ea.finish_s.to_bits(), eb.finish_s.to_bits());
+                }
+            }
+            for &(from, to) in sz_tl.dep_edges() {
+                assert!(
+                    sz_tl.events()[to].start_s >= sz_tl.events()[from].finish_s,
+                    "edge {from}->{to} violated under size priority"
+                );
+            }
+            let mut d2h: Vec<(f64, f64)> = sz_tl
+                .events()
+                .iter()
+                .filter(|e| e.resource == Resource::LinkD2h)
+                .map(|e| (e.start_s, e.finish_s))
+                .collect();
+            d2h.sort_by(|a, b| a.0.total_cmp(&b.0));
+            for w in d2h.windows(2) {
+                assert!(w[1].0 >= w[0].1, "D2H legs overlap on the wire under size priority");
+            }
         }
     });
 }
